@@ -1,0 +1,105 @@
+//! Deep-learning pre-processing (§III-A, Fig. 5/6): Rylon as a library
+//! inside an AI training job — ETL the features, then hand zero-copy
+//! column slices to the "training framework" as f32 tensors.
+//!
+//! The paper's Fig. 5 does `Table -> Arrow -> pandas -> numpy -> torch
+//! tensor`. Here the boundary is the FFI handle layer: the "host
+//! framework" sees borrowed column buffers, no copies until tensor
+//! materialization itself.
+//!
+//! ```bash
+//! cargo run --release --example dl_preprocess
+//! ```
+
+use rylon::api::ffi;
+use rylon::coordinator::StreamOrchestrator;
+use rylon::io::generator::paper_table;
+use rylon::ops::join::JoinConfig;
+use rylon::ops::select::select_i64;
+use rylon::prelude::*;
+
+/// The "training framework" side: consumes feature batches as flat f32
+/// tensors (what a torch DataLoader would wrap).
+#[derive(Default)]
+struct TensorSink {
+    batches: usize,
+    values: usize,
+    checksum: f64,
+}
+
+impl TensorSink {
+    /// Materialize a [rows × features] f32 tensor from table columns.
+    fn consume(&mut self, t: &Table, feature_cols: &[usize]) {
+        let rows = t.num_rows();
+        let mut tensor = Vec::with_capacity(rows * feature_cols.len());
+        for &c in feature_cols {
+            let col = t.column(c).as_f64().expect("feature column is f64");
+            // Zero-copy borrow of the column buffer; the cast to f32 is
+            // the tensor materialization.
+            tensor.extend(col.values().iter().map(|&v| v as f32));
+        }
+        self.batches += 1;
+        self.values += tensor.len();
+        self.checksum += tensor.iter().map(|&v| v as f64).sum::<f64>();
+    }
+}
+
+fn main() -> Result<()> {
+    // ---- 1. Feature engineering with the Table API. -----------------
+    let samples = paper_table(200_000, 0.7, 11);
+    let labels = paper_table(150_000, 0.7, 12);
+
+    // join samples to labels, keep matched ones with key % 5 != 0
+    // (a train split), project the 3 feature columns.
+    let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash);
+    let joined = rylon::ops::join::join(&samples, &labels, &cfg)?;
+    let train = select_i64(&joined, 0, |k| k % 5 != 0)?;
+    let features = rylon::ops::project::project(&train, &[1, 2, 3])?;
+    println!(
+        "[dl] engineered {} training rows × {} features",
+        features.num_rows(),
+        features.num_columns()
+    );
+
+    // ---- 2. Cross the binding boundary as a zero-copy handle. -------
+    let handle = ffi::rylon_table_new(features.clone());
+    let mut sink = TensorSink::default();
+    unsafe {
+        let borrowed = ffi::rylon_table_borrow(handle).expect("live handle");
+        sink.consume(borrowed, &[0, 1, 2]);
+        ffi::rylon_table_free(handle);
+    }
+    println!(
+        "[dl] tensor batch: {} values, checksum {:.3}",
+        sink.values, sink.checksum
+    );
+
+    // ---- 3. Streaming loader with backpressure (distributed data
+    //          loader, §III-A): batches flow source→transform→sink with
+    //          a bounded queue. ---------------------------------------
+    let mut epoch_sink = TensorSink::default();
+    let mut batch_no = 0;
+    let stats = StreamOrchestrator::new(4).run(
+        move || {
+            batch_no += 1;
+            (batch_no <= 20).then(|| paper_table(10_000, 0.7, 500 + batch_no as u64))
+        },
+        |batch| {
+            let filtered = select_i64(&batch, 0, |k| k % 5 != 0)?;
+            rylon::ops::project::project(&filtered, &[1, 2, 3])
+        },
+        |features| {
+            epoch_sink.consume(&features, &[0, 1, 2]);
+            Ok(())
+        },
+    )?;
+    println!(
+        "[dl] streamed {} batches / {} rows through the loader in {:.3}s \
+         (producer blocked {:.1} ms by backpressure)",
+        stats.batches,
+        stats.rows,
+        stats.elapsed_secs,
+        stats.blocked_secs * 1e3
+    );
+    Ok(())
+}

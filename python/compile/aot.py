@@ -1,0 +1,89 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the rust
+runtime.
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot [--out-dir ../artifacts] [--blocks 16384,...]
+
+Emits one ``hash_partition_<BLOCK>.hlo.txt`` per block size; the rust
+``KernelRuntime`` discovers them by name. A ``manifest.txt`` records
+what was built from which sources.
+"""
+
+import argparse
+import hashlib
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(n: int) -> str:
+    """Lower the (lo, hi, nparts) -> (ids,) program for block size n."""
+    args = model.example_args(n)
+    lowered = jax.jit(model.hash_partition_block).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def source_digest() -> str:
+    """Digest of the compile-path sources, for the manifest."""
+    here = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(here.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=str(pathlib.Path(__file__).resolve().parents[2] / "artifacts"),
+        help="artifact output directory",
+    )
+    ap.add_argument(
+        "--blocks",
+        default=",".join(str(b) for b in model.BLOCK_SIZES),
+        help="comma-separated block sizes to lower",
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    blocks = [int(b) for b in args.blocks.split(",") if b]
+    for b in blocks:
+        if b % model.TILE != 0:
+            raise SystemExit(f"block {b} is not a multiple of tile {model.TILE}")
+
+    manifest = [f"sources sha256/16: {source_digest()}"]
+    for b in blocks:
+        text = lower_block(b)
+        path = out_dir / f"hash_partition_{b}.hlo.txt"
+        path.write_text(text)
+        manifest.append(f"hash_partition_{b}.hlo.txt: {len(text)} chars")
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir / 'manifest.txt'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

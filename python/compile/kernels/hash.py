@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: blocked key hashing for hash-partitioning.
+
+The paper's §II-A insight — columnar, homogeneously-typed, contiguous
+buffers enable SIMD — is expressed here as a Pallas kernel: the int64
+key column (as two u32 half-columns) is tiled HBM→VMEM in ``BLOCK``-row
+chunks by ``BlockSpec``; each chunk is hashed with vector integer ops on
+the VPU and reduced to partition ids in one pass.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+Xeon SIMD; on TPU the same elementwise pipeline maps to the VPU with
+VMEM as the scratchpad. No MXU is involved — hashing is integer
+elementwise work — so the roofline is memory-bandwidth-bound; the block
+size is chosen so in+out tiles fit comfortably in VMEM with headroom for
+double buffering (see aot.py).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both jax-CPU
+(pytest) and the rust PJRT client (request path) execute. Real-TPU
+lowering is compile-only on this testbed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 64k rows × (2×4B in + 4B out) = 768 KiB of VMEM
+# tiles — ~5% of a TPU core's ~16 MiB VMEM, leaving room for double
+# buffering. (On CPU-interpret this is just a loop trip size.)
+DEFAULT_TILE = 65536
+
+
+def _fmix32(h):
+    """murmur3 finalizer on a uint32 vector (VPU elementwise ops)."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EB_CA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2_AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash_partition_kernel(np_ref, lo_ref, hi_ref, ids_ref):
+    """One VMEM tile: ids = fmix32(fmix32(hi) ^ lo) % nparts.
+
+    ``np_ref`` is a scalar-prefetch style operand (SMEM scalar in the
+    TPU mapping; a (1,) ref in interpret mode).
+    """
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    h = _fmix32(_fmix32(hi) ^ lo)
+    ids_ref[...] = h % np_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def hash_partition_pallas(lo, hi, nparts, tile: int = DEFAULT_TILE):
+    """Partition ids for u32 key halves ``lo``/``hi``; ``nparts`` is a
+    runtime uint32 scalar. Shape must be a multiple of ``tile`` (aot.py
+    pads; the rust runtime pads to the artifact's block size).
+    """
+    n = lo.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+    grid = (n // tile,)
+    np_arr = jnp.reshape(nparts.astype(jnp.uint32), (1,))
+    return pl.pallas_call(
+        _hash_partition_kernel,
+        grid=grid,
+        in_specs=[
+            # nparts: same (1,) scalar block for every grid step.
+            pl.BlockSpec((1,), lambda i: (0,)),
+            # key halves: tile i covers rows [i*tile, (i+1)*tile).
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(np_arr, lo, hi)
+
+
+def hash_keys_pallas(lo, hi, tile: int = DEFAULT_TILE):
+    """Raw 32-bit hashes (no modulo) — used by tests and the L2 model."""
+    n = lo.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+
+    def kernel(lo_ref, hi_ref, out_ref):
+        out_ref[...] = _fmix32(_fmix32(hi_ref[...]) ^ lo_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(lo, hi)
+
+
+def vmem_bytes_per_tile(tile: int = DEFAULT_TILE) -> int:
+    """VMEM footprint estimate for one grid step of the partition kernel
+    (2 u32 inputs + 1 u32 output; the nparts scalar is negligible)."""
+    return tile * 4 * 3

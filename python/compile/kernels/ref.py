@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracle for the L1 hash kernel.
+
+This file is the cross-layer contract. The same function is implemented
+three times and must agree bit-for-bit:
+
+* here (pure jax.numpy — the correctness oracle),
+* ``hash.py`` (the Pallas kernel that lowers into the AOT artifact),
+* ``rust/src/ops/hash.rs::hash_i64`` (the native fallback).
+
+The hash is the murmur3 32-bit finalizer (fmix32) applied to the two
+32-bit halves of an int64 key::
+
+    hash(k) = fmix32( fmix32(k >> 32) ^ (k & 0xffff_ffff) )
+
+``golden_vectors()`` emits pinned (key, hash) pairs; ``rust/tests/
+golden_hash.rs`` asserts the same pairs against the native code.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "fmix32_ref",
+    "hash_i64_ref",
+    "partition_ids_ref",
+    "partition_hist_ref",
+    "split_keys",
+    "golden_vectors",
+]
+
+
+def fmix32_ref(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 on uint32 arrays."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EB_CA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2_AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_i64_ref(lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Key hash from the u32 halves of int64 keys."""
+    return fmix32_ref(fmix32_ref(hi) ^ lo.astype(jnp.uint32))
+
+
+def partition_ids_ref(lo: jnp.ndarray, hi: jnp.ndarray, nparts) -> jnp.ndarray:
+    """Partition id per key: hash % nparts (nparts is a runtime scalar)."""
+    return hash_i64_ref(lo, hi) % jnp.uint32(nparts)
+
+
+def partition_hist_ref(ids: jnp.ndarray, max_parts: int = 256) -> jnp.ndarray:
+    """Per-partition row counts (fixed-width histogram)."""
+    return jnp.zeros((max_parts,), jnp.uint32).at[ids].add(jnp.uint32(1))
+
+
+def split_keys(keys: np.ndarray):
+    """int64 keys -> (lo, hi) uint32 halves (the artifact input layout)."""
+    u = keys.astype(np.int64).view(np.uint64)
+    lo = (u & np.uint64(0xFFFF_FFFF)).astype(np.uint32)
+    hi = (u >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+def _hash_i64_scalar(k: int) -> int:
+    """Scalar version used only to print golden vectors."""
+    lo, hi = split_keys(np.array([k], dtype=np.int64))
+    out = hash_i64_ref(jnp.asarray(lo), jnp.asarray(hi))
+    return int(out[0])
+
+
+def golden_vectors():
+    """Pinned (key, hash) pairs shared with rust/tests/golden_hash.rs."""
+    keys = [
+        0,
+        1,
+        -1,
+        42,
+        -42,
+        2**31 - 1,
+        2**31,
+        2**63 - 1,
+        -(2**63),
+        0x0123_4567_89AB_CDEF,
+        -0x0123_4567_89AB_CDEF,
+    ]
+    return [(k, _hash_i64_scalar(k)) for k in keys]
+
+
+if __name__ == "__main__":
+    for k, h in golden_vectors():
+        print(f"({k}, 0x{h:08x}),")

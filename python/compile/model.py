@@ -1,0 +1,65 @@
+"""L2: the shuffle-planning compute graph, built on the L1 Pallas kernel.
+
+The paper's hot path for every distributed operator is the shuffle:
+``hash(key) → partition id → route``. This module is the JAX "model" of
+that plan for one key block:
+
+    inputs : lo u32[N], hi u32[N]  (int64 key column split in halves)
+             nparts u32[]          (runtime scalar, ≤ MAX_PARTS)
+    output : ids u32[N]            (partition id per row)
+
+plus an extended variant that also emits the per-partition histogram —
+the send-buffer sizing information an AllToAll needs — fused into the
+same program so XLA schedules hash + mod + scatter-count as one pass.
+
+Shapes are static (XLA requirement): ``aot.py`` lowers one program per
+block size in ``BLOCK_SIZES``; the rust runtime pads the tail block.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hash import hash_partition_pallas
+from .kernels import ref
+
+# Fixed histogram width; worker counts beyond this are rejected by the
+# runtime (the paper tops out at 160).
+MAX_PARTS = 256
+
+# Block-size ladder lowered by aot.py. Chosen to (a) amortize PJRT
+# dispatch (~µs) over ≥16k rows, (b) keep the Pallas tile a divisor of
+# every block, (c) cap padding waste for small shuffles.
+BLOCK_SIZES = (16384, 65536, 262144)
+
+# Pallas tile (rows per grid step) — divides every BLOCK_SIZES entry.
+TILE = 16384
+
+
+def hash_partition_block(lo, hi, nparts):
+    """Partition ids for one key block (the artifact's entry point).
+
+    The Pallas kernel does the hashing+mod; this L2 wrapper exists so the
+    lowered HLO has a stable (lo, hi, nparts) -> (ids,) signature and so
+    richer variants (histogram below) can reuse the same kernel.
+    """
+    return hash_partition_pallas(lo, hi, nparts, tile=TILE)
+
+
+def hash_partition_hist_block(lo, hi, nparts):
+    """Partition ids + fused histogram (send-buffer sizing)."""
+    ids = hash_partition_pallas(lo, hi, nparts, tile=TILE)
+    hist = jnp.zeros((MAX_PARTS,), jnp.uint32).at[ids].add(jnp.uint32(1))
+    return ids, hist
+
+
+def reference_block(lo, hi, nparts):
+    """Same contract, pure-jnp (lowered for the L2-vs-L1 parity test and
+    usable as a fallback artifact)."""
+    return ref.partition_ids_ref(lo, hi, nparts)
+
+
+def example_args(n: int):
+    """ShapeDtypeStructs for lowering a block of n rows."""
+    u32v = jax.ShapeDtypeStruct((n,), jnp.uint32)
+    u32s = jax.ShapeDtypeStruct((), jnp.uint32)
+    return u32v, u32v, u32s

@@ -1,0 +1,150 @@
+//! End-to-end distributed-operator benches on the BSP virtual clock,
+//! plus ablations DESIGN.md calls out:
+//!
+//! * network profile sensitivity (Infiniband vs TCP — §II-D transport),
+//! * skewed vs uniform keys (shuffle balance),
+//! * hash vs sort join crossover,
+//! * whole-row vs key hashing cost (union's row traversal penalty).
+
+use rylon::io::generator::{skewed_table, worker_partition};
+use rylon::metrics::Report;
+use rylon::net::NetworkProfile;
+use rylon::ops::join::{JoinAlgorithm, JoinConfig};
+use rylon::sim::{sim_rylon_join, sim_rylon_union};
+use rylon::table::Table;
+
+fn chunks(total: usize, world: usize, seed: u64) -> Vec<Table> {
+    (0..world)
+        .map(|w| worker_partition(total, world, w, 0.9, seed))
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let total = if quick { 50_000 } else { 500_000 };
+    let world = 16;
+
+    // Ablation 1: transport profile (the §II-D claim that the comm layer
+    // swaps without touching operators).
+    let mut r1 = Report::new(
+        format!("ablation: network profile, inner join, {total} rows, W={world}"),
+        &["profile", "virtual_s", "comm_s"],
+    );
+    let l = chunks(total, world, 1);
+    let r = chunks(total, world, 2);
+    for p in [
+        NetworkProfile::Loopback,
+        NetworkProfile::Infiniband40G,
+        NetworkProfile::Tcp10G,
+        NetworkProfile::Tcp1G,
+    ] {
+        let s = sim_rylon_join(&l, &r, &JoinConfig::inner(0, 0), p, None).unwrap();
+        r1.add_row(vec![
+            p.name().to_string(),
+            format!("{:.4}", s.virtual_secs),
+            format!("{:.4}", s.phase_secs("comm")),
+        ]);
+    }
+    print!("{}", r1.render());
+
+    // Ablation 2: skew. A Zipf-keyed probe side (fact table) joined
+    // against a uniform build side (dimension table): the hot keys all
+    // route to one worker, inflating its local phase — the shuffle-skew
+    // pathology. (Zipf⨝Zipf would explode the cross product, so the
+    // build side stays uniform, as real dimension tables are.)
+    let mut r2 = Report::new(
+        format!("ablation: probe-side key skew, inner join, {total} rows, W={world}"),
+        &["distribution", "virtual_s", "local_s(max worker)"],
+    );
+    for (name, skewed) in [("uniform", false), ("zipf", true)] {
+        let probe: Vec<Table> = (0..world)
+            .map(|w| {
+                if skewed {
+                    skewed_table(total / world, total as u64, 31 + w as u64)
+                } else {
+                    worker_partition(total, world, w, 0.9, 31)
+                }
+            })
+            .collect();
+        let build = chunks(total, world, 47); // uniform dimension side
+        let s = sim_rylon_join(
+            &build,
+            &probe,
+            &JoinConfig::inner(0, 0),
+            NetworkProfile::Infiniband40G,
+            None,
+        )
+        .unwrap();
+        r2.add_row(vec![
+            name.to_string(),
+            format!("{:.4}", s.virtual_secs),
+            format!("{:.4}", s.phase_secs("local")),
+        ]);
+    }
+    print!("{}", r2.render());
+
+    // Ablation 3: hash vs sort join across sizes (crossover check).
+    let mut r3 = Report::new(
+        "ablation: hash vs sort join (local), time (s)",
+        &["rows", "hash", "sort"],
+    );
+    for exp in [14, 16, 18] {
+        let n = 1usize << exp;
+        let a = rylon::io::generator::paper_table(n, 0.9, 7);
+        let b = rylon::io::generator::paper_table(n, 0.9, 8);
+        let th = rylon::metrics::measure(3, 1, || {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(
+                rylon::ops::join::join(
+                    &a,
+                    &b,
+                    &JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash),
+                )
+                .unwrap()
+                .num_rows(),
+            );
+            t0.elapsed().as_secs_f64()
+        });
+        let ts = rylon::metrics::measure(3, 1, || {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(
+                rylon::ops::join::join(
+                    &a,
+                    &b,
+                    &JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Sort),
+                )
+                .unwrap()
+                .num_rows(),
+            );
+            t0.elapsed().as_secs_f64()
+        });
+        r3.add_row(vec![
+            n.to_string(),
+            format!("{:.4}", th.median_secs),
+            format!("{:.4}", ts.median_secs),
+        ]);
+    }
+    print!("{}", r3.render());
+
+    // Ablation 4: union's whole-row traversal vs join's key-column work
+    // (the paper's §IV-B observation).
+    let mut r4 = Report::new(
+        format!("ablation: key-shuffle join vs row-shuffle union, {total} rows, W={world}"),
+        &["op", "virtual_s", "partition_s"],
+    );
+    let sj =
+        sim_rylon_join(&l, &r, &JoinConfig::inner(0, 0), NetworkProfile::Infiniband40G, None)
+            .unwrap();
+    let su = sim_rylon_union(&l, &r, NetworkProfile::Infiniband40G).unwrap();
+    r4.add_row(vec![
+        "join(key hash)".into(),
+        format!("{:.4}", sj.virtual_secs),
+        format!("{:.4}", sj.phase_secs("partition")),
+    ]);
+    r4.add_row(vec![
+        "union(row hash)".into(),
+        format!("{:.4}", su.virtual_secs),
+        format!("{:.4}", su.phase_secs("partition")),
+    ]);
+    print!("{}", r4.render());
+}

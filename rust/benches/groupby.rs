@@ -1,0 +1,110 @@
+//! GroupBy ablation: two-phase (partial-agg → shuffle partials) vs
+//! naive (shuffle raw rows → aggregate), on the BSP virtual clock.
+//! Quantifies the pre-aggregation design choice DESIGN.md calls out —
+//! the win grows as keys repeat (low key cardinality).
+
+use rylon::io::generator::worker_partition;
+use rylon::metrics::Report;
+use rylon::net::serialize::serialize_table;
+use rylon::net::NetworkProfile;
+use rylon::ops::aggregate::{group_by, group_by_partial, merge_partials, AggFn, AggSpec};
+use rylon::ops::partition::{partition_by_ids, partition_ids_by_key};
+use rylon::table::{take::concat_tables, Table};
+use std::time::Instant;
+
+/// Naive plan: shuffle raw rows by key, aggregate per worker.
+fn naive(chunks: &[Table], aggs: &[AggSpec], profile: NetworkProfile) -> (f64, usize) {
+    let world = chunks.len();
+    let (alpha, beta) = profile.alpha_beta();
+    let mut part_secs: Vec<f64> = Vec::new();
+    let mut routed: Vec<Vec<Table>> = (0..world).map(|_| Vec::new()).collect();
+    let mut bytes = vec![0u64; world];
+    for c in chunks {
+        let t0 = Instant::now();
+        let ids = partition_ids_by_key(c, 0, world).unwrap();
+        let parts = partition_by_ids(c, &ids, world).unwrap();
+        for (d, p) in parts.into_iter().enumerate() {
+            bytes[d] += serialize_table(&p).len() as u64;
+            routed[d].push(p);
+        }
+        part_secs.push(t0.elapsed().as_secs_f64());
+    }
+    let comm = bytes
+        .iter()
+        .map(|&b| alpha * (world - 1) as f64 + b as f64 * beta)
+        .fold(0.0, f64::max);
+    let mut local = 0.0f64;
+    let mut rows = 0;
+    for parts in &routed {
+        let t0 = Instant::now();
+        let refs: Vec<&Table> = parts.iter().collect();
+        let merged = concat_tables(&refs).unwrap();
+        let out = group_by(&merged, 0, aggs).unwrap();
+        rows += out.num_rows();
+        local = local.max(t0.elapsed().as_secs_f64());
+    }
+    (part_secs.iter().fold(0.0f64, |a, &b| a.max(b)) + comm + local, rows)
+}
+
+/// Two-phase plan: partial agg locally, shuffle tiny partials, merge.
+fn two_phase(chunks: &[Table], aggs: &[AggSpec], profile: NetworkProfile) -> (f64, usize) {
+    let world = chunks.len();
+    let (alpha, beta) = profile.alpha_beta();
+    let mut pre_secs: Vec<f64> = Vec::new();
+    let mut routed: Vec<Vec<Table>> = (0..world).map(|_| Vec::new()).collect();
+    let mut bytes = vec![0u64; world];
+    for c in chunks {
+        let t0 = Instant::now();
+        let partial = group_by_partial(c, 0, aggs).unwrap();
+        let ids = partition_ids_by_key(&partial, 0, world).unwrap();
+        let parts = partition_by_ids(&partial, &ids, world).unwrap();
+        for (d, p) in parts.into_iter().enumerate() {
+            bytes[d] += serialize_table(&p).len() as u64;
+            routed[d].push(p);
+        }
+        pre_secs.push(t0.elapsed().as_secs_f64());
+    }
+    let comm = bytes
+        .iter()
+        .map(|&b| alpha * (world - 1) as f64 + b as f64 * beta)
+        .fold(0.0, f64::max);
+    let funcs: Vec<AggFn> = aggs.iter().map(|a| a.func).collect();
+    let mut local = 0.0f64;
+    let mut rows = 0;
+    for parts in &routed {
+        let t0 = Instant::now();
+        let refs: Vec<&Table> = parts.iter().collect();
+        let merged = concat_tables(&refs).unwrap();
+        let out = merge_partials(&merged, &funcs).unwrap();
+        rows += out.num_rows();
+        local = local.max(t0.elapsed().as_secs_f64());
+    }
+    (pre_secs.iter().fold(0.0f64, |a, &b| a.max(b)) + comm + local, rows)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let total = if quick { 40_000 } else { 400_000 };
+    let world = 16;
+    let aggs = [AggSpec::new(AggFn::Sum, 1), AggSpec::new(AggFn::Mean, 2)];
+    let mut report = Report::new(
+        format!("groupby ablation: two-phase vs naive shuffle, {total} rows, W={world}, tcp-10g"),
+        &["key_density", "naive_s", "two_phase_s", "speedup", "groups"],
+    );
+    // density = distinct-key fraction; low density ⇒ heavy duplication
+    for density in [0.001, 0.01, 0.1, 0.9] {
+        let chunks: Vec<Table> = (0..world)
+            .map(|w| worker_partition(total, world, w, density, 0x6B))
+            .collect();
+        let (tn, _) = naive(&chunks, &aggs, NetworkProfile::Tcp10G);
+        let (tp, groups) = two_phase(&chunks, &aggs, NetworkProfile::Tcp10G);
+        report.add_row(vec![
+            format!("{density}"),
+            format!("{tn:.4}"),
+            format!("{tp:.4}"),
+            format!("{:.2}x", tn / tp),
+            groups.to_string(),
+        ]);
+    }
+    print!("{}", report.render());
+}

@@ -1,0 +1,82 @@
+//! Microbenchmarks of the local operators (the per-worker kernels every
+//! distributed op is built from).
+//!
+//! criterion is not vendored in this offline image; `rylon::metrics::
+//! measure` (median of N timed runs after warmup) fills in. Run with
+//! `cargo bench --bench local_ops`.
+
+use rylon::io::generator::paper_table;
+use rylon::metrics::{measure, Report};
+use rylon::ops::join::{join, JoinAlgorithm, JoinConfig};
+use rylon::ops::partition::hash_partition;
+use rylon::ops::select::select_i64;
+use rylon::ops::sort::sort;
+use rylon::ops::union::union;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn bench<T>(runs: usize, mut f: impl FnMut() -> T) -> f64 {
+    measure(runs, 1, || {
+        let t0 = Instant::now();
+        black_box(f());
+        t0.elapsed().as_secs_f64()
+    })
+    .median_secs
+}
+
+fn main() {
+    let n = if std::env::args().any(|a| a == "--quick") {
+        50_000
+    } else {
+        500_000
+    };
+    let runs = 5;
+    let l = paper_table(n, 0.9, 1);
+    let r = paper_table(n, 0.9, 2);
+
+    let mut report = Report::new(
+        format!("local operator microbench, n = {n} rows/relation"),
+        &["op", "median_s", "M rows/s"],
+    );
+    let mut add = |name: &str, secs: f64, rows: usize| {
+        report.add_row(vec![
+            name.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.1}", rows as f64 / secs / 1e6),
+        ]);
+    };
+
+    add("select (k % 2)", bench(runs, || select_i64(&l, 0, |k| k % 2 == 0).unwrap()), n);
+    add("project [0,2]", bench(runs, || rylon::ops::project::project(&l, &[0, 2]).unwrap()), n);
+    add("sort by key", bench(runs, || sort(&l, 0).unwrap()), n);
+    add(
+        "hash_partition p=16",
+        bench(runs, || hash_partition(&l, 0, 16).unwrap()),
+        n,
+    );
+    add(
+        "hash join inner",
+        bench(runs, || {
+            join(&l, &r, &JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash)).unwrap()
+        }),
+        2 * n,
+    );
+    add(
+        "sort join inner",
+        bench(runs, || {
+            join(&l, &r, &JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Sort)).unwrap()
+        }),
+        2 * n,
+    );
+    add("union distinct", bench(runs, || union(&l, &r).unwrap()), 2 * n);
+    add(
+        "serialize+deserialize",
+        bench(runs, || {
+            let b = rylon::net::serialize::serialize_table(&l);
+            rylon::net::serialize::deserialize_table(&b).unwrap()
+        }),
+        n,
+    );
+
+    print!("{}", report.render());
+}

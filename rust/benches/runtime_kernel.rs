@@ -1,0 +1,66 @@
+//! AOT kernel (PJRT) vs native hash-partition bench — quantifies what
+//! the JAX/Pallas artifact costs/saves on the shuffle hot path, per
+//! block size. Skips gracefully when artifacts are absent.
+
+use rylon::metrics::{measure, Report};
+use rylon::ops::hash::hash_i64;
+use rylon::runtime::KernelRuntime;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dir = KernelRuntime::artifacts_dir();
+    let rt = match KernelRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime_kernel bench skipped: {e}");
+            return;
+        }
+    };
+    let sizes: &[usize] = if quick {
+        &[16_384, 100_000]
+    } else {
+        &[16_384, 65_536, 262_144, 1_000_000]
+    };
+    let nparts = 32u32;
+    let mut report = Report::new(
+        "AOT PJRT kernel vs native hash-partition (nparts=32)",
+        &["rows", "native_s", "kernel_s", "kernel/native", "M keys/s (kernel)"],
+    );
+    for &n in sizes {
+        let keys: Vec<i64> = (0..n as u64)
+            .map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15) as i64)
+            .collect();
+        let native = measure(5, 1, || {
+            let t0 = Instant::now();
+            let ids: Vec<u32> = keys.iter().map(|&k| hash_i64(k) % nparts).collect();
+            black_box(ids.len());
+            t0.elapsed().as_secs_f64()
+        });
+        let kernel = measure(5, 1, || {
+            let t0 = Instant::now();
+            let ids = rt.hash_partition_ids(&keys, nparts).expect("kernel");
+            black_box(ids.len());
+            t0.elapsed().as_secs_f64()
+        });
+        // Sanity: identical routing.
+        let ids = rt.hash_partition_ids(&keys, nparts).unwrap();
+        for (k, id) in keys.iter().zip(&ids) {
+            assert_eq!(hash_i64(*k) % nparts, *id);
+        }
+        report.add_row(vec![
+            n.to_string(),
+            format!("{:.5}", native.median_secs),
+            format!("{:.5}", kernel.median_secs),
+            format!("{:.2}x", kernel.median_secs / native.median_secs),
+            format!("{:.1}", n as f64 / kernel.median_secs / 1e6),
+        ]);
+    }
+    print!("{}", report.render());
+    let stats = rt.stats().unwrap();
+    println!(
+        "kernel calls: {}, rows hashed: {}, kernel time: {:.3}s",
+        stats.kernel_calls, stats.rows_hashed, stats.kernel_secs
+    );
+}

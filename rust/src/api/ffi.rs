@@ -1,0 +1,214 @@
+//! C-ABI binding surface over the Table API (the PyCylon/JCylon analog).
+//!
+//! Tables cross the boundary as opaque `RylonTableHandle`s — a boxed
+//! `Table` behind a raw pointer. Because [`crate::table::Table`] columns
+//! are `Arc`ed, handle operations are zero-copy exactly like the paper's
+//! Arrow-based bindings (§III: "when Cylon creates a table in CPP, it is
+//! available to the Python or Java interface without need for data
+//! copying").
+//!
+//! `*_copying` variants deep-copy the table across the boundary — the
+//! counterfactual a naive binding would do; Fig. 10's bench uses the
+//! pair to show why zero-copy matters.
+
+use crate::ops::join::{join, JoinAlgorithm, JoinConfig, JoinType};
+use crate::table::{take::take_table, Table};
+
+/// Opaque handle to a table owned by the library.
+pub struct RylonTableHandle {
+    table: Table,
+}
+
+/// Status codes across the C boundary.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RylonStatus {
+    Ok = 0,
+    InvalidArg = 1,
+    Failed = 2,
+}
+
+fn wrap(t: Table) -> *mut RylonTableHandle {
+    Box::into_raw(Box::new(RylonTableHandle { table: t }))
+}
+
+/// Wrap an existing table into a handle (entry from the host language).
+pub fn rylon_table_new(t: Table) -> *mut RylonTableHandle {
+    wrap(t)
+}
+
+/// Deep-copy variant: what a binding without a shared memory format
+/// must do (serialize/copy between runtimes).
+pub fn rylon_table_new_copying(t: &Table) -> *mut RylonTableHandle {
+    let idx: Vec<usize> = (0..t.num_rows()).collect();
+    wrap(take_table(t, &idx)) // forces full materialization
+}
+
+/// # Safety
+/// `h` must be a live handle from this module.
+pub unsafe fn rylon_table_rows(h: *const RylonTableHandle) -> u64 {
+    if h.is_null() {
+        return 0;
+    }
+    (*h).table.num_rows() as u64
+}
+
+/// # Safety
+/// `h` must be a live handle from this module.
+pub unsafe fn rylon_table_cols(h: *const RylonTableHandle) -> u64 {
+    if h.is_null() {
+        return 0;
+    }
+    (*h).table.num_columns() as u64
+}
+
+/// Borrow the table behind a handle (host-language view).
+///
+/// # Safety
+/// `h` must be a live handle from this module.
+pub unsafe fn rylon_table_borrow<'a>(h: *const RylonTableHandle) -> Option<&'a Table> {
+    h.as_ref().map(|h| &h.table)
+}
+
+/// Join two handles; writes a new handle to `out`.
+///
+/// # Safety
+/// `left`/`right` must be live handles; `out` a valid destination.
+pub unsafe fn rylon_join(
+    left: *const RylonTableHandle,
+    right: *const RylonTableHandle,
+    join_type: u32,
+    algorithm: u32,
+    left_col: u64,
+    right_col: u64,
+    out: *mut *mut RylonTableHandle,
+) -> RylonStatus {
+    let (Some(l), Some(r)) = (left.as_ref(), right.as_ref()) else {
+        return RylonStatus::InvalidArg;
+    };
+    let jt = match join_type {
+        0 => JoinType::Inner,
+        1 => JoinType::Left,
+        2 => JoinType::Right,
+        3 => JoinType::FullOuter,
+        _ => return RylonStatus::InvalidArg,
+    };
+    let alg = match algorithm {
+        0 => JoinAlgorithm::Hash,
+        1 => JoinAlgorithm::Sort,
+        _ => return RylonStatus::InvalidArg,
+    };
+    let cfg = JoinConfig::new(jt, left_col as usize, right_col as usize).with_algorithm(alg);
+    match join(&l.table, &r.table, &cfg) {
+        Ok(t) => {
+            *out = wrap(t);
+            RylonStatus::Ok
+        }
+        Err(_) => RylonStatus::Failed,
+    }
+}
+
+/// Copying variant of [`rylon_join`]: inputs are deep-copied across the
+/// boundary first, as a format-converting binding would.
+///
+/// # Safety
+/// Same contract as [`rylon_join`].
+pub unsafe fn rylon_join_copying(
+    left: *const RylonTableHandle,
+    right: *const RylonTableHandle,
+    join_type: u32,
+    algorithm: u32,
+    left_col: u64,
+    right_col: u64,
+    out: *mut *mut RylonTableHandle,
+) -> RylonStatus {
+    let (Some(l), Some(r)) = (left.as_ref(), right.as_ref()) else {
+        return RylonStatus::InvalidArg;
+    };
+    let lc = rylon_table_new_copying(&l.table);
+    let rc = rylon_table_new_copying(&r.table);
+    let status = rylon_join(lc, rc, join_type, algorithm, left_col, right_col, out);
+    rylon_table_free(lc);
+    rylon_table_free(rc);
+    // Copy the result back out too (the "return to host runtime" copy).
+    if status == RylonStatus::Ok {
+        let result = Box::from_raw(*out);
+        *out = rylon_table_new_copying(&result.table);
+    }
+    status
+}
+
+/// Release a handle.
+///
+/// # Safety
+/// `h` must be a live handle; it is invalid after this call.
+pub unsafe fn rylon_table_free(h: *mut RylonTableHandle) {
+    if !h.is_null() {
+        drop(Box::from_raw(h));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::generator::paper_table;
+
+    #[test]
+    fn handle_roundtrip() {
+        let t = paper_table(100, 1.0, 1);
+        let h = rylon_table_new(t);
+        unsafe {
+            assert_eq!(rylon_table_rows(h), 100);
+            assert_eq!(rylon_table_cols(h), 4);
+            assert!(rylon_table_borrow(h).is_some());
+            rylon_table_free(h);
+        }
+    }
+
+    #[test]
+    fn join_through_ffi_matches_direct() {
+        let l = paper_table(500, 0.5, 2);
+        let r = paper_table(500, 0.5, 3);
+        let direct = join(&l, &r, &JoinConfig::inner(0, 0)).unwrap();
+        let hl = rylon_table_new(l);
+        let hr = rylon_table_new(r);
+        unsafe {
+            let mut out: *mut RylonTableHandle = std::ptr::null_mut();
+            let st = rylon_join(hl, hr, 0, 0, 0, 0, &mut out);
+            assert_eq!(st, RylonStatus::Ok);
+            assert_eq!(rylon_table_rows(out), direct.num_rows() as u64);
+            rylon_table_free(out);
+
+            let mut out2: *mut RylonTableHandle = std::ptr::null_mut();
+            let st = rylon_join_copying(hl, hr, 0, 1, 0, 0, &mut out2);
+            assert_eq!(st, RylonStatus::Ok);
+            assert_eq!(rylon_table_rows(out2), direct.num_rows() as u64);
+            rylon_table_free(out2);
+
+            rylon_table_free(hl);
+            rylon_table_free(hr);
+        }
+    }
+
+    #[test]
+    fn null_handles_are_safe() {
+        unsafe {
+            assert_eq!(rylon_table_rows(std::ptr::null()), 0);
+            let mut out: *mut RylonTableHandle = std::ptr::null_mut();
+            let st = rylon_join(std::ptr::null(), std::ptr::null(), 0, 0, 0, 0, &mut out);
+            assert_eq!(st, RylonStatus::InvalidArg);
+            rylon_table_free(std::ptr::null_mut());
+        }
+    }
+
+    #[test]
+    fn bad_enum_codes_rejected() {
+        let l = rylon_table_new(paper_table(10, 1.0, 1));
+        unsafe {
+            let mut out: *mut RylonTableHandle = std::ptr::null_mut();
+            assert_eq!(rylon_join(l, l, 9, 0, 0, 0, &mut out), RylonStatus::InvalidArg);
+            assert_eq!(rylon_join(l, l, 0, 9, 0, 0, &mut out), RylonStatus::InvalidArg);
+            rylon_table_free(l);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Language-binding layer.
+//!
+//! The paper's Fig. 10 shows Cylon ≈ PyCylon ≈ JCylon: the Cython/JNI
+//! binding layers add negligible overhead because tables cross the
+//! boundary as zero-copy handles. [`ffi`] rebuilds that boundary as a
+//! C ABI over opaque handles; `bench_driver fig10` measures direct Rust
+//! calls vs through-FFI calls vs a deliberately copying variant.
+
+pub mod ffi;

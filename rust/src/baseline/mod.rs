@@ -1,0 +1,31 @@
+//! Comparator engines for the paper's evaluation (§IV, Figs. 7–9,
+//! Table II).
+//!
+//! The paper benchmarks Cylon against Apache Spark 2.4.6 and Dask 2.19.0.
+//! Neither runs on this testbed, so — per DESIGN.md §Substitutions — we
+//! rebuild the *mechanisms* the paper credits for their slowness, as
+//! real engines over the same workloads:
+//!
+//! * [`rowstore`] ("Spark-like"): row-oriented storage and traversal,
+//!   an event-driven central scheduler that dispatches per-partition
+//!   tasks with a fixed launch cost, and row serialization between
+//!   stages. §II-C: "Apache Spark employs an event-driven model"; §IV-B:
+//!   "row-based traversal … could nullify the advantages of a columnar
+//!   data format".
+//! * [`taskgraph`] ("Dask-like"): a dynamic task graph executed by a
+//!   central scheduler with a higher per-task dispatch cost (Python
+//!   scheduler loop), dynamically-typed cell processing, per-worker
+//!   memory limits (Dask "failed to complete for the world sizes 1 and
+//!   2"), and no distributed union API (§IV-C).
+//!
+//! Both are complete, correct engines — their outputs are asserted equal
+//! to Rylon's in tests — so measured gaps come from architecture, not
+//! from rigging.
+
+pub mod row;
+pub mod rowstore;
+pub mod taskgraph;
+
+pub use row::{Cell, RowTable};
+pub use rowstore::RowStoreEngine;
+pub use taskgraph::{TaskGraphConfig, TaskGraphEngine};

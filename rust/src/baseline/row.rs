@@ -1,0 +1,261 @@
+//! Row-oriented table representation for the baseline engines.
+//!
+//! Cells are dynamically-typed boxed values in row-major order — the
+//! memory layout the paper contrasts with Arrow's columnar format.
+
+use crate::table::{pretty::cell_to_string, Array, DataType, Table};
+
+/// One dynamically-typed cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    I(i64),
+    F(f64),
+    S(String),
+    B(bool),
+    Null,
+}
+
+impl Cell {
+    /// Row-identity equality (NaN == NaN), matching columnar semantics.
+    pub fn identity_eq(&self, other: &Cell) -> bool {
+        match (self, other) {
+            (Cell::F(a), Cell::F(b)) => a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+            (a, b) => a == b,
+        }
+    }
+
+    /// Hash compatible with identity equality.
+    pub fn identity_hash(&self) -> u32 {
+        use crate::ops::hash::{fmix32, hash_bytes, hash_f64, hash_i64};
+        match self {
+            Cell::I(v) => hash_i64(*v),
+            Cell::F(v) => hash_f64(*v),
+            Cell::S(s) => hash_bytes(s.as_bytes()),
+            Cell::B(b) => fmix32(*b as u32 + 1),
+            Cell::Null => 0x9e37_79b9,
+        }
+    }
+
+    /// Wire encoding for the baselines' stage-boundary serialization.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Cell::I(v) => {
+                buf.push(0);
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            Cell::F(v) => {
+                buf.push(1);
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            Cell::S(s) => {
+                buf.push(2);
+                buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                buf.extend_from_slice(s.as_bytes());
+            }
+            Cell::B(b) => buf.push(3 | ((*b as u8) << 4)),
+            Cell::Null => buf.push(4),
+        }
+    }
+
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Option<Cell> {
+        let tag = *buf.get(*pos)?;
+        *pos += 1;
+        Some(match tag & 0x0f {
+            0 => {
+                let v = i64::from_le_bytes(buf.get(*pos..*pos + 8)?.try_into().ok()?);
+                *pos += 8;
+                Cell::I(v)
+            }
+            1 => {
+                let v = u64::from_le_bytes(buf.get(*pos..*pos + 8)?.try_into().ok()?);
+                *pos += 8;
+                Cell::F(f64::from_bits(v))
+            }
+            2 => {
+                let n = u32::from_le_bytes(buf.get(*pos..*pos + 4)?.try_into().ok()?) as usize;
+                *pos += 4;
+                let s = std::str::from_utf8(buf.get(*pos..*pos + n)?).ok()?.to_string();
+                *pos += n;
+                Cell::S(s)
+            }
+            3 => Cell::B(tag >> 4 == 1),
+            4 => Cell::Null,
+            _ => return None,
+        })
+    }
+}
+
+/// A row-major table: `rows[i][c]` is cell c of row i.
+#[derive(Debug, Clone, Default)]
+pub struct RowTable {
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl RowTable {
+    /// Convert from the columnar representation (the "hand data to the
+    /// JVM engine" step; deliberately materializes every cell).
+    pub fn from_table(t: &Table) -> RowTable {
+        let mut rows = Vec::with_capacity(t.num_rows());
+        for r in 0..t.num_rows() {
+            let mut row = Vec::with_capacity(t.num_columns());
+            for c in 0..t.num_columns() {
+                let col = t.column(c);
+                row.push(if !col.is_valid(r) {
+                    Cell::Null
+                } else {
+                    match col.as_ref() {
+                        Array::Int64(a) => Cell::I(a.value(r)),
+                        Array::Float64(a) => Cell::F(a.value(r)),
+                        Array::Utf8(a) => Cell::S(a.value(r).to_string()),
+                        Array::Bool(a) => Cell::B(a.value(r)),
+                    }
+                });
+            }
+            rows.push(row);
+        }
+        RowTable { rows }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whole-row identity hash.
+    pub fn row_hash(&self, i: usize) -> u32 {
+        let mut h = 0u32;
+        for c in &self.rows[i] {
+            h = crate::ops::hash::combine(h, c.identity_hash());
+        }
+        h
+    }
+
+    pub fn rows_identity_eq(a: &[Cell], b: &[Cell]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.identity_eq(y))
+    }
+
+    /// Serialize rows for a stage boundary (what a JVM/Python engine
+    /// pays between stages; Arrow-based Cylon does not).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.rows.len() * 16);
+        buf.extend_from_slice(&(self.rows.len() as u64).to_le_bytes());
+        for row in &self.rows {
+            buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+            for c in row {
+                c.encode(&mut buf);
+            }
+        }
+        buf
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Option<RowTable> {
+        let mut pos = 0usize;
+        let n = u64::from_le_bytes(buf.get(0..8)?.try_into().ok()?) as usize;
+        pos += 8;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ncells = u32::from_le_bytes(buf.get(pos..pos + 4)?.try_into().ok()?) as usize;
+            pos += 4;
+            let mut row = Vec::with_capacity(ncells);
+            for _ in 0..ncells {
+                row.push(Cell::decode(buf, &mut pos)?);
+            }
+            rows.push(row);
+        }
+        Some(RowTable { rows })
+    }
+
+    /// Approximate heap bytes (memory-limit accounting).
+    pub fn byte_size(&self) -> usize {
+        self.rows
+            .iter()
+            .map(|r| {
+                24 + r
+                    .iter()
+                    .map(|c| match c {
+                        Cell::S(s) => 32 + s.len(),
+                        _ => 16,
+                    })
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Debug rendering of row i (test diagnostics).
+    pub fn row_string(&self, i: usize) -> String {
+        self.rows[i]
+            .iter()
+            .map(|c| match c {
+                Cell::I(v) => v.to_string(),
+                Cell::F(v) => format!("{v}"),
+                Cell::S(s) => s.clone(),
+                Cell::B(b) => b.to_string(),
+                Cell::Null => "null".to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+/// Columnar row rendered the same way (cross-engine comparisons).
+pub fn columnar_row_string(t: &Table, r: usize) -> String {
+    (0..t.num_columns())
+        .map(|c| cell_to_string(t.column(c), r))
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+const _: () = {
+    // DataType is part of the conversion contract; keep the import used.
+    fn _check(_: DataType) {}
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::generator::paper_table;
+
+    #[test]
+    fn conversion_preserves_cells() {
+        let t = paper_table(50, 1.0, 3);
+        let rt = RowTable::from_table(&t);
+        assert_eq!(rt.num_rows(), 50);
+        for i in 0..50 {
+            assert_eq!(rt.row_string(i), columnar_row_string(&t, i));
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let t = Table::from_arrays(vec![
+            ("i", Array::from_i64_opts(vec![Some(1), None])),
+            ("s", Array::from_strs(&["ab", ""])),
+            ("b", Array::from_bools(vec![true, false])),
+            ("f", Array::from_f64(vec![f64::NAN, 2.5])),
+        ])
+        .unwrap();
+        let rt = RowTable::from_table(&t);
+        let back = RowTable::deserialize(&rt.serialize()).unwrap();
+        assert_eq!(back.num_rows(), 2);
+        for i in 0..2 {
+            assert!(RowTable::rows_identity_eq(&rt.rows[i], &back.rows[i]));
+        }
+    }
+
+    #[test]
+    fn identity_hash_matches_columnar_row_hash() {
+        // The baselines and Rylon must agree on row identity so their
+        // outputs are comparable.
+        let t = paper_table(100, 0.5, 9);
+        let rt = RowTable::from_table(&t);
+        for i in 0..100 {
+            assert_eq!(rt.row_hash(i), crate::ops::hash::hash_row(&t, i));
+        }
+    }
+
+    #[test]
+    fn corrupt_deserialize_is_none() {
+        assert!(RowTable::deserialize(&[1, 2, 3]).is_none());
+    }
+
+    use crate::table::Array;
+}

@@ -1,0 +1,111 @@
+//! Framework mode (§III-B): bring up workers, run BSP jobs, collect
+//! metrics — the piece that lets Rylon run standalone instead of as a
+//! library.
+//!
+//! Workers are OS threads connected by a [`crate::net::ChannelFabric`]
+//! (the testbed substitute for `mpirun`). Two execution surfaces:
+//!
+//! * [`run_workers`] — scatter a closure to every worker, join results
+//!   (the `mpirun ./app` analog; everything in `dist::` runs under it).
+//! * [`StreamOrchestrator`] — a bounded-queue streaming driver with
+//!   backpressure for ingest-style pipelines (DESIGN.md §3.6).
+
+pub mod stream;
+
+pub use stream::{StreamOrchestrator, StreamStats};
+
+use crate::ctx::CylonContext;
+use crate::error::{Error, Result};
+use crate::net::CommConfig;
+use crate::runtime::KernelRuntime;
+use std::sync::Arc;
+
+/// Spawn `world` workers, each with a connected [`CylonContext`], run
+/// `job` on all of them, and return results ordered by rank.
+///
+/// Panics in workers are converted to errors on join (a worker crash
+/// fails the job, it doesn't hang the leader).
+pub fn run_workers<T, F>(world: usize, config: &CommConfig, job: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(&mut CylonContext) -> T + Send + Sync + Clone + 'static,
+{
+    try_run_workers(world, config, None, move |ctx| Ok(job(ctx))).expect("worker job failed")
+}
+
+/// Fallible variant of [`run_workers`], optionally attaching a shared
+/// AOT kernel runtime to every worker's context.
+pub fn try_run_workers<T, F>(
+    world: usize,
+    config: &CommConfig,
+    runtime: Option<Arc<KernelRuntime>>,
+    job: F,
+) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(&mut CylonContext) -> Result<T> + Send + Sync + Clone + 'static,
+{
+    if world == 0 {
+        return Err(Error::invalid("world size 0"));
+    }
+    let ctxs = CylonContext::init_distributed(world, config);
+    let handles: Vec<_> = ctxs
+        .into_iter()
+        .map(|mut ctx| {
+            if let Some(rt) = &runtime {
+                ctx = ctx.with_runtime(rt.clone());
+            }
+            let job = job.clone();
+            std::thread::Builder::new()
+                .name(format!("rylon-worker-{}", ctx.rank()))
+                .spawn(move || job(&mut ctx))
+                .expect("spawn worker")
+        })
+        .collect();
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(rank, h)| {
+            h.join()
+                .map_err(|_| Error::internal(format!("worker {rank} panicked")))?
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_workers_orders_by_rank() {
+        let out = run_workers(4, &CommConfig::default(), |ctx| ctx.rank() * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn workers_communicate() {
+        let out = run_workers(3, &CommConfig::default(), |ctx| {
+            ctx.communicator().all_reduce_sum_u64(1).unwrap()
+        });
+        assert_eq!(out, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn worker_error_propagates() {
+        let r: Result<Vec<()>> = try_run_workers(2, &CommConfig::default(), None, |ctx| {
+            if ctx.rank() == 1 {
+                Err(Error::invalid("boom"))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_world_rejected() {
+        let r: Result<Vec<()>> =
+            try_run_workers(0, &CommConfig::default(), None, |_| Ok(()));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! CylonContext analog — one worker's handle to the distributed runtime
+//! (rank, world size, communicator, optional AOT kernel runtime).
+
+use crate::error::Result;
+use crate::net::{ChannelFabric, CommConfig, Communicator};
+use crate::runtime::KernelRuntime;
+use std::sync::Arc;
+
+/// Worker identity within a context.
+pub type WorkerId = usize;
+
+/// The per-worker execution context (the `cylon::CylonContext` analog).
+/// Created via [`CylonContext::init_local`] for a 1-process "local"
+/// context or [`CylonContext::init_distributed`] for a connected set.
+pub struct CylonContext {
+    comm: Communicator,
+    /// Optional AOT kernel runtime shared by all workers in the process.
+    runtime: Option<Arc<KernelRuntime>>,
+}
+
+impl CylonContext {
+    /// Single-worker (local mode) context.
+    pub fn init_local() -> Self {
+        let mut fabric = ChannelFabric::new(1);
+        let comm = Communicator::new(Box::new(fabric.pop().unwrap()), &CommConfig::default());
+        CylonContext { comm, runtime: None }
+    }
+
+    /// Connected contexts for `world` in-process workers
+    /// (the `CylonContext::InitDistributed(mpi_config)` analog).
+    pub fn init_distributed(world: usize, config: &CommConfig) -> Vec<Self> {
+        ChannelFabric::with_failures(world, config.failures.clone())
+            .into_iter()
+            .map(|mut t| {
+                t.recv_timeout = config.recv_timeout;
+                CylonContext {
+                    comm: Communicator::new(Box::new(t), config),
+                    runtime: None,
+                }
+            })
+            .collect()
+    }
+
+    /// Wrap an existing communicator (custom transports, e.g.
+    /// [`crate::net::tcp::TcpFabric`] endpoints).
+    pub fn from_communicator(comm: Communicator) -> Self {
+        CylonContext { comm, runtime: None }
+    }
+
+    /// Attach a shared AOT kernel runtime (hash-partition on the PJRT
+    /// hot path). Without it, operators use the bit-identical native
+    /// fallback.
+    pub fn with_runtime(mut self, rt: Arc<KernelRuntime>) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    pub fn rank(&self) -> WorkerId {
+        self.comm.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.comm.world()
+    }
+
+    pub fn communicator(&mut self) -> &mut Communicator {
+        &mut self.comm
+    }
+
+    pub fn runtime(&self) -> Option<&Arc<KernelRuntime>> {
+        self.runtime.as_ref()
+    }
+
+    /// Finalize: synchronize and drop (MPI_Finalize analog).
+    pub fn finalize(mut self) -> Result<()> {
+        self.comm.barrier()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_context_is_world_one() {
+        let ctx = CylonContext::init_local();
+        assert_eq!(ctx.rank(), 0);
+        assert_eq!(ctx.world(), 1);
+        ctx.finalize().unwrap();
+    }
+
+    #[test]
+    fn distributed_contexts_have_distinct_ranks() {
+        let ctxs = CylonContext::init_distributed(4, &CommConfig::default());
+        let ranks: Vec<_> = ctxs.iter().map(|c| c.rank()).collect();
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+        assert!(ctxs.iter().all(|c| c.world() == 4));
+    }
+}

@@ -1,0 +1,370 @@
+//! Dataflow graph API — the paper's §VI direction: "For disk-based
+//! operations, a dataflow graph-based API is more suitable due to the
+//! streaming nature of computations."
+//!
+//! A lazily-built DAG of relational operators over named table sources,
+//! executed topologically on a [`crate::ctx::CylonContext`]. Nodes use
+//! the same local/distributed operators the eager API exposes, so a
+//! graph run on a world-of-N context transparently distributes: joins
+//! and set ops shuffle, selects/projects stay local — exactly the
+//! paper's local/distributed operator duality (§II-B), but composed
+//! declaratively (the Twister2:TSet analog of §III-C).
+//!
+//! ```
+//! use rylon::dataflow::Graph;
+//! use rylon::ops::expr::Expr;
+//! use rylon::ops::join::JoinConfig;
+//! let mut g = Graph::new();
+//! let orders = g.source("orders");
+//! let payments = g.source("payments");
+//! let joined = g.join(orders, payments, JoinConfig::inner(0, 0));
+//! let big = g.filter(joined, Expr::col(1).gt(Expr::lit_f64(0.5)));
+//! let out = g.project(big, vec![0, 1]);
+//! g.sink(out);
+//! # use rylon::io::generator::paper_table;
+//! # let mut ctx = rylon::ctx::CylonContext::init_local();
+//! # let r = g.execute_with(&mut ctx, &[("orders", paper_table(100, 0.9, 1)),
+//! #                                    ("payments", paper_table(100, 0.9, 2))]).unwrap();
+//! # assert_eq!(r.len(), 1);
+//! ```
+
+use crate::ctx::CylonContext;
+use crate::error::{Error, Result};
+use crate::ops::aggregate::AggSpec;
+use crate::ops::expr::Expr;
+use crate::ops::join::JoinConfig;
+use crate::table::Table;
+use std::collections::HashMap;
+
+/// Handle to a node in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(usize);
+
+/// Operator nodes.
+enum Node {
+    /// Named input bound at execution time.
+    Source { name: String },
+    Filter { input: NodeId, pred: Expr },
+    Project { input: NodeId, columns: Vec<usize> },
+    WithColumn { input: NodeId, name: String, expr: Expr },
+    Sort { input: NodeId, col: usize },
+    Join { left: NodeId, right: NodeId, cfg: JoinConfig },
+    Union { left: NodeId, right: NodeId },
+    Intersect { left: NodeId, right: NodeId },
+    Difference { left: NodeId, right: NodeId },
+    GroupBy { input: NodeId, key: usize, aggs: Vec<AggSpec> },
+}
+
+impl Node {
+    fn inputs(&self) -> Vec<NodeId> {
+        match self {
+            Node::Source { .. } => vec![],
+            Node::Filter { input, .. }
+            | Node::Project { input, .. }
+            | Node::WithColumn { input, .. }
+            | Node::Sort { input, .. }
+            | Node::GroupBy { input, .. } => vec![*input],
+            Node::Join { left, right, .. }
+            | Node::Union { left, right }
+            | Node::Intersect { left, right }
+            | Node::Difference { left, right } => vec![*left, *right],
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Node::Source { .. } => "source",
+            Node::Filter { .. } => "filter",
+            Node::Project { .. } => "project",
+            Node::WithColumn { .. } => "with_column",
+            Node::Sort { .. } => "sort",
+            Node::Join { .. } => "join",
+            Node::Union { .. } => "union",
+            Node::Intersect { .. } => "intersect",
+            Node::Difference { .. } => "difference",
+            Node::GroupBy { .. } => "group_by",
+        }
+    }
+}
+
+/// A lazily-built operator DAG.
+#[derive(Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    sinks: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Declare a named source, bound to a table at execute time.
+    pub fn source(&mut self, name: impl Into<String>) -> NodeId {
+        self.push(Node::Source { name: name.into() })
+    }
+
+    pub fn filter(&mut self, input: NodeId, pred: Expr) -> NodeId {
+        self.push(Node::Filter { input, pred })
+    }
+
+    pub fn project(&mut self, input: NodeId, columns: Vec<usize>) -> NodeId {
+        self.push(Node::Project { input, columns })
+    }
+
+    pub fn with_column(&mut self, input: NodeId, name: impl Into<String>, expr: Expr) -> NodeId {
+        self.push(Node::WithColumn { input, name: name.into(), expr })
+    }
+
+    pub fn sort(&mut self, input: NodeId, col: usize) -> NodeId {
+        self.push(Node::Sort { input, col })
+    }
+
+    pub fn join(&mut self, left: NodeId, right: NodeId, cfg: JoinConfig) -> NodeId {
+        self.push(Node::Join { left, right, cfg })
+    }
+
+    pub fn union(&mut self, left: NodeId, right: NodeId) -> NodeId {
+        self.push(Node::Union { left, right })
+    }
+
+    pub fn intersect(&mut self, left: NodeId, right: NodeId) -> NodeId {
+        self.push(Node::Intersect { left, right })
+    }
+
+    pub fn difference(&mut self, left: NodeId, right: NodeId) -> NodeId {
+        self.push(Node::Difference { left, right })
+    }
+
+    pub fn group_by(&mut self, input: NodeId, key: usize, aggs: Vec<AggSpec>) -> NodeId {
+        self.push(Node::GroupBy { input, key, aggs })
+    }
+
+    /// Mark a node as an output of the graph.
+    pub fn sink(&mut self, node: NodeId) {
+        self.sinks.push(node);
+    }
+
+    /// Human-readable plan (topological order).
+    pub fn explain(&self) -> String {
+        let mut out = String::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            let deps: Vec<String> = n.inputs().iter().map(|d| format!("#{}", d.0)).collect();
+            let sink = if self.sinks.contains(&NodeId(i)) { "  [sink]" } else { "" };
+            out.push_str(&format!("#{i}: {}({}){}\n", n.name(), deps.join(", "), sink));
+        }
+        out
+    }
+
+    /// Execute on a context (world size 1 = local; >1 = distributed),
+    /// binding `sources` by name. Returns the sink tables in
+    /// declaration order. Node results are cached, so diamond-shaped
+    /// graphs evaluate each node once.
+    pub fn execute_with(
+        &self,
+        ctx: &mut CylonContext,
+        sources: &[(&str, Table)],
+    ) -> Result<Vec<Table>> {
+        if self.sinks.is_empty() {
+            return Err(Error::invalid("graph has no sinks"));
+        }
+        let bound: HashMap<&str, &Table> = sources.iter().map(|(n, t)| (*n, t)).collect();
+        let mut results: Vec<Option<Table>> = (0..self.nodes.len()).map(|_| None).collect();
+        // Nodes are append-only, so index order IS a topological order.
+        for (i, node) in self.nodes.iter().enumerate() {
+            let get = |id: NodeId, results: &Vec<Option<Table>>| -> Result<Table> {
+                results[id.0]
+                    .clone()
+                    .ok_or_else(|| Error::internal("dataflow dependency not computed"))
+            };
+            let value = match node {
+                Node::Source { name } => bound
+                    .get(name.as_str())
+                    .map(|t| (*t).clone())
+                    .ok_or_else(|| Error::invalid(format!("unbound source '{name}'")))?,
+                Node::Filter { input, pred } => {
+                    crate::ops::expr::filter(&get(*input, &results)?, pred)?
+                }
+                Node::Project { input, columns } => {
+                    crate::ops::project::project(&get(*input, &results)?, columns)?
+                }
+                Node::WithColumn { input, name, expr } => {
+                    crate::ops::expr::with_column(&get(*input, &results)?, name, expr)?
+                }
+                Node::Sort { input, col } => {
+                    let t = get(*input, &results)?;
+                    if ctx.world() > 1 {
+                        crate::dist::dist_sort(ctx, &t, *col)?.0
+                    } else {
+                        crate::ops::sort::sort(&t, *col)?
+                    }
+                }
+                Node::Join { left, right, cfg } => {
+                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
+                    if ctx.world() > 1 {
+                        crate::dist::dist_join(ctx, &l, &r, cfg)?.0
+                    } else {
+                        crate::ops::join::join(&l, &r, cfg)?
+                    }
+                }
+                Node::Union { left, right } => {
+                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
+                    if ctx.world() > 1 {
+                        crate::dist::dist_union(ctx, &l, &r)?.0
+                    } else {
+                        crate::ops::union::union(&l, &r)?
+                    }
+                }
+                Node::Intersect { left, right } => {
+                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
+                    if ctx.world() > 1 {
+                        crate::dist::dist_intersect(ctx, &l, &r)?.0
+                    } else {
+                        crate::ops::intersect::intersect(&l, &r)?
+                    }
+                }
+                Node::Difference { left, right } => {
+                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
+                    if ctx.world() > 1 {
+                        crate::dist::dist_difference(ctx, &l, &r)?.0
+                    } else {
+                        crate::ops::difference::difference(&l, &r)?
+                    }
+                }
+                Node::GroupBy { input, key, aggs } => {
+                    let t = get(*input, &results)?;
+                    if ctx.world() > 1 {
+                        crate::dist::dist_group_by(ctx, &t, *key, aggs)?.0
+                    } else {
+                        crate::ops::aggregate::group_by(&t, *key, aggs)?
+                    }
+                }
+            };
+            results[i] = Some(value);
+        }
+        self.sinks
+            .iter()
+            .map(|s| {
+                results[s.0]
+                    .clone()
+                    .ok_or_else(|| Error::internal("sink not computed"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_workers;
+    use crate::io::generator::paper_table;
+    use crate::net::CommConfig;
+    use crate::ops::aggregate::AggFn;
+
+    fn pipeline() -> Graph {
+        let mut g = Graph::new();
+        let a = g.source("a");
+        let b = g.source("b");
+        let j = g.join(a, b, JoinConfig::inner(0, 0));
+        let f = g.filter(j, Expr::col(1).gt(Expr::lit_f64(0.25)));
+        let p = g.project(f, vec![0, 1, 5]);
+        g.sink(p);
+        g
+    }
+
+    #[test]
+    fn local_execution_matches_eager() {
+        let a = paper_table(400, 0.8, 1);
+        let b = paper_table(400, 0.8, 2);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let got = pipeline()
+            .execute_with(&mut ctx, &[("a", a.clone()), ("b", b.clone())])
+            .unwrap();
+        // eager equivalent
+        let j = crate::ops::join::join(&a, &b, &JoinConfig::inner(0, 0)).unwrap();
+        let f = crate::ops::expr::filter(&j, &Expr::col(1).gt(Expr::lit_f64(0.25))).unwrap();
+        let want = crate::ops::project::project(&f, &[0, 1, 5]).unwrap();
+        assert!(got[0].data_equals(&want));
+    }
+
+    #[test]
+    fn distributed_execution_matches_local() {
+        let world = 3;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let a = paper_table(200, 0.8, 10 + ctx.rank() as u64);
+            let b = paper_table(200, 0.8, 20 + ctx.rank() as u64);
+            let r = pipeline()
+                .execute_with(ctx, &[("a", a.clone()), ("b", b.clone())])
+                .unwrap();
+            (a, b, r.into_iter().next().unwrap())
+        });
+        let cat = |f: &dyn Fn(&(Table, Table, Table)) -> Table| -> Table {
+            let parts: Vec<Table> = outs.iter().map(f).collect();
+            let refs: Vec<&Table> = parts.iter().collect();
+            crate::table::take::concat_tables(&refs).unwrap()
+        };
+        let ga = cat(&|o| o.0.clone());
+        let gb = cat(&|o| o.1.clone());
+        let got_rows = cat(&|o| o.2.clone()).num_rows();
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let want = pipeline().execute_with(&mut ctx, &[("a", ga), ("b", gb)]).unwrap();
+        assert_eq!(got_rows, want[0].num_rows());
+    }
+
+    #[test]
+    fn group_by_node_works() {
+        let mut g = Graph::new();
+        let src = g.source("t");
+        let agg = g.group_by(src, 0, vec![AggSpec::new(AggFn::Count, 0)]);
+        g.sink(agg);
+        let t = paper_table(500, 0.2, 3); // few distinct keys
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let out = g.execute_with(&mut ctx, &[("t", t.clone())]).unwrap();
+        let want = crate::ops::aggregate::group_by(
+            &t,
+            0,
+            &[AggSpec::new(AggFn::Count, 0)],
+        )
+        .unwrap();
+        assert_eq!(out[0].num_rows(), want.num_rows());
+    }
+
+    #[test]
+    fn diamond_graph_evaluates_once_per_node() {
+        let mut g = Graph::new();
+        let src = g.source("t");
+        let even = g.filter(src, Expr::col(0).modulo(Expr::lit_i64(2)).eq(Expr::lit_i64(0)));
+        let odd = g.filter(src, Expr::col(0).modulo(Expr::lit_i64(2)).eq(Expr::lit_i64(1)));
+        let u = g.union(even, odd);
+        g.sink(u);
+        let t = paper_table(300, 0.9, 5);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let out = g.execute_with(&mut ctx, &[("t", t.clone())]).unwrap();
+        let distinct = crate::ops::union::distinct(&t).unwrap();
+        assert_eq!(out[0].num_rows(), distinct.num_rows());
+    }
+
+    #[test]
+    fn errors_surface() {
+        let mut g = Graph::new();
+        let s = g.source("t");
+        g.sink(s);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        assert!(g.execute_with(&mut ctx, &[]).is_err()); // unbound source
+        let empty = Graph::new();
+        assert!(empty.execute_with(&mut ctx, &[]).is_err()); // no sinks
+    }
+
+    #[test]
+    fn explain_renders_plan() {
+        let g = pipeline();
+        let plan = g.explain();
+        assert!(plan.contains("join(#0, #1)"));
+        assert!(plan.contains("[sink]"));
+    }
+}

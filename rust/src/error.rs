@@ -1,0 +1,90 @@
+//! Error/status type for the whole crate (the `cylon::Status` analog).
+
+use std::fmt;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error kinds mirroring `cylon::Code`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Schema/type mismatch between tables or columns.
+    SchemaMismatch(String),
+    /// An argument was out of range or otherwise invalid.
+    Invalid(String),
+    /// I/O failure (CSV parse, file system, ...).
+    Io(String),
+    /// Communication layer failure (peer gone, deserialize, ...).
+    Comm(String),
+    /// AOT runtime failure (artifact missing, PJRT error, ...).
+    Runtime(String),
+    /// Simulated resource exhaustion (used by baselines / failure injection).
+    OutOfMemory(String),
+    /// Anything else.
+    Internal(String),
+}
+
+impl Error {
+    pub fn schema(msg: impl Into<String>) -> Self {
+        Error::SchemaMismatch(msg.into())
+    }
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+    pub fn io(msg: impl Into<String>) -> Self {
+        Error::Io(msg.into())
+    }
+    pub fn comm(msg: impl Into<String>) -> Self {
+        Error::Comm(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn oom(msg: impl Into<String>) -> Self {
+        Error::OutOfMemory(msg.into())
+    }
+    pub fn internal(msg: impl Into<String>) -> Self {
+        Error::Internal(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::SchemaMismatch(m) => write!(f, "schema mismatch: {m}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Comm(m) => write!(f, "comm error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::OutOfMemory(m) => write!(f, "out of memory: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_kind_and_message() {
+        let e = Error::schema("left has 3 cols, right has 4");
+        assert!(e.to_string().contains("schema mismatch"));
+        assert!(e.to_string().contains("3 cols"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,20 @@
+//! Out-of-core operators — the paper's §VI future work, built:
+//! "extending the Cylon operations to use external storage such as
+//! disks for larger tables that do not fit into memory".
+//!
+//! * [`spill`] — length-prefixed batches of the wire format on disk;
+//! * [`sort`] — external merge sort: bounded in-memory runs → spill →
+//!   k-way streaming merge;
+//! * [`join`] — Grace-style partitioned hash join: both inputs are hash
+//!   partitioned to disk, partitions joined pairwise in memory.
+//!
+//! Memory ceilings are expressed in *rows per batch* so tests can force
+//! many spill files with tiny tables.
+
+pub mod join;
+pub mod sort;
+pub mod spill;
+
+pub use join::external_join;
+pub use sort::external_sort;
+pub use spill::{SpillReader, SpillWriter};

@@ -1,0 +1,183 @@
+//! Spill files: a sequence of length-prefixed wire-format table batches
+//! on disk. The unit all out-of-core operators stream through.
+
+use crate::error::{Error, Result};
+use crate::net::serialize::{deserialize_table, serialize_table};
+use crate::table::Table;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Append-only writer of table batches.
+pub struct SpillWriter {
+    path: PathBuf,
+    out: BufWriter<File>,
+    batches: usize,
+    rows: usize,
+}
+
+impl SpillWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::create(&path)
+            .map_err(|e| Error::io(format!("{}: {e}", path.display())))?;
+        Ok(SpillWriter { path, out: BufWriter::new(file), batches: 0, rows: 0 })
+    }
+
+    /// Append one batch.
+    pub fn write(&mut self, t: &Table) -> Result<()> {
+        let bytes = serialize_table(t);
+        self.out.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        self.out.write_all(&bytes)?;
+        self.batches += 1;
+        self.rows += t.num_rows();
+        Ok(())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Flush and return the path for reading.
+    pub fn finish(mut self) -> Result<PathBuf> {
+        self.out.flush()?;
+        Ok(self.path)
+    }
+}
+
+/// Streaming reader of table batches.
+pub struct SpillReader {
+    input: BufReader<File>,
+    path: PathBuf,
+}
+
+impl SpillReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)
+            .map_err(|e| Error::io(format!("{}: {e}", path.display())))?;
+        Ok(SpillReader { input: BufReader::new(file), path })
+    }
+
+    /// Next batch, or `None` at end of file.
+    pub fn next_batch(&mut self) -> Result<Option<Table>> {
+        let mut len_buf = [0u8; 8];
+        match self.input.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(Error::io(format!("{}: {e}", self.path.display()))),
+        }
+        let len = u64::from_le_bytes(len_buf) as usize;
+        let mut buf = vec![0u8; len];
+        self.input
+            .read_exact(&mut buf)
+            .map_err(|e| Error::io(format!("{}: truncated batch: {e}", self.path.display())))?;
+        deserialize_table(&buf).map(Some)
+    }
+
+    /// Drain all batches (tests / small files).
+    pub fn read_all(&mut self) -> Result<Vec<Table>> {
+        let mut out = Vec::new();
+        while let Some(b) = self.next_batch()? {
+            out.push(b);
+        }
+        Ok(out)
+    }
+}
+
+/// A scratch directory that cleans itself up.
+pub struct SpillDir {
+    path: PathBuf,
+    counter: usize,
+}
+
+impl SpillDir {
+    pub fn new(tag: &str) -> Result<Self> {
+        let path = std::env::temp_dir().join(format!(
+            "rylon_spill_{tag}_{}_{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos())
+                .unwrap_or(0)
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(SpillDir { path, counter: 0 })
+    }
+
+    /// A fresh file path inside the scratch dir.
+    pub fn next_path(&mut self) -> PathBuf {
+        self.counter += 1;
+        self.path.join(format!("spill_{:05}.ryl", self.counter))
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.path).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::generator::{paper_table, random_table};
+
+    #[test]
+    fn roundtrip_batches() {
+        let mut dir = SpillDir::new("rt").unwrap();
+        let p = dir.next_path();
+        let mut w = SpillWriter::create(&p).unwrap();
+        let a = paper_table(100, 1.0, 1);
+        let b = random_table(57, 2);
+        w.write(&a).unwrap();
+        w.write(&b).unwrap();
+        assert_eq!(w.rows(), 157);
+        assert_eq!(w.batches(), 2);
+        let path = w.finish().unwrap();
+        let mut r = SpillReader::open(path).unwrap();
+        let batches = r.read_all().unwrap();
+        assert_eq!(batches.len(), 2);
+        assert!(batches[0].data_equals(&a));
+        assert!(batches[1].data_equals(&b));
+    }
+
+    #[test]
+    fn empty_file_yields_none() {
+        let mut dir = SpillDir::new("empty").unwrap();
+        let p = dir.next_path();
+        let w = SpillWriter::create(&p).unwrap();
+        let path = w.finish().unwrap();
+        let mut r = SpillReader::open(path).unwrap();
+        assert!(r.next_batch().unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_batch_errors() {
+        let mut dir = SpillDir::new("trunc").unwrap();
+        let p = dir.next_path();
+        let mut w = SpillWriter::create(&p).unwrap();
+        w.write(&paper_table(50, 1.0, 3)).unwrap();
+        let path = w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let mut r = SpillReader::open(&path).unwrap();
+        assert!(r.next_batch().is_err());
+    }
+
+    #[test]
+    fn spill_dir_cleans_up() {
+        let path;
+        {
+            let mut dir = SpillDir::new("clean").unwrap();
+            path = dir.next_path();
+            SpillWriter::create(&path).unwrap().finish().unwrap();
+            assert!(path.exists());
+        }
+        assert!(!path.exists());
+    }
+}

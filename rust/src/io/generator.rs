@@ -1,0 +1,252 @@
+//! Deterministic synthetic workload generation.
+//!
+//! The paper's benchmark schema (§IV-A): 4 columns — one `int64` index
+//! (the join key) and three `float64` value columns. Keys are drawn
+//! uniformly from `[0, rows / density)` so `density` controls the join
+//! match rate; `1.0` reproduces the paper's uniform index distribution.
+//!
+//! A hand-rolled splitmix64 keeps generation dependency-free and
+//! bit-reproducible across runs and platforms.
+
+use crate::table::{Array, Table};
+
+/// splitmix64 — tiny, fast, well-distributed PRNG.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift bounded sampling (Lemire); bias negligible here.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// The paper's benchmark table: `rows` rows, 1 int64 key (`c0`) + 3
+/// float64 value columns, keys uniform in `[0, rows/density)`.
+pub fn paper_table(rows: usize, density: f64, seed: u64) -> Table {
+    assert!(density > 0.0 && density <= 1.0, "density in (0,1]");
+    let key_space = ((rows as f64 / density).ceil() as u64).max(1);
+    let mut rng = SplitMix64::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.next_below(key_space) as i64).collect();
+    let mk = |rng: &mut SplitMix64| (0..rows).map(|_| rng.next_f64()).collect::<Vec<f64>>();
+    let (v1, v2, v3) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    Table::from_arrays(vec![
+        ("c0", Array::from_i64(keys)),
+        ("c1", Array::from_f64(v1)),
+        ("c2", Array::from_f64(v2)),
+        ("c3", Array::from_f64(v3)),
+    ])
+    .expect("generator schema is valid")
+}
+
+/// Generic table: `cols` columns of which the first is an int64 key,
+/// the rest float64; `density` as in [`paper_table`].
+pub fn uniform_table(rows: usize, cols: usize, density: f64, seed: u64) -> Table {
+    assert!(cols >= 1);
+    let key_space = ((rows as f64 / density).ceil() as u64).max(1);
+    let mut rng = SplitMix64::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.next_below(key_space) as i64).collect();
+    let mut arrays = vec![("c0".to_string(), Array::from_i64(keys))];
+    for c in 1..cols {
+        let vals: Vec<f64> = (0..rows).map(|_| rng.next_f64()).collect();
+        arrays.push((format!("c{c}"), Array::from_f64(vals)));
+    }
+    let pairs: Vec<(&str, Array)> = arrays.iter().map(|(n, a)| (n.as_str(), a.clone())).collect();
+    Table::from_arrays(pairs).expect("generator schema is valid")
+}
+
+/// Zipf-ish skewed keys (hot-key shuffle-skew stress): key i chosen with
+/// probability ∝ 1/(i+1); used by ablation benches and skew tests.
+pub fn skewed_table(rows: usize, key_space: u64, seed: u64) -> Table {
+    let mut rng = SplitMix64::new(seed);
+    // Inverse-CDF sampling of Zipf(s=1) over [0, key_space) via the
+    // harmonic approximation H(k) ≈ ln(k+1).
+    let hmax = ((key_space + 1) as f64).ln();
+    let keys: Vec<i64> = (0..rows)
+        .map(|_| {
+            let u = rng.next_f64() * hmax;
+            (u.exp() - 1.0).min((key_space - 1) as f64) as i64
+        })
+        .collect();
+    let vals: Vec<f64> = (0..rows).map(|_| rng.next_f64()).collect();
+    Table::from_arrays(vec![
+        ("c0", Array::from_i64(keys)),
+        ("c1", Array::from_f64(vals)),
+    ])
+    .expect("generator schema is valid")
+}
+
+/// Fully random table for property tests: mixed column types, nulls,
+/// duplicate-prone keys. Deterministic in `seed`.
+pub fn random_table(rows: usize, seed: u64) -> Table {
+    let mut rng = SplitMix64::new(seed);
+    let key_space = (rows as u64 / 2).max(1); // duplicates likely
+    let keys: Vec<Option<i64>> = (0..rows)
+        .map(|_| {
+            if rng.next_below(10) == 0 {
+                None
+            } else {
+                Some(rng.next_below(key_space) as i64 - (key_space / 2) as i64)
+            }
+        })
+        .collect();
+    let floats: Vec<Option<f64>> = (0..rows)
+        .map(|_| match rng.next_below(12) {
+            0 => None,
+            1 => Some(f64::NAN),
+            _ => Some(rng.next_f64() * 10.0 - 5.0),
+        })
+        .collect();
+    let strings: Vec<String> = (0..rows)
+        .map(|_| {
+            let len = rng.next_below(6) as usize;
+            (0..len)
+                .map(|_| char::from(b'a' + rng.next_below(4) as u8))
+                .collect()
+        })
+        .collect();
+    let bools: Vec<bool> = (0..rows).map(|_| rng.next_below(2) == 1).collect();
+    Table::from_arrays(vec![
+        ("k", Array::from_i64_opts(keys)),
+        ("f", Array::from_f64_opts(floats)),
+        ("s", Array::from_strs(&strings)),
+        ("b", Array::from_bools(bools)),
+    ])
+    .expect("generator schema is valid")
+}
+
+/// The paper's benchmark table with an explicit key space (keys uniform
+/// in `[0, key_space)`). Used when several partitions must share one
+/// *global* key distribution.
+pub fn paper_table_with_keyspace(rows: usize, key_space: u64, seed: u64) -> Table {
+    let key_space = key_space.max(1);
+    let mut rng = SplitMix64::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.next_below(key_space) as i64).collect();
+    let mk = |rng: &mut SplitMix64| (0..rows).map(|_| rng.next_f64()).collect::<Vec<f64>>();
+    let (v1, v2, v3) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    Table::from_arrays(vec![
+        ("c0", Array::from_i64(keys)),
+        ("c1", Array::from_f64(v1)),
+        ("c2", Array::from_f64(v2)),
+        ("c3", Array::from_f64(v3)),
+    ])
+    .expect("generator schema is valid")
+}
+
+/// The worker's slice of a conceptually-global table: worker `w` of `n`
+/// generates its own partition deterministically (what mpirun rank w
+/// reading `csvN.csv` does in the paper's setup).
+///
+/// The key space is **global** — `total_rows / density` — so the key
+/// duplication rate (and thus join selectivity) is a property of the
+/// whole dataset, independent of how many workers slice it. (A
+/// per-worker key space would make weak-scaling join outputs grow
+/// quadratically with W.)
+pub fn worker_partition(
+    total_rows: usize,
+    world: usize,
+    rank: usize,
+    density: f64,
+    seed: u64,
+) -> Table {
+    assert!(density > 0.0 && density <= 1.0, "density in (0,1]");
+    let base = total_rows / world;
+    let extra = usize::from(rank < total_rows % world);
+    let rows = base + extra;
+    let key_space = ((total_rows as f64 / density).ceil() as u64).max(1);
+    paper_table_with_keyspace(rows, key_space, seed ^ ((rank as u64 + 1) << 32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = paper_table(100, 1.0, 7);
+        let b = paper_table(100, 1.0, 7);
+        assert!(a.data_equals(&b));
+        let c = paper_table(100, 1.0, 8);
+        assert!(!a.data_equals(&c));
+    }
+
+    #[test]
+    fn paper_schema_shape() {
+        let t = paper_table(10, 1.0, 1);
+        assert_eq!(t.num_columns(), 4);
+        assert_eq!(t.num_rows(), 10);
+        assert!(t.column(0).as_i64().is_some());
+        for c in 1..4 {
+            assert!(t.column(c).as_f64().is_some());
+        }
+    }
+
+    #[test]
+    fn density_bounds_keys() {
+        let t = paper_table(1000, 0.5, 3);
+        let keys = t.column(0).as_i64().unwrap().values();
+        assert!(keys.iter().all(|&k| k >= 0 && k < 2000));
+    }
+
+    #[test]
+    fn worker_partitions_cover_total() {
+        let total: usize = (0..3)
+            .map(|r| worker_partition(100, 3, r, 1.0, 9).num_rows())
+            .sum();
+        assert_eq!(total, 100);
+        // different ranks generate different data
+        let a = worker_partition(100, 3, 0, 1.0, 9);
+        let b = worker_partition(100, 3, 1, 1.0, 9);
+        assert!(!a.data_equals(&b));
+    }
+
+    #[test]
+    fn skew_is_skewed() {
+        let t = skewed_table(10_000, 1000, 5);
+        let keys = t.column(0).as_i64().unwrap().values();
+        let zeros = keys.iter().filter(|&&k| k == 0).count();
+        // Zipf(1): key 0 should be far above uniform share (10 per key).
+        assert!(zeros > 200, "zeros={zeros}");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = SplitMix64::new(42);
+        for _ in 0..1000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..1000 {
+            assert!(rng.next_below(7) < 7);
+        }
+    }
+}

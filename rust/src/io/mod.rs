@@ -1,0 +1,6 @@
+//! I/O: CSV read/write and synthetic workload generation.
+
+pub mod csv;
+pub mod generator;
+
+pub use csv::{read_csv, read_csv_partitioned, write_csv, CsvReadOptions};

@@ -1,0 +1,59 @@
+//! # Rylon — high performance data engineering everywhere, in Rust
+//!
+//! A reproduction of *Cylon* (Widanage et al., 2020): an MPI-style, BSP,
+//! distributed-memory data-parallel library for relational processing of
+//! structured (columnar) data.
+//!
+//! The crate is layered exactly like the paper's Fig. 2:
+//!
+//! ```text
+//!   [api]          language-binding layer (safe Rust API + C ABI)
+//!   [dist]         distributed operators  = local ops + AllToAll shuffle
+//!   [ops]          local relational operators (Table I)
+//!   [table]        Arrow-like columnar table abstraction
+//!   [net]          communication layer (Communicator / AllToAll / models)
+//!   [runtime]      AOT compute kernels via PJRT (JAX/Pallas build-time)
+//!   [ctx]          CylonContext analog: rank, world, comm, runtime
+//!   [coordinator]  framework mode: spawn workers, run BSP jobs
+//!   [baseline]     comparator engines (row-store "Spark", task-graph "Dask")
+//! ```
+//!
+//! Quickstart (local, single process):
+//!
+//! ```
+//! use rylon::prelude::*;
+//!
+//! let left = rylon::io::generator::uniform_table(1000, 4, 0.9, 42);
+//! let right = rylon::io::generator::uniform_table(1000, 4, 0.9, 43);
+//! let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash);
+//! let joined = rylon::ops::join::join(&left, &right, &cfg).unwrap();
+//! assert!(joined.num_columns() == left.num_columns() + right.num_columns() - 0);
+//! ```
+
+pub mod api;
+pub mod baseline;
+pub mod coordinator;
+pub mod ctx;
+pub mod dataflow;
+pub mod dist;
+pub mod error;
+pub mod external;
+pub mod io;
+pub mod metrics;
+pub mod net;
+pub mod ops;
+pub mod runtime;
+pub mod sim;
+pub mod table;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::ctx::{CylonContext, WorkerId};
+    pub use crate::dist::{
+        dist_difference, dist_intersect, dist_join, dist_sort, dist_union, shuffle,
+    };
+    pub use crate::error::{Error, Result};
+    pub use crate::net::{CommConfig, NetworkProfile};
+    pub use crate::ops::join::{JoinAlgorithm, JoinConfig, JoinType};
+    pub use crate::table::{Array, DataType, Field, Schema, Table};
+}

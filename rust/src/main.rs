@@ -1,0 +1,269 @@
+//! `rylon` — leader entrypoint / CLI for framework mode (§III-B).
+//!
+//! Subcommands:
+//! * `generate` — write the paper's benchmark CSVs.
+//! * `join` / `union` — run a distributed op over CSV inputs across W
+//!   in-process workers and write per-worker outputs (the Fig. 4
+//!   program as a CLI).
+//! * `show` — pretty-print the head of a CSV.
+//! * `artifacts` — report AOT artifact status.
+//!
+//! Arg parsing is hand-rolled (the offline testbed vendors no CLI crate).
+
+use rylon::coordinator::try_run_workers;
+use rylon::io::csv::{read_csv, write_csv, CsvReadOptions};
+use rylon::io::generator::paper_table;
+use rylon::net::{CommConfig, NetworkProfile};
+use rylon::ops::join::{JoinAlgorithm, JoinConfig, JoinType};
+use rylon::prelude::*;
+use rylon::runtime::KernelRuntime;
+use std::sync::Arc;
+
+/// CLI-level result (the lib prelude shadows `Result`).
+type CliResult<T> = std::result::Result<T, String>;
+
+const USAGE: &str = "\
+rylon — high performance data engineering everywhere (Cylon repro)
+
+USAGE:
+  rylon generate <out.csv> [--rows N] [--density D] [--seed S]
+  rylon join <left.csv> <right.csv> [--out PREFIX] [--workers W]
+             [--algorithm hash|sort] [--join-type inner|left|right|full]
+             [--key COL] [--profile loopback|infiniband|tcp10g|tcp1g]
+             [--no-aot]
+  rylon union <a.csv> <b.csv> [--out PREFIX] [--workers W]
+             [--profile loopback|infiniband|tcp10g|tcp1g]
+  rylon show <file.csv> [--rows N]
+  rylon artifacts
+";
+
+/// Minimal flag parser: positionals + `--flag value` + `--bool-flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> CliResult<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // boolean flags take no value
+                if matches!(name, "no-aot" | "help") {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> CliResult<T> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{name}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn pos(&self, i: usize, what: &str) -> CliResult<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| format!("missing argument: {what}"))
+    }
+}
+
+fn parse_profile(s: &str) -> CliResult<NetworkProfile> {
+    Ok(match s {
+        "loopback" => NetworkProfile::Loopback,
+        "infiniband" => NetworkProfile::Infiniband40G,
+        "tcp10g" => NetworkProfile::Tcp10G,
+        "tcp1g" => NetworkProfile::Tcp1G,
+        other => return Err(format!("unknown profile '{other}'")),
+    })
+}
+
+fn load_runtime(enabled: bool) -> Option<Arc<KernelRuntime>> {
+    if !enabled {
+        return None;
+    }
+    match KernelRuntime::load_default() {
+        Ok(rt) => {
+            eprintln!("[rylon] AOT kernel runtime loaded (blocks: {:?})", rt.block_sizes());
+            Some(Arc::new(rt))
+        }
+        Err(e) => {
+            eprintln!("[rylon] AOT runtime unavailable ({e}); using native hash path");
+            None
+        }
+    }
+}
+
+/// Split a table into `world` contiguous chunks (each worker's input).
+fn chunks_of(t: &Table, world: usize) -> Vec<Table> {
+    let n = t.num_rows();
+    (0..world)
+        .map(|w| {
+            let start = w * n / world;
+            let end = (w + 1) * n / world;
+            rylon::table::take::slice(t, start, end).expect("in range")
+        })
+        .collect()
+}
+
+fn run() -> CliResult<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "generate" => {
+            let out = args.pos(0, "output path")?;
+            let rows: usize = args.get("rows", 100_000)?;
+            let density: f64 = args.get("density", 0.9)?;
+            let seed: u64 = args.get("seed", 42)?;
+            let t = paper_table(rows, density, seed);
+            write_csv(&t, out).map_err(|e| e.to_string())?;
+            println!("wrote {rows} rows to {out}");
+        }
+        "join" => {
+            let left = args.pos(0, "left csv")?;
+            let right = args.pos(1, "right csv")?;
+            let out = args.get_str("out", "join_out");
+            let workers: usize = args.get("workers", 4)?;
+            let alg = match args.get_str("algorithm", "hash").as_str() {
+                "hash" => JoinAlgorithm::Hash,
+                "sort" => JoinAlgorithm::Sort,
+                other => return Err(format!("unknown algorithm '{other}'")),
+            };
+            let jt = match args.get_str("join-type", "inner").as_str() {
+                "inner" => JoinType::Inner,
+                "left" => JoinType::Left,
+                "right" => JoinType::Right,
+                "full" => JoinType::FullOuter,
+                other => return Err(format!("unknown join type '{other}'")),
+            };
+            let key: usize = args.get("key", 0)?;
+            let profile = parse_profile(&args.get_str("profile", "loopback"))?;
+            let opts = CsvReadOptions::default();
+            let l = read_csv(left, &opts).map_err(|e| e.to_string())?;
+            let r = read_csv(right, &opts).map_err(|e| e.to_string())?;
+            let cfg = JoinConfig::new(jt, key, key).with_algorithm(alg);
+            let config = CommConfig::default().with_profile(profile);
+            let runtime = load_runtime(!args.has("no-aot"));
+            let lparts = chunks_of(&l, workers);
+            let rparts = chunks_of(&r, workers);
+            let out_prefix = out.clone();
+            let t0 = std::time::Instant::now();
+            let results = try_run_workers(workers, &config, runtime, move |ctx| {
+                let rank = ctx.rank();
+                let (joined, stats) =
+                    rylon::dist::dist_join(ctx, &lparts[rank], &rparts[rank], &cfg)?;
+                write_csv(&joined, format!("{out_prefix}.w{rank}.csv"))?;
+                Ok((joined.num_rows(), stats))
+            })
+            .map_err(|e| e.to_string())?;
+            let total: usize = results.iter().map(|(n, _)| n).sum();
+            let agg = rylon::dist::OpStats::bsp_max(
+                &results.iter().map(|(_, s)| *s).collect::<Vec<_>>(),
+            );
+            println!(
+                "joined {total} rows across {workers} workers in {:.3}s \
+                 (partition {:.3}s, comm {:.3}s, local {:.3}s)",
+                t0.elapsed().as_secs_f64(),
+                agg.partition_secs,
+                agg.comm_secs,
+                agg.local_secs
+            );
+        }
+        "union" => {
+            let a = args.pos(0, "first csv")?;
+            let b = args.pos(1, "second csv")?;
+            let out = args.get_str("out", "union_out");
+            let workers: usize = args.get("workers", 4)?;
+            let profile = parse_profile(&args.get_str("profile", "loopback"))?;
+            let opts = CsvReadOptions::default();
+            let ta = read_csv(a, &opts).map_err(|e| e.to_string())?;
+            let tb = read_csv(b, &opts).map_err(|e| e.to_string())?;
+            let config = CommConfig::default().with_profile(profile);
+            let aparts = chunks_of(&ta, workers);
+            let bparts = chunks_of(&tb, workers);
+            let out_prefix = out.clone();
+            let t0 = std::time::Instant::now();
+            let results = try_run_workers(workers, &config, None, move |ctx| {
+                let rank = ctx.rank();
+                let (u, _stats) = rylon::dist::dist_union(ctx, &aparts[rank], &bparts[rank])?;
+                write_csv(&u, format!("{out_prefix}.w{rank}.csv"))?;
+                Ok(u.num_rows())
+            })
+            .map_err(|e| e.to_string())?;
+            let total: usize = results.iter().sum();
+            println!(
+                "union produced {total} distinct rows across {workers} workers in {:.3}s",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        "show" => {
+            let path = args.pos(0, "csv path")?;
+            let rows: usize = args.get("rows", 10)?;
+            let t = read_csv(path, &CsvReadOptions::default()).map_err(|e| e.to_string())?;
+            print!("{}", rylon::table::pretty::pretty_print(&t, rows));
+        }
+        "artifacts" => {
+            let dir = KernelRuntime::artifacts_dir();
+            let found = KernelRuntime::discover_artifacts(&dir);
+            if found.is_empty() {
+                println!(
+                    "no artifacts in {} — run `make artifacts` to build the \
+                     JAX/Pallas AOT kernels",
+                    dir.display()
+                );
+            } else {
+                println!("artifacts in {}:", dir.display());
+                for (block, path) in &found {
+                    println!("  block {block:>8}  {}", path.display());
+                }
+                match KernelRuntime::load(&dir) {
+                    Ok(_) => println!("PJRT compile check: OK"),
+                    Err(e) => println!("PJRT compile check FAILED: {e}"),
+                }
+            }
+        }
+        other => {
+            return Err(format!("unknown command '{other}'\n{USAGE}"));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Metrics: timers and report emitters used by the bench harness.
+
+use std::time::Instant;
+
+/// A simple wall-clock timer.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: impl Into<String>) -> Self {
+        Timer { start: Instant::now(), label: label.into() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+}
+
+/// Repeated-measurement summary (median of `n` runs — what the bench
+/// driver reports, robust to scheduler noise).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Measurement {
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub runs: usize,
+}
+
+/// Run `f` `runs` times (after `warmup` discarded runs) and summarize.
+pub fn measure(runs: usize, warmup: usize, mut f: impl FnMut() -> f64) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..runs.max(1)).map(|_| f()).collect();
+    samples.sort_by(|a, b| a.total_cmp(b));
+    Measurement {
+        median_secs: samples[samples.len() / 2],
+        min_secs: samples[0],
+        max_secs: samples[samples.len() - 1],
+        runs: samples.len(),
+    }
+}
+
+/// A row-oriented report table printed as aligned text and optionally
+/// saved as TSV — the bench drivers emit each paper table/figure
+/// through one of these.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Report {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Aligned-text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("# {}\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Tab-separated rendering (for plotting).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join("\t"));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the TSV next to other bench outputs.
+    pub fn save_tsv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_tsv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start("x");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.seconds() >= 0.004);
+        assert_eq!(t.label(), "x");
+    }
+
+    #[test]
+    fn measure_summarizes() {
+        let mut i = 0;
+        let m = measure(5, 1, || {
+            i += 1;
+            i as f64
+        });
+        assert_eq!(m.runs, 5);
+        assert!(m.min_secs <= m.median_secs && m.median_secs <= m.max_secs);
+    }
+
+    #[test]
+    fn report_renders_aligned_and_tsv() {
+        let mut r = Report::new("t", &["a", "bee"]);
+        r.add_row(vec!["1".into(), "2".into()]);
+        r.add_row(vec!["10".into(), "20000".into()]);
+        let text = r.render();
+        assert!(text.contains("# t"));
+        assert!(text.contains("bee"));
+        let tsv = r.to_tsv();
+        assert_eq!(tsv.lines().count(), 3);
+        assert!(tsv.contains("10\t20000"));
+    }
+}

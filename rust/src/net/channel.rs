@@ -1,0 +1,216 @@
+//! In-process transport: each worker is a thread; links are mpsc queues.
+//!
+//! `ChannelFabric::new(world)` mints one [`ChannelTransport`] per rank.
+//! Messages are tagged `(src, tag)`; out-of-order arrivals (different
+//! senders interleave on one receiver queue) are parked in a reorder
+//! buffer until asked for — the discipline MPI's matching rules provide.
+
+use super::model::FailurePlan;
+use super::Transport;
+use crate::error::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+struct Msg {
+    src: usize,
+    tag: u64,
+    payload: Vec<u8>,
+}
+
+/// One rank's endpoint.
+pub struct ChannelTransport {
+    rank: usize,
+    world: usize,
+    senders: Vec<Sender<Msg>>,
+    receiver: Receiver<Msg>,
+    /// Messages received but not yet matched by a `recv` call.
+    parked: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
+    /// Receive timeout — a dropped message surfaces as a Comm error
+    /// instead of a hang.
+    pub recv_timeout: Duration,
+    failures: Option<FailurePlan>,
+    received: u64,
+}
+
+/// Factory for a connected set of transports.
+pub struct ChannelFabric;
+
+impl ChannelFabric {
+    /// Create `world` fully-connected endpoints.
+    pub fn new(world: usize) -> Vec<ChannelTransport> {
+        Self::with_failures(world, None)
+    }
+
+    /// As `new`, with a failure plan installed on every endpoint.
+    pub fn with_failures(world: usize, failures: Option<FailurePlan>) -> Vec<ChannelTransport> {
+        assert!(world > 0);
+        let mut senders = Vec::with_capacity(world);
+        let mut receivers = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, receiver)| ChannelTransport {
+                rank,
+                world,
+                senders: senders.clone(),
+                receiver,
+                parked: HashMap::new(),
+                recv_timeout: Duration::from_secs(30),
+                failures: failures.clone(),
+                received: 0,
+            })
+            .collect()
+    }
+}
+
+impl ChannelTransport {
+    /// Apply the failure plan to an arriving message.
+    /// Returns None if the message is dropped.
+    fn filter(&mut self, mut m: Msg) -> Option<Msg> {
+        self.received += 1;
+        if let Some(plan) = &self.failures {
+            if plan.drop_nth == Some(self.received) {
+                return None;
+            }
+            if plan.corrupt_nth == Some(self.received) {
+                if let Some(b) = m.payload.first_mut() {
+                    *b ^= 0xff;
+                }
+            }
+        }
+        Some(m)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
+        if dst >= self.world {
+            return Err(Error::comm(format!("send to rank {dst} of {}", self.world)));
+        }
+        self.senders[dst]
+            .send(Msg { src: self.rank, tag, payload })
+            .map_err(|_| Error::comm(format!("rank {dst} is gone")))
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        if let Some(q) = self.parked.get_mut(&(src, tag)) {
+            if let Some(p) = q.pop_front() {
+                return Ok(p);
+            }
+        }
+        let deadline = std::time::Instant::now() + self.recv_timeout;
+        loop {
+            let remaining = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| {
+                    Error::comm(format!(
+                        "rank {}: timeout waiting for (src={src}, tag={tag})",
+                        self.rank
+                    ))
+                })?;
+            let msg = self
+                .receiver
+                .recv_timeout(remaining)
+                .map_err(|e| Error::comm(format!("rank {}: recv failed: {e}", self.rank)))?;
+            if let Some(msg) = self.filter(msg) {
+                if msg.src == src && msg.tag == tag {
+                    return Ok(msg.payload);
+                }
+                self.parked
+                    .entry((msg.src, msg.tag))
+                    .or_default()
+                    .push_back(msg.payload);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_ranks_ping_pong() {
+        let mut t = ChannelFabric::new(2);
+        let mut t1 = t.pop().unwrap();
+        let mut t0 = t.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            t1.send(0, 1, vec![42]).unwrap();
+            t1.recv(0, 2).unwrap()
+        });
+        assert_eq!(t0.recv(1, 1).unwrap(), vec![42]);
+        t0.send(1, 2, vec![7, 8]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_parked() {
+        let mut t = ChannelFabric::new(2);
+        let mut t1 = t.pop().unwrap();
+        let mut t0 = t.pop().unwrap();
+        t1.send(0, 5, vec![5]).unwrap();
+        t1.send(0, 6, vec![6]).unwrap();
+        // Ask for tag 6 first: tag-5 message must be parked, not lost.
+        assert_eq!(t0.recv(1, 6).unwrap(), vec![6]);
+        assert_eq!(t0.recv(1, 5).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn self_send_works() {
+        let mut t = ChannelFabric::new(1);
+        let mut t0 = t.pop().unwrap();
+        t0.send(0, 9, vec![1, 2, 3]).unwrap();
+        assert_eq!(t0.recv(0, 9).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bad_destination_errors() {
+        let mut t = ChannelFabric::new(2);
+        let mut t0 = t.remove(0);
+        assert!(t0.send(5, 0, vec![]).is_err());
+    }
+
+    #[test]
+    fn timeout_on_missing_message() {
+        let mut t = ChannelFabric::new(2);
+        let mut t0 = t.remove(0);
+        t0.recv_timeout = Duration::from_millis(50);
+        let err = t0.recv(1, 0).unwrap_err();
+        assert!(matches!(err, Error::Comm(_)));
+    }
+
+    #[test]
+    fn dropped_message_times_out() {
+        let plan = FailurePlan::drop_message(1);
+        let mut t = ChannelFabric::with_failures(2, Some(plan));
+        let mut t1 = t.pop().unwrap();
+        let mut t0 = t.pop().unwrap();
+        t0.recv_timeout = Duration::from_millis(50);
+        t1.send(0, 1, vec![1]).unwrap();
+        assert!(t0.recv(1, 1).is_err());
+    }
+
+    #[test]
+    fn corrupted_message_delivered_mangled() {
+        let plan = FailurePlan::corrupt_message(1);
+        let mut t = ChannelFabric::with_failures(2, Some(plan));
+        let mut t1 = t.pop().unwrap();
+        let mut t0 = t.pop().unwrap();
+        t1.send(0, 1, vec![0xAA, 0xBB]).unwrap();
+        assert_eq!(t0.recv(1, 1).unwrap(), vec![0x55, 0xBB]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Communication layer (§II-C) — the network stack under distributed
+//! operators.
+//!
+//! The paper's communication layer is OpenMPI over TCP/Infiniband with
+//! synchronous (BSP) producers and consumers. This testbed has no
+//! cluster, so per DESIGN.md §Substitutions the layer is rebuilt as:
+//!
+//! * a [`Transport`] trait — point-to-point tagged message passing;
+//! * [`channel::ChannelFabric`] — an in-process transport where each
+//!   worker is a thread and links are lock-free queues;
+//! * [`model::NetworkModel`] — a calibrated α/β (latency/bandwidth) cost
+//!   model with TCP / Infiniband / loopback profiles, applied to every
+//!   message so wall-clock *shapes* match cluster behaviour;
+//! * [`Communicator`] — MPI-style collectives (AllToAll, AllGather,
+//!   Gather, Bcast, Barrier, AllReduce) over any transport.
+
+pub mod alltoall;
+pub mod channel;
+pub mod model;
+pub mod serialize;
+pub mod tcp;
+
+pub use alltoall::Communicator;
+pub use channel::ChannelFabric;
+pub use model::{FailurePlan, NetworkModel, NetworkProfile};
+
+use crate::error::Result;
+
+/// Point-to-point, tagged, blocking transport — the contract every
+/// communication backend implements (the paper: "communication can take
+/// place over either TCP, Infiniband or any other protocol").
+pub trait Transport: Send {
+    /// This endpoint's rank in `[0, world)`.
+    fn rank(&self) -> usize;
+
+    /// Number of endpoints.
+    fn world(&self) -> usize;
+
+    /// Send `payload` to `dst` with a tag. Never blocks on the receiver
+    /// (buffered links).
+    fn send(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()>;
+
+    /// Blocking receive of the next message from `src` with `tag`.
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>>;
+}
+
+/// Communicator configuration (the `MPIConfig` analog).
+#[derive(Debug, Clone)]
+pub struct CommConfig {
+    pub profile: NetworkProfile,
+    /// Deterministic failure injection plan (tests only).
+    pub failures: Option<FailurePlan>,
+    /// Blocking-receive timeout: a lost message surfaces as a Comm
+    /// error after this long instead of hanging the superstep.
+    pub recv_timeout: std::time::Duration,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            profile: NetworkProfile::Loopback,
+            failures: None,
+            recv_timeout: std::time::Duration::from_secs(30),
+        }
+    }
+}
+
+impl CommConfig {
+    pub fn with_profile(mut self, p: NetworkProfile) -> Self {
+        self.profile = p;
+        self
+    }
+
+    pub fn with_failures(mut self, f: FailurePlan) -> Self {
+        self.failures = Some(f);
+        self
+    }
+
+    pub fn with_recv_timeout(mut self, t: std::time::Duration) -> Self {
+        self.recv_timeout = t;
+        self
+    }
+}

@@ -1,0 +1,193 @@
+//! Network cost model + deterministic failure injection.
+//!
+//! The testbed substitution for the paper's 40 Gbps Infiniband / TCP
+//! fabric (§IV-A): every message is charged `α + bytes·β` — α the
+//! per-message latency, β the inverse bandwidth. Charged time can be
+//! *applied* (the receiving thread actually waits, making wall-clock
+//! benchmarks exhibit cluster-like comm behaviour) or merely *accounted*
+//! (virtual time for the BSP scaling simulator, which can sweep to 160
+//! workers on a laptop).
+
+use std::time::Duration;
+
+/// Named α/β profiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetworkProfile {
+    /// No modeled cost (pure in-process speed).
+    Loopback,
+    /// 40 Gbps Infiniband, ~1.5 µs latency — the paper's cluster.
+    Infiniband40G,
+    /// 10 Gbps Ethernet/TCP, ~50 µs latency.
+    Tcp10G,
+    /// 1 Gbps Ethernet/TCP, ~100 µs latency (commodity cloud).
+    Tcp1G,
+}
+
+impl NetworkProfile {
+    /// (α seconds, β seconds/byte)
+    pub fn alpha_beta(&self) -> (f64, f64) {
+        match self {
+            NetworkProfile::Loopback => (0.0, 0.0),
+            // 40 Gbps = 5 GB/s -> 0.2 ns/byte
+            NetworkProfile::Infiniband40G => (1.5e-6, 2.0e-10),
+            // 10 Gbps = 1.25 GB/s -> 0.8 ns/byte
+            NetworkProfile::Tcp10G => (50e-6, 8.0e-10),
+            // 1 Gbps = 125 MB/s -> 8 ns/byte
+            NetworkProfile::Tcp1G => (100e-6, 8.0e-9),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkProfile::Loopback => "loopback",
+            NetworkProfile::Infiniband40G => "infiniband-40g",
+            NetworkProfile::Tcp10G => "tcp-10g",
+            NetworkProfile::Tcp1G => "tcp-1g",
+        }
+    }
+}
+
+/// Deterministic failure plan for tests: message `n` (global arrival
+/// order per endpoint) from `src` is dropped/corrupted.
+#[derive(Debug, Clone)]
+pub struct FailurePlan {
+    /// Drop the k-th received message (per receiving endpoint).
+    pub drop_nth: Option<u64>,
+    /// Flip a byte in the k-th received message.
+    pub corrupt_nth: Option<u64>,
+}
+
+impl FailurePlan {
+    pub fn drop_message(n: u64) -> Self {
+        FailurePlan { drop_nth: Some(n), corrupt_nth: None }
+    }
+
+    pub fn corrupt_message(n: u64) -> Self {
+        FailurePlan { drop_nth: None, corrupt_nth: Some(n) }
+    }
+}
+
+/// Per-endpoint cost model instance. Tracks accounted time so callers
+/// can read back modeled comm cost even in `apply=false` mode.
+#[derive(Debug)]
+pub struct NetworkModel {
+    profile: NetworkProfile,
+    /// When true, `charge` actually sleeps/spins the calling thread.
+    apply: bool,
+    accounted: f64,
+    messages: u64,
+    bytes: u64,
+}
+
+impl NetworkModel {
+    pub fn new(profile: NetworkProfile, apply: bool) -> Self {
+        NetworkModel { profile, apply, accounted: 0.0, messages: 0, bytes: 0 }
+    }
+
+    pub fn profile(&self) -> NetworkProfile {
+        self.profile
+    }
+
+    /// Modeled seconds for one message of `bytes`.
+    pub fn cost_seconds(&self, bytes: usize) -> f64 {
+        let (a, b) = self.profile.alpha_beta();
+        a + bytes as f64 * b
+    }
+
+    /// Charge one message: account it, and if `apply`, wait it out.
+    /// ms-scale waits sleep; sub-ms waits spin (OS sleep granularity
+    /// would otherwise swamp the α term).
+    pub fn charge(&mut self, bytes: usize) {
+        let secs = self.cost_seconds(bytes);
+        self.accounted += secs;
+        self.messages += 1;
+        self.bytes += bytes as u64;
+        if !self.apply || secs <= 0.0 {
+            return;
+        }
+        let start = std::time::Instant::now();
+        let dur = Duration::from_secs_f64(secs);
+        if dur > Duration::from_millis(2) {
+            std::thread::sleep(dur - Duration::from_millis(1));
+        }
+        while start.elapsed() < dur {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Total accounted seconds so far.
+    pub fn accounted_seconds(&self) -> f64 {
+        self.accounted
+    }
+
+    pub fn message_count(&self) -> u64 {
+        self.messages
+    }
+
+    pub fn byte_count(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn reset(&mut self) {
+        self.accounted = 0.0;
+        self.messages = 0;
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_is_free() {
+        let mut m = NetworkModel::new(NetworkProfile::Loopback, true);
+        m.charge(1 << 20);
+        assert_eq!(m.accounted_seconds(), 0.0);
+        assert_eq!(m.message_count(), 1);
+    }
+
+    #[test]
+    fn infiniband_costs_match_alpha_beta() {
+        let m = NetworkModel::new(NetworkProfile::Infiniband40G, false);
+        let c = m.cost_seconds(5_000_000_000); // 5 GB at 5 GB/s ≈ 1 s
+        assert!((c - 1.0).abs() < 0.01, "c={c}");
+        let tiny = m.cost_seconds(0);
+        assert!((tiny - 1.5e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accounting_without_apply_is_instant() {
+        let mut m = NetworkModel::new(NetworkProfile::Tcp1G, false);
+        let t = std::time::Instant::now();
+        m.charge(100 << 20); // ~0.84 s modeled
+        assert!(t.elapsed() < Duration::from_millis(50));
+        assert!(m.accounted_seconds() > 0.5);
+    }
+
+    #[test]
+    fn apply_actually_waits() {
+        let mut m = NetworkModel::new(NetworkProfile::Tcp1G, true);
+        let t = std::time::Instant::now();
+        m.charge(1 << 20); // ~8.5 ms modeled
+        assert!(t.elapsed() >= Duration::from_millis(8));
+    }
+
+    #[test]
+    fn profiles_ordered_by_speed() {
+        let b = 10 << 20;
+        let ib = NetworkModel::new(NetworkProfile::Infiniband40G, false).cost_seconds(b);
+        let t10 = NetworkModel::new(NetworkProfile::Tcp10G, false).cost_seconds(b);
+        let t1 = NetworkModel::new(NetworkProfile::Tcp1G, false).cost_seconds(b);
+        assert!(ib < t10 && t10 < t1);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = NetworkModel::new(NetworkProfile::Tcp10G, false);
+        m.charge(100);
+        m.reset();
+        assert_eq!(m.accounted_seconds(), 0.0);
+        assert_eq!(m.byte_count(), 0);
+    }
+}

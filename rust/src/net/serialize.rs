@@ -1,0 +1,346 @@
+//! Table ⇄ bytes wire format for the shuffle.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic:u32  ncols:u32  nrows:u64
+//! per column:
+//!   name_len:u32 name_bytes
+//!   dtype:u8  has_validity:u8
+//!   [validity words: u64 × ceil(nrows/64)]          if has_validity
+//!   Int64/Float64: values (8·nrows bytes)
+//!   Bool:          values (nrows bytes, 0/1)
+//!   Utf8:          offsets (4·(nrows+1) bytes) + data_len:u64 + data
+//! ```
+//!
+//! Zero interpretation happens between serialize and deserialize — the
+//! column buffers are memcpy'd, which is what makes shuffle cost linear
+//! in bytes (the β term of the network model).
+
+use crate::error::{Error, Result};
+use crate::table::{
+    bitmap::Bitmap,
+    column::{Array, BoolArray, Float64Array, Int64Array, PrimitiveArray, Utf8Array},
+    DataType, Field, Schema, Table,
+};
+use std::sync::Arc;
+
+const MAGIC: u32 = 0x52_59_4c_4e; // "RYLN"
+
+fn dtype_code(dt: DataType) -> u8 {
+    match dt {
+        DataType::Int64 => 0,
+        DataType::Float64 => 1,
+        DataType::Utf8 => 2,
+        DataType::Bool => 3,
+    }
+}
+
+fn dtype_from(code: u8) -> Result<DataType> {
+    Ok(match code {
+        0 => DataType::Int64,
+        1 => DataType::Float64,
+        2 => DataType::Utf8,
+        3 => DataType::Bool,
+        c => return Err(Error::comm(format!("bad dtype code {c}"))),
+    })
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+/// Bulk little-endian copy of a u64-sized slice (the wire is LE; on LE
+/// hosts this is one memcpy instead of a per-element loop — §Perf).
+#[inline]
+fn put_words<T: Copy>(buf: &mut Vec<u8>, vals: &[T]) {
+    debug_assert_eq!(std::mem::size_of::<T>(), 8);
+    #[cfg(target_endian = "little")]
+    // SAFETY: T is a plain 8-byte scalar (i64/u64/f64-bits); reading its
+    // bytes is defined, and the slice bounds are exact.
+    unsafe {
+        buf.extend_from_slice(std::slice::from_raw_parts(
+            vals.as_ptr() as *const u8,
+            vals.len() * 8,
+        ));
+    }
+    #[cfg(target_endian = "big")]
+    for v in vals {
+        let raw: u64 = unsafe { std::mem::transmute_copy(v) };
+        buf.extend_from_slice(&raw.to_le_bytes());
+    }
+}
+
+/// Bulk read of `n` u64-sized values from LE bytes.
+#[inline]
+fn get_words<T: Copy + Default>(bytes: &[u8], n: usize) -> Vec<T> {
+    debug_assert_eq!(std::mem::size_of::<T>(), 8);
+    debug_assert!(bytes.len() >= n * 8);
+    let mut out = vec![T::default(); n];
+    #[cfg(target_endian = "little")]
+    // SAFETY: out has exactly n*8 writable bytes; T is a plain scalar.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * 8);
+    }
+    #[cfg(target_endian = "big")]
+    for (i, c) in bytes.chunks_exact(8).take(n).enumerate() {
+        let v = u64::from_le_bytes(c.try_into().unwrap());
+        out[i] = unsafe { std::mem::transmute_copy(&v) };
+    }
+    out
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn need(&self, n: usize) -> Result<()> {
+        if self.pos.checked_add(n).is_none_or(|end| end > self.buf.len()) {
+            Err(Error::comm(format!(
+                "truncated message: need {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )))
+        } else {
+            Ok(())
+        }
+    }
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let v = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(v)
+    }
+
+    /// Checked element-count guard before `Vec::with_capacity`: a
+    /// corrupted header must not trigger a huge allocation (the fuzz
+    /// tests flip header bytes). `size` is bytes per element.
+    fn guard_alloc(&self, count: usize, size: usize) -> Result<()> {
+        let need = count
+            .checked_mul(size)
+            .ok_or_else(|| Error::comm("element count overflows"))?;
+        self.need(need)
+    }
+}
+
+/// Serialize a table to bytes.
+pub fn serialize_table(t: &Table) -> Vec<u8> {
+    let nrows = t.num_rows();
+    let mut w = Writer { buf: Vec::with_capacity(t.byte_size() + 64) };
+    w.u32(MAGIC);
+    w.u32(t.num_columns() as u32);
+    w.u64(nrows as u64);
+    for (f, col) in t.schema().fields().iter().zip(t.columns()) {
+        w.u32(f.name.len() as u32);
+        w.bytes(f.name.as_bytes());
+        w.u8(dtype_code(f.data_type));
+        let validity = match col.as_ref() {
+            Array::Int64(a) => a.validity(),
+            Array::Float64(a) => a.validity(),
+            Array::Bool(a) => a.validity(),
+            Array::Utf8(a) => a.validity(),
+        };
+        w.u8(validity.is_some() as u8);
+        if let Some(b) = validity {
+            put_words(&mut w.buf, b.words());
+        }
+        match col.as_ref() {
+            Array::Int64(a) => put_words(&mut w.buf, a.values()),
+            Array::Float64(a) => put_words(&mut w.buf, a.values()),
+            Array::Bool(a) => {
+                for v in a.values() {
+                    w.u8(*v as u8);
+                }
+            }
+            Array::Utf8(a) => {
+                #[cfg(target_endian = "little")]
+                // SAFETY: u32 slice viewed as bytes, exact bounds.
+                unsafe {
+                    w.buf.extend_from_slice(std::slice::from_raw_parts(
+                        a.offsets.as_ptr() as *const u8,
+                        (nrows + 1) * 4,
+                    ));
+                }
+                #[cfg(target_endian = "big")]
+                for i in 0..=nrows {
+                    w.u32(a.offsets[i]);
+                }
+                let dlen = a.offsets[nrows] as usize;
+                w.u64(dlen as u64);
+                w.bytes(&a.data[..dlen]);
+            }
+        }
+    }
+    w.buf
+}
+
+/// Deserialize a table from bytes.
+pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.u32()? != MAGIC {
+        return Err(Error::comm("bad magic in table message"));
+    }
+    let ncols = r.u32()? as usize;
+    let nrows = r.u64()? as usize;
+    let mut fields = Vec::with_capacity(ncols);
+    let mut columns: Vec<Arc<Array>> = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.bytes(name_len)?.to_vec())
+            .map_err(|e| Error::comm(format!("bad column name: {e}")))?;
+        let dt = dtype_from(r.u8()?)?;
+        let has_validity = r.u8()? == 1;
+        let validity = if has_validity {
+            let words = nrows.div_ceil(64);
+            let v: Vec<u64> = get_words(r.bytes(words * 8)?, words);
+            Some(Bitmap::from_words(v, nrows))
+        } else {
+            None
+        };
+        let array = match dt {
+            DataType::Int64 => {
+                let values: Vec<i64> = get_words(r.bytes(nrows * 8)?, nrows);
+                Array::Int64(Int64Array { values, validity })
+            }
+            DataType::Float64 => {
+                let values: Vec<f64> = get_words(r.bytes(nrows * 8)?, nrows);
+                Array::Float64(Float64Array { values, validity })
+            }
+            DataType::Bool => {
+                let raw = r.bytes(nrows)?;
+                let values = raw.iter().map(|&b| b != 0).collect();
+                Array::Bool(BoolArray { values, validity })
+            }
+            DataType::Utf8 => {
+                r.guard_alloc(nrows + 1, 4)?;
+                let mut offsets = Vec::with_capacity(nrows + 1);
+                for _ in 0..=nrows {
+                    offsets.push(r.u32()?);
+                }
+                let dlen = r.u64()? as usize;
+                let data = r.bytes(dlen)?.to_vec();
+                // Validate offsets are monotone and in-bounds, and data is
+                // utf8 — a corrupted message must not panic later.
+                for w in offsets.windows(2) {
+                    if w[1] < w[0] || w[1] as usize > data.len() {
+                        return Err(Error::comm("corrupt utf8 offsets"));
+                    }
+                }
+                std::str::from_utf8(&data)
+                    .map_err(|e| Error::comm(format!("non-utf8 string data: {e}")))?;
+                Array::Utf8(Utf8Array { offsets, data, validity })
+            }
+        };
+        fields.push(Field::new(name, dt));
+        columns.push(Arc::new(array));
+    }
+    Table::try_new(Arc::new(Schema::new(fields)), columns)
+}
+
+// Keep the PrimitiveArray import used (constructors above).
+#[allow(dead_code)]
+fn _assert_types(_: PrimitiveArray<i64>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::generator::paper_table;
+    use crate::table::Array;
+
+    #[test]
+    fn roundtrip_paper_table() {
+        let t = paper_table(257, 1.0, 3);
+        let bytes = serialize_table(&t);
+        let r = deserialize_table(&bytes).unwrap();
+        assert!(t.data_equals(&r));
+        assert_eq!(t.schema(), r.schema());
+    }
+
+    #[test]
+    fn roundtrip_all_types_with_nulls() {
+        let t = Table::from_arrays(vec![
+            ("i", Array::from_i64_opts(vec![Some(-5), None, Some(7)])),
+            ("f", Array::from_f64_opts(vec![None, Some(f64::NAN), Some(1.5)])),
+            (
+                "s",
+                Array::Utf8(crate::table::column::Utf8Array::from_options(&[
+                    Some("ab"),
+                    None,
+                    Some(""),
+                ])),
+            ),
+            ("b", Array::from_bools(vec![true, false, true])),
+        ])
+        .unwrap();
+        let r = deserialize_table(&serialize_table(&t)).unwrap();
+        assert!(t.data_equals(&r));
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let t = Table::from_arrays(vec![("i", Array::from_i64(vec![]))]).unwrap();
+        let r = deserialize_table(&serialize_table(&t)).unwrap();
+        assert_eq!(r.num_rows(), 0);
+        assert_eq!(r.schema().field(0).name, "i");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(deserialize_table(&[0, 1, 2]).is_err());
+        assert!(deserialize_table(&[]).is_err());
+        let mut ok = serialize_table(&paper_table(4, 1.0, 1));
+        ok[0] ^= 0xff; // break magic
+        assert!(deserialize_table(&ok).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = serialize_table(&paper_table(100, 1.0, 2));
+        for cut in [bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+            assert!(deserialize_table(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn size_is_linear_in_rows() {
+        let small = serialize_table(&paper_table(100, 1.0, 1)).len();
+        let big = serialize_table(&paper_table(1000, 1.0, 1)).len();
+        let ratio = big as f64 / small as f64;
+        assert!(ratio > 8.0 && ratio < 12.0, "ratio={ratio}");
+    }
+}

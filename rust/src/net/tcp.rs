@@ -1,0 +1,300 @@
+//! TCP transport — a second, *real-sockets* implementation of
+//! [`super::Transport`], demonstrating the paper's §II-C claim that the
+//! communication layer swaps out under the operators ("that
+//! implementation can be easily replaced with a different one such as
+//! UCX").
+//!
+//! Topology: full mesh over localhost. Rank `i` listens on a base port
+//! + i; the fabric constructor performs the connect handshake so every
+//! endpoint holds one stream per peer. Frames are
+//! `[src:u32][tag:u64][len:u64][payload]`. A reader thread per peer
+//! feeds a shared inbox; `recv` matches `(src, tag)` with the same
+//! parking discipline as the channel transport.
+
+use super::Transport;
+use crate::error::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+struct Frame {
+    src: usize,
+    tag: u64,
+    payload: Vec<u8>,
+}
+
+/// One rank's TCP endpoint.
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    /// Write half per peer (self entry unused).
+    writers: Vec<Option<TcpStream>>,
+    inbox: Receiver<Frame>,
+    /// Loopback for self-sends (no socket round-trip).
+    self_tx: Sender<Frame>,
+    parked: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
+    pub recv_timeout: Duration,
+}
+
+/// Factory establishing the localhost mesh.
+pub struct TcpFabric;
+
+impl TcpFabric {
+    /// Connect `world` endpoints on `base_port..base_port+world`.
+    /// Call once per process; returns all endpoints (hand them to
+    /// worker threads like the channel fabric).
+    pub fn new(world: usize, base_port: u16) -> Result<Vec<TcpTransport>> {
+        assert!(world > 0);
+        // 1. Everyone listens.
+        let listeners: Vec<TcpListener> = (0..world)
+            .map(|i| {
+                TcpListener::bind(("127.0.0.1", base_port + i as u16))
+                    .map_err(|e| Error::comm(format!("bind port {}: {e}", base_port + i as u16)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // 2. Rank i dials every j > i; lower ranks accept. Each accepted
+        //    stream starts with a one-u32 hello naming the dialer.
+        let mut streams: Vec<Vec<Option<TcpStream>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        for i in 0..world {
+            for j in (i + 1)..world {
+                let dial = TcpStream::connect(("127.0.0.1", base_port + j as u16))
+                    .map_err(|e| Error::comm(format!("connect {j}: {e}")))?;
+                dial.set_nodelay(true).ok();
+                let mut d = dial.try_clone().map_err(|e| Error::comm(e.to_string()))?;
+                d.write_all(&(i as u32).to_le_bytes())
+                    .map_err(|e| Error::comm(e.to_string()))?;
+                streams[i][j] = Some(dial);
+                // j's side accepts:
+                let (mut accepted, _) = listeners[j]
+                    .accept()
+                    .map_err(|e| Error::comm(format!("accept on {j}: {e}")))?;
+                accepted.set_nodelay(true).ok();
+                let mut hello = [0u8; 4];
+                accepted
+                    .read_exact(&mut hello)
+                    .map_err(|e| Error::comm(e.to_string()))?;
+                let src = u32::from_le_bytes(hello) as usize;
+                debug_assert_eq!(src, i);
+                streams[j][src] = Some(accepted);
+            }
+        }
+        // 3. Build endpoints: reader thread per incoming stream.
+        let mut endpoints = Vec::with_capacity(world);
+        for (rank, peer_streams) in streams.into_iter().enumerate() {
+            let (tx, rx) = channel::<Frame>();
+            let mut writers: Vec<Option<TcpStream>> = Vec::with_capacity(world);
+            for (peer, stream) in peer_streams.into_iter().enumerate() {
+                match stream {
+                    Some(s) if peer != rank => {
+                        let reader = s.try_clone().map_err(|e| Error::comm(e.to_string()))?;
+                        let tx = tx.clone();
+                        std::thread::Builder::new()
+                            .name(format!("rylon-tcp-{rank}-from-{peer}"))
+                            .spawn(move || read_loop(reader, peer, tx))
+                            .map_err(|e| Error::comm(e.to_string()))?;
+                        writers.push(Some(s));
+                    }
+                    _ => writers.push(None),
+                }
+            }
+            endpoints.push(TcpTransport {
+                rank,
+                world,
+                writers,
+                inbox: rx,
+                self_tx: tx,
+                parked: HashMap::new(),
+                recv_timeout: Duration::from_secs(30),
+            });
+        }
+        Ok(endpoints)
+    }
+}
+
+/// Reader thread: frames from one peer into the shared inbox.
+fn read_loop(mut stream: TcpStream, src: usize, tx: Sender<Frame>) {
+    loop {
+        let mut header = [0u8; 16];
+        if stream.read_exact(&mut header).is_err() {
+            return; // peer closed
+        }
+        let tag = u64::from_le_bytes(header[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let mut payload = vec![0u8; len];
+        if stream.read_exact(&mut payload).is_err() {
+            return;
+        }
+        if tx.send(Frame { src, tag, payload }).is_err() {
+            return; // endpoint dropped
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
+        if dst >= self.world {
+            return Err(Error::comm(format!("send to rank {dst} of {}", self.world)));
+        }
+        if dst == self.rank {
+            self.self_tx
+                .send(Frame { src: self.rank, tag, payload })
+                .map_err(|_| Error::comm("self inbox closed"))?;
+            return Ok(());
+        }
+        let stream = self.writers[dst]
+            .as_mut()
+            .ok_or_else(|| Error::comm(format!("no stream to {dst}")))?;
+        stream
+            .write_all(&tag.to_le_bytes())
+            .and_then(|_| stream.write_all(&(payload.len() as u64).to_le_bytes()))
+            .and_then(|_| stream.write_all(&payload))
+            .map_err(|e| Error::comm(format!("tcp send to {dst}: {e}")))
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        if let Some(q) = self.parked.get_mut(&(src, tag)) {
+            if let Some(p) = q.pop_front() {
+                return Ok(p);
+            }
+        }
+        let deadline = std::time::Instant::now() + self.recv_timeout;
+        loop {
+            let remaining = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| {
+                    Error::comm(format!(
+                        "tcp rank {}: timeout for (src={src}, tag={tag})",
+                        self.rank
+                    ))
+                })?;
+            let frame = self
+                .inbox
+                .recv_timeout(remaining)
+                .map_err(|e| Error::comm(format!("tcp rank {}: recv: {e}", self.rank)))?;
+            if frame.src == src && frame.tag == tag {
+                return Ok(frame.payload);
+            }
+            self.parked
+                .entry((frame.src, frame.tag))
+                .or_default()
+                .push_back(frame.payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{CommConfig, Communicator};
+    use std::sync::atomic::{AtomicU16, Ordering};
+
+    /// Distinct port ranges per test (tests run in parallel).
+    static NEXT_PORT: AtomicU16 = AtomicU16::new(46_000);
+
+    fn ports(world: usize) -> u16 {
+        NEXT_PORT.fetch_add(world as u16 + 2, Ordering::SeqCst)
+    }
+
+    #[test]
+    fn mesh_ping_pong() {
+        let mut eps = TcpFabric::new(2, ports(2)).unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            e1.send(0, 7, vec![1, 2, 3]).unwrap();
+            e1.recv(0, 8).unwrap()
+        });
+        assert_eq!(e0.recv(1, 7).unwrap(), vec![1, 2, 3]);
+        e0.send(1, 8, vec![9]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn self_send_bypasses_sockets() {
+        let mut eps = TcpFabric::new(1, ports(1)).unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(0, 1, vec![5]).unwrap();
+        assert_eq!(e0.recv(0, 1).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn collectives_run_over_tcp() {
+        // The §II-C claim: swap the transport, keep the operators.
+        let eps = TcpFabric::new(3, ports(3)).unwrap();
+        let cfg = CommConfig::default();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|t| {
+                let mut comm = Communicator::new(Box::new(t), &cfg);
+                std::thread::spawn(move || {
+                    let sum = comm.all_reduce_sum_u64(comm.rank() as u64 + 1).unwrap();
+                    let parts = (0..3).map(|d| vec![comm.rank() as u8, d as u8]).collect();
+                    let got = comm.all_to_all_bytes(parts).unwrap();
+                    comm.barrier().unwrap();
+                    (sum, got)
+                })
+            })
+            .collect();
+        for (me, h) in handles.into_iter().enumerate() {
+            let (sum, got) = h.join().unwrap();
+            assert_eq!(sum, 6);
+            for (src, msg) in got.iter().enumerate() {
+                assert_eq!(msg, &vec![src as u8, me as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_join_over_tcp_matches_channels() {
+        use crate::ctx::CylonContext;
+        use crate::io::generator::paper_table;
+        use crate::ops::join::JoinConfig;
+
+        let world = 3;
+        let eps = TcpFabric::new(world, ports(world)).unwrap();
+        let cfg = CommConfig::default();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|t| {
+                let comm = Communicator::new(Box::new(t), &cfg);
+                std::thread::spawn(move || {
+                    let mut ctx = CylonContext::from_communicator(comm);
+                    let l = paper_table(300, 0.8, 60 + ctx.rank() as u64);
+                    let r = paper_table(300, 0.8, 80 + ctx.rank() as u64);
+                    crate::dist::dist_join(&mut ctx, &l, &r, &JoinConfig::inner(0, 0))
+                        .unwrap()
+                        .0
+                        .num_rows()
+                })
+            })
+            .collect();
+        let tcp_total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+        let chan_total: usize = crate::coordinator::run_workers(
+            world,
+            &CommConfig::default(),
+            move |ctx| {
+                let l = paper_table(300, 0.8, 60 + ctx.rank() as u64);
+                let r = paper_table(300, 0.8, 80 + ctx.rank() as u64);
+                crate::dist::dist_join(ctx, &l, &r, &JoinConfig::inner(0, 0))
+                    .unwrap()
+                    .0
+                    .num_rows()
+            },
+        )
+        .into_iter()
+        .sum();
+        assert_eq!(tcp_total, chan_total);
+    }
+}

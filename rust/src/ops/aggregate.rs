@@ -1,0 +1,467 @@
+//! GroupBy / aggregate — the first of the paper's "more operations to
+//! enhance usability" (§VI future work; shipped in Cylon 0.2).
+//!
+//! Local hash aggregation over an int64-hashable key column, plus a
+//! composable **partial-aggregate** form used by the distributed
+//! operator: workers pre-aggregate locally, shuffle the (much smaller)
+//! partial states by key, and merge — the classic two-phase plan whose
+//! benefit the `groupby` ablation bench quantifies.
+
+use super::hash::hash_cell;
+use super::sort::cmp_cells_across;
+use crate::error::{Error, Result};
+use crate::table::{builder::ArrayBuilder, Array, DataType, Field, Schema, Table};
+use std::cmp::Ordering;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Supported aggregate functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggFn {
+    Count,
+    Sum,
+    Min,
+    Max,
+    Mean,
+}
+
+impl AggFn {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggFn::Count => "count",
+            AggFn::Sum => "sum",
+            AggFn::Min => "min",
+            AggFn::Max => "max",
+            AggFn::Mean => "mean",
+        }
+    }
+}
+
+/// One aggregation: function over a value column.
+#[derive(Debug, Clone, Copy)]
+pub struct AggSpec {
+    pub func: AggFn,
+    pub col: usize,
+}
+
+impl AggSpec {
+    pub fn new(func: AggFn, col: usize) -> Self {
+        AggSpec { func, col }
+    }
+}
+
+/// Mergeable partial state of one aggregate over one group.
+/// (count, sum, min, max) covers every AggFn including Mean.
+#[derive(Debug, Clone, Copy)]
+struct PartialState {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl PartialState {
+    fn empty() -> Self {
+        PartialState { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    fn update(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    fn merge(&mut self, other: &PartialState) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    fn finalize(&self, f: AggFn) -> f64 {
+        match f {
+            AggFn::Count => self.count as f64,
+            AggFn::Sum => self.sum,
+            AggFn::Min => {
+                if self.count == 0 {
+                    f64::NAN
+                } else {
+                    self.min
+                }
+            }
+            AggFn::Max => {
+                if self.count == 0 {
+                    f64::NAN
+                } else {
+                    self.max
+                }
+            }
+            AggFn::Mean => {
+                if self.count == 0 {
+                    f64::NAN
+                } else {
+                    self.sum / self.count as f64
+                }
+            }
+        }
+    }
+}
+
+/// Numeric view of a value cell for aggregation (i64 cast to f64; null
+/// cells are skipped, like SQL aggregates).
+fn value_of(a: &Array, row: usize) -> Option<f64> {
+    if !a.is_valid(row) {
+        return None;
+    }
+    match a {
+        Array::Int64(p) => Some(p.value(row) as f64),
+        Array::Float64(p) => Some(p.value(row)),
+        Array::Bool(p) => Some(p.value(row) as u8 as f64),
+        Array::Utf8(_) => None,
+    }
+}
+
+/// Grouped state: group index keyed by (hash, representative row).
+struct Groups {
+    // hash -> indices into `reps` with that hash (collision chaining)
+    index: HashMap<u32, Vec<usize>>,
+    // representative (first) row index of each group, in the source
+    reps: Vec<usize>,
+    states: Vec<Vec<PartialState>>, // per group, per agg spec
+}
+
+impl Groups {
+    fn new() -> Self {
+        Groups { index: HashMap::new(), reps: Vec::new(), states: Vec::new() }
+    }
+
+    fn find_or_insert(&mut self, key_col: &Array, row: usize, naggs: usize) -> usize {
+        let h = hash_cell(key_col, row);
+        let bucket = self.index.entry(h).or_default();
+        for &gid in bucket.iter() {
+            let rep = self.reps[gid];
+            let equal = match (key_col.is_valid(rep), key_col.is_valid(row)) {
+                (false, false) => true,
+                (true, true) => {
+                    cmp_cells_across(key_col, rep, key_col, row) == Ordering::Equal
+                }
+                _ => false,
+            };
+            if equal {
+                return gid;
+            }
+        }
+        let gid = self.reps.len();
+        bucket.push(gid);
+        self.reps.push(row);
+        self.states.push(vec![PartialState::empty(); naggs]);
+        gid
+    }
+}
+
+fn output_schema(t: &Table, key_col: usize, aggs: &[AggSpec], partial: bool) -> Schema {
+    let mut fields = vec![t.schema().field(key_col).clone()];
+    if partial {
+        // mergeable layout: per agg spec → count,sum,min,max columns
+        for spec in aggs {
+            let base = format!(
+                "{}_{}",
+                spec.func.name(),
+                t.schema().field(spec.col).name
+            );
+            for part in ["count", "sum", "min", "max"] {
+                fields.push(Field::new(format!("__{base}_{part}"), DataType::Float64));
+            }
+        }
+    } else {
+        for spec in aggs {
+            fields.push(Field::new(
+                format!("{}_{}", spec.func.name(), t.schema().field(spec.col).name),
+                DataType::Float64,
+            ));
+        }
+    }
+    Schema::new(fields)
+}
+
+fn validate(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Result<()> {
+    if key_col >= t.num_columns() {
+        return Err(Error::invalid("group key column out of range"));
+    }
+    if aggs.is_empty() {
+        return Err(Error::invalid("no aggregates requested"));
+    }
+    for s in aggs {
+        if s.col >= t.num_columns() {
+            return Err(Error::invalid(format!("agg column {} out of range", s.col)));
+        }
+        if matches!(t.column(s.col).data_type(), DataType::Utf8) && s.func != AggFn::Count {
+            return Err(Error::schema(format!(
+                "{} over utf8 column {} unsupported",
+                s.func.name(),
+                s.col
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn accumulate(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Groups {
+    let key = t.column(key_col).as_ref();
+    let mut groups = Groups::new();
+    for row in 0..t.num_rows() {
+        let gid = groups.find_or_insert(key, row, aggs.len());
+        for (ai, spec) in aggs.iter().enumerate() {
+            if spec.func == AggFn::Count {
+                // Count counts rows (including null value cells) when the
+                // value column is the key itself; SQL COUNT(col) skips
+                // nulls — we follow SQL.
+                if t.column(spec.col).is_valid(row) {
+                    groups.states[gid][ai].count += 1;
+                }
+            } else if let Some(v) = value_of(t.column(spec.col), row) {
+                groups.states[gid][ai].update(v);
+            }
+        }
+    }
+    groups
+}
+
+fn emit(
+    t: &Table,
+    key_col: usize,
+    aggs: &[AggSpec],
+    groups: &Groups,
+    partial: bool,
+) -> Result<Table> {
+    let schema = Arc::new(output_schema(t, key_col, aggs, partial));
+    let mut key_b = ArrayBuilder::new(t.column(key_col).data_type());
+    for &rep in &groups.reps {
+        key_b.push_cell(t.column(key_col), rep)?;
+    }
+    let mut cols = vec![Arc::new(key_b.finish())];
+    if partial {
+        for ai in 0..aggs.len() {
+            for field in 0..4 {
+                let vals: Vec<f64> = groups
+                    .states
+                    .iter()
+                    .map(|st| match field {
+                        0 => st[ai].count as f64,
+                        1 => st[ai].sum,
+                        2 => st[ai].min,
+                        _ => st[ai].max,
+                    })
+                    .collect();
+                cols.push(Arc::new(Array::from_f64(vals)));
+            }
+        }
+    } else {
+        for (ai, spec) in aggs.iter().enumerate() {
+            let vals: Vec<f64> = groups.states.iter().map(|st| st[ai].finalize(spec.func)).collect();
+            cols.push(Arc::new(Array::from_f64(vals)));
+        }
+    }
+    Table::try_new(schema, cols)
+}
+
+/// Local group-by: one output row per distinct key (null key is its own
+/// group), one f64 column per aggregate.
+pub fn group_by(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Result<Table> {
+    validate(t, key_col, aggs)?;
+    let groups = accumulate(t, key_col, aggs);
+    emit(t, key_col, aggs, &groups, false)
+}
+
+/// Phase 1 of the two-phase distributed plan: mergeable partial states
+/// (`__<agg>_{count,sum,min,max}` columns) per local key.
+pub fn group_by_partial(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Result<Table> {
+    validate(t, key_col, aggs)?;
+    let groups = accumulate(t, key_col, aggs);
+    emit(t, key_col, aggs, &groups, true)
+}
+
+/// Phase 2: merge shuffled partial tables (key + 4 state columns per
+/// agg) and finalize. `aggs` must match the specs used in phase 1.
+pub fn merge_partials(partial: &Table, aggs: &[AggFn]) -> Result<Table> {
+    let expect_cols = 1 + 4 * aggs.len();
+    if partial.num_columns() != expect_cols {
+        return Err(Error::schema(format!(
+            "partial table has {} columns, expected {expect_cols}",
+            partial.num_columns()
+        )));
+    }
+    let key = partial.column(0).as_ref();
+    let mut groups = Groups::new();
+    for row in 0..partial.num_rows() {
+        let gid = groups.find_or_insert(key, row, aggs.len());
+        for ai in 0..aggs.len() {
+            let base = 1 + ai * 4;
+            let get = |c: usize| -> f64 {
+                partial
+                    .column(base + c)
+                    .as_f64()
+                    .map(|a| a.value(row))
+                    .unwrap_or(f64::NAN)
+            };
+            let other = PartialState {
+                count: get(0) as u64,
+                sum: get(1),
+                min: get(2),
+                max: get(3),
+            };
+            groups.states[gid][ai].merge(&other);
+        }
+    }
+    // Emit finalized outputs with clean names.
+    let mut fields = vec![partial.schema().field(0).clone()];
+    for (ai, f) in aggs.iter().enumerate() {
+        // strip the __/..._count wrapper to recover the base name
+        let raw = &partial.schema().field(1 + ai * 4).name;
+        let base = raw
+            .strip_prefix("__")
+            .and_then(|s| s.strip_suffix("_count"))
+            .unwrap_or(raw)
+            .to_string();
+        fields.push(Field::new(base, DataType::Float64));
+        let _ = f;
+    }
+    let schema = Arc::new(Schema::new(fields));
+    let mut key_b = ArrayBuilder::new(key.data_type());
+    for &rep in &groups.reps {
+        key_b.push_cell(key, rep)?;
+    }
+    let mut cols = vec![Arc::new(key_b.finish())];
+    for (ai, func) in aggs.iter().enumerate() {
+        let vals: Vec<f64> = groups.states.iter().map(|st| st[ai].finalize(*func)).collect();
+        cols.push(Arc::new(Array::from_f64(vals)));
+    }
+    Table::try_new(schema, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+    use std::collections::HashMap as Map;
+
+    fn t() -> Table {
+        Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![1, 2, 1, 3, 2, 1])),
+            ("v", Array::from_f64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+        ])
+        .unwrap()
+    }
+
+    fn by_key(out: &Table) -> Map<i64, Vec<f64>> {
+        let keys = out.column(0).as_i64().unwrap();
+        (0..out.num_rows())
+            .map(|r| {
+                let vals = (1..out.num_columns())
+                    .map(|c| out.column(c).as_f64().unwrap().value(r))
+                    .collect();
+                (keys.value(r), vals)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sum_count_mean_min_max() {
+        let out = group_by(
+            &t(),
+            0,
+            &[
+                AggSpec::new(AggFn::Sum, 1),
+                AggSpec::new(AggFn::Count, 1),
+                AggSpec::new(AggFn::Mean, 1),
+                AggSpec::new(AggFn::Min, 1),
+                AggSpec::new(AggFn::Max, 1),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out.num_rows(), 3);
+        let m = by_key(&out);
+        assert_eq!(m[&1], vec![10.0, 3.0, 10.0 / 3.0, 1.0, 6.0]);
+        assert_eq!(m[&2], vec![7.0, 2.0, 3.5, 2.0, 5.0]);
+        assert_eq!(m[&3], vec![4.0, 1.0, 4.0, 4.0, 4.0]);
+        assert_eq!(out.schema().field(1).name, "sum_v");
+    }
+
+    #[test]
+    fn null_keys_and_values() {
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64_opts(vec![Some(1), None, Some(1), None])),
+            ("v", Array::from_f64_opts(vec![Some(2.0), Some(3.0), None, Some(5.0)])),
+        ])
+        .unwrap();
+        let out = group_by(&t, 0, &[AggSpec::new(AggFn::Sum, 1), AggSpec::new(AggFn::Count, 1)])
+            .unwrap();
+        // groups: key=1 (sum 2.0, count 1 — null v skipped), key=null (sum 8, count 2)
+        assert_eq!(out.num_rows(), 2);
+        let keys = out.column(0).as_i64().unwrap();
+        for r in 0..2 {
+            let sum = out.column(1).as_f64().unwrap().value(r);
+            let count = out.column(2).as_f64().unwrap().value(r);
+            if keys.is_valid(r) {
+                assert_eq!((sum, count), (2.0, 1.0));
+            } else {
+                assert_eq!((sum, count), (8.0, 2.0));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_then_merge_equals_direct() {
+        let full = t();
+        // Split rows across 3 "workers", partial-agg each, concat, merge.
+        let idx: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
+        let aggs = [AggSpec::new(AggFn::Sum, 1), AggSpec::new(AggFn::Mean, 1)];
+        let partials: Vec<Table> = idx
+            .iter()
+            .map(|ix| {
+                let part = crate::table::take::take_table(&full, ix);
+                group_by_partial(&part, 0, &aggs).unwrap()
+            })
+            .collect();
+        let refs: Vec<&Table> = partials.iter().collect();
+        let merged_in = crate::table::take::concat_tables(&refs).unwrap();
+        let merged = merge_partials(&merged_in, &[AggFn::Sum, AggFn::Mean]).unwrap();
+        let direct = group_by(&full, 0, &aggs).unwrap();
+        assert_eq!(by_key(&merged), by_key(&direct));
+    }
+
+    #[test]
+    fn string_keys_group() {
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_strs(&["a", "b", "a"])),
+            ("v", Array::from_f64(vec![1.0, 2.0, 3.0])),
+        ])
+        .unwrap();
+        let out = group_by(&t, 0, &[AggSpec::new(AggFn::Sum, 1)]).unwrap();
+        assert_eq!(out.num_rows(), 2);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(group_by(&t(), 9, &[AggSpec::new(AggFn::Sum, 1)]).is_err());
+        assert!(group_by(&t(), 0, &[]).is_err());
+        assert!(group_by(&t(), 0, &[AggSpec::new(AggFn::Sum, 9)]).is_err());
+        let s = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![1])),
+            ("s", Array::from_strs(&["x"])),
+        ])
+        .unwrap();
+        assert!(group_by(&s, 0, &[AggSpec::new(AggFn::Sum, 1)]).is_err());
+        assert!(group_by(&s, 0, &[AggSpec::new(AggFn::Count, 1)]).is_ok());
+    }
+
+    #[test]
+    fn count_on_int_key_counts_rows() {
+        let out = group_by(&t(), 0, &[AggSpec::new(AggFn::Count, 0)]).unwrap();
+        let m = by_key(&out);
+        assert_eq!(m[&1], vec![3.0]);
+        assert_eq!(m[&2], vec![2.0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Difference — the opposite of Intersect (§II-B6).
+//!
+//! Per the paper's definition ("adding all the records from both tables
+//! but removing all similar records"; Table I: "only the dissimilar rows
+//! from both tables") this is the **symmetric** difference, not SQL
+//! `EXCEPT`. Both are provided; the distributed operator uses the
+//! symmetric form to match the paper.
+
+use super::rowset::RowSet;
+use crate::error::{Error, Result};
+use crate::table::{builder::TableBuilder, Table};
+
+/// Symmetric difference `(a ∪ b) \ (a ∩ b)`, distinct rows, paper
+/// semantics. Order: a-only rows (first occurrence), then b-only rows.
+pub fn difference(a: &Table, b: &Table) -> Result<Table> {
+    if !a.schema_equals(b) {
+        return Err(Error::schema("difference of schema-incompatible tables"));
+    }
+    let mut aset = RowSet::with_capacity(a.num_rows());
+    let atid = aset.add_table(a);
+    for r in 0..a.num_rows() {
+        aset.insert(atid, r);
+    }
+    let mut bset = RowSet::with_capacity(b.num_rows());
+    let btid = bset.add_table(b);
+    for r in 0..b.num_rows() {
+        bset.insert(btid, r);
+    }
+    let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
+    let mut emitted = RowSet::new();
+    let ea = emitted.add_table(a);
+    let eb = emitted.add_table(b);
+    for r in 0..a.num_rows() {
+        if !bset.contains(a, r) && emitted.insert(ea, r) {
+            out.push_row(a, r)?;
+        }
+    }
+    for r in 0..b.num_rows() {
+        if !aset.contains(b, r) && emitted.insert(eb, r) {
+            out.push_row(b, r)?;
+        }
+    }
+    out.finish()
+}
+
+/// SQL-style `a EXCEPT b` (distinct a-rows not in b). Not used by the
+/// paper's Difference but handy for pipelines.
+pub fn except(a: &Table, b: &Table) -> Result<Table> {
+    if !a.schema_equals(b) {
+        return Err(Error::schema("except of schema-incompatible tables"));
+    }
+    let mut bset = RowSet::with_capacity(b.num_rows());
+    let btid = bset.add_table(b);
+    for r in 0..b.num_rows() {
+        bset.insert(btid, r);
+    }
+    let mut emitted = RowSet::with_capacity(a.num_rows());
+    let ea = emitted.add_table(a);
+    let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows());
+    for r in 0..a.num_rows() {
+        if !bset.contains(a, r) && emitted.insert(ea, r) {
+            out.push_row(a, r)?;
+        }
+    }
+    out.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t(keys: Vec<i64>) -> Table {
+        Table::from_arrays(vec![("k", Array::from_i64(keys))]).unwrap()
+    }
+
+    fn keys(t: &Table) -> Vec<i64> {
+        let mut v = t.column(0).as_i64().unwrap().values().to_vec();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn symmetric_difference() {
+        let out = difference(&t(vec![1, 2, 3]), &t(vec![2, 3, 4])).unwrap();
+        assert_eq!(keys(&out), vec![1, 4]);
+    }
+
+    #[test]
+    fn symmetric_is_commutative() {
+        let a = t(vec![1, 2, 2, 5]);
+        let b = t(vec![2, 6, 6]);
+        assert_eq!(keys(&difference(&a, &b).unwrap()), keys(&difference(&b, &a).unwrap()));
+    }
+
+    #[test]
+    fn identical_tables_empty() {
+        let a = t(vec![1, 2, 1]);
+        let out = difference(&a, &a).unwrap();
+        assert_eq!(out.num_rows(), 0);
+    }
+
+    #[test]
+    fn except_is_one_sided() {
+        let out = except(&t(vec![1, 2, 3, 3]), &t(vec![2])).unwrap();
+        assert_eq!(keys(&out), vec![1, 3]);
+    }
+
+    #[test]
+    fn difference_vs_union_minus_intersect() {
+        let a = t(vec![1, 2, 3, 3, 7]);
+        let b = t(vec![3, 4, 7, 9]);
+        let u = crate::ops::union(&a, &b).unwrap();
+        let i = crate::ops::intersect(&a, &b).unwrap();
+        let ui = except(&u, &i).unwrap();
+        let d = difference(&a, &b).unwrap();
+        assert_eq!(keys(&ui), keys(&d));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(keys(&difference(&t(vec![]), &t(vec![1])).unwrap()), vec![1]);
+        assert_eq!(keys(&difference(&t(vec![1]), &t(vec![])).unwrap()), vec![1]);
+        assert_eq!(difference(&t(vec![]), &t(vec![])).unwrap().num_rows(), 0);
+    }
+
+    #[test]
+    fn schema_checked() {
+        let b = Table::from_arrays(vec![("v", Array::from_f64(vec![1.0]))]).unwrap();
+        assert!(difference(&t(vec![1]), &b).is_err());
+        assert!(except(&t(vec![1]), &b).is_err());
+    }
+}

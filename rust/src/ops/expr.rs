@@ -1,0 +1,434 @@
+//! Expression DSL — typed scalar expressions over table columns.
+//!
+//! The paper positions Cylon under SQL-like layers ("SQL interfaces are
+//! developed on top of these to enhance usability", §I). This module is
+//! that seam: a small expression tree that evaluates vectorized over a
+//! table, powering predicate pushdown into [`super::select`] and
+//! computed columns for Project-with-derivation.
+//!
+//! ```
+//! use rylon::ops::expr::Expr;
+//! use rylon::io::generator::paper_table;
+//! let t = paper_table(100, 1.0, 7);
+//! // c1 + c2 > 1.0 && c0 % 2 == 0
+//! let pred = Expr::col(1).add(Expr::col(2)).gt(Expr::lit_f64(1.0))
+//!     .and(Expr::col(0).modulo(Expr::lit_i64(2)).eq(Expr::lit_i64(0)));
+//! let filtered = rylon::ops::expr::filter(&t, &pred).unwrap();
+//! assert!(filtered.num_rows() < t.num_rows());
+//! ```
+
+use crate::error::{Error, Result};
+use crate::table::{take::filter_table, Array, Table};
+
+/// A vectorized scalar expression.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    /// Column reference by index.
+    Col(usize),
+    LitI64(i64),
+    LitF64(f64),
+    LitBool(bool),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    Div(Box<Expr>, Box<Expr>),
+    Mod(Box<Expr>, Box<Expr>),
+    Eq(Box<Expr>, Box<Expr>),
+    Ne(Box<Expr>, Box<Expr>),
+    Lt(Box<Expr>, Box<Expr>),
+    Le(Box<Expr>, Box<Expr>),
+    Gt(Box<Expr>, Box<Expr>),
+    Ge(Box<Expr>, Box<Expr>),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+    /// Null test on a column expression.
+    IsNull(Box<Expr>),
+}
+
+/// Evaluation result: a concrete column of values with validity.
+/// Numeric ops null-propagate; comparisons on null are null (SQL
+/// three-valued logic collapsed to "null = false" at filter time).
+#[derive(Debug, Clone)]
+pub enum Value {
+    I64(Vec<i64>, Vec<bool>),
+    F64(Vec<f64>, Vec<bool>),
+    Bool(Vec<bool>, Vec<bool>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::I64(v, _) => v.len(),
+            Value::F64(v, _) => v.len(),
+            Value::Bool(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn validity(&self) -> &[bool] {
+        match self {
+            Value::I64(_, m) | Value::F64(_, m) | Value::Bool(_, m) => m,
+        }
+    }
+
+    /// Materialize as a table column.
+    pub fn into_array(self) -> Array {
+        match self {
+            Value::I64(v, m) => {
+                if m.iter().all(|&x| x) {
+                    Array::from_i64(v)
+                } else {
+                    Array::from_i64_opts(
+                        v.into_iter().zip(m).map(|(x, ok)| ok.then_some(x)).collect(),
+                    )
+                }
+            }
+            Value::F64(v, m) => {
+                if m.iter().all(|&x| x) {
+                    Array::from_f64(v)
+                } else {
+                    Array::from_f64_opts(
+                        v.into_iter().zip(m).map(|(x, ok)| ok.then_some(x)).collect(),
+                    )
+                }
+            }
+            Value::Bool(v, m) => {
+                if m.iter().all(|&x| x) {
+                    Array::from_bools(v)
+                } else {
+                    // null bool -> false with validity; Array supports opts
+                    // only via builder; encode through builder:
+                    let mut b = crate::table::builder::ArrayBuilder::new(
+                        crate::table::DataType::Bool,
+                    );
+                    for (x, ok) in v.into_iter().zip(m) {
+                        if ok {
+                            b.push_bool(x).expect("bool builder");
+                        } else {
+                            b.push_null();
+                        }
+                    }
+                    b.finish()
+                }
+            }
+        }
+    }
+}
+
+/// Promote (i64, f64) pairs to f64 for mixed arithmetic.
+fn as_f64(v: &Value) -> (Vec<f64>, Vec<bool>) {
+    match v {
+        Value::I64(x, m) => (x.iter().map(|&a| a as f64).collect(), m.clone()),
+        Value::F64(x, m) => (x.clone(), m.clone()),
+        Value::Bool(x, m) => (x.iter().map(|&a| a as u8 as f64).collect(), m.clone()),
+    }
+}
+
+fn zip_validity(a: &[bool], b: &[bool]) -> Vec<bool> {
+    a.iter().zip(b).map(|(&x, &y)| x && y).collect()
+}
+
+macro_rules! arith {
+    ($a:expr, $b:expr, $op:tt, $name:literal) => {{
+        let (l, r) = ($a, $b);
+        match (&l, &r) {
+            (Value::I64(x, mx), Value::I64(y, my)) => {
+                if $name == "div" || $name == "mod" {
+                    // guard zero divisors -> null
+                    let mut m = zip_validity(mx, my);
+                    let v: Vec<i64> = x
+                        .iter()
+                        .zip(y)
+                        .enumerate()
+                        .map(|(i, (&a, &b))| {
+                            if b == 0 {
+                                m[i] = false;
+                                0
+                            } else if $name == "div" {
+                                a.wrapping_div(b)
+                            } else {
+                                a.wrapping_rem(b)
+                            }
+                        })
+                        .collect();
+                    Ok(Value::I64(v, m))
+                } else {
+                    let v = x.iter().zip(y).map(|(&a, &b)| a $op b).collect();
+                    Ok(Value::I64(v, zip_validity(mx, my)))
+                }
+            }
+            _ => {
+                let (x, mx) = as_f64(&l);
+                let (y, my) = as_f64(&r);
+                if $name == "mod" {
+                    let v = x.iter().zip(&y).map(|(&a, &b)| a % b).collect();
+                    Ok(Value::F64(v, zip_validity(&mx, &my)))
+                } else {
+                    let v = x.iter().zip(&y).map(|(&a, &b)| a $op b).collect();
+                    Ok(Value::F64(v, zip_validity(&mx, &my)))
+                }
+            }
+        }
+    }};
+}
+
+macro_rules! compare {
+    ($a:expr, $b:expr, $op:tt) => {{
+        let (l, r) = ($a, $b);
+        match (&l, &r) {
+            (Value::I64(x, mx), Value::I64(y, my)) => {
+                let v = x.iter().zip(y).map(|(&a, &b)| a $op b).collect();
+                Ok(Value::Bool(v, zip_validity(mx, my)))
+            }
+            _ => {
+                let (x, mx) = as_f64(&l);
+                let (y, my) = as_f64(&r);
+                let v = x.iter().zip(&y).map(|(&a, &b)| a $op b).collect();
+                Ok(Value::Bool(v, zip_validity(&mx, &my)))
+            }
+        }
+    }};
+}
+
+impl Expr {
+    // -- constructors ---------------------------------------------------
+    pub fn col(i: usize) -> Expr {
+        Expr::Col(i)
+    }
+    pub fn lit_i64(v: i64) -> Expr {
+        Expr::LitI64(v)
+    }
+    pub fn lit_f64(v: f64) -> Expr {
+        Expr::LitF64(v)
+    }
+    pub fn lit_bool(v: bool) -> Expr {
+        Expr::LitBool(v)
+    }
+
+    // -- combinators ----------------------------------------------------
+    pub fn add(self, o: Expr) -> Expr {
+        Expr::Add(self.into(), o.into())
+    }
+    pub fn sub(self, o: Expr) -> Expr {
+        Expr::Sub(self.into(), o.into())
+    }
+    pub fn mul(self, o: Expr) -> Expr {
+        Expr::Mul(self.into(), o.into())
+    }
+    pub fn div(self, o: Expr) -> Expr {
+        Expr::Div(self.into(), o.into())
+    }
+    pub fn modulo(self, o: Expr) -> Expr {
+        Expr::Mod(self.into(), o.into())
+    }
+    pub fn eq(self, o: Expr) -> Expr {
+        Expr::Eq(self.into(), o.into())
+    }
+    pub fn ne(self, o: Expr) -> Expr {
+        Expr::Ne(self.into(), o.into())
+    }
+    pub fn lt(self, o: Expr) -> Expr {
+        Expr::Lt(self.into(), o.into())
+    }
+    pub fn le(self, o: Expr) -> Expr {
+        Expr::Le(self.into(), o.into())
+    }
+    pub fn gt(self, o: Expr) -> Expr {
+        Expr::Gt(self.into(), o.into())
+    }
+    pub fn ge(self, o: Expr) -> Expr {
+        Expr::Ge(self.into(), o.into())
+    }
+    pub fn and(self, o: Expr) -> Expr {
+        Expr::And(self.into(), o.into())
+    }
+    pub fn or(self, o: Expr) -> Expr {
+        Expr::Or(self.into(), o.into())
+    }
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(self) -> Expr {
+        Expr::Not(self.into())
+    }
+    pub fn is_null(self) -> Expr {
+        Expr::IsNull(self.into())
+    }
+
+    /// Evaluate over all rows of `t`.
+    pub fn eval(&self, t: &Table) -> Result<Value> {
+        let n = t.num_rows();
+        match self {
+            Expr::Col(i) => {
+                if *i >= t.num_columns() {
+                    return Err(Error::invalid(format!("expr column {i} out of range")));
+                }
+                let col = t.column(*i);
+                let validity: Vec<bool> = (0..n).map(|r| col.is_valid(r)).collect();
+                Ok(match col.as_ref() {
+                    Array::Int64(a) => Value::I64(a.values().to_vec(), validity),
+                    Array::Float64(a) => Value::F64(a.values().to_vec(), validity),
+                    Array::Bool(a) => Value::Bool(a.values().to_vec(), validity),
+                    Array::Utf8(_) => {
+                        return Err(Error::schema("utf8 columns not supported in expressions"))
+                    }
+                })
+            }
+            Expr::LitI64(v) => Ok(Value::I64(vec![*v; n], vec![true; n])),
+            Expr::LitF64(v) => Ok(Value::F64(vec![*v; n], vec![true; n])),
+            Expr::LitBool(v) => Ok(Value::Bool(vec![*v; n], vec![true; n])),
+            Expr::Add(a, b) => arith!(a.eval(t)?, b.eval(t)?, +, "add"),
+            Expr::Sub(a, b) => arith!(a.eval(t)?, b.eval(t)?, -, "sub"),
+            Expr::Mul(a, b) => arith!(a.eval(t)?, b.eval(t)?, *, "mul"),
+            Expr::Div(a, b) => arith!(a.eval(t)?, b.eval(t)?, /, "div"),
+            Expr::Mod(a, b) => arith!(a.eval(t)?, b.eval(t)?, %, "mod"),
+            Expr::Eq(a, b) => compare!(a.eval(t)?, b.eval(t)?, ==),
+            Expr::Ne(a, b) => compare!(a.eval(t)?, b.eval(t)?, !=),
+            Expr::Lt(a, b) => compare!(a.eval(t)?, b.eval(t)?, <),
+            Expr::Le(a, b) => compare!(a.eval(t)?, b.eval(t)?, <=),
+            Expr::Gt(a, b) => compare!(a.eval(t)?, b.eval(t)?, >),
+            Expr::Ge(a, b) => compare!(a.eval(t)?, b.eval(t)?, >=),
+            Expr::And(a, b) => {
+                let (x, y) = (a.eval(t)?, b.eval(t)?);
+                match (&x, &y) {
+                    (Value::Bool(l, ml), Value::Bool(r, mr)) => Ok(Value::Bool(
+                        l.iter().zip(r).map(|(&a, &b)| a && b).collect(),
+                        zip_validity(ml, mr),
+                    )),
+                    _ => Err(Error::schema("AND over non-bool operands")),
+                }
+            }
+            Expr::Or(a, b) => {
+                let (x, y) = (a.eval(t)?, b.eval(t)?);
+                match (&x, &y) {
+                    (Value::Bool(l, ml), Value::Bool(r, mr)) => Ok(Value::Bool(
+                        l.iter().zip(r).map(|(&a, &b)| a || b).collect(),
+                        zip_validity(ml, mr),
+                    )),
+                    _ => Err(Error::schema("OR over non-bool operands")),
+                }
+            }
+            Expr::Not(a) => match a.eval(t)? {
+                Value::Bool(v, m) => Ok(Value::Bool(v.into_iter().map(|b| !b).collect(), m)),
+                _ => Err(Error::schema("NOT over non-bool operand")),
+            },
+            Expr::IsNull(a) => {
+                let inner = a.eval(t)?;
+                let mask: Vec<bool> = inner.validity().iter().map(|&ok| !ok).collect();
+                Ok(Value::Bool(mask, vec![true; n]))
+            }
+        }
+    }
+}
+
+/// Filter rows where the predicate evaluates to (valid) true.
+pub fn filter(t: &Table, pred: &Expr) -> Result<Table> {
+    match pred.eval(t)? {
+        Value::Bool(v, m) => {
+            let mask: Vec<bool> = v.iter().zip(&m).map(|(&b, &ok)| b && ok).collect();
+            filter_table(t, &mask)
+        }
+        _ => Err(Error::schema("filter predicate is not boolean")),
+    }
+}
+
+/// Append a computed column `name = expr` (Project-with-derivation).
+pub fn with_column(t: &Table, name: &str, expr: &Expr) -> Result<Table> {
+    let value = expr.eval(t)?;
+    let array = value.into_array();
+    let mut fields = t.schema().fields().to_vec();
+    fields.push(crate::table::Field::new(name, array.data_type()));
+    let mut cols = t.columns().to_vec();
+    cols.push(std::sync::Arc::new(array));
+    Table::try_new(std::sync::Arc::new(crate::table::Schema::new(fields)), cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t() -> Table {
+        Table::from_arrays(vec![
+            ("i", Array::from_i64_opts(vec![Some(1), Some(2), None, Some(4)])),
+            ("f", Array::from_f64(vec![0.5, 1.5, 2.5, 3.5])),
+            ("b", Array::from_bools(vec![true, false, true, false])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn arithmetic_and_promotion() {
+        // i + f promotes to f64
+        let v = Expr::col(0).add(Expr::col(1)).eval(&t()).unwrap();
+        match v {
+            Value::F64(x, m) => {
+                assert_eq!(x[0], 1.5);
+                assert_eq!(x[3], 7.5);
+                assert!(!m[2]); // null propagates
+            }
+            _ => panic!("expected f64"),
+        }
+    }
+
+    #[test]
+    fn integer_mod_and_div_by_zero() {
+        let tz = Table::from_arrays(vec![
+            ("a", Array::from_i64(vec![7, 8])),
+            ("z", Array::from_i64(vec![2, 0])),
+        ])
+        .unwrap();
+        let v = Expr::col(0).modulo(Expr::col(1)).eval(&tz).unwrap();
+        match v {
+            Value::I64(x, m) => {
+                assert_eq!(x[0], 1);
+                assert!(m[0]);
+                assert!(!m[1]); // mod 0 -> null, not panic
+            }
+            _ => panic!("expected i64"),
+        }
+    }
+
+    #[test]
+    fn filter_with_three_valued_logic() {
+        // i > 1: rows 1 (2>1) and 3 (4>1); row 2 null -> excluded
+        let out = filter(&t(), &Expr::col(0).gt(Expr::lit_i64(1))).unwrap();
+        assert_eq!(out.num_rows(), 2);
+    }
+
+    #[test]
+    fn boolean_combinators() {
+        let pred = Expr::col(2).or(Expr::col(1).lt(Expr::lit_f64(1.0)));
+        let out = filter(&t(), &pred).unwrap();
+        assert_eq!(out.num_rows(), 2); // rows 0 (b & f<1), 2 (b)
+        let not_out = filter(&t(), &pred.clone().not()).unwrap();
+        assert_eq!(out.num_rows() + not_out.num_rows(), 4);
+    }
+
+    #[test]
+    fn is_null_predicate() {
+        let out = filter(&t(), &Expr::col(0).is_null()).unwrap();
+        assert_eq!(out.num_rows(), 1);
+        let out2 = filter(&t(), &Expr::col(0).is_null().not()).unwrap();
+        assert_eq!(out2.num_rows(), 3);
+    }
+
+    #[test]
+    fn with_column_appends() {
+        let out = with_column(&t(), "double_f", &Expr::col(1).mul(Expr::lit_f64(2.0))).unwrap();
+        assert_eq!(out.num_columns(), 4);
+        assert_eq!(out.schema().field(3).name, "double_f");
+        assert_eq!(out.column(3).as_f64().unwrap().value(1), 3.0);
+    }
+
+    #[test]
+    fn type_errors() {
+        assert!(Expr::col(9).eval(&t()).is_err());
+        assert!(Expr::col(0).and(Expr::col(1)).eval(&t()).is_err());
+        assert!(filter(&t(), &Expr::col(0).add(Expr::col(1))).is_err());
+        let s = Table::from_arrays(vec![("s", Array::from_strs(&["x"]))]).unwrap();
+        assert!(Expr::col(0).eval(&s).is_err());
+    }
+}

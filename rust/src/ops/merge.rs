@@ -1,0 +1,124 @@
+//! Merge — combine two tables already sorted on a column into one sorted
+//! table (the `Merge` local operator; also the reassembly step of a
+//! sorted shuffle).
+
+use super::sort::{cmp_cells_across, is_sorted};
+use crate::error::{Error, Result};
+use crate::table::{builder::TableBuilder, Table};
+use std::cmp::Ordering;
+
+/// Merge `a` and `b` (both sorted ascending on column `col`, type-equal
+/// schemas) into one sorted table. Stable: ties take `a`'s rows first.
+pub fn merge_sorted(a: &Table, b: &Table, col: usize) -> Result<Table> {
+    if !a.schema_equals(b) {
+        return Err(Error::schema("merge of schema-incompatible tables"));
+    }
+    if col >= a.num_columns() {
+        return Err(Error::invalid(format!("merge column {col} out of range")));
+    }
+    debug_assert!(is_sorted(a, col) && is_sorted(b, col));
+    let (ka, kb) = (a.column(col).as_ref(), b.column(col).as_ref());
+    let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.num_rows() && j < b.num_rows() {
+        match cmp_cells_across(ka, i, kb, j) {
+            Ordering::Greater => {
+                out.push_row(b, j)?;
+                j += 1;
+            }
+            _ => {
+                out.push_row(a, i)?;
+                i += 1;
+            }
+        }
+    }
+    while i < a.num_rows() {
+        out.push_row(a, i)?;
+        i += 1;
+    }
+    while j < b.num_rows() {
+        out.push_row(b, j)?;
+        j += 1;
+    }
+    out.finish()
+}
+
+/// K-way merge of sorted partitions (distributed sort reassembly).
+pub fn merge_sorted_many(parts: &[&Table], col: usize) -> Result<Table> {
+    match parts.len() {
+        0 => Err(Error::invalid("merge of zero tables")),
+        1 => Ok(parts[0].clone()),
+        _ => {
+            // Tournament by pairwise merging; fine for the worker counts
+            // we simulate (log W passes).
+            let mut current: Vec<Table> = parts.iter().map(|t| (*t).clone()).collect();
+            while current.len() > 1 {
+                let mut next = Vec::with_capacity(current.len().div_ceil(2));
+                for pair in current.chunks(2) {
+                    if pair.len() == 2 {
+                        next.push(merge_sorted(&pair[0], &pair[1], col)?);
+                    } else {
+                        next.push(pair[0].clone());
+                    }
+                }
+                current = next;
+            }
+            Ok(current.pop().unwrap())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::sort::{is_sorted, sort};
+    use crate::table::Array;
+
+    fn t(keys: Vec<i64>) -> Table {
+        let v: Vec<f64> = keys.iter().map(|k| *k as f64).collect();
+        Table::from_arrays(vec![
+            ("k", Array::from_i64(keys)),
+            ("v", Array::from_f64(v)),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn merges_two_sorted() {
+        let a = t(vec![1, 3, 5]);
+        let b = t(vec![2, 3, 6]);
+        let m = merge_sorted(&a, &b, 0).unwrap();
+        assert_eq!(m.num_rows(), 6);
+        assert!(is_sorted(&m, 0));
+        assert_eq!(m.column(0).as_i64().unwrap().values(), &[1, 2, 3, 3, 5, 6]);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let a = t(vec![]);
+        let b = t(vec![1, 2]);
+        let m = merge_sorted(&a, &b, 0).unwrap();
+        assert_eq!(m.num_rows(), 2);
+    }
+
+    #[test]
+    fn kway_merge_equals_global_sort() {
+        let parts = vec![t(vec![9, 1, 4]), t(vec![3, 7]), t(vec![2, 8, 0])];
+        let sorted: Vec<Table> = parts.iter().map(|p| sort(p, 0).unwrap()).collect();
+        let refs: Vec<&Table> = sorted.iter().collect();
+        let m = merge_sorted_many(&refs, 0).unwrap();
+        let mut all: Vec<i64> = parts
+            .iter()
+            .flat_map(|p| p.column(0).as_i64().unwrap().values().to_vec())
+            .collect();
+        all.sort();
+        assert_eq!(m.column(0).as_i64().unwrap().values(), &all[..]);
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let a = t(vec![1]);
+        let b = Table::from_arrays(vec![("k", Array::from_i64(vec![1]))]).unwrap();
+        assert!(merge_sorted(&a, &b, 0).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! Local relational operators (Table I of the paper).
+//!
+//! Local operators work entirely on the data available to this process;
+//! distributed counterparts in [`crate::dist`] compose them with the
+//! AllToAll network operator (Fig. 3).
+
+pub mod aggregate;
+pub mod difference;
+pub mod expr;
+pub mod hash;
+pub mod intersect;
+pub mod join;
+pub mod merge;
+pub mod partition;
+pub mod project;
+pub(crate) mod rowset;
+pub mod select;
+pub mod sort;
+pub mod union;
+
+pub use aggregate::{group_by, AggFn, AggSpec};
+pub use difference::difference;
+pub use expr::Expr;
+pub use intersect::intersect;
+pub use join::{join, JoinAlgorithm, JoinConfig, JoinType};
+pub use merge::merge_sorted;
+pub use partition::{hash_partition, partition_indices};
+pub use project::project;
+pub use select::select;
+pub use sort::{sort, sort_indices};
+pub use union::union;

@@ -1,0 +1,182 @@
+//! HashPartition — split a table into `p` partitions by key hash.
+//!
+//! This is the local half of every distributed operator (Fig. 3): records
+//! whose key hashes to partition `i` are routed to worker `i` by the
+//! AllToAll that follows. Two keying modes:
+//!
+//! * **by key column** (joins): `hash(key) % p` — this is exactly the
+//!   computation the AOT JAX/Pallas artifact performs on the hot path
+//!   (see [`crate::runtime`]); the native implementation here is the
+//!   bit-identical fallback.
+//! * **by whole row** (Union/Intersect/Difference): the row hash of every
+//!   column, §II-B4.
+
+use super::hash::{hash_cell, hash_i64, hash_row};
+use crate::error::{Error, Result};
+use crate::table::{take::take_table, Array, Table};
+
+/// Compute the partition id of every row, keyed on column `col`.
+pub fn partition_ids_by_key(t: &Table, col: usize, p: usize) -> Result<Vec<u32>> {
+    if p == 0 {
+        return Err(Error::invalid("zero partitions"));
+    }
+    if col >= t.num_columns() {
+        return Err(Error::invalid(format!("partition column {col} out of range")));
+    }
+    let a = t.column(col).as_ref();
+    let ids = match a {
+        // Typed fast path == the kernel's computation.
+        Array::Int64(k) if k.null_count() == 0 => k
+            .values()
+            .iter()
+            .map(|&v| hash_i64(v) % p as u32)
+            .collect(),
+        _ => (0..t.num_rows())
+            .map(|i| hash_cell(a, i) % p as u32)
+            .collect(),
+    };
+    Ok(ids)
+}
+
+/// Compute the partition id of every row from the whole-row hash.
+pub fn partition_ids_by_row(t: &Table, p: usize) -> Result<Vec<u32>> {
+    if p == 0 {
+        return Err(Error::invalid("zero partitions"));
+    }
+    Ok((0..t.num_rows()).map(|i| hash_row(t, i) % p as u32).collect())
+}
+
+/// Group row indices by a precomputed partition-id vector.
+/// Returns `p` index vectors; counting pass first so each vector is
+/// allocated exactly once (no reallocation in the hot loop).
+pub fn partition_indices(ids: &[u32], p: usize) -> Vec<Vec<usize>> {
+    let mut counts = vec![0usize; p];
+    for &id in ids {
+        counts[id as usize] += 1;
+    }
+    let mut out: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (row, &id) in ids.iter().enumerate() {
+        out[id as usize].push(row);
+    }
+    out
+}
+
+/// Materialize partitions from a precomputed id vector.
+pub fn partition_by_ids(t: &Table, ids: &[u32], p: usize) -> Result<Vec<Table>> {
+    if ids.len() != t.num_rows() {
+        return Err(Error::invalid("partition id vector length != rows"));
+    }
+    if let Some(&bad) = ids.iter().find(|&&id| id as usize >= p) {
+        return Err(Error::invalid(format!("partition id {bad} >= {p}")));
+    }
+    Ok(partition_indices(ids, p)
+        .iter()
+        .map(|idx| take_table(t, idx))
+        .collect())
+}
+
+/// HashPartition keyed on a column: the full local operator.
+pub fn hash_partition(t: &Table, col: usize, p: usize) -> Result<Vec<Table>> {
+    let ids = partition_ids_by_key(t, col, p)?;
+    partition_by_ids(t, &ids, p)
+}
+
+/// HashPartition keyed on the whole row (set operators).
+pub fn hash_partition_rows(t: &Table, p: usize) -> Result<Vec<Table>> {
+    let ids = partition_ids_by_row(t, p)?;
+    partition_by_ids(t, &ids, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t(n: i64) -> Table {
+        Table::from_arrays(vec![
+            ("k", Array::from_i64((0..n).collect())),
+            ("v", Array::from_f64((0..n).map(|x| x as f64).collect())),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn partitions_cover_all_rows() {
+        let t = t(1000);
+        let parts = hash_partition(&t, 0, 7).unwrap();
+        assert_eq!(parts.len(), 7);
+        assert_eq!(parts.iter().map(|p| p.num_rows()).sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_consistent() {
+        let t = t(100);
+        let parts = hash_partition(&t, 0, 4).unwrap();
+        for (pid, part) in parts.iter().enumerate() {
+            let keys = part.column(0).as_i64().unwrap();
+            for i in 0..part.num_rows() {
+                assert_eq!(hash_i64(keys.value(i)) % 4, pid as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn same_key_same_partition_across_tables() {
+        // The join correctness condition: equal keys land together.
+        let a = t(50);
+        let b = t(50);
+        let ia = partition_ids_by_key(&a, 0, 5).unwrap();
+        let ib = partition_ids_by_key(&b, 0, 5).unwrap();
+        assert_eq!(ia, ib);
+    }
+
+    #[test]
+    fn single_partition_is_identity() {
+        let t = t(10);
+        let parts = hash_partition(&t, 0, 1).unwrap();
+        assert_eq!(parts.len(), 1);
+        assert!(parts[0].data_equals(&t));
+    }
+
+    #[test]
+    fn row_partition_routes_duplicates_together() {
+        let t = Table::from_arrays(vec![
+            ("a", Array::from_i64(vec![1, 2, 1, 2])),
+            ("b", Array::from_strs(&["x", "y", "x", "y"])),
+        ])
+        .unwrap();
+        let ids = partition_ids_by_row(&t, 3).unwrap();
+        assert_eq!(ids[0], ids[2]);
+        assert_eq!(ids[1], ids[3]);
+    }
+
+    #[test]
+    fn null_keys_route_consistently() {
+        let t = Table::from_arrays(vec![(
+            "k",
+            Array::from_i64_opts(vec![None, Some(1), None]),
+        )])
+        .unwrap();
+        let ids = partition_ids_by_key(&t, 0, 8).unwrap();
+        assert_eq!(ids[0], ids[2]);
+    }
+
+    #[test]
+    fn bad_args_rejected() {
+        let t = t(5);
+        assert!(hash_partition(&t, 0, 0).is_err());
+        assert!(hash_partition(&t, 9, 4).is_err());
+        assert!(partition_by_ids(&t, &[0, 0], 1).is_err());
+        assert!(partition_by_ids(&t, &[0, 0, 0, 0, 9], 4).is_err());
+    }
+
+    #[test]
+    fn reasonable_balance_on_uniform_keys() {
+        let t = t(10_000);
+        let parts = hash_partition(&t, 0, 8).unwrap();
+        for p in &parts {
+            let frac = p.num_rows() as f64 / 10_000.0;
+            assert!((frac - 0.125).abs() < 0.05, "skewed partition: {frac}");
+        }
+    }
+}

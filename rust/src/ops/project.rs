@@ -1,0 +1,83 @@
+//! Project — column subset (§II-B2). The counterpart of Select that works
+//! on columns; zero-copy here because columns are `Arc`ed.
+
+use crate::error::{Error, Result};
+use crate::table::{Schema, Table};
+use std::sync::Arc;
+
+/// Keep only `columns` (by index), in the given order. Zero-copy.
+pub fn project(t: &Table, columns: &[usize]) -> Result<Table> {
+    for &c in columns {
+        if c >= t.num_columns() {
+            return Err(Error::invalid(format!(
+                "project column {c} out of range ({} columns)",
+                t.num_columns()
+            )));
+        }
+    }
+    let schema = Arc::new(t.schema().project(columns));
+    let cols = columns.iter().map(|&c| t.column(c).clone()).collect();
+    Table::try_new(schema, cols)
+}
+
+/// Project by column names.
+pub fn project_by_name(t: &Table, names: &[&str]) -> Result<Table> {
+    let idx = names
+        .iter()
+        .map(|n| {
+            t.schema()
+                .index_of(n)
+                .ok_or_else(|| Error::invalid(format!("no column named '{n}'")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    project(t, &idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t() -> Table {
+        Table::from_arrays(vec![
+            ("a", Array::from_i64(vec![1, 2])),
+            ("b", Array::from_f64(vec![1.0, 2.0])),
+            ("c", Array::from_strs(&["x", "y"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn subset_and_reorder() {
+        let p = project(&t(), &[2, 0]).unwrap();
+        assert_eq!(p.num_columns(), 2);
+        assert_eq!(p.schema().field(0).name, "c");
+        assert_eq!(p.schema().field(1).name, "a");
+        assert_eq!(p.num_rows(), 2);
+    }
+
+    #[test]
+    fn zero_copy_shares_arc() {
+        let t = t();
+        let p = project(&t, &[0]).unwrap();
+        assert!(Arc::ptr_eq(t.column(0), p.column(0)));
+    }
+
+    #[test]
+    fn by_name() {
+        let p = project_by_name(&t(), &["b"]).unwrap();
+        assert_eq!(p.num_columns(), 1);
+        assert!(project_by_name(&t(), &["zz"]).is_err());
+    }
+
+    #[test]
+    fn out_of_range_errors() {
+        assert!(project(&t(), &[3]).is_err());
+    }
+
+    #[test]
+    fn duplicate_projection_allowed() {
+        let p = project(&t(), &[0, 0]).unwrap();
+        assert_eq!(p.num_columns(), 2);
+    }
+}

@@ -1,0 +1,198 @@
+//! RowSet — a hash set of table rows under row-identity semantics
+//! (null==null, NaN==NaN). Shared by Union / Intersect / Difference.
+//!
+//! Implemented as a flat chained-index table (one `first` array over
+//! power-of-two buckets + a `next` chain per entry) rather than
+//! `HashMap<u32, Vec<...>>`: one allocation per array, no per-bucket
+//! Vecs — ~2× faster inserts on the union hot path (§Perf log).
+//! Collisions on the 32-bit row hash are resolved by full row
+//! comparison, so results are exact regardless of hash quality.
+
+use super::hash::hash_row;
+use crate::table::{row::row_equals, Table};
+
+const CHAIN_END: u32 = u32::MAX;
+
+/// A set of rows drawn from one or more type-equal tables.
+/// Each entry remembers (table idx, row idx) of its first occurrence.
+pub struct RowSet<'a> {
+    tables: Vec<&'a Table>,
+    /// bucket -> first entry index (or CHAIN_END)
+    first: Vec<u32>,
+    mask: u32,
+    /// per entry: chain link, hash, and (table, row) location
+    next: Vec<u32>,
+    hashes: Vec<u32>,
+    locs: Vec<(u32, u32)>,
+}
+
+impl<'a> RowSet<'a> {
+    pub fn new() -> Self {
+        Self::with_capacity(16)
+    }
+
+    pub fn with_capacity(rows: usize) -> Self {
+        let buckets = (rows.max(8) * 2).next_power_of_two();
+        RowSet {
+            tables: Vec::new(),
+            first: vec![CHAIN_END; buckets],
+            mask: (buckets - 1) as u32,
+            next: Vec::with_capacity(rows),
+            hashes: Vec::with_capacity(rows),
+            locs: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Number of distinct rows inserted.
+    pub fn len(&self) -> usize {
+        self.locs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locs.is_empty()
+    }
+
+    /// Register a table; rows are inserted against its id.
+    pub fn add_table(&mut self, t: &'a Table) -> usize {
+        self.tables.push(t);
+        self.tables.len() - 1
+    }
+
+    /// Double the bucket array and re-thread chains (entries keep ids).
+    fn grow(&mut self) {
+        let buckets = self.first.len() * 2;
+        self.mask = (buckets - 1) as u32;
+        self.first = vec![CHAIN_END; buckets];
+        for e in 0..self.locs.len() {
+            let b = (self.hashes[e] & self.mask) as usize;
+            self.next[e] = self.first[b];
+            self.first[b] = e as u32;
+        }
+    }
+
+    /// Find the entry identical to row `row` of `t` with hash `h`.
+    #[inline]
+    fn find(&self, t: &Table, row: usize, h: u32) -> Option<usize> {
+        let mut cur = self.first[(h & self.mask) as usize];
+        while cur != CHAIN_END {
+            let e = cur as usize;
+            if self.hashes[e] == h {
+                let (etid, erow) = self.locs[e];
+                if row_equals(self.tables[etid as usize], t, erow as usize, row) {
+                    return Some(e);
+                }
+            }
+            cur = self.next[e];
+        }
+        None
+    }
+
+    /// Insert row `row` of registered table `tid`. Returns `true` if the
+    /// row was new (not identical to any present row).
+    pub fn insert(&mut self, tid: usize, row: usize) -> bool {
+        let t = self.tables[tid];
+        let h = hash_row(t, row);
+        if self.find(t, row, h).is_some() {
+            return false;
+        }
+        if self.locs.len() >= self.first.len() / 2 {
+            self.grow();
+        }
+        let e = self.locs.len() as u32;
+        let b = (h & self.mask) as usize;
+        self.next.push(self.first[b]);
+        self.hashes.push(h);
+        self.locs.push((tid as u32, row as u32));
+        self.first[b] = e;
+        true
+    }
+
+    /// Membership test for row `row` of table `t` (t need not be registered).
+    pub fn contains(&self, t: &Table, row: usize) -> bool {
+        self.find(t, row, hash_row(t, row)).is_some()
+    }
+
+    /// Iterate distinct rows in insertion order as (tid, row).
+    pub fn entries(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.locs.iter().map(|&(t, r)| (t as usize, r as usize))
+    }
+}
+
+impl Default for RowSet<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t(keys: Vec<i64>) -> Table {
+        Table::from_arrays(vec![("k", Array::from_i64(keys))]).unwrap()
+    }
+
+    #[test]
+    fn dedups_identical_rows() {
+        let a = t(vec![1, 2, 1, 1]);
+        let mut s = RowSet::new();
+        let tid = s.add_table(&a);
+        assert!(s.insert(tid, 0));
+        assert!(s.insert(tid, 1));
+        assert!(!s.insert(tid, 2));
+        assert!(!s.insert(tid, 3));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn cross_table_identity() {
+        let a = t(vec![5]);
+        let b = t(vec![5, 6]);
+        let mut s = RowSet::new();
+        let ta = s.add_table(&a);
+        s.insert(ta, 0);
+        assert!(s.contains(&b, 0));
+        assert!(!s.contains(&b, 1));
+    }
+
+    #[test]
+    fn nan_rows_dedup() {
+        let a = Table::from_arrays(vec![("v", Array::from_f64(vec![f64::NAN, f64::NAN]))])
+            .unwrap();
+        let mut s = RowSet::new();
+        let tid = s.add_table(&a);
+        assert!(s.insert(tid, 0));
+        assert!(!s.insert(tid, 1));
+    }
+
+    #[test]
+    fn entries_cover_all_distinct() {
+        let a = t(vec![1, 2, 3, 2]);
+        let mut s = RowSet::new();
+        let tid = s.add_table(&a);
+        for r in 0..4 {
+            s.insert(tid, r);
+        }
+        let mut rows: Vec<usize> = s.entries().map(|(_, r)| r).collect();
+        rows.sort();
+        assert_eq!(rows, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn growth_preserves_membership() {
+        // Start tiny so grow() triggers repeatedly.
+        let keys: Vec<i64> = (0..10_000).collect();
+        let a = t(keys);
+        let mut s = RowSet::with_capacity(1);
+        let tid = s.add_table(&a);
+        for r in 0..10_000 {
+            assert!(s.insert(tid, r), "row {r} should be new");
+        }
+        assert_eq!(s.len(), 10_000);
+        for r in (0..10_000).step_by(97) {
+            assert!(s.contains(&a, r));
+            assert!(!s.insert(tid, r));
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Select — row filter by a user predicate (§II-B1).
+//!
+//! "Pleasingly parallel": the distributed form is exactly the local form
+//! applied to each partition, no network needed.
+
+use crate::error::Result;
+use crate::table::{take::filter_table, RowRef, Table};
+
+/// Filter rows of `t` by `pred`, preserving order.
+pub fn select<F>(t: &Table, pred: F) -> Result<Table>
+where
+    F: Fn(RowRef<'_>) -> bool,
+{
+    let mask: Vec<bool> = (0..t.num_rows()).map(|i| pred(t.row(i))).collect();
+    filter_table(t, &mask)
+}
+
+/// Typed fast path: filter by a predicate over an int64 column's values.
+/// Null cells never match. This is the shape of the paper's Select
+/// benchmark workloads (predicates over the index column).
+pub fn select_i64<F>(t: &Table, col: usize, pred: F) -> Result<Table>
+where
+    F: Fn(i64) -> bool,
+{
+    let a = t
+        .column(col)
+        .as_i64()
+        .ok_or_else(|| crate::error::Error::schema("select_i64 on non-int64 column"))?;
+    let mask: Vec<bool> = (0..a.len())
+        .map(|i| a.is_valid(i) && pred(a.value(i)))
+        .collect();
+    filter_table(t, &mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t() -> Table {
+        Table::from_arrays(vec![
+            ("id", Array::from_i64_opts(vec![Some(1), Some(2), None, Some(4)])),
+            ("v", Array::from_f64(vec![0.1, 0.2, 0.3, 0.4])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn row_predicate() {
+        let out = select(&t(), |r| r.is_valid(0)).unwrap();
+        assert_eq!(out.num_rows(), 3);
+    }
+
+    #[test]
+    fn typed_predicate_skips_nulls() {
+        let out = select_i64(&t(), 0, |v| v >= 2).unwrap();
+        assert_eq!(out.num_rows(), 2);
+        assert_eq!(out.column(0).as_i64().unwrap().get(0), Some(2));
+        assert_eq!(out.column(0).as_i64().unwrap().get(1), Some(4));
+    }
+
+    #[test]
+    fn empty_result_keeps_schema() {
+        let out = select_i64(&t(), 0, |_| false).unwrap();
+        assert_eq!(out.num_rows(), 0);
+        assert_eq!(out.num_columns(), 2);
+    }
+
+    #[test]
+    fn wrong_type_errors() {
+        assert!(select_i64(&t(), 1, |_| true).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Sort — order a table by one column (internal building block for
+//! sort-join and the user-facing `Sort` local operator).
+//!
+//! Sorting is done on a permutation-index vector (pdqsort via
+//! `sort_unstable_by`) and materialized with one columnar `take` per
+//! column, so payload columns are moved once.
+
+use crate::error::{Error, Result};
+use crate::table::{take::take_table, Array, Table};
+use std::cmp::Ordering;
+
+/// Total-order comparison of two cells of one column. Nulls sort first;
+/// floats use IEEE total order (NaN last among valids).
+#[inline]
+pub fn cmp_cells(a: &Array, i: usize, j: usize) -> Ordering {
+    match (a.is_valid(i), a.is_valid(j)) {
+        (false, false) => Ordering::Equal,
+        (false, true) => Ordering::Less,
+        (true, false) => Ordering::Greater,
+        (true, true) => match a {
+            Array::Int64(p) => p.value(i).cmp(&p.value(j)),
+            Array::Float64(p) => p.value(i).total_cmp(&p.value(j)),
+            Array::Utf8(s) => s.value(i).cmp(s.value(j)),
+            Array::Bool(b) => b.value(i).cmp(&b.value(j)),
+        },
+    }
+}
+
+/// Compare cell `i` of column `a` against cell `j` of column `b`
+/// (same type required) — used by sort-join's cross-table merge scan.
+#[inline]
+pub fn cmp_cells_across(a: &Array, i: usize, b: &Array, j: usize) -> Ordering {
+    match (a.is_valid(i), b.is_valid(j)) {
+        (false, false) => Ordering::Equal,
+        (false, true) => Ordering::Less,
+        (true, false) => Ordering::Greater,
+        (true, true) => match (a, b) {
+            (Array::Int64(x), Array::Int64(y)) => x.value(i).cmp(&y.value(j)),
+            (Array::Float64(x), Array::Float64(y)) => x.value(i).total_cmp(&y.value(j)),
+            (Array::Utf8(x), Array::Utf8(y)) => x.value(i).cmp(y.value(j)),
+            (Array::Bool(x), Array::Bool(y)) => x.value(i).cmp(&y.value(j)),
+            _ => panic!("cmp_cells_across on mismatched types"),
+        },
+    }
+}
+
+/// Ascending permutation of row indices ordering `t` by column `col`.
+pub fn sort_indices(t: &Table, col: usize) -> Result<Vec<usize>> {
+    if col >= t.num_columns() {
+        return Err(Error::invalid(format!("sort column {col} out of range")));
+    }
+    let a = t.column(col).as_ref();
+    let mut idx: Vec<usize> = (0..t.num_rows()).collect();
+    // Typed fast path for the common int64 key column: sort by cached keys
+    // instead of re-dereferencing through the enum per comparison.
+    if let Array::Int64(p) = a {
+        if p.null_count() == 0 {
+            let vals = p.values();
+            idx.sort_unstable_by_key(|&i| vals[i]);
+            return Ok(idx);
+        }
+    }
+    idx.sort_unstable_by(|&i, &j| cmp_cells(a, i, j));
+    Ok(idx)
+}
+
+/// Materialized sort of a table by column `col`.
+pub fn sort(t: &Table, col: usize) -> Result<Table> {
+    let idx = sort_indices(t, col)?;
+    Ok(take_table(t, &idx))
+}
+
+/// Check ascending order of `col` (testing / merge preconditions).
+pub fn is_sorted(t: &Table, col: usize) -> bool {
+    let a = t.column(col).as_ref();
+    (1..t.num_rows()).all(|i| cmp_cells(a, i - 1, i) != Ordering::Greater)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    #[test]
+    fn sorts_ints_with_nulls_first() {
+        let t = Table::from_arrays(vec![(
+            "k",
+            Array::from_i64_opts(vec![Some(3), None, Some(-1), Some(2)]),
+        )])
+        .unwrap();
+        let s = sort(&t, 0).unwrap();
+        let k = s.column(0).as_i64().unwrap();
+        assert!(!k.is_valid(0));
+        assert_eq!(k.get(1), Some(-1));
+        assert_eq!(k.get(2), Some(2));
+        assert_eq!(k.get(3), Some(3));
+        assert!(is_sorted(&s, 0));
+    }
+
+    #[test]
+    fn fast_path_matches_generic() {
+        let vals: Vec<i64> = vec![5, 3, 3, 8, -2, 0, 5];
+        let t = Table::from_arrays(vec![("k", Array::from_i64(vals.clone()))]).unwrap();
+        let s = sort(&t, 0).unwrap();
+        let mut expect = vals;
+        expect.sort();
+        assert_eq!(s.column(0).as_i64().unwrap().values(), &expect[..]);
+    }
+
+    #[test]
+    fn sorts_floats_total_order() {
+        let t = Table::from_arrays(vec![(
+            "k",
+            Array::from_f64(vec![f64::NAN, 1.0, -1.0, 0.0]),
+        )])
+        .unwrap();
+        let s = sort(&t, 0).unwrap();
+        let k = s.column(0).as_f64().unwrap();
+        assert_eq!(k.value(0), -1.0);
+        assert_eq!(k.value(1), 0.0);
+        assert_eq!(k.value(2), 1.0);
+        assert!(k.value(3).is_nan());
+    }
+
+    #[test]
+    fn sorts_strings() {
+        let t = Table::from_arrays(vec![("k", Array::from_strs(&["b", "", "aa", "a"]))]).unwrap();
+        let s = sort(&t, 0).unwrap();
+        let k = s.column(0).as_utf8().unwrap();
+        assert_eq!(
+            (0..4).map(|i| k.value(i)).collect::<Vec<_>>(),
+            vec!["", "a", "aa", "b"]
+        );
+    }
+
+    #[test]
+    fn payload_moves_with_key() {
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![2, 1])),
+            ("v", Array::from_strs(&["two", "one"])),
+        ])
+        .unwrap();
+        let s = sort(&t, 0).unwrap();
+        assert_eq!(s.column(1).as_utf8().unwrap().value(0), "one");
+    }
+
+    #[test]
+    fn out_of_range_column() {
+        let t = Table::from_arrays(vec![("k", Array::from_i64(vec![1]))]).unwrap();
+        assert!(sort(&t, 5).is_err());
+    }
+
+    #[test]
+    fn empty_table_sorts() {
+        let t = Table::from_arrays(vec![("k", Array::from_i64(vec![]))]).unwrap();
+        assert_eq!(sort(&t, 0).unwrap().num_rows(), 0);
+    }
+}

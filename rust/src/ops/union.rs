@@ -1,0 +1,106 @@
+//! Union (distinct) — all records from both tables, duplicates removed
+//! (§II-B4). Row-based traversal: the paper notes this is the workload
+//! whose scaling suffers most from abandoning columnar access (Fig. 7b).
+
+use super::rowset::RowSet;
+use crate::error::{Error, Result};
+use crate::table::{builder::TableBuilder, Table};
+
+/// `a ∪ b` with duplicates removed. Output order: first occurrence in
+/// `a` then first occurrences of `b`-only rows.
+pub fn union(a: &Table, b: &Table) -> Result<Table> {
+    if !a.schema_equals(b) {
+        return Err(Error::schema("union of schema-incompatible tables"));
+    }
+    let mut set = RowSet::with_capacity(a.num_rows() + b.num_rows());
+    let ta = set.add_table(a);
+    let tb = set.add_table(b);
+    let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
+    for r in 0..a.num_rows() {
+        if set.insert(ta, r) {
+            out.push_row(a, r)?;
+        }
+    }
+    for r in 0..b.num_rows() {
+        if set.insert(tb, r) {
+            out.push_row(b, r)?;
+        }
+    }
+    out.finish()
+}
+
+/// Distinct rows of a single table (Union's degenerate form; used by the
+/// distributed set ops after shuffling).
+pub fn distinct(t: &Table) -> Result<Table> {
+    let mut set = RowSet::with_capacity(t.num_rows());
+    let tid = set.add_table(t);
+    let mut out = TableBuilder::with_capacity(t.schema().clone(), t.num_rows());
+    for r in 0..t.num_rows() {
+        if set.insert(tid, r) {
+            out.push_row(t, r)?;
+        }
+    }
+    out.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t(keys: Vec<i64>, vs: Vec<f64>) -> Table {
+        Table::from_arrays(vec![
+            ("k", Array::from_i64(keys)),
+            ("v", Array::from_f64(vs)),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn union_dedups_across_and_within() {
+        let a = t(vec![1, 1, 2], vec![0.0, 0.0, 0.0]);
+        let b = t(vec![2, 3], vec![0.0, 0.0]);
+        let u = union(&a, &b).unwrap();
+        assert_eq!(u.num_rows(), 3);
+        let keys = u.column(0).as_i64().unwrap().values().to_vec();
+        assert_eq!(keys, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn rows_differing_in_any_column_are_distinct() {
+        let a = t(vec![1], vec![1.0]);
+        let b = t(vec![1], vec![2.0]);
+        let u = union(&a, &b).unwrap();
+        assert_eq!(u.num_rows(), 2);
+    }
+
+    #[test]
+    fn union_checks_schema() {
+        let a = t(vec![1], vec![1.0]);
+        let b = Table::from_arrays(vec![("k", Array::from_i64(vec![1]))]).unwrap();
+        assert!(union(&a, &b).is_err());
+    }
+
+    #[test]
+    fn union_with_empty_is_distinct() {
+        let a = t(vec![1, 1, 2], vec![0.0, 0.0, 1.0]);
+        let e = t(vec![], vec![]);
+        let u = union(&a, &e).unwrap();
+        assert_eq!(u.num_rows(), 2); // (1,0.0) dedups, (2,1.0) distinct
+    }
+
+    #[test]
+    fn distinct_matches_union_self() {
+        let a = t(vec![5, 5, 6, 7, 7, 7], vec![0.0; 6]);
+        let d = distinct(&a).unwrap();
+        let u = union(&a, &a).unwrap();
+        assert!(d.data_equals(&u));
+    }
+
+    #[test]
+    fn null_rows_dedup() {
+        let a = Table::from_arrays(vec![("k", Array::from_i64_opts(vec![None, None]))]).unwrap();
+        let d = distinct(&a).unwrap();
+        assert_eq!(d.num_rows(), 1);
+    }
+}

@@ -1,0 +1,307 @@
+//! AOT kernel runtime — loads the JAX/Pallas-lowered HLO artifacts and
+//! executes them via the PJRT CPU client (`xla` crate).
+//!
+//! Build-time python (`python/compile/aot.py`) lowers the L2 model —
+//! whose hot loop is the L1 Pallas hash kernel — to
+//! `artifacts/hash_partition_<BLOCK>.hlo.txt` for a ladder of static
+//! block sizes. This module compiles each artifact **once** at startup
+//! and serves `hash_partition_ids` calls from the shuffle hot path.
+//! Python never runs at request time.
+//!
+//! PJRT wrapper types are `!Send`, so a dedicated service thread owns
+//! the client/executables; workers talk to it through channels. The
+//! [`KernelRuntime`] handle is `Send + Sync` and cheap to share.
+//!
+//! The computation is bit-identical to [`crate::ops::hash::hash_i64`]
+//! (`fmix32(fmix32(hi) ^ lo) % nparts`) — verified by golden-vector
+//! tests — so kernel and native routing agree and either can serve any
+//! shuffle.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+/// Runtime execution statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub kernel_calls: u64,
+    pub rows_hashed: u64,
+    pub kernel_secs: f64,
+}
+
+enum Request {
+    HashPartition {
+        keys: Vec<i64>,
+        nparts: u32,
+        resp: Sender<Result<Vec<u32>>>,
+    },
+    Stats {
+        resp: Sender<RuntimeStats>,
+    },
+}
+
+/// Shareable handle to the AOT kernel service.
+pub struct KernelRuntime {
+    tx: Mutex<Sender<Request>>,
+    block_sizes: Vec<usize>,
+}
+
+impl KernelRuntime {
+    /// Default artifact location: `$RYLON_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var_os("RYLON_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Discover `hash_partition_<N>.hlo.txt` artifacts under `dir`.
+    pub fn discover_artifacts(dir: &Path) -> Vec<(usize, PathBuf)> {
+        let mut found = Vec::new();
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return found;
+        };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name
+                .strip_prefix("hash_partition_")
+                .and_then(|r| r.strip_suffix(".hlo.txt"))
+            {
+                if let Ok(block) = rest.parse::<usize>() {
+                    found.push((block, e.path()));
+                }
+            }
+        }
+        found.sort();
+        found
+    }
+
+    /// Load artifacts from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::artifacts_dir())
+    }
+
+    /// Load and compile all artifacts under `dir`, spawning the service
+    /// thread. Errors if none are found (callers then use the native
+    /// fallback).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let artifacts = Self::discover_artifacts(dir);
+        if artifacts.is_empty() {
+            return Err(Error::runtime(format!(
+                "no hash_partition_*.hlo.txt artifacts in {} (run `make artifacts`)",
+                dir.display()
+            )));
+        }
+        let block_sizes: Vec<usize> = artifacts.iter().map(|(b, _)| *b).collect();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("rylon-pjrt".to_string())
+            .spawn(move || service_thread(artifacts, rx, ready_tx))
+            .map_err(|e| Error::runtime(format!("spawn pjrt thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::runtime("pjrt service died during init"))??;
+        Ok(KernelRuntime { tx: Mutex::new(tx), block_sizes })
+    }
+
+    /// Block sizes available (sorted ascending).
+    pub fn block_sizes(&self) -> &[usize] {
+        &self.block_sizes
+    }
+
+    fn call(&self, req: Request) -> Result<()> {
+        let tx = self.tx.lock().map_err(|_| Error::runtime("runtime poisoned"))?;
+        tx.send(req).map_err(|_| Error::runtime("pjrt service gone"))
+    }
+
+    /// Partition ids for an int64 key column: `hash(key) % nparts`,
+    /// computed by the AOT artifact.
+    pub fn hash_partition_ids(&self, keys: &[i64], nparts: u32) -> Result<Vec<u32>> {
+        if nparts == 0 {
+            return Err(Error::invalid("nparts == 0"));
+        }
+        let (resp_tx, resp_rx) = channel();
+        self.call(Request::HashPartition {
+            keys: keys.to_vec(),
+            nparts,
+            resp: resp_tx,
+        })?;
+        resp_rx
+            .recv()
+            .map_err(|_| Error::runtime("pjrt service dropped request"))?
+    }
+
+    /// Execution statistics so far.
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (resp_tx, resp_rx) = channel();
+        self.call(Request::Stats { resp: resp_tx })?;
+        resp_rx.recv().map_err(|_| Error::runtime("pjrt service gone"))
+    }
+}
+
+/// The service thread: owns the PJRT client and compiled executables.
+fn service_thread(
+    artifacts: Vec<(usize, PathBuf)>,
+    rx: std::sync::mpsc::Receiver<Request>,
+    ready: Sender<Result<()>>,
+) {
+    let init = (|| -> Result<(xla::PjRtClient, BTreeMap<usize, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("pjrt cpu client: {e}")))?;
+        let mut exes = BTreeMap::new();
+        for (block, path) in &artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))?;
+            exes.insert(*block, exe);
+        }
+        Ok((client, exes))
+    })();
+
+    let (client, exes) = match init {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _keepalive = client;
+
+    let mut stats = RuntimeStats::default();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::HashPartition { keys, nparts, resp } => {
+                let t0 = std::time::Instant::now();
+                let result = run_hash_partition(&exes, &keys, nparts);
+                stats.kernel_calls += 1;
+                stats.rows_hashed += keys.len() as u64;
+                stats.kernel_secs += t0.elapsed().as_secs_f64();
+                let _ = resp.send(result);
+            }
+            Request::Stats { resp } => {
+                let _ = resp.send(stats);
+            }
+        }
+    }
+}
+
+/// Execute the artifact over `keys`, chunking/padding to block sizes.
+fn run_hash_partition(
+    exes: &BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    keys: &[i64],
+    nparts: u32,
+) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(keys.len());
+    let largest = *exes.keys().next_back().expect("nonempty");
+    let mut offset = 0usize;
+    while offset < keys.len() {
+        let remaining = keys.len() - offset;
+        // Smallest block that covers the remainder, else the largest.
+        let block = exes
+            .keys()
+            .copied()
+            .find(|&b| b >= remaining)
+            .unwrap_or(largest);
+        let take = remaining.min(block);
+        let chunk = &keys[offset..offset + take];
+        run_block(&exes[&block], block, chunk, nparts, &mut out)?;
+        offset += take;
+    }
+    Ok(out)
+}
+
+fn run_block(
+    exe: &xla::PjRtLoadedExecutable,
+    block: usize,
+    chunk: &[i64],
+    nparts: u32,
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    // Split keys into u32 halves (the artifact's input layout) + pad.
+    let mut lo = Vec::with_capacity(block);
+    let mut hi = Vec::with_capacity(block);
+    for &k in chunk {
+        lo.push(k as u32);
+        hi.push((k >> 32) as u32);
+    }
+    lo.resize(block, 0);
+    hi.resize(block, 0);
+    let lo_lit = xla::Literal::vec1(&lo);
+    let hi_lit = xla::Literal::vec1(&hi);
+    let np_lit = xla::Literal::scalar(nparts);
+    let result = exe
+        .execute::<xla::Literal>(&[lo_lit, hi_lit, np_lit])
+        .map_err(|e| Error::runtime(format!("kernel execute: {e}")))?;
+    let literal = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::runtime(format!("kernel readback: {e}")))?;
+    let tuple = literal
+        .to_tuple1()
+        .map_err(|e| Error::runtime(format!("kernel output shape: {e}")))?;
+    let ids: Vec<u32> = tuple
+        .to_vec()
+        .map_err(|e| Error::runtime(format!("kernel output dtype: {e}")))?;
+    out.extend_from_slice(&ids[..chunk.len()]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::hash::hash_i64;
+
+    #[test]
+    fn discover_parses_block_sizes() {
+        let dir = std::env::temp_dir().join(format!("rylon_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("hash_partition_1024.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("hash_partition_64.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("other.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("hash_partition_bad.hlo.txt"), "x").unwrap();
+        let found = KernelRuntime::discover_artifacts(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        let blocks: Vec<usize> = found.iter().map(|(b, _)| *b).collect();
+        assert_eq!(blocks, vec![64, 1024]);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        let r = KernelRuntime::load(Path::new("/no/such/artifacts_dir"));
+        assert!(r.is_err());
+    }
+
+    /// Full PJRT round-trip — only runs when artifacts exist (CI runs
+    /// `make artifacts` first; unit CI without python skips).
+    #[test]
+    fn kernel_matches_native_hash() {
+        let dir = KernelRuntime::artifacts_dir();
+        if KernelRuntime::discover_artifacts(&dir).is_empty() {
+            eprintln!("skipping: no artifacts in {}", dir.display());
+            return;
+        }
+        let rt = KernelRuntime::load(&dir).unwrap();
+        let keys: Vec<i64> = (0..10_000u64)
+            .map(|i| (i.wrapping_mul(0x9e3779b97f4a7c15)) as i64)
+            .collect();
+        for nparts in [1u32, 4, 7, 32, 160] {
+            let got = rt.hash_partition_ids(&keys, nparts).unwrap();
+            for (k, id) in keys.iter().zip(&got) {
+                assert_eq!(hash_i64(*k) % nparts, *id, "key {k} nparts {nparts}");
+            }
+        }
+        let stats = rt.stats().unwrap();
+        assert!(stats.kernel_calls >= 5);
+        assert_eq!(stats.rows_hashed, 50_000);
+    }
+}

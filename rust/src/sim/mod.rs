@@ -1,0 +1,80 @@
+//! BSP cost simulator — the scaling testbed.
+//!
+//! The paper's cluster has 160 cores; this machine has one. Real-thread
+//! runs cannot show scaling here, so the bench harness uses *virtual
+//! time*: every worker's local work is executed **sequentially and
+//! timed for real** (it is the same code the threaded runtime runs),
+//! communication is charged with the calibrated α/β
+//! [`NetworkProfile`] model, and the BSP clock combines them:
+//!
+//! ```text
+//! T = Σ_supersteps  max_w( compute_w ) + max_w( comm_w )
+//! ```
+//!
+//! which is exactly how a bulk-synchronous machine finishes a superstep
+//! (§II: "Distributed operators are implemented based on the BSP
+//! approach"). The same virtual clock is applied to the baseline
+//! engines, with their structural overheads (central scheduler dispatch,
+//! row serialization, per-task costs) added where their architectures
+//! pay them — so Figs. 7–9 and Table II compare like with like.
+
+pub mod baseline_sim;
+pub mod rylon_sim;
+
+pub use baseline_sim::{sim_rowstore_join, sim_rowstore_union, sim_taskgraph_join, BaselineSimConfig};
+pub use rylon_sim::{sim_rylon_join, sim_rylon_sort_pipeline, sim_rylon_union};
+
+/// Virtual-time result of one simulated distributed operation.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// BSP virtual wall-clock seconds.
+    pub virtual_secs: f64,
+    /// (phase name, seconds) breakdown, in execution order.
+    pub phases: Vec<(String, f64)>,
+    /// Total output rows across all workers.
+    pub rows_out: usize,
+    /// Total bytes that crossed the (modeled) wire.
+    pub comm_bytes: u64,
+}
+
+impl SimResult {
+    pub fn push_phase(&mut self, name: impl Into<String>, secs: f64) {
+        self.virtual_secs += secs;
+        self.phases.push((name.into(), secs));
+    }
+
+    pub fn phase_secs(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .sum()
+    }
+}
+
+/// max of a sequence of f64 (phase combiner).
+pub(crate) fn fmax(iter: impl IntoIterator<Item = f64>) -> f64 {
+    iter.into_iter().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_result_accumulates() {
+        let mut r = SimResult::default();
+        r.push_phase("a", 1.0);
+        r.push_phase("b", 2.0);
+        r.push_phase("a", 0.5);
+        assert_eq!(r.virtual_secs, 3.5);
+        assert_eq!(r.phase_secs("a"), 1.5);
+        assert_eq!(r.phases.len(), 3);
+    }
+
+    #[test]
+    fn fmax_works() {
+        assert_eq!(fmax([1.0, 3.0, 2.0]), 3.0);
+        assert_eq!(fmax(std::iter::empty()), 0.0);
+    }
+}

@@ -1,0 +1,354 @@
+//! Virtual-time simulation of Rylon's own distributed operators.
+//!
+//! Runs the *identical* local-operator code the threaded runtime runs
+//! (hash-partition, serialize, deserialize, local join/union), times
+//! each worker's share sequentially, and assembles the BSP clock with
+//! modeled AllToAll cost.
+
+use super::{fmax, SimResult};
+use crate::error::Result;
+use crate::net::model::NetworkModel;
+use crate::net::serialize::{deserialize_table, serialize_table};
+use crate::net::NetworkProfile;
+use crate::ops::join::{join, JoinConfig};
+use crate::ops::partition::{partition_by_ids, partition_ids_by_key, partition_ids_by_row};
+use crate::ops::sort::sort;
+use crate::ops::union::union;
+use crate::runtime::KernelRuntime;
+use crate::table::{take::concat_tables, Array, Table};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One worker's shuffle contribution: partition timing + routed parts.
+struct ShuffledSide {
+    /// t_partition per worker.
+    part_secs: Vec<f64>,
+    /// t_serialize per worker (sender side).
+    ser_secs: Vec<f64>,
+    /// parts[src][dst] = wire bytes src routes to dst (None for self).
+    wire: Vec<Vec<Option<Vec<u8>>>>,
+    /// self-kept partition per worker.
+    own: Vec<Table>,
+}
+
+/// Hash-partition every worker's chunk and serialize the remote parts,
+/// timing per worker. `key`: Some(col) for key shuffles, None for
+/// whole-row shuffles.
+fn shuffle_side(
+    chunks: &[Table],
+    key: Option<usize>,
+    runtime: Option<&Arc<KernelRuntime>>,
+) -> Result<ShuffledSide> {
+    let world = chunks.len();
+    let mut part_secs = Vec::with_capacity(world);
+    let mut ser_secs = Vec::with_capacity(world);
+    let mut wire = Vec::with_capacity(world);
+    let mut own = Vec::with_capacity(world);
+    for (w, chunk) in chunks.iter().enumerate() {
+        let t0 = Instant::now();
+        let ids = match key {
+            Some(col) => match (runtime, chunk.column(col).as_ref()) {
+                (Some(rt), Array::Int64(keys)) if keys.null_count() == 0 => {
+                    rt.hash_partition_ids(keys.values(), world as u32)?
+                }
+                _ => partition_ids_by_key(chunk, col, world)?,
+            },
+            None => partition_ids_by_row(chunk, world)?,
+        };
+        let parts = partition_by_ids(chunk, &ids, world)?;
+        part_secs.push(t0.elapsed().as_secs_f64());
+
+        let t1 = Instant::now();
+        let mut row = Vec::with_capacity(world);
+        let mut own_part = None;
+        for (dst, p) in parts.into_iter().enumerate() {
+            if dst == w {
+                own_part = Some(p);
+                row.push(None);
+            } else {
+                row.push(Some(serialize_table(&p)));
+            }
+        }
+        ser_secs.push(t1.elapsed().as_secs_f64());
+        wire.push(row);
+        own.push(own_part.expect("own partition"));
+    }
+    Ok(ShuffledSide { part_secs, ser_secs, wire, own })
+}
+
+/// Deliver one shuffled side: per worker, deserialize + concat received
+/// parts. Returns per-worker (recv table, deser seconds, recv bytes).
+fn deliver(side: ShuffledSide) -> Result<(Vec<Table>, Vec<f64>, Vec<u64>)> {
+    let world = side.own.len();
+    let mut tables = Vec::with_capacity(world);
+    let mut des_secs = Vec::with_capacity(world);
+    let mut bytes = Vec::with_capacity(world);
+    for w in 0..world {
+        let t0 = Instant::now();
+        let mut received: Vec<Table> = Vec::with_capacity(world);
+        let mut b = 0u64;
+        for src in 0..world {
+            if src == w {
+                received.push(side.own[w].clone());
+            } else {
+                let buf = side.wire[src][w].as_ref().expect("remote part");
+                b += buf.len() as u64;
+                received.push(deserialize_table(buf)?);
+            }
+        }
+        let refs: Vec<&Table> = received.iter().collect();
+        let t = concat_tables(&refs)?;
+        des_secs.push(t0.elapsed().as_secs_f64());
+        tables.push(t);
+        bytes.push(b);
+    }
+    Ok((tables, des_secs, bytes))
+}
+
+/// Modeled AllToAll wire seconds per worker: each worker receives W-1
+/// messages sequentially (ring schedule), paying α + bytes·β each.
+fn comm_secs_per_worker(side_bytes: &[u64], world: usize, profile: NetworkProfile) -> Vec<f64> {
+    let model = NetworkModel::new(profile, false);
+    side_bytes
+        .iter()
+        .map(|&b| {
+            if world <= 1 {
+                0.0
+            } else {
+                // α per message (W-1 messages) + β over the actual bytes.
+                let (a, beta) = profile.alpha_beta();
+                a * (world - 1) as f64 + b as f64 * beta
+            }
+        })
+        .map(|s| {
+            let _ = &model;
+            s
+        })
+        .collect()
+}
+
+/// Simulated distributed join (Fig. 3's pipeline under the BSP clock).
+pub fn sim_rylon_join(
+    lchunks: &[Table],
+    rchunks: &[Table],
+    cfg: &JoinConfig,
+    profile: NetworkProfile,
+    runtime: Option<&Arc<KernelRuntime>>,
+) -> Result<SimResult> {
+    let world = lchunks.len();
+    assert_eq!(world, rchunks.len());
+    let mut out = SimResult::default();
+    if world == 1 {
+        let t0 = Instant::now();
+        let j = join(&lchunks[0], &rchunks[0], cfg)?;
+        out.push_phase("local", t0.elapsed().as_secs_f64());
+        out.rows_out = j.num_rows();
+        return Ok(out);
+    }
+    let l = shuffle_side(lchunks, Some(cfg.left_col), runtime)?;
+    let r = shuffle_side(rchunks, Some(cfg.right_col), runtime)?;
+    out.push_phase(
+        "partition",
+        fmax(l.part_secs.iter().zip(&r.part_secs).map(|(a, b)| a + b)),
+    );
+    let ser = fmax(l.ser_secs.iter().zip(&r.ser_secs).map(|(a, b)| a + b));
+    let (lt, ldes, lbytes) = deliver(l)?;
+    let (rt, rdes, rbytes) = deliver(r)?;
+    let wire_bytes: Vec<u64> = lbytes.iter().zip(&rbytes).map(|(a, b)| a + b).collect();
+    out.comm_bytes = wire_bytes.iter().sum();
+    let wire = comm_secs_per_worker(&wire_bytes, world, profile);
+    let des = ldes.iter().zip(&rdes).map(|(a, b)| a + b);
+    // Comm superstep: serialize + wire + deserialize (per worker), max'd.
+    out.push_phase(
+        "comm",
+        ser + fmax(wire.iter().zip(des).map(|(w, d)| w + d)),
+    );
+    let t0 = Instant::now();
+    let mut local_secs = Vec::with_capacity(world);
+    let mut rows = 0usize;
+    for w in 0..world {
+        let t1 = Instant::now();
+        let j = join(&lt[w], &rt[w], cfg)?;
+        local_secs.push(t1.elapsed().as_secs_f64());
+        rows += j.num_rows();
+    }
+    let _ = t0;
+    out.push_phase("local", fmax(local_secs));
+    out.rows_out = rows;
+    Ok(out)
+}
+
+/// Simulated distributed union-distinct (whole-row shuffle).
+pub fn sim_rylon_union(
+    achunks: &[Table],
+    bchunks: &[Table],
+    profile: NetworkProfile,
+) -> Result<SimResult> {
+    let world = achunks.len();
+    assert_eq!(world, bchunks.len());
+    let mut out = SimResult::default();
+    if world == 1 {
+        let t0 = Instant::now();
+        let u = union(&achunks[0], &bchunks[0])?;
+        out.push_phase("local", t0.elapsed().as_secs_f64());
+        out.rows_out = u.num_rows();
+        return Ok(out);
+    }
+    let a = shuffle_side(achunks, None, None)?;
+    let b = shuffle_side(bchunks, None, None)?;
+    out.push_phase(
+        "partition",
+        fmax(a.part_secs.iter().zip(&b.part_secs).map(|(x, y)| x + y)),
+    );
+    let ser = fmax(a.ser_secs.iter().zip(&b.ser_secs).map(|(x, y)| x + y));
+    let (at, ades, abytes) = deliver(a)?;
+    let (bt, bdes, bbytes) = deliver(b)?;
+    let wire_bytes: Vec<u64> = abytes.iter().zip(&bbytes).map(|(x, y)| x + y).collect();
+    out.comm_bytes = wire_bytes.iter().sum();
+    let wire = comm_secs_per_worker(&wire_bytes, world, profile);
+    let des = ades.iter().zip(&bdes).map(|(x, y)| x + y);
+    out.push_phase("comm", ser + fmax(wire.iter().zip(des).map(|(w, d)| w + d)));
+    let mut local_secs = Vec::with_capacity(world);
+    let mut rows = 0usize;
+    for w in 0..world {
+        let t1 = Instant::now();
+        let u = union(&at[w], &bt[w])?;
+        local_secs.push(t1.elapsed().as_secs_f64());
+        rows += u.num_rows();
+    }
+    out.push_phase("local", fmax(local_secs));
+    out.rows_out = rows;
+    Ok(out)
+}
+
+/// Simulated distributed sort pipeline (ablation bench): sample +
+/// range-partition + shuffle + local sort under the BSP clock.
+pub fn sim_rylon_sort_pipeline(
+    chunks: &[Table],
+    col: usize,
+    profile: NetworkProfile,
+) -> Result<SimResult> {
+    let world = chunks.len();
+    let mut out = SimResult::default();
+    if world == 1 {
+        let t0 = Instant::now();
+        let s = sort(&chunks[0], col)?;
+        out.push_phase("local", t0.elapsed().as_secs_f64());
+        out.rows_out = s.num_rows();
+        return Ok(out);
+    }
+    // Splitters from a global sample (allgather of ~64 keys/worker —
+    // negligible bytes; charge α·(W-1)).
+    let mut samples: Vec<i64> = Vec::new();
+    let mut sample_secs: Vec<f64> = Vec::with_capacity(world);
+    for chunk in chunks {
+        let t0 = Instant::now();
+        let keys = chunk
+            .column(col)
+            .as_i64()
+            .ok_or_else(|| crate::error::Error::schema("sort sim needs int64 keys"))?;
+        let step = (chunk.num_rows() / 64).max(1);
+        samples.extend(keys.values().iter().step_by(step));
+        sample_secs.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_unstable();
+    let splitters: Vec<i64> = (1..world)
+        .map(|w| samples[w * samples.len() / world])
+        .collect();
+    let (alpha, _) = profile.alpha_beta();
+    out.push_phase("sample", fmax(sample_secs) + alpha * (world - 1) as f64);
+
+    // Range partition + shuffle + local sort.
+    let mut part_secs = Vec::with_capacity(world);
+    let mut routed: Vec<Vec<Table>> = (0..world).map(|_| Vec::new()).collect();
+    let mut wire_bytes = vec![0u64; world];
+    for chunk in chunks {
+        let t0 = Instant::now();
+        let keys = chunk.column(col).as_i64().unwrap();
+        let ids: Vec<u32> = keys
+            .values()
+            .iter()
+            .map(|k| splitters.partition_point(|s| s <= k) as u32)
+            .collect();
+        let parts = partition_by_ids(chunk, &ids, world)?;
+        part_secs.push(t0.elapsed().as_secs_f64());
+        for (dst, p) in parts.into_iter().enumerate() {
+            wire_bytes[dst] += p.byte_size() as u64;
+            routed[dst].push(p);
+        }
+    }
+    out.push_phase("partition", fmax(part_secs));
+    let wire = comm_secs_per_worker(&wire_bytes, world, profile);
+    out.comm_bytes = wire_bytes.iter().sum();
+    out.push_phase("comm", fmax(wire));
+    let mut local_secs = Vec::with_capacity(world);
+    let mut rows = 0usize;
+    for parts in &routed {
+        let t0 = Instant::now();
+        let refs: Vec<&Table> = parts.iter().collect();
+        let merged = concat_tables(&refs)?;
+        let s = sort(&merged, col)?;
+        local_secs.push(t0.elapsed().as_secs_f64());
+        rows += s.num_rows();
+    }
+    out.push_phase("local", fmax(local_secs));
+    out.rows_out = rows;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::generator::worker_partition;
+    use crate::ops::join::{nested_loop_join, JoinAlgorithm};
+
+    fn chunks(total: usize, world: usize, seed: u64) -> Vec<Table> {
+        (0..world)
+            .map(|w| worker_partition(total, world, w, 0.5, seed))
+            .collect()
+    }
+
+    #[test]
+    fn sim_join_rows_match_oracle() {
+        for world in [1, 3] {
+            let l = chunks(300, world, 1);
+            let r = chunks(300, world, 2);
+            let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash);
+            let sim = sim_rylon_join(&l, &r, &cfg, NetworkProfile::Loopback, None).unwrap();
+            let gl = concat_tables(&l.iter().collect::<Vec<_>>()).unwrap();
+            let gr = concat_tables(&r.iter().collect::<Vec<_>>()).unwrap();
+            let want = nested_loop_join(&gl, &gr, &cfg).unwrap();
+            assert_eq!(sim.rows_out, want.num_rows(), "world={world}");
+        }
+    }
+
+    #[test]
+    fn sim_union_rows_match_local() {
+        let a = chunks(200, 4, 5);
+        let b = chunks(200, 4, 6);
+        let sim = sim_rylon_union(&a, &b, NetworkProfile::Loopback).unwrap();
+        let ga = concat_tables(&a.iter().collect::<Vec<_>>()).unwrap();
+        let gb = concat_tables(&b.iter().collect::<Vec<_>>()).unwrap();
+        let want = union(&ga, &gb).unwrap();
+        assert_eq!(sim.rows_out, want.num_rows());
+    }
+
+    #[test]
+    fn comm_phase_scales_with_profile() {
+        let l = chunks(2000, 4, 7);
+        let r = chunks(2000, 4, 8);
+        let cfg = JoinConfig::inner(0, 0);
+        let fast = sim_rylon_join(&l, &r, &cfg, NetworkProfile::Infiniband40G, None).unwrap();
+        let slow = sim_rylon_join(&l, &r, &cfg, NetworkProfile::Tcp1G, None).unwrap();
+        assert!(slow.phase_secs("comm") > fast.phase_secs("comm"));
+        assert!(fast.comm_bytes > 0);
+    }
+
+    #[test]
+    fn sim_sort_counts_rows() {
+        let c = chunks(1000, 4, 9);
+        let sim = sim_rylon_sort_pipeline(&c, 0, NetworkProfile::Loopback).unwrap();
+        assert_eq!(sim.rows_out, 1000);
+        assert!(sim.phase_secs("local") > 0.0);
+    }
+}

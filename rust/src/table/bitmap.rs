@@ -1,0 +1,205 @@
+//! Validity bitmap: one bit per row, 1 = valid (non-null).
+
+/// A packed validity bitmap. `None` at the array level means "all valid";
+/// this type is only materialized when at least one null exists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// All-valid bitmap of `len` bits.
+    pub fn new_valid(len: usize) -> Self {
+        let words = len.div_ceil(64);
+        let mut bits = vec![u64::MAX; words];
+        Self::mask_tail(&mut bits, len);
+        Bitmap { bits, len }
+    }
+
+    /// All-null bitmap of `len` bits.
+    pub fn new_null(len: usize) -> Self {
+        Bitmap { bits: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Build from a bool slice (true = valid).
+    pub fn from_bools(v: &[bool]) -> Self {
+        let mut b = Bitmap::new_null(v.len());
+        for (i, &x) in v.iter().enumerate() {
+            if x {
+                b.set(i, true);
+            }
+        }
+        b
+    }
+
+    fn mask_tail(bits: &mut [u64], len: usize) {
+        let rem = len % 64;
+        if rem != 0 {
+            if let Some(last) = bits.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, valid: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if valid {
+            self.bits[w] |= 1u64 << b;
+        } else {
+            self.bits[w] &= !(1u64 << b);
+        }
+    }
+
+    /// Number of valid (set) bits.
+    pub fn count_valid(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn count_null(&self) -> usize {
+        self.len - self.count_valid()
+    }
+
+    /// Append one bit, growing by a word when needed.
+    pub fn push(&mut self, valid: bool) {
+        if self.len % 64 == 0 {
+            self.bits.push(0);
+        }
+        self.len += 1;
+        self.set(self.len - 1, valid);
+    }
+
+    /// Gather bits at `indices` into a new bitmap.
+    pub fn take(&self, indices: &[usize]) -> Bitmap {
+        let mut out = Bitmap::new_null(indices.len());
+        for (dst, &src) in indices.iter().enumerate() {
+            if self.get(src) {
+                out.set(dst, true);
+            }
+        }
+        out
+    }
+
+    /// Concatenate two bitmaps.
+    pub fn concat(&self, other: &Bitmap) -> Bitmap {
+        let mut out = Bitmap::new_null(self.len + other.len);
+        for i in 0..self.len {
+            if self.get(i) {
+                out.set(i, true);
+            }
+        }
+        for i in 0..other.len {
+            if other.get(i) {
+                out.set(self.len + i, true);
+            }
+        }
+        out
+    }
+
+    /// Raw words (tail bits beyond `len` are zero).
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Rebuild from raw words + length (used by the wire format).
+    pub fn from_words(bits: Vec<u64>, len: usize) -> Self {
+        let mut bits = bits;
+        bits.resize(len.div_ceil(64), 0);
+        Self::mask_tail(&mut bits, len);
+        Bitmap { bits, len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_valid_all_set() {
+        let b = Bitmap::new_valid(70);
+        assert_eq!(b.count_valid(), 70);
+        assert!(b.get(0) && b.get(69));
+    }
+
+    #[test]
+    fn new_null_none_set() {
+        let b = Bitmap::new_null(70);
+        assert_eq!(b.count_valid(), 0);
+        assert_eq!(b.count_null(), 70);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = Bitmap::new_null(130);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(63) && !b.get(128));
+        assert_eq!(b.count_valid(), 3);
+        b.set(64, false);
+        assert_eq!(b.count_valid(), 2);
+    }
+
+    #[test]
+    fn push_grows() {
+        let mut b = Bitmap::new_null(0);
+        for i in 0..100 {
+            b.push(i % 3 == 0);
+        }
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.count_valid(), 34);
+    }
+
+    #[test]
+    fn take_gathers() {
+        let b = Bitmap::from_bools(&[true, false, true, false, true]);
+        let t = b.take(&[4, 1, 0]);
+        assert!(t.get(0) && !t.get(1) && t.get(2));
+    }
+
+    #[test]
+    fn concat_preserves() {
+        let a = Bitmap::from_bools(&[true, false]);
+        let b = Bitmap::from_bools(&[false, true, true]);
+        let c = a.concat(&b);
+        assert_eq!(c.len(), 5);
+        assert_eq!(
+            (0..5).map(|i| c.get(i)).collect::<Vec<_>>(),
+            vec![true, false, false, true, true]
+        );
+    }
+
+    #[test]
+    fn tail_masking_counts() {
+        // new_valid must not set bits beyond len in the last word.
+        let b = Bitmap::new_valid(65);
+        assert_eq!(b.count_valid(), 65);
+        let w = b.words();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[1], 1);
+    }
+
+    #[test]
+    fn from_words_roundtrip() {
+        let b = Bitmap::from_bools(&[true, true, false, true]);
+        let r = Bitmap::from_words(b.words().to_vec(), b.len());
+        assert_eq!(b, r);
+    }
+}

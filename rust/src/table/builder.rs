@@ -1,0 +1,320 @@
+//! Incremental builders for arrays and tables (used by CSV reader, joins,
+//! and operators that emit rows).
+
+use super::bitmap::Bitmap;
+use super::column::{Array, BoolArray, DataType, Float64Array, Int64Array, Utf8Array};
+use super::schema::Schema;
+use super::Table;
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// A growable, dynamically-typed array builder.
+#[derive(Debug)]
+pub enum ArrayBuilder {
+    Int64 { values: Vec<i64>, validity: Option<Bitmap>, len: usize },
+    Float64 { values: Vec<f64>, validity: Option<Bitmap>, len: usize },
+    Utf8 { offsets: Vec<u32>, data: Vec<u8>, validity: Option<Bitmap>, len: usize },
+    Bool { values: Vec<bool>, validity: Option<Bitmap>, len: usize },
+}
+
+impl ArrayBuilder {
+    pub fn new(dt: DataType) -> Self {
+        Self::with_capacity(dt, 0)
+    }
+
+    pub fn with_capacity(dt: DataType, cap: usize) -> Self {
+        match dt {
+            DataType::Int64 => {
+                ArrayBuilder::Int64 { values: Vec::with_capacity(cap), validity: None, len: 0 }
+            }
+            DataType::Float64 => {
+                ArrayBuilder::Float64 { values: Vec::with_capacity(cap), validity: None, len: 0 }
+            }
+            DataType::Utf8 => ArrayBuilder::Utf8 {
+                offsets: {
+                    let mut v = Vec::with_capacity(cap + 1);
+                    v.push(0);
+                    v
+                },
+                data: Vec::new(),
+                validity: None,
+                len: 0,
+            },
+            DataType::Bool => {
+                ArrayBuilder::Bool { values: Vec::with_capacity(cap), validity: None, len: 0 }
+            }
+        }
+    }
+
+    pub fn data_type(&self) -> DataType {
+        match self {
+            ArrayBuilder::Int64 { .. } => DataType::Int64,
+            ArrayBuilder::Float64 { .. } => DataType::Float64,
+            ArrayBuilder::Utf8 { .. } => DataType::Utf8,
+            ArrayBuilder::Bool { .. } => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ArrayBuilder::Int64 { len, .. }
+            | ArrayBuilder::Float64 { len, .. }
+            | ArrayBuilder::Utf8 { len, .. }
+            | ArrayBuilder::Bool { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn materialize_validity(validity: &mut Option<Bitmap>, len: usize) -> &mut Bitmap {
+        validity.get_or_insert_with(|| Bitmap::new_valid(len))
+    }
+
+    pub fn push_i64(&mut self, v: i64) -> Result<()> {
+        match self {
+            ArrayBuilder::Int64 { values, validity, len } => {
+                values.push(v);
+                if let Some(b) = validity {
+                    b.push(true);
+                }
+                *len += 1;
+                Ok(())
+            }
+            _ => Err(Error::schema("push_i64 into non-int64 builder")),
+        }
+    }
+
+    pub fn push_f64(&mut self, v: f64) -> Result<()> {
+        match self {
+            ArrayBuilder::Float64 { values, validity, len } => {
+                values.push(v);
+                if let Some(b) = validity {
+                    b.push(true);
+                }
+                *len += 1;
+                Ok(())
+            }
+            _ => Err(Error::schema("push_f64 into non-float64 builder")),
+        }
+    }
+
+    pub fn push_str(&mut self, v: &str) -> Result<()> {
+        match self {
+            ArrayBuilder::Utf8 { offsets, data, validity, len } => {
+                data.extend_from_slice(v.as_bytes());
+                offsets.push(data.len() as u32);
+                if let Some(b) = validity {
+                    b.push(true);
+                }
+                *len += 1;
+                Ok(())
+            }
+            _ => Err(Error::schema("push_str into non-utf8 builder")),
+        }
+    }
+
+    pub fn push_bool(&mut self, v: bool) -> Result<()> {
+        match self {
+            ArrayBuilder::Bool { values, validity, len } => {
+                values.push(v);
+                if let Some(b) = validity {
+                    b.push(true);
+                }
+                *len += 1;
+                Ok(())
+            }
+            _ => Err(Error::schema("push_bool into non-bool builder")),
+        }
+    }
+
+    /// Append a null of the builder's type.
+    pub fn push_null(&mut self) {
+        match self {
+            ArrayBuilder::Int64 { values, validity, len } => {
+                let n = *len;
+                values.push(0);
+                Self::materialize_validity(validity, n).push(false);
+                *len += 1;
+            }
+            ArrayBuilder::Float64 { values, validity, len } => {
+                let n = *len;
+                values.push(0.0);
+                Self::materialize_validity(validity, n).push(false);
+                *len += 1;
+            }
+            ArrayBuilder::Utf8 { offsets, data, validity, len } => {
+                let n = *len;
+                offsets.push(data.len() as u32);
+                Self::materialize_validity(validity, n).push(false);
+                *len += 1;
+            }
+            ArrayBuilder::Bool { values, validity, len } => {
+                let n = *len;
+                values.push(false);
+                Self::materialize_validity(validity, n).push(false);
+                *len += 1;
+            }
+        }
+    }
+
+    /// Append cell `row` of `src` (same type), null-preserving.
+    pub fn push_cell(&mut self, src: &Array, row: usize) -> Result<()> {
+        if !src.is_valid(row) {
+            self.push_null();
+            return Ok(());
+        }
+        match src {
+            Array::Int64(a) => self.push_i64(a.value(row)),
+            Array::Float64(a) => self.push_f64(a.value(row)),
+            Array::Utf8(a) => self.push_str(a.value(row)),
+            Array::Bool(a) => self.push_bool(a.value(row)),
+        }
+    }
+
+    pub fn finish(self) -> Array {
+        match self {
+            ArrayBuilder::Int64 { values, validity, .. } => {
+                Array::Int64(Int64Array { values, validity })
+            }
+            ArrayBuilder::Float64 { values, validity, .. } => {
+                Array::Float64(Float64Array { values, validity })
+            }
+            ArrayBuilder::Utf8 { offsets, data, validity, .. } => {
+                Array::Utf8(Utf8Array { offsets, data, validity })
+            }
+            ArrayBuilder::Bool { values, validity, .. } => {
+                Array::Bool(BoolArray { values, validity })
+            }
+        }
+    }
+}
+
+/// Row-at-a-time table builder over a fixed schema.
+#[derive(Debug)]
+pub struct TableBuilder {
+    schema: Arc<Schema>,
+    builders: Vec<ArrayBuilder>,
+}
+
+impl TableBuilder {
+    pub fn new(schema: Arc<Schema>) -> Self {
+        Self::with_capacity(schema, 0)
+    }
+
+    pub fn with_capacity(schema: Arc<Schema>, cap: usize) -> Self {
+        let builders = schema
+            .fields()
+            .iter()
+            .map(|f| ArrayBuilder::with_capacity(f.data_type, cap))
+            .collect();
+        TableBuilder { schema, builders }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.builders.first().map(|b| b.len()).unwrap_or(0)
+    }
+
+    pub fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    pub fn column_builder(&mut self, i: usize) -> &mut ArrayBuilder {
+        &mut self.builders[i]
+    }
+
+    /// Append row `row` of `src` (type-equal schema assumed).
+    pub fn push_row(&mut self, src: &Table, row: usize) -> Result<()> {
+        for (b, col) in self.builders.iter_mut().zip(src.columns()) {
+            b.push_cell(col, row)?;
+        }
+        Ok(())
+    }
+
+    /// Append a row of all-nulls.
+    pub fn push_null_row(&mut self) {
+        for b in &mut self.builders {
+            b.push_null();
+        }
+    }
+
+    pub fn finish(self) -> Result<Table> {
+        let columns = self.builders.into_iter().map(|b| Arc::new(b.finish())).collect();
+        Table::try_new(self.schema, columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Field;
+
+    #[test]
+    fn build_primitives_with_nulls() {
+        let mut b = ArrayBuilder::new(DataType::Int64);
+        b.push_i64(7).unwrap();
+        b.push_null();
+        b.push_i64(9).unwrap();
+        let a = b.finish();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.null_count(), 1);
+        assert_eq!(a.as_i64().unwrap().get(2), Some(9));
+    }
+
+    #[test]
+    fn build_utf8_with_nulls() {
+        let mut b = ArrayBuilder::new(DataType::Utf8);
+        b.push_str("x").unwrap();
+        b.push_null();
+        b.push_str("yz").unwrap();
+        let a = b.finish();
+        let s = a.as_utf8().unwrap();
+        assert_eq!(s.get(0), Some("x"));
+        assert_eq!(s.get(1), None);
+        assert_eq!(s.get(2), Some("yz"));
+    }
+
+    #[test]
+    fn type_error_on_wrong_push() {
+        let mut b = ArrayBuilder::new(DataType::Int64);
+        assert!(b.push_f64(1.0).is_err());
+        assert!(b.push_str("a").is_err());
+    }
+
+    #[test]
+    fn validity_materialized_lazily() {
+        let mut b = ArrayBuilder::new(DataType::Float64);
+        b.push_f64(1.0).unwrap();
+        b.push_f64(2.0).unwrap();
+        let a = b.finish();
+        // No nulls pushed -> no bitmap allocated.
+        assert!(a.as_f64().unwrap().validity().is_none());
+    }
+
+    #[test]
+    fn table_builder_roundtrip() {
+        let src = Table::from_arrays(vec![
+            ("a", Array::from_i64(vec![1, 2, 3])),
+            ("s", Array::from_strs(&["x", "y", "z"])),
+        ])
+        .unwrap();
+        let mut tb = TableBuilder::new(src.schema().clone());
+        for i in [2, 0] {
+            tb.push_row(&src, i).unwrap();
+        }
+        tb.push_null_row();
+        let t = tb.finish().unwrap();
+        assert_eq!(t.num_rows(), 3);
+        assert_eq!(t.column(0).as_i64().unwrap().get(0), Some(3));
+        assert_eq!(t.column(1).as_utf8().unwrap().get(1), Some("x"));
+        assert!(!t.column(0).is_valid(2));
+    }
+
+    #[test]
+    fn empty_schema_builder() {
+        let schema = Arc::new(Schema::new(vec![Field::new("a", DataType::Bool)]));
+        let t = TableBuilder::new(schema).finish().unwrap();
+        assert_eq!(t.num_rows(), 0);
+    }
+}

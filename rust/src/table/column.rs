@@ -1,0 +1,372 @@
+//! Typed columnar arrays. Four physical types cover the paper's workloads:
+//! Int64 (index/key columns), Float64 (value columns), Utf8, Bool.
+
+use super::bitmap::Bitmap;
+
+/// Logical/physical column type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    Int64,
+    Float64,
+    Utf8,
+    Bool,
+}
+
+impl DataType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataType::Int64 => "int64",
+            DataType::Float64 => "float64",
+            DataType::Utf8 => "utf8",
+            DataType::Bool => "bool",
+        }
+    }
+}
+
+/// A primitive array: contiguous values + optional validity bitmap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrimitiveArray<T> {
+    pub(crate) values: Vec<T>,
+    pub(crate) validity: Option<Bitmap>,
+}
+
+pub type Int64Array = PrimitiveArray<i64>;
+pub type Float64Array = PrimitiveArray<f64>;
+pub type BoolArray = PrimitiveArray<bool>;
+
+impl<T: Copy + Default> PrimitiveArray<T> {
+    pub fn from_values(values: Vec<T>) -> Self {
+        PrimitiveArray { values, validity: None }
+    }
+
+    pub fn from_options(values: Vec<Option<T>>) -> Self {
+        let mut validity = Bitmap::new_null(values.len());
+        let vals = values
+            .iter()
+            .enumerate()
+            .map(|(i, v)| match v {
+                Some(x) => {
+                    validity.set(i, true);
+                    *x
+                }
+                None => T::default(),
+            })
+            .collect();
+        PrimitiveArray { values: vals, validity: Some(validity) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity.as_ref().map(|b| b.get(i)).unwrap_or(true)
+    }
+
+    /// Raw value, meaningful only when `is_valid(i)`.
+    #[inline]
+    pub fn value(&self, i: usize) -> T {
+        self.values[i]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<T> {
+        if self.is_valid(i) {
+            Some(self.values[i])
+        } else {
+            None
+        }
+    }
+
+    pub fn values(&self) -> &[T] {
+        &self.values
+    }
+
+    pub fn validity(&self) -> Option<&Bitmap> {
+        self.validity.as_ref()
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.validity.as_ref().map(|b| b.count_null()).unwrap_or(0)
+    }
+}
+
+/// Variable-length UTF-8 array with Arrow-style offsets into one buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Utf8Array {
+    pub(crate) offsets: Vec<u32>, // len + 1 entries
+    pub(crate) data: Vec<u8>,
+    pub(crate) validity: Option<Bitmap>,
+}
+
+impl Utf8Array {
+    pub fn from_strings<S: AsRef<str>>(strings: &[S]) -> Self {
+        let mut offsets = Vec::with_capacity(strings.len() + 1);
+        let mut data = Vec::new();
+        offsets.push(0u32);
+        for s in strings {
+            data.extend_from_slice(s.as_ref().as_bytes());
+            offsets.push(data.len() as u32);
+        }
+        Utf8Array { offsets, data, validity: None }
+    }
+
+    pub fn from_options<S: AsRef<str>>(strings: &[Option<S>]) -> Self {
+        let mut offsets = Vec::with_capacity(strings.len() + 1);
+        let mut data = Vec::new();
+        let mut validity = Bitmap::new_null(strings.len());
+        offsets.push(0u32);
+        for (i, s) in strings.iter().enumerate() {
+            if let Some(s) = s {
+                data.extend_from_slice(s.as_ref().as_bytes());
+                validity.set(i, true);
+            }
+            offsets.push(data.len() as u32);
+        }
+        Utf8Array { offsets, data, validity: Some(validity) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity.as_ref().map(|b| b.get(i)).unwrap_or(true)
+    }
+
+    #[inline]
+    pub fn value(&self, i: usize) -> &str {
+        let (s, e) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        // SAFETY: constructed only from &str inputs / validated wire decode.
+        std::str::from_utf8(&self.data[s..e]).expect("utf8 invariant")
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<&str> {
+        if self.is_valid(i) {
+            Some(self.value(i))
+        } else {
+            None
+        }
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.validity.as_ref().map(|b| b.count_null()).unwrap_or(0)
+    }
+
+    pub fn validity(&self) -> Option<&Bitmap> {
+        self.validity.as_ref()
+    }
+}
+
+/// Dynamic array wrapper: the column type stored in a [`super::Table`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Array {
+    Int64(Int64Array),
+    Float64(Float64Array),
+    Utf8(Utf8Array),
+    Bool(BoolArray),
+}
+
+impl Array {
+    pub fn data_type(&self) -> DataType {
+        match self {
+            Array::Int64(_) => DataType::Int64,
+            Array::Float64(_) => DataType::Float64,
+            Array::Utf8(_) => DataType::Utf8,
+            Array::Bool(_) => DataType::Bool,
+        }
+    }
+
+    pub fn new_empty(dt: DataType) -> Array {
+        match dt {
+            DataType::Int64 => Array::from_i64(vec![]),
+            DataType::Float64 => Array::from_f64(vec![]),
+            DataType::Utf8 => Array::Utf8(Utf8Array::from_strings::<&str>(&[])),
+            DataType::Bool => Array::Bool(BoolArray::from_values(vec![])),
+        }
+    }
+
+    pub fn from_i64(v: Vec<i64>) -> Array {
+        Array::Int64(Int64Array::from_values(v))
+    }
+
+    pub fn from_f64(v: Vec<f64>) -> Array {
+        Array::Float64(Float64Array::from_values(v))
+    }
+
+    pub fn from_strs<S: AsRef<str>>(v: &[S]) -> Array {
+        Array::Utf8(Utf8Array::from_strings(v))
+    }
+
+    pub fn from_bools(v: Vec<bool>) -> Array {
+        Array::Bool(BoolArray::from_values(v))
+    }
+
+    pub fn from_i64_opts(v: Vec<Option<i64>>) -> Array {
+        Array::Int64(Int64Array::from_options(v))
+    }
+
+    pub fn from_f64_opts(v: Vec<Option<f64>>) -> Array {
+        Array::Float64(Float64Array::from_options(v))
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Array::Int64(a) => a.len(),
+            Array::Float64(a) => a.len(),
+            Array::Utf8(a) => a.len(),
+            Array::Bool(a) => a.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_valid(&self, i: usize) -> bool {
+        match self {
+            Array::Int64(a) => a.is_valid(i),
+            Array::Float64(a) => a.is_valid(i),
+            Array::Utf8(a) => a.is_valid(i),
+            Array::Bool(a) => a.is_valid(i),
+        }
+    }
+
+    pub fn null_count(&self) -> usize {
+        match self {
+            Array::Int64(a) => a.null_count(),
+            Array::Float64(a) => a.null_count(),
+            Array::Utf8(a) => a.null_count(),
+            Array::Bool(a) => a.null_count(),
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<&Int64Array> {
+        match self {
+            Array::Int64(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<&Float64Array> {
+        match self {
+            Array::Float64(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_utf8(&self) -> Option<&Utf8Array> {
+        match self {
+            Array::Utf8(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<&BoolArray> {
+        match self {
+            Array::Bool(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Heap bytes held by this array (values + offsets + validity words).
+    pub fn byte_size(&self) -> usize {
+        let validity = |v: &Option<Bitmap>| v.as_ref().map(|b| b.words().len() * 8).unwrap_or(0);
+        match self {
+            Array::Int64(a) => a.values.len() * 8 + validity(&a.validity),
+            Array::Float64(a) => a.values.len() * 8 + validity(&a.validity),
+            Array::Bool(a) => a.values.len() + validity(&a.validity),
+            Array::Utf8(a) => a.data.len() + a.offsets.len() * 4 + validity(&a.validity),
+        }
+    }
+
+    /// Element-wise equality treating NaN == NaN and null == null
+    /// (row-identity semantics used by set operators and tests).
+    pub fn data_equals(&self, other: &Array) -> bool {
+        if self.data_type() != other.data_type() || self.len() != other.len() {
+            return false;
+        }
+        (0..self.len()).all(|i| super::row::cell_equals(self, other, i, i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_nulls() {
+        let a = Int64Array::from_options(vec![Some(1), None, Some(3)]);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.null_count(), 1);
+        assert_eq!(a.get(0), Some(1));
+        assert_eq!(a.get(1), None);
+        assert_eq!(a.get(2), Some(3));
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let a = Utf8Array::from_strings(&["", "hello", "wörld"]);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.value(0), "");
+        assert_eq!(a.value(1), "hello");
+        assert_eq!(a.value(2), "wörld");
+        assert_eq!(a.null_count(), 0);
+    }
+
+    #[test]
+    fn utf8_nulls() {
+        let a = Utf8Array::from_options(&[Some("a"), None, Some("c")]);
+        assert_eq!(a.get(1), None);
+        assert_eq!(a.get(2), Some("c"));
+        assert_eq!(a.null_count(), 1);
+    }
+
+    #[test]
+    fn array_dispatch() {
+        let a = Array::from_f64(vec![1.0, 2.0]);
+        assert_eq!(a.data_type(), DataType::Float64);
+        assert_eq!(a.len(), 2);
+        assert!(a.as_f64().is_some());
+        assert!(a.as_i64().is_none());
+    }
+
+    #[test]
+    fn data_equals_nan_and_null() {
+        let a = Array::from_f64(vec![f64::NAN, 1.0]);
+        let b = Array::from_f64(vec![f64::NAN, 1.0]);
+        assert!(a.data_equals(&b));
+        let c = Array::from_f64_opts(vec![None, Some(1.0)]);
+        let d = Array::from_f64_opts(vec![None, Some(1.0)]);
+        assert!(c.data_equals(&d));
+        assert!(!a.data_equals(&c));
+    }
+
+    #[test]
+    fn byte_size_sane() {
+        let a = Array::from_i64(vec![0; 100]);
+        assert_eq!(a.byte_size(), 800);
+        let s = Array::from_strs(&["ab", "cd"]);
+        assert_eq!(s.byte_size(), 4 + 3 * 4);
+    }
+
+    #[test]
+    fn empty_arrays() {
+        for dt in [DataType::Int64, DataType::Float64, DataType::Utf8, DataType::Bool] {
+            let a = Array::new_empty(dt);
+            assert_eq!(a.len(), 0);
+            assert_eq!(a.data_type(), dt);
+        }
+    }
+}

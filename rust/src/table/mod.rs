@@ -1,0 +1,203 @@
+//! Columnar table abstraction — the `cylon::Table` analog.
+//!
+//! The data layer mirrors the Arrow columnar format the paper builds on
+//! (§II-A): each column is contiguous, homogeneously typed, and carries a
+//! validity bitmap, which is what enables the SIMD hot loops (here: the
+//! AOT Pallas hash kernel) and cache-friendly scans.
+
+pub mod bitmap;
+pub mod builder;
+pub mod column;
+pub mod pretty;
+pub mod row;
+pub mod schema;
+pub mod take;
+
+pub use bitmap::Bitmap;
+pub use builder::{ArrayBuilder, TableBuilder};
+pub use column::{Array, BoolArray, DataType, Float64Array, Int64Array, Utf8Array};
+pub use row::RowRef;
+pub use schema::{Field, Schema};
+
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// An immutable, shareable columnar table: a schema plus equal-length
+/// columns. Cheap to clone (columns are `Arc`ed).
+#[derive(Debug, Clone)]
+pub struct Table {
+    schema: Arc<Schema>,
+    columns: Vec<Arc<Array>>,
+    num_rows: usize,
+}
+
+impl Table {
+    /// Build a table from a schema and columns, validating lengths/types.
+    pub fn try_new(schema: Arc<Schema>, columns: Vec<Arc<Array>>) -> Result<Self> {
+        if schema.num_fields() != columns.len() {
+            return Err(Error::schema(format!(
+                "schema has {} fields but {} columns given",
+                schema.num_fields(),
+                columns.len()
+            )));
+        }
+        let num_rows = columns.first().map(|c| c.len()).unwrap_or(0);
+        for (i, (f, c)) in schema.fields().iter().zip(&columns).enumerate() {
+            if c.len() != num_rows {
+                return Err(Error::schema(format!(
+                    "column {i} has {} rows, expected {num_rows}",
+                    c.len()
+                )));
+            }
+            if c.data_type() != f.data_type {
+                return Err(Error::schema(format!(
+                    "column {i} ('{}') is {:?}, schema says {:?}",
+                    f.name,
+                    c.data_type(),
+                    f.data_type
+                )));
+            }
+        }
+        Ok(Table { schema, columns, num_rows })
+    }
+
+    /// Table with zero rows for a schema.
+    pub fn empty(schema: Arc<Schema>) -> Self {
+        let columns = schema
+            .fields()
+            .iter()
+            .map(|f| Arc::new(Array::new_empty(f.data_type)))
+            .collect();
+        Table { schema, columns, num_rows: 0 }
+    }
+
+    /// Convenience constructor from (name, array) pairs.
+    pub fn from_arrays(cols: Vec<(&str, Array)>) -> Result<Self> {
+        let fields = cols
+            .iter()
+            .map(|(n, a)| Field::new(*n, a.data_type()))
+            .collect::<Vec<_>>();
+        let schema = Arc::new(Schema::new(fields));
+        let arrays = cols.into_iter().map(|(_, a)| Arc::new(a)).collect();
+        Table::try_new(schema, arrays)
+    }
+
+    pub fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, i: usize) -> &Arc<Array> {
+        &self.columns[i]
+    }
+
+    pub fn columns(&self) -> &[Arc<Array>] {
+        &self.columns
+    }
+
+    /// Column lookup by name.
+    pub fn column_by_name(&self, name: &str) -> Option<&Arc<Array>> {
+        self.schema.index_of(name).map(|i| &self.columns[i])
+    }
+
+    /// A borrowed view of one row (for row-based traversal, §IV-B).
+    pub fn row(&self, i: usize) -> RowRef<'_> {
+        RowRef::new(self, i)
+    }
+
+    /// Whether two tables have identical schemas (homogeneous, Table I).
+    pub fn schema_equals(&self, other: &Table) -> bool {
+        self.schema.type_equals(&other.schema)
+    }
+
+    /// Total heap bytes of all columns (used by memory-limit simulation).
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.byte_size()).sum()
+    }
+
+    /// Deep row-wise equality (same order). For tests.
+    pub fn data_equals(&self, other: &Table) -> bool {
+        self.num_rows == other.num_rows
+            && self.num_columns() == other.num_columns()
+            && self
+                .columns
+                .iter()
+                .zip(&other.columns)
+                .all(|(a, b)| a.data_equals(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        Table::from_arrays(vec![
+            ("id", Array::from_i64(vec![1, 2, 3])),
+            ("v", Array::from_f64(vec![0.5, 1.5, 2.5])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = sample();
+        assert_eq!(t.num_rows(), 3);
+        assert_eq!(t.num_columns(), 2);
+        assert_eq!(t.schema().field(0).name, "id");
+        assert!(t.column_by_name("v").is_some());
+        assert!(t.column_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let schema = Arc::new(Schema::new(vec![
+            Field::new("a", DataType::Int64),
+            Field::new("b", DataType::Int64),
+        ]));
+        let cols = vec![
+            Arc::new(Array::from_i64(vec![1, 2])),
+            Arc::new(Array::from_i64(vec![1])),
+        ];
+        assert!(Table::try_new(schema, cols).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let schema = Arc::new(Schema::new(vec![Field::new("a", DataType::Float64)]));
+        let cols = vec![Arc::new(Array::from_i64(vec![1]))];
+        assert!(Table::try_new(schema, cols).is_err());
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = Table::empty(sample().schema().clone());
+        assert_eq!(t.num_rows(), 0);
+        assert_eq!(t.num_columns(), 2);
+    }
+
+    #[test]
+    fn data_equals_detects_diff() {
+        let a = sample();
+        let b = sample();
+        assert!(a.data_equals(&b));
+        let c = Table::from_arrays(vec![
+            ("id", Array::from_i64(vec![1, 2, 4])),
+            ("v", Array::from_f64(vec![0.5, 1.5, 2.5])),
+        ])
+        .unwrap();
+        assert!(!a.data_equals(&c));
+    }
+
+    #[test]
+    fn byte_size_positive() {
+        assert!(sample().byte_size() >= 3 * 8 * 2);
+    }
+}

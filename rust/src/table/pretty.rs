@@ -1,0 +1,98 @@
+//! Human-readable table rendering (debugging, examples, CLI `show`).
+
+use super::column::Array;
+use super::Table;
+
+/// Render one cell as a string ("null" for nulls).
+pub fn cell_to_string(a: &Array, row: usize) -> String {
+    if !a.is_valid(row) {
+        return "null".to_string();
+    }
+    match a {
+        Array::Int64(p) => p.value(row).to_string(),
+        Array::Float64(p) => format!("{}", p.value(row)),
+        Array::Utf8(s) => s.value(row).to_string(),
+        Array::Bool(b) => b.value(row).to_string(),
+    }
+}
+
+/// ASCII-art table with a header, up to `max_rows` rows.
+pub fn pretty_print(t: &Table, max_rows: usize) -> String {
+    let ncols = t.num_columns();
+    let shown = t.num_rows().min(max_rows);
+    let mut cells: Vec<Vec<String>> = Vec::with_capacity(shown + 1);
+    cells.push(
+        t.schema()
+            .fields()
+            .iter()
+            .map(|f| format!("{} ({})", f.name, f.data_type.name()))
+            .collect(),
+    );
+    for r in 0..shown {
+        cells.push((0..ncols).map(|c| cell_to_string(t.column(c), r)).collect());
+    }
+    let mut widths = vec![0usize; ncols];
+    for row in &cells {
+        for (c, s) in row.iter().enumerate() {
+            widths[c] = widths[c].max(s.len());
+        }
+    }
+    let sep = |w: &mut String| {
+        w.push('+');
+        for wd in &widths {
+            w.push_str(&"-".repeat(wd + 2));
+            w.push('+');
+        }
+        w.push('\n');
+    };
+    let mut out = String::new();
+    sep(&mut out);
+    for (i, row) in cells.iter().enumerate() {
+        out.push('|');
+        for (c, s) in row.iter().enumerate() {
+            out.push_str(&format!(" {:<w$} |", s, w = widths[c]));
+        }
+        out.push('\n');
+        if i == 0 {
+            sep(&mut out);
+        }
+    }
+    sep(&mut out);
+    if t.num_rows() > shown {
+        out.push_str(&format!("... {} more rows\n", t.num_rows() - shown));
+    }
+    out
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", pretty_print(self, 20))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    #[test]
+    fn renders_header_rows_and_truncation() {
+        let t = Table::from_arrays(vec![
+            ("id", Array::from_i64((0..30).collect())),
+            ("name", Array::from_strs(&["x"; 30])),
+        ])
+        .unwrap();
+        let s = pretty_print(&t, 5);
+        assert!(s.contains("id (int64)"));
+        assert!(s.contains("name (utf8)"));
+        assert!(s.contains("... 25 more rows"));
+        // 5 data rows + 1 header + 3 separators + 1 truncation note
+        assert_eq!(s.matches('\n').count(), 10);
+    }
+
+    #[test]
+    fn renders_nulls() {
+        let t = Table::from_arrays(vec![("a", Array::from_i64_opts(vec![None]))]).unwrap();
+        assert!(pretty_print(&t, 10).contains("null"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Row views and row-identity semantics.
+//!
+//! Set operators (Union/Intersect/Difference) treat a row as identical to
+//! another when every cell is identical, with `null == null` and
+//! `NaN == NaN` (identity, not IEEE equality) — matching how hash-based
+//! dedup behaves in Cylon/Arrow.
+
+use super::column::Array;
+use super::Table;
+
+/// A borrowed view of one row of a table.
+#[derive(Clone, Copy)]
+pub struct RowRef<'a> {
+    table: &'a Table,
+    row: usize,
+}
+
+impl<'a> RowRef<'a> {
+    pub fn new(table: &'a Table, row: usize) -> Self {
+        debug_assert!(row < table.num_rows());
+        RowRef { table, row }
+    }
+
+    pub fn index(&self) -> usize {
+        self.row
+    }
+
+    pub fn table(&self) -> &'a Table {
+        self.table
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.table.num_columns()
+    }
+
+    pub fn is_valid(&self, col: usize) -> bool {
+        self.table.column(col).is_valid(self.row)
+    }
+
+    /// Identity-equality against a row of another (type-compatible) table.
+    pub fn equals(&self, other: &RowRef<'_>) -> bool {
+        self.num_cells() == other.num_cells()
+            && (0..self.num_cells()).all(|c| {
+                cell_equals(self.table.column(c), other.table.column(c), self.row, other.row)
+            })
+    }
+}
+
+impl std::fmt::Debug for RowRef<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Row[{}](", self.row)?;
+        for c in 0..self.num_cells() {
+            if c > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}", super::pretty::cell_to_string(self.table.column(c), self.row))?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Identity-equality of `a[i]` and `b[j]` (null==null, NaN==NaN by bits).
+#[inline]
+pub fn cell_equals(a: &Array, b: &Array, i: usize, j: usize) -> bool {
+    match (a, b) {
+        (Array::Int64(x), Array::Int64(y)) => match (x.is_valid(i), y.is_valid(j)) {
+            (true, true) => x.value(i) == y.value(j),
+            (false, false) => true,
+            _ => false,
+        },
+        (Array::Float64(x), Array::Float64(y)) => match (x.is_valid(i), y.is_valid(j)) {
+            (true, true) => x.value(i).to_bits() == y.value(j).to_bits(),
+            (false, false) => true,
+            _ => false,
+        },
+        (Array::Utf8(x), Array::Utf8(y)) => match (x.is_valid(i), y.is_valid(j)) {
+            (true, true) => x.value(i) == y.value(j),
+            (false, false) => true,
+            _ => false,
+        },
+        (Array::Bool(x), Array::Bool(y)) => match (x.is_valid(i), y.is_valid(j)) {
+            (true, true) => x.value(i) == y.value(j),
+            (false, false) => true,
+            _ => false,
+        },
+        _ => false,
+    }
+}
+
+/// Identity-equality of full rows `l[i]` and `r[j]` across two tables with
+/// type-equal schemas.
+#[inline]
+pub fn row_equals(l: &Table, r: &Table, i: usize, j: usize) -> bool {
+    l.num_columns() == r.num_columns()
+        && (0..l.num_columns()).all(|c| cell_equals(l.column(c), r.column(c), i, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t() -> Table {
+        Table::from_arrays(vec![
+            ("a", Array::from_i64_opts(vec![Some(1), None, Some(1)])),
+            ("b", Array::from_f64(vec![f64::NAN, 2.0, f64::NAN])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn row_identity_nan_null() {
+        let t = t();
+        assert!(row_equals(&t, &t, 0, 2)); // NaN==NaN, 1==1
+        assert!(!row_equals(&t, &t, 0, 1)); // Some(1) != None
+        assert!(row_equals(&t, &t, 1, 1));
+    }
+
+    #[test]
+    fn rowref_equals() {
+        let t = t();
+        assert!(t.row(0).equals(&t.row(2)));
+        assert!(!t.row(0).equals(&t.row(1)));
+    }
+
+    #[test]
+    fn cell_type_mismatch_is_unequal() {
+        let a = Array::from_i64(vec![1]);
+        let b = Array::from_f64(vec![1.0]);
+        assert!(!cell_equals(&a, &b, 0, 0));
+    }
+
+    #[test]
+    fn rowref_debug_renders() {
+        let t = t();
+        let s = format!("{:?}", t.row(1));
+        assert!(s.contains("null"));
+        assert!(s.contains('2'));
+    }
+}

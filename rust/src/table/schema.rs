@@ -1,0 +1,121 @@
+//! Schema: ordered, named, typed fields.
+
+use super::column::DataType;
+
+/// One column's name + type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub data_type: DataType,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, data_type: DataType) -> Self {
+        Field { name: name.into(), data_type }
+    }
+}
+
+/// An ordered list of fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    pub fn num_fields(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    pub fn field(&self, i: usize) -> &Field {
+        &self.fields[i]
+    }
+
+    /// Index of the first field with this name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|f| f.name == name)
+    }
+
+    /// Type-level equality ignoring names — the "homogeneous tables"
+    /// requirement of Union/Intersect/Difference (Table I).
+    pub fn type_equals(&self, other: &Schema) -> bool {
+        self.fields.len() == other.fields.len()
+            && self
+                .fields
+                .iter()
+                .zip(&other.fields)
+                .all(|(a, b)| a.data_type == b.data_type)
+    }
+
+    /// Schema of `self ⨝ other` (all left fields then all right fields,
+    /// right-side duplicates suffixed `_r` as in most engines).
+    pub fn join(&self, other: &Schema) -> Schema {
+        let mut fields = self.fields.clone();
+        for f in &other.fields {
+            let name = if self.index_of(&f.name).is_some() {
+                format!("{}_r", f.name)
+            } else {
+                f.name.clone()
+            };
+            fields.push(Field::new(name, f.data_type));
+        }
+        Schema { fields }
+    }
+
+    /// Sub-schema selecting `indices` (Project).
+    pub fn project(&self, indices: &[usize]) -> Schema {
+        Schema { fields: indices.iter().map(|&i| self.fields[i].clone()).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s1() -> Schema {
+        Schema::new(vec![
+            Field::new("id", DataType::Int64),
+            Field::new("v", DataType::Float64),
+        ])
+    }
+
+    #[test]
+    fn index_of_finds() {
+        assert_eq!(s1().index_of("v"), Some(1));
+        assert_eq!(s1().index_of("x"), None);
+    }
+
+    #[test]
+    fn type_equals_ignores_names() {
+        let a = s1();
+        let b = Schema::new(vec![
+            Field::new("key", DataType::Int64),
+            Field::new("val", DataType::Float64),
+        ]);
+        assert!(a.type_equals(&b));
+        let c = Schema::new(vec![Field::new("key", DataType::Int64)]);
+        assert!(!a.type_equals(&c));
+    }
+
+    #[test]
+    fn join_renames_dups() {
+        let j = s1().join(&s1());
+        assert_eq!(j.num_fields(), 4);
+        assert_eq!(j.field(2).name, "id_r");
+        assert_eq!(j.field(3).name, "v_r");
+    }
+
+    #[test]
+    fn project_subsets() {
+        let p = s1().project(&[1]);
+        assert_eq!(p.num_fields(), 1);
+        assert_eq!(p.field(0).name, "v");
+    }
+}

@@ -1,0 +1,292 @@
+//! Vectorized gather / slice / concat kernels over arrays and tables.
+//!
+//! These are the "local operator" building blocks: joins and shuffles
+//! produce index vectors and materialize outputs with one `take` per
+//! column (columnar traversal, §II-A).
+
+use super::bitmap::Bitmap;
+use super::column::{Array, Float64Array, Int64Array, PrimitiveArray, Utf8Array};
+use super::Table;
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// Gather: `out[k] = a[indices[k]]`. `None` index emits null (used by
+/// outer joins for the unmatched side).
+pub fn take_opt(a: &Array, indices: &[Option<usize>]) -> Array {
+    match a {
+        Array::Int64(p) => Array::Int64(take_prim_opt(p, indices)),
+        Array::Float64(p) => Array::Float64(take_prim_opt(p, indices)),
+        Array::Bool(p) => Array::Bool(take_prim_opt(p, indices)),
+        Array::Utf8(s) => Array::Utf8(take_utf8_opt(s, indices)),
+    }
+}
+
+/// Gather with all-present indices.
+pub fn take(a: &Array, indices: &[usize]) -> Array {
+    match a {
+        Array::Int64(p) => Array::Int64(take_prim(p, indices)),
+        Array::Float64(p) => Array::Float64(take_prim(p, indices)),
+        Array::Bool(p) => Array::Bool(take_prim(p, indices)),
+        Array::Utf8(s) => Array::Utf8(take_utf8(s, indices)),
+    }
+}
+
+fn take_prim<T: Copy + Default>(a: &PrimitiveArray<T>, idx: &[usize]) -> PrimitiveArray<T> {
+    let values: Vec<T> = idx.iter().map(|&i| a.values[i]).collect();
+    let validity = a.validity.as_ref().map(|b| b.take(idx));
+    PrimitiveArray { values, validity }
+}
+
+fn take_prim_opt<T: Copy + Default>(
+    a: &PrimitiveArray<T>,
+    idx: &[Option<usize>],
+) -> PrimitiveArray<T> {
+    let mut validity_needed = a.validity.is_some();
+    let mut values = Vec::with_capacity(idx.len());
+    for i in idx {
+        match i {
+            Some(i) => values.push(a.values[*i]),
+            None => {
+                values.push(T::default());
+                validity_needed = true;
+            }
+        }
+    }
+    let validity = if validity_needed {
+        let mut b = Bitmap::new_null(idx.len());
+        for (k, i) in idx.iter().enumerate() {
+            if let Some(i) = i {
+                if a.is_valid(*i) {
+                    b.set(k, true);
+                }
+            }
+        }
+        Some(b)
+    } else {
+        None
+    };
+    PrimitiveArray { values, validity }
+}
+
+fn take_utf8(a: &Utf8Array, idx: &[usize]) -> Utf8Array {
+    let mut offsets = Vec::with_capacity(idx.len() + 1);
+    let mut data = Vec::new();
+    offsets.push(0u32);
+    for &i in idx {
+        let (s, e) = (a.offsets[i] as usize, a.offsets[i + 1] as usize);
+        data.extend_from_slice(&a.data[s..e]);
+        offsets.push(data.len() as u32);
+    }
+    let validity = a.validity.as_ref().map(|b| b.take(idx));
+    Utf8Array { offsets, data, validity }
+}
+
+fn take_utf8_opt(a: &Utf8Array, idx: &[Option<usize>]) -> Utf8Array {
+    let mut offsets = Vec::with_capacity(idx.len() + 1);
+    let mut data = Vec::new();
+    let mut validity = Bitmap::new_null(idx.len());
+    offsets.push(0u32);
+    for (k, i) in idx.iter().enumerate() {
+        if let Some(i) = i {
+            let (s, e) = (a.offsets[*i] as usize, a.offsets[*i + 1] as usize);
+            data.extend_from_slice(&a.data[s..e]);
+            if a.is_valid(*i) {
+                validity.set(k, true);
+            }
+        }
+        offsets.push(data.len() as u32);
+    }
+    Utf8Array { offsets, data, validity: Some(validity) }
+}
+
+/// Gather full rows of a table: one `take` per column.
+pub fn take_table(t: &Table, indices: &[usize]) -> Table {
+    let cols = t.columns().iter().map(|c| Arc::new(take(c, indices))).collect();
+    Table::try_new(t.schema().clone(), cols).expect("take preserves schema")
+}
+
+/// Row gather with optional indices (nulls for `None`).
+pub fn take_table_opt(t: &Table, indices: &[Option<usize>]) -> Table {
+    let cols = t.columns().iter().map(|c| Arc::new(take_opt(c, indices))).collect();
+    Table::try_new(t.schema().clone(), cols).expect("take preserves schema")
+}
+
+/// Contiguous row range `[start, end)` view materialized as a new table.
+pub fn slice(t: &Table, start: usize, end: usize) -> Result<Table> {
+    if start > end || end > t.num_rows() {
+        return Err(Error::invalid(format!(
+            "slice [{start},{end}) out of bounds for {} rows",
+            t.num_rows()
+        )));
+    }
+    let idx: Vec<usize> = (start..end).collect();
+    Ok(take_table(t, &idx))
+}
+
+/// Concatenate arrays of one type.
+pub fn concat_arrays(arrays: &[&Array]) -> Result<Array> {
+    let dt = arrays
+        .first()
+        .ok_or_else(|| Error::invalid("concat of zero arrays"))?
+        .data_type();
+    if arrays.iter().any(|a| a.data_type() != dt) {
+        return Err(Error::schema("concat of mixed-type arrays"));
+    }
+    macro_rules! concat_prim {
+        ($variant:ident, $getter:ident) => {{
+            let parts: Vec<_> = arrays.iter().map(|a| a.$getter().unwrap()).collect();
+            let total: usize = parts.iter().map(|p| p.len()).sum();
+            let mut values = Vec::with_capacity(total);
+            let any_null = parts.iter().any(|p| p.null_count() > 0);
+            let mut validity = any_null.then(|| Bitmap::new_null(0));
+            for p in &parts {
+                values.extend_from_slice(p.values());
+                if let Some(v) = validity.as_mut() {
+                    for i in 0..p.len() {
+                        v.push(p.is_valid(i));
+                    }
+                }
+            }
+            Ok(Array::$variant(PrimitiveArray { values, validity }))
+        }};
+    }
+    match dt {
+        super::DataType::Int64 => concat_prim!(Int64, as_i64),
+        super::DataType::Float64 => concat_prim!(Float64, as_f64),
+        super::DataType::Bool => concat_prim!(Bool, as_bool),
+        super::DataType::Utf8 => {
+            let parts: Vec<_> = arrays.iter().map(|a| a.as_utf8().unwrap()).collect();
+            let total: usize = parts.iter().map(|p| p.len()).sum();
+            let mut offsets = Vec::with_capacity(total + 1);
+            let mut data = Vec::new();
+            offsets.push(0u32);
+            let any_null = parts.iter().any(|p| p.null_count() > 0);
+            let mut validity = any_null.then(|| Bitmap::new_null(0));
+            for p in &parts {
+                for i in 0..p.len() {
+                    let (s, e) = (p.offsets[i] as usize, p.offsets[i + 1] as usize);
+                    data.extend_from_slice(&p.data[s..e]);
+                    offsets.push(data.len() as u32);
+                    if let Some(v) = validity.as_mut() {
+                        v.push(p.is_valid(i));
+                    }
+                }
+            }
+            Ok(Array::Utf8(Utf8Array { offsets, data, validity }))
+        }
+    }
+}
+
+/// Concatenate type-equal tables (partition reassembly after AllToAll).
+pub fn concat_tables(tables: &[&Table]) -> Result<Table> {
+    let first = tables.first().ok_or_else(|| Error::invalid("concat of zero tables"))?;
+    for t in tables {
+        if !first.schema_equals(t) {
+            return Err(Error::schema("concat of schema-incompatible tables"));
+        }
+    }
+    let ncols = first.num_columns();
+    let mut cols = Vec::with_capacity(ncols);
+    for c in 0..ncols {
+        let parts: Vec<&Array> = tables.iter().map(|t| t.column(c).as_ref()).collect();
+        cols.push(Arc::new(concat_arrays(&parts)?));
+    }
+    Table::try_new(first.schema().clone(), cols)
+}
+
+/// Keep rows where `mask[i]` (Select's materialization step).
+pub fn filter_table(t: &Table, mask: &[bool]) -> Result<Table> {
+    if mask.len() != t.num_rows() {
+        return Err(Error::invalid("mask length != row count"));
+    }
+    let idx: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| m.then_some(i))
+        .collect();
+    Ok(take_table(t, &idx))
+}
+
+#[cfg(test)]
+#[allow(unused_imports)]
+mod tests {
+    use super::*;
+    use crate::table::{Array, Float64Array, Int64Array};
+
+    fn t() -> Table {
+        Table::from_arrays(vec![
+            ("a", Array::from_i64_opts(vec![Some(10), None, Some(30), Some(40)])),
+            ("s", Array::from_strs(&["aa", "b", "", "dddd"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn take_preserves_nulls() {
+        let out = take_table(&t(), &[3, 1, 1]);
+        assert_eq!(out.num_rows(), 3);
+        assert_eq!(out.column(0).as_i64().unwrap().get(0), Some(40));
+        assert!(!out.column(0).is_valid(1));
+        assert!(!out.column(0).is_valid(2));
+        assert_eq!(out.column(1).as_utf8().unwrap().value(0), "dddd");
+    }
+
+    #[test]
+    fn take_opt_emits_nulls() {
+        let out = take_table_opt(&t(), &[Some(0), None, Some(2)]);
+        assert_eq!(out.num_rows(), 3);
+        assert!(out.column(0).is_valid(0));
+        assert!(!out.column(0).is_valid(1));
+        assert!(!out.column(1).is_valid(1));
+        assert_eq!(out.column(1).as_utf8().unwrap().get(2), Some(""));
+    }
+
+    #[test]
+    fn slice_bounds() {
+        let s = slice(&t(), 1, 3).unwrap();
+        assert_eq!(s.num_rows(), 2);
+        assert!(slice(&t(), 3, 2).is_err());
+        assert!(slice(&t(), 0, 5).is_err());
+    }
+
+    #[test]
+    fn concat_tables_works() {
+        let a = t();
+        let b = t();
+        let c = concat_tables(&[&a, &b]).unwrap();
+        assert_eq!(c.num_rows(), 8);
+        assert_eq!(c.column(0).null_count(), 2);
+        assert_eq!(c.column(1).as_utf8().unwrap().value(5), "b");
+    }
+
+    #[test]
+    fn concat_rejects_mixed_schema() {
+        let a = t();
+        let b = Table::from_arrays(vec![("x", Array::from_f64(vec![1.0]))]).unwrap();
+        assert!(concat_tables(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn concat_no_nulls_skips_bitmap() {
+        let x = Array::from_i64(vec![1, 2]);
+        let y = Array::from_i64(vec![3]);
+        let c = concat_arrays(&[&x, &y]).unwrap();
+        assert!(c.as_i64().unwrap().validity().is_none());
+        assert_eq!(c.as_i64().unwrap().values(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn filter_by_mask() {
+        let out = filter_table(&t(), &[true, false, false, true]).unwrap();
+        assert_eq!(out.num_rows(), 2);
+        assert_eq!(out.column(0).as_i64().unwrap().get(1), Some(40));
+        assert!(filter_table(&t(), &[true]).is_err());
+    }
+
+    #[test]
+    fn empty_take() {
+        let out = take_table(&t(), &[]);
+        assert_eq!(out.num_rows(), 0);
+        assert_eq!(out.num_columns(), 2);
+    }
+}

@@ -1,0 +1,111 @@
+//! Integration tests for the AOT (JAX/Pallas → PJRT) path: the kernel
+//! must route identically to the native hash in real shuffles, and the
+//! sim results must be invariant to which path computed the ids.
+//!
+//! These tests skip (with a note) when `artifacts/` has not been built;
+//! `make test` builds artifacts first, so CI exercises them.
+
+use rylon::coordinator::try_run_workers;
+use rylon::io::generator::paper_table;
+use rylon::net::{CommConfig, NetworkProfile};
+use rylon::ops::join::JoinConfig;
+use rylon::runtime::KernelRuntime;
+use rylon::sim::sim_rylon_join;
+use rylon::table::Table;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<KernelRuntime>> {
+    match KernelRuntime::load_default() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping AOT integration: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn shuffle_uses_kernel_and_routes_identically() {
+    let Some(rt) = runtime() else { return };
+    let world = 4;
+    // With runtime attached: shuffle stats must report kernel use, and
+    // results must match the native run exactly.
+    let with_kernel = try_run_workers(world, &CommConfig::default(), Some(rt), move |ctx| {
+        let t = paper_table(5_000, 1.0, 70 + ctx.rank() as u64);
+        let (out, stats) = rylon::dist::shuffle(ctx, &t, 0)?;
+        Ok((out, stats.used_kernel))
+    })
+    .unwrap();
+    let native = try_run_workers(world, &CommConfig::default(), None, move |ctx| {
+        let t = paper_table(5_000, 1.0, 70 + ctx.rank() as u64);
+        let (out, stats) = rylon::dist::shuffle(ctx, &t, 0)?;
+        Ok((out, stats.used_kernel))
+    })
+    .unwrap();
+    for ((kt, kused), (nt, nused)) in with_kernel.iter().zip(&native) {
+        assert!(kused, "kernel path not taken despite runtime");
+        assert!(!nused);
+        assert!(kt.data_equals(nt), "kernel and native shuffles diverge");
+    }
+}
+
+#[test]
+fn sim_join_invariant_to_kernel_path() {
+    let Some(rt) = runtime() else { return };
+    let chunks = |seed: u64| -> Vec<Table> {
+        (0..3).map(|w| paper_table(4_000, 0.9, seed + w as u64)).collect()
+    };
+    let l = chunks(900);
+    let r = chunks(950);
+    let cfg = JoinConfig::inner(0, 0);
+    let with_kernel =
+        sim_rylon_join(&l, &r, &cfg, NetworkProfile::Loopback, Some(&rt)).unwrap();
+    let native = sim_rylon_join(&l, &r, &cfg, NetworkProfile::Loopback, None).unwrap();
+    assert_eq!(with_kernel.rows_out, native.rows_out);
+    assert_eq!(with_kernel.comm_bytes, native.comm_bytes);
+}
+
+#[test]
+fn kernel_handles_all_block_boundaries() {
+    let Some(rt) = runtime() else { return };
+    let blocks = rt.block_sizes().to_vec();
+    let smallest = blocks[0];
+    // Exercise exact-block, off-by-one, multi-block, and tiny sizes.
+    let sizes = [
+        1usize,
+        smallest - 1,
+        smallest,
+        smallest + 1,
+        2 * smallest + 17,
+        blocks[blocks.len() - 1] + 3,
+    ];
+    for n in sizes {
+        let keys: Vec<i64> = (0..n as u64)
+            .map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15) as i64)
+            .collect();
+        let ids = rt.hash_partition_ids(&keys, 7).unwrap();
+        assert_eq!(ids.len(), n, "size {n}");
+        for (k, id) in keys.iter().zip(&ids) {
+            assert_eq!(rylon::ops::hash::hash_i64(*k) % 7, *id, "size {n}");
+        }
+    }
+}
+
+#[test]
+fn kernel_runtime_is_shareable_across_threads() {
+    let Some(rt) = runtime() else { return };
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let keys: Vec<i64> = (0..1000).map(|i| (i * 31 + t) as i64).collect();
+                rt.hash_partition_ids(&keys, 5).unwrap().len()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 1000);
+    }
+    let stats = rt.stats().unwrap();
+    assert!(stats.kernel_calls >= 4);
+}

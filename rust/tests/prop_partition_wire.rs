@@ -1,0 +1,113 @@
+//! Property tests: hash-partition is a permutation-partition (disjoint
+//! cover with consistent routing) and the wire format round-trips any
+//! table — the two invariants the shuffle's correctness rests on.
+
+use rylon::io::generator::{random_table, SplitMix64};
+use rylon::net::serialize::{deserialize_table, serialize_table};
+use rylon::ops::hash::hash_row;
+use rylon::ops::partition::{hash_partition, hash_partition_rows, partition_ids_by_key};
+use rylon::table::pretty::cell_to_string;
+use rylon::table::Table;
+use std::collections::BTreeMap;
+
+fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for r in 0..t.num_rows() {
+        let key = (0..t.num_columns())
+            .map(|c| cell_to_string(t.column(c), r))
+            .collect::<Vec<_>>()
+            .join("\u{1}");
+        *m.entry(key).or_insert(0) += 1;
+    }
+    m
+}
+
+fn merge(ms: Vec<BTreeMap<String, usize>>) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for m in ms {
+        for (k, v) in m {
+            *out.entry(k).or_insert(0) += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn key_partition_is_disjoint_cover() {
+    let mut rng = SplitMix64::new(0x9A27);
+    for _ in 0..25 {
+        let t = random_table(rng.next_below(200) as usize, rng.next_u64());
+        let p = rng.next_below(15) as usize + 1;
+        let parts = hash_partition(&t, 0, p).unwrap();
+        assert_eq!(parts.len(), p);
+        // multiset of all partition rows == multiset of input rows
+        assert_eq!(
+            merge(parts.iter().map(row_multiset).collect()),
+            row_multiset(&t)
+        );
+        // routing is a pure function of the key
+        let ids = partition_ids_by_key(&t, 0, p).unwrap();
+        let ids2 = partition_ids_by_key(&t, 0, p).unwrap();
+        assert_eq!(ids, ids2);
+    }
+}
+
+#[test]
+fn row_partition_is_disjoint_cover_with_consistent_routing() {
+    let mut rng = SplitMix64::new(0x9B38);
+    for _ in 0..15 {
+        let t = random_table(rng.next_below(150) as usize, rng.next_u64());
+        let p = rng.next_below(7) as usize + 1;
+        let parts = hash_partition_rows(&t, p).unwrap();
+        assert_eq!(
+            merge(parts.iter().map(row_multiset).collect()),
+            row_multiset(&t)
+        );
+        for (pid, part) in parts.iter().enumerate() {
+            for r in 0..part.num_rows() {
+                assert_eq!(hash_row(part, r) as usize % p, pid);
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_roundtrip_random_tables() {
+    let mut rng = SplitMix64::new(0x3172);
+    for case in 0..40 {
+        let t = random_table(rng.next_below(300) as usize, rng.next_u64());
+        let bytes = serialize_table(&t);
+        let back = deserialize_table(&bytes).unwrap();
+        assert!(t.data_equals(&back), "case {case}: roundtrip mismatch");
+        assert_eq!(t.schema(), back.schema(), "case {case}: schema mismatch");
+    }
+}
+
+#[test]
+fn wire_rejects_random_mutations() {
+    // Flipping a byte anywhere must never panic: either clean error or
+    // (rarely, e.g. float payload bits) a different but valid table.
+    let mut rng = SplitMix64::new(0x0BAD);
+    let t = random_table(64, 0xFEED);
+    let bytes = serialize_table(&t);
+    for _ in 0..200 {
+        let mut corrupted = bytes.clone();
+        let pos = rng.next_below(corrupted.len() as u64) as usize;
+        corrupted[pos] ^= 1 << rng.next_below(8);
+        let _ = deserialize_table(&corrupted); // must not panic
+    }
+}
+
+#[test]
+fn wire_rejects_random_truncations() {
+    let mut rng = SplitMix64::new(0x7123);
+    let t = random_table(128, 0xBEEF);
+    let bytes = serialize_table(&t);
+    for _ in 0..50 {
+        let cut = rng.next_below(bytes.len() as u64 - 1) as usize;
+        assert!(
+            deserialize_table(&bytes[..cut]).is_err(),
+            "truncation at {cut} must error"
+        );
+    }
+}

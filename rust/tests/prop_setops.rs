@@ -1,0 +1,85 @@
+//! Property tests: Union / Intersect / Difference against a BTreeSet
+//! oracle over rendered rows, plus algebraic invariants, on randomized
+//! adversarial tables (nulls, NaNs, duplicates).
+
+use rylon::io::generator::{random_table, SplitMix64};
+use rylon::ops::{difference, intersect, union};
+use rylon::table::{pretty::cell_to_string, Table};
+use std::collections::BTreeSet;
+
+fn row_set(t: &Table) -> BTreeSet<String> {
+    (0..t.num_rows())
+        .map(|r| {
+            (0..t.num_columns())
+                .map(|c| cell_to_string(t.column(c), r))
+                .collect::<Vec<_>>()
+                .join("\u{1}")
+        })
+        .collect()
+}
+
+#[test]
+fn setops_match_btreeset_oracle() {
+    let mut rng = SplitMix64::new(0x5E70);
+    for case in 0..30 {
+        let a = random_table(rng.next_below(80) as usize, rng.next_u64());
+        let b = random_table(rng.next_below(80) as usize, rng.next_u64());
+        let (sa, sb) = (row_set(&a), row_set(&b));
+
+        let u = union(&a, &b).unwrap();
+        assert_eq!(row_set(&u), sa.union(&sb).cloned().collect(), "case {case} union");
+        // distinct output: no duplicate rows
+        assert_eq!(u.num_rows(), row_set(&u).len(), "case {case} union distinct");
+
+        let i = intersect(&a, &b).unwrap();
+        assert_eq!(
+            row_set(&i),
+            sa.intersection(&sb).cloned().collect(),
+            "case {case} intersect"
+        );
+        assert_eq!(i.num_rows(), row_set(&i).len());
+
+        let d = difference(&a, &b).unwrap();
+        assert_eq!(
+            row_set(&d),
+            sa.symmetric_difference(&sb).cloned().collect(),
+            "case {case} difference"
+        );
+        assert_eq!(d.num_rows(), row_set(&d).len());
+    }
+}
+
+#[test]
+fn setop_algebraic_invariants() {
+    let mut rng = SplitMix64::new(0xA16EB);
+    for _ in 0..20 {
+        let a = random_table(rng.next_below(60) as usize, rng.next_u64());
+        let b = random_table(rng.next_below(60) as usize, rng.next_u64());
+        let u = union(&a, &b).unwrap();
+        let i = intersect(&a, &b).unwrap();
+        let d = difference(&a, &b).unwrap();
+        // |A ∪ B| = |A ∩ B| + |A Δ B|
+        assert_eq!(u.num_rows(), i.num_rows() + d.num_rows());
+        // commutativity
+        assert_eq!(row_set(&u), row_set(&union(&b, &a).unwrap()));
+        assert_eq!(row_set(&i), row_set(&intersect(&b, &a).unwrap()));
+        assert_eq!(row_set(&d), row_set(&difference(&b, &a).unwrap()));
+        // idempotence / annihilation
+        assert_eq!(row_set(&union(&a, &a).unwrap()), row_set(&a));
+        assert_eq!(difference(&a, &a).unwrap().num_rows(), 0);
+        assert_eq!(row_set(&intersect(&a, &a).unwrap()), row_set(&a));
+    }
+}
+
+#[test]
+fn union_absorbs_intersection() {
+    // (A ∪ B) ∩ A == distinct(A)
+    let mut rng = SplitMix64::new(0xAB50B);
+    for _ in 0..10 {
+        let a = random_table(rng.next_below(50) as usize, rng.next_u64());
+        let b = random_table(rng.next_below(50) as usize, rng.next_u64());
+        let u = union(&a, &b).unwrap();
+        let back = intersect(&u, &a).unwrap();
+        assert_eq!(row_set(&back), row_set(&a));
+    }
+}
