@@ -1,0 +1,73 @@
+"""Golden-fixture half of the cross-language hash contract.
+
+``rust/tests/fixtures/golden_hash.tsv`` pins (key, hash) pairs that the
+native Rust ``hash_i64`` (asserted by ``rust/tests/golden_hash.rs``),
+the pure-jnp oracle (``kernels/ref.py``), and the Pallas kernel
+(``kernels/hash.py``) must all reproduce bit-for-bit. A mismatch means
+distributed joins would route the same key to different workers
+depending on which implementation computed the shuffle's partition ids.
+"""
+
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.hash import hash_keys_pallas
+
+FIXTURE = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust"
+    / "tests"
+    / "fixtures"
+    / "golden_hash.tsv"
+)
+
+
+def load_fixture():
+    pairs = []
+    for line in FIXTURE.read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        key, hexhash = line.split("\t")
+        pairs.append((int(key), int(hexhash, 16)))
+    return pairs
+
+
+def test_fixture_exists_and_is_well_formed():
+    pairs = load_fixture()
+    assert len(pairs) == 11
+    keys = [k for k, _ in pairs]
+    for boundary in (0, 1, -1, 2**63 - 1, -(2**63), 2**31 - 1, 2**31):
+        assert boundary in keys
+
+
+def test_ref_oracle_matches_fixture():
+    pairs = load_fixture()
+    keys = np.array([k for k, _ in pairs], dtype=np.int64)
+    lo, hi = ref.split_keys(keys)
+    got = np.asarray(ref.hash_i64_ref(jnp.asarray(lo), jnp.asarray(hi)))
+    want = np.array([h for _, h in pairs], dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_golden_vectors_equal_fixture():
+    """ref.golden_vectors() (the generator) and the committed file must
+    stay in lockstep — regenerate the fixture if this fails."""
+    assert dict(ref.golden_vectors()) == dict(load_fixture())
+
+
+@pytest.mark.parametrize("tile", [128, 256])
+def test_pallas_kernel_matches_fixture(tile):
+    pairs = load_fixture()
+    keys = np.array([k for k, _ in pairs], dtype=np.int64)
+    want = np.array([h for _, h in pairs], dtype=np.uint32)
+    # The kernel needs n % tile == 0: tile the fixture cyclically.
+    tiled = np.resize(keys, tile)
+    lo, hi = ref.split_keys(tiled)
+    got = np.asarray(hash_keys_pallas(jnp.asarray(lo), jnp.asarray(hi), tile=tile))
+    for i in range(tile):
+        assert got[i] == want[i % len(pairs)], f"key {tiled[i]} at row {i}"

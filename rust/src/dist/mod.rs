@@ -1,0 +1,196 @@
+//! Distributed relational operators (§II-B, Fig. 3) — the layer that
+//! turns the local operators in [`crate::ops`] into cluster-wide ones.
+//!
+//! # The partition → shuffle → local-op contract
+//!
+//! Every distributed operator here is the same three-step composition
+//! the paper builds Cylon from, with **AllToAll as the one network
+//! operator**:
+//!
+//! 1. **Partition** — each worker splits its chunk into `world` parts
+//!    with a routing function that sends *potentially matching* rows to
+//!    the same destination: `hash(key) % world` for joins and group-by
+//!    (the computation the AOT Pallas kernel accelerates, see
+//!    [`crate::runtime`]), the whole-row hash for the set operators,
+//!    and sample-derived key ranges for sort.
+//! 2. **Shuffle** — one [`crate::net::Communicator::all_to_all_tables`]
+//!    superstep routes part `d` to rank `d`; each worker concatenates
+//!    what it received.
+//! 3. **Local op** — the unchanged local operator from [`crate::ops`]
+//!    runs on the shuffled chunk. Because routing colocates all rows
+//!    that can interact, the union of the per-worker outputs equals the
+//!    local operator applied to the concatenated global input.
+//!
+//! Workers are SPMD: every rank must call the same distributed
+//! operators in the same order (collective tags are generation-counted,
+//! so a skipped call on one rank surfaces as a timeout, not a hang).
+//!
+//! ```
+//! use rylon::coordinator::run_workers;
+//! use rylon::net::CommConfig;
+//! use rylon::ops::join::JoinConfig;
+//!
+//! // Three workers, each holding one chunk of both relations: the
+//! // distributed join runs partition → shuffle → local join.
+//! let outs = run_workers(3, &CommConfig::default(), |ctx| {
+//!     let l = rylon::io::generator::paper_table(200, 0.9, 1 + ctx.rank() as u64);
+//!     let r = rylon::io::generator::paper_table(200, 0.9, 9 + ctx.rank() as u64);
+//!     let (joined, stats) =
+//!         rylon::dist::dist_join(ctx, &l, &r, &JoinConfig::inner(0, 0)).unwrap();
+//!     assert!(stats.comm_bytes > 0); // something crossed the wire
+//!     joined.num_rows()
+//! });
+//! let total: usize = outs.iter().sum();
+//! assert!(total > 0);
+//! ```
+
+pub mod ops;
+pub mod shuffle;
+pub mod sort;
+
+pub use ops::{dist_difference, dist_group_by, dist_intersect, dist_join, dist_union};
+pub use shuffle::{shuffle, shuffle_rows, ShuffleStats};
+pub use sort::dist_sort;
+
+/// Per-worker phase breakdown of one distributed operator, mirroring
+/// the BSP superstep structure: partition (local), comm (shuffle wire +
+/// ser/de), local (the relational operator on shuffled data).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpStats {
+    /// Seconds spent computing partition ids and materializing parts.
+    pub partition_secs: f64,
+    /// Seconds in the AllToAll superstep (serialize + wire + concat).
+    pub comm_secs: f64,
+    /// Seconds in the local operator on the shuffled chunk.
+    pub local_secs: f64,
+    /// Bytes received from remote ranks during the shuffle(s).
+    pub comm_bytes: u64,
+    /// Input rows this worker contributed (all relations).
+    pub rows_in: usize,
+    /// Output rows this worker produced.
+    pub rows_out: usize,
+    /// Whether the AOT PJRT kernel computed the partition ids.
+    pub used_kernel: bool,
+}
+
+impl OpStats {
+    /// Aggregate per-worker stats the way a BSP superstep finishes:
+    /// phase times are the **max** across workers (the straggler sets
+    /// the clock), while rows and bytes are summed and `used_kernel`
+    /// is OR-ed.
+    pub fn bsp_max(stats: &[OpStats]) -> OpStats {
+        let mut agg = OpStats::default();
+        for s in stats {
+            agg.partition_secs = agg.partition_secs.max(s.partition_secs);
+            agg.comm_secs = agg.comm_secs.max(s.comm_secs);
+            agg.local_secs = agg.local_secs.max(s.local_secs);
+            agg.comm_bytes += s.comm_bytes;
+            agg.rows_in += s.rows_in;
+            agg.rows_out += s.rows_out;
+            agg.used_kernel |= s.used_kernel;
+        }
+        agg
+    }
+
+    /// Fold one shuffle's phases into this operator's totals
+    /// (rows_in/rows_out are set by the operator itself).
+    pub(crate) fn absorb(&mut self, s: &ShuffleStats) {
+        self.partition_secs += s.partition_secs;
+        self.comm_secs += s.comm_secs;
+        self.comm_bytes += s.comm_bytes;
+        self.used_kernel |= s.used_kernel;
+    }
+}
+
+/// Shared helpers for the dist test suites (unit and integration):
+/// multiset row comparison (order-insensitive equality against local
+/// oracles) and rank-order reassembly of per-worker outputs. Hidden
+/// from docs — this is test support, not API.
+#[doc(hidden)]
+pub mod testutil {
+    use crate::table::pretty::cell_to_string;
+    use crate::table::take::concat_tables;
+    use crate::table::Table;
+    use std::collections::BTreeMap;
+
+    /// Multiset of rows rendered as strings (\u{1}-joined cells).
+    pub fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for r in 0..t.num_rows() {
+            let key = (0..t.num_columns())
+                .map(|c| cell_to_string(t.column(c), r))
+                .collect::<Vec<_>>()
+                .join("\u{1}");
+            *m.entry(key).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Concatenate per-rank outputs in rank order.
+    pub fn gather(tables: Vec<Table>) -> Table {
+        let refs: Vec<&Table> = tables.iter().collect();
+        concat_tables(&refs).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_max_takes_worst_worker_times_and_sums_rows() {
+        let a = OpStats {
+            partition_secs: 1.0,
+            comm_secs: 0.5,
+            local_secs: 2.0,
+            comm_bytes: 10,
+            rows_in: 100,
+            rows_out: 40,
+            used_kernel: false,
+        };
+        let b = OpStats {
+            partition_secs: 0.25,
+            comm_secs: 3.0,
+            local_secs: 0.5,
+            comm_bytes: 7,
+            rows_in: 50,
+            rows_out: 60,
+            used_kernel: true,
+        };
+        let m = OpStats::bsp_max(&[a, b]);
+        assert_eq!(m.partition_secs, 1.0);
+        assert_eq!(m.comm_secs, 3.0);
+        assert_eq!(m.local_secs, 2.0);
+        assert_eq!(m.comm_bytes, 17);
+        assert_eq!(m.rows_in, 150);
+        assert_eq!(m.rows_out, 100);
+        assert!(m.used_kernel);
+    }
+
+    #[test]
+    fn bsp_max_of_empty_is_default() {
+        assert_eq!(OpStats::bsp_max(&[]), OpStats::default());
+    }
+
+    #[test]
+    fn absorb_accumulates_shuffle_phases() {
+        let mut op = OpStats::default();
+        let s = ShuffleStats {
+            used_kernel: true,
+            partition_secs: 0.5,
+            comm_secs: 0.25,
+            comm_bytes: 42,
+            rows_in: 10,
+            rows_out: 12,
+        };
+        op.absorb(&s);
+        op.absorb(&s);
+        assert_eq!(op.partition_secs, 1.0);
+        assert_eq!(op.comm_secs, 0.5);
+        assert_eq!(op.comm_bytes, 84);
+        assert!(op.used_kernel);
+        // rows are the operator's job, not absorb's
+        assert_eq!(op.rows_in, 0);
+        assert_eq!(op.rows_out, 0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Distributed join / set operators / group-by: a shuffle per input
+//! relation, then the unchanged local operator from [`crate::ops`].
+//!
+//! Correctness rests on one property of the routing functions: rows
+//! that can interact (equal join keys, identical rows, equal group
+//! keys) always land on the same rank, and every input row lands on
+//! exactly one rank. Per-rank local results therefore compose into the
+//! global result by concatenation — `tests/integration_dist.rs` checks
+//! this against local oracles for every operator and world size.
+
+use super::shuffle::{shuffle, shuffle_rows};
+use super::OpStats;
+use crate::ctx::CylonContext;
+use crate::error::{Error, Result};
+use crate::ops::aggregate::{group_by_partial, merge_partials, AggFn, AggSpec};
+use crate::ops::join::{join, JoinConfig};
+use crate::ops::{difference, intersect, union};
+use crate::table::Table;
+use std::time::Instant;
+
+/// Distributed join (§II-B3): key-shuffle both relations on their join
+/// columns, then the local [`crate::ops::join::join`] per rank. Null
+/// keys are routed consistently (all to one rank) and obey SQL
+/// semantics there — they never match, but still surface in outer
+/// results exactly once.
+pub fn dist_join(
+    ctx: &mut CylonContext,
+    left: &Table,
+    right: &Table,
+    cfg: &JoinConfig,
+) -> Result<(Table, OpStats)> {
+    if cfg.left_col >= left.num_columns() || cfg.right_col >= right.num_columns() {
+        return Err(Error::invalid("join column out of range"));
+    }
+    let mut stats = OpStats {
+        rows_in: left.num_rows() + right.num_rows(),
+        ..OpStats::default()
+    };
+    let (lshuf, ls) = shuffle(ctx, left, cfg.left_col)?;
+    stats.absorb(&ls);
+    let (rshuf, rs) = shuffle(ctx, right, cfg.right_col)?;
+    stats.absorb(&rs);
+    let t0 = Instant::now();
+    let out = join(&lshuf, &rshuf, cfg)?;
+    stats.local_secs = t0.elapsed().as_secs_f64();
+    stats.rows_out = out.num_rows();
+    Ok((out, stats))
+}
+
+/// Shared shape of the three set operators: row-shuffle both sides,
+/// apply the local operator to the colocated partitions.
+fn dist_setop(
+    ctx: &mut CylonContext,
+    a: &Table,
+    b: &Table,
+    op: fn(&Table, &Table) -> Result<Table>,
+    what: &str,
+) -> Result<(Table, OpStats)> {
+    if !a.schema_equals(b) {
+        return Err(Error::schema(format!(
+            "distributed {what} of schema-incompatible tables"
+        )));
+    }
+    let mut stats = OpStats {
+        rows_in: a.num_rows() + b.num_rows(),
+        ..OpStats::default()
+    };
+    let (ashuf, astats) = shuffle_rows(ctx, a)?;
+    stats.absorb(&astats);
+    let (bshuf, bstats) = shuffle_rows(ctx, b)?;
+    stats.absorb(&bstats);
+    let t0 = Instant::now();
+    let out = op(&ashuf, &bshuf)?;
+    stats.local_secs = t0.elapsed().as_secs_f64();
+    stats.rows_out = out.num_rows();
+    Ok((out, stats))
+}
+
+/// Distributed union-distinct (§II-B4). Identical rows hash to one
+/// rank, so per-rank `distinct` is globally distinct.
+pub fn dist_union(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
+    dist_setop(ctx, a, b, union, "union")
+}
+
+/// Distributed intersect (§II-B5).
+pub fn dist_intersect(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
+    dist_setop(ctx, a, b, intersect, "intersect")
+}
+
+/// Distributed symmetric difference (§II-B6, the paper's Difference).
+pub fn dist_difference(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
+    dist_setop(ctx, a, b, difference, "difference")
+}
+
+/// Distributed group-by: the two-phase plan. Workers pre-aggregate
+/// into mergeable partial states, key-shuffle the (much smaller)
+/// partials, and merge — the design whose payoff the `groupby` bench
+/// ablates.
+pub fn dist_group_by(
+    ctx: &mut CylonContext,
+    t: &Table,
+    key_col: usize,
+    aggs: &[AggSpec],
+) -> Result<(Table, OpStats)> {
+    let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
+    let t0 = Instant::now();
+    let partial = group_by_partial(t, key_col, aggs)?;
+    let mut local_secs = t0.elapsed().as_secs_f64();
+    // The partial table's key is column 0 by construction.
+    let (shuffled, sstats) = shuffle(ctx, &partial, 0)?;
+    stats.absorb(&sstats);
+    let funcs: Vec<AggFn> = aggs.iter().map(|s| s.func).collect();
+    let t1 = Instant::now();
+    let out = merge_partials(&shuffled, &funcs)?;
+    local_secs += t1.elapsed().as_secs_f64();
+    stats.local_secs = local_secs;
+    stats.rows_out = out.num_rows();
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_workers;
+    use crate::dist::testutil::{gather, row_multiset};
+    use crate::io::generator::{random_table, worker_partition};
+    use crate::net::CommConfig;
+    use crate::ops::aggregate::group_by;
+    use crate::ops::join::nested_loop_join;
+
+    #[test]
+    fn join_matches_local_oracle() {
+        let world = 3;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let l = random_table(30, 0x11 + ctx.rank() as u64);
+            let r = random_table(30, 0x22 + ctx.rank() as u64);
+            let (j, stats) = dist_join(ctx, &l, &r, &JoinConfig::inner(0, 0)).unwrap();
+            assert_eq!(stats.rows_in, 60);
+            (l, r, j)
+        });
+        let gl = gather(outs.iter().map(|o| o.0.clone()).collect());
+        let gr = gather(outs.iter().map(|o| o.1.clone()).collect());
+        let got = gather(outs.into_iter().map(|o| o.2).collect());
+        let want = nested_loop_join(&gl, &gr, &JoinConfig::inner(0, 0)).unwrap();
+        assert_eq!(row_multiset(&got), row_multiset(&want));
+    }
+
+    #[test]
+    fn setops_match_local_oracles() {
+        let world = 2;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let a = random_table(40, 0x33 + ctx.rank() as u64);
+            let b = random_table(40, 0x44 + ctx.rank() as u64);
+            let u = dist_union(ctx, &a, &b).unwrap().0;
+            let i = dist_intersect(ctx, &a, &b).unwrap().0;
+            let d = dist_difference(ctx, &a, &b).unwrap().0;
+            (a, b, u, i, d)
+        });
+        let ga = gather(outs.iter().map(|o| o.0.clone()).collect());
+        let gb = gather(outs.iter().map(|o| o.1.clone()).collect());
+        let gu = gather(outs.iter().map(|o| o.2.clone()).collect());
+        let gi = gather(outs.iter().map(|o| o.3.clone()).collect());
+        let gd = gather(outs.into_iter().map(|o| o.4).collect());
+        assert_eq!(row_multiset(&gu), row_multiset(&union(&ga, &gb).unwrap()));
+        assert_eq!(row_multiset(&gi), row_multiset(&intersect(&ga, &gb).unwrap()));
+        assert_eq!(row_multiset(&gd), row_multiset(&difference(&ga, &gb).unwrap()));
+    }
+
+    #[test]
+    fn group_by_matches_local_on_count_min_max() {
+        let world = 3;
+        let total = 900;
+        let aggs = [
+            AggSpec::new(AggFn::Count, 1),
+            AggSpec::new(AggFn::Min, 1),
+            AggSpec::new(AggFn::Max, 1),
+        ];
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let t = worker_partition(total, ctx.world(), ctx.rank(), 0.05, 0x77);
+            (t.clone(), dist_group_by(ctx, &t, 0, &aggs).unwrap().0)
+        });
+        let global = gather(outs.iter().map(|o| o.0.clone()).collect());
+        let got = gather(outs.into_iter().map(|o| o.1).collect());
+        let want = group_by(&global, 0, &aggs).unwrap();
+        // Count/min/max are order-independent, so exact equality holds.
+        assert_eq!(row_multiset(&got), row_multiset(&want));
+    }
+
+    #[test]
+    fn schema_mismatch_rejected_before_comm() {
+        let mut ctx = CylonContext::init_local();
+        let a = random_table(5, 1);
+        let b = crate::table::Table::from_arrays(vec![(
+            "x",
+            crate::table::Array::from_i64(vec![1]),
+        )])
+        .unwrap();
+        assert!(dist_union(&mut ctx, &a, &b).is_err());
+        assert!(dist_intersect(&mut ctx, &a, &b).is_err());
+        assert!(dist_difference(&mut ctx, &a, &b).is_err());
+    }
+
+    #[test]
+    fn join_bad_columns_rejected() {
+        let mut ctx = CylonContext::init_local();
+        let t = random_table(5, 2);
+        assert!(dist_join(&mut ctx, &t, &t, &JoinConfig::inner(99, 0)).is_err());
+        assert!(dist_join(&mut ctx, &t, &t, &JoinConfig::inner(0, 99)).is_err());
+    }
+
+    #[test]
+    fn world_one_equals_local_everywhere() {
+        let mut ctx = CylonContext::init_local();
+        let a = random_table(25, 3);
+        let b = random_table(25, 4);
+        let (j, _) = dist_join(&mut ctx, &a, &b, &JoinConfig::full_outer(0, 0)).unwrap();
+        let want = nested_loop_join(&a, &b, &JoinConfig::full_outer(0, 0)).unwrap();
+        assert_eq!(row_multiset(&j), row_multiset(&want));
+        let (u, _) = dist_union(&mut ctx, &a, &b).unwrap();
+        assert!(u.data_equals(&union(&a, &b).unwrap()));
+    }
+}

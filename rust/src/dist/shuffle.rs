@@ -1,0 +1,217 @@
+//! Shuffle — the partition + AllToAll half of every distributed
+//! operator (Fig. 3's "HashPartition → AllToAll" pipeline).
+//!
+//! Two routing modes, matching [`crate::ops::partition`]:
+//!
+//! * **by key column** ([`shuffle`]) — `hash(key) % world`, used by
+//!   join / group-by. When the context carries an AOT
+//!   [`crate::runtime::KernelRuntime`] and the key column is
+//!   null-free int64, partition ids come from the PJRT kernel; the
+//!   native path is the bit-identical fallback, so routing never
+//!   depends on which path ran.
+//! * **by whole row** ([`shuffle_rows`]) — the row-identity hash of
+//!   §II-B4, used by Union/Intersect/Difference.
+//!
+//! Invariants (property-tested in `tests/integration_dist.rs` and the
+//! unit tests below):
+//!
+//! * **row conservation** — the multiset of all workers' output rows
+//!   equals the multiset of all input rows, for any world size;
+//! * **determinism** — routing is a pure function of cell values, so
+//!   re-running a shuffle reproduces identical per-rank tables;
+//! * **key locality** — after a key shuffle, every row on rank `r`
+//!   satisfies `hash(key) % world == r` (equal keys are colocated).
+
+use crate::ctx::CylonContext;
+use crate::error::{Error, Result};
+use crate::ops::partition::{partition_by_ids, partition_ids_by_key, partition_ids_by_row};
+use crate::table::{Array, Table};
+use std::time::Instant;
+
+/// Phase breakdown of one shuffle on one worker.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShuffleStats {
+    /// Whether the AOT PJRT kernel computed the partition ids.
+    pub used_kernel: bool,
+    /// Seconds computing partition ids + materializing the parts.
+    pub partition_secs: f64,
+    /// Seconds in AllToAll + concat (serialize, wire, deserialize).
+    pub comm_secs: f64,
+    /// Bytes received from remote ranks.
+    pub comm_bytes: u64,
+    /// Rows this worker contributed.
+    pub rows_in: usize,
+    /// Rows this worker holds after the shuffle.
+    pub rows_out: usize,
+}
+
+/// Routing mode.
+enum Routing {
+    /// `hash(column cell) % world`.
+    Key(usize),
+    /// `hash(whole row) % world`.
+    Row,
+}
+
+fn shuffle_with(
+    ctx: &mut CylonContext,
+    t: &Table,
+    routing: Routing,
+) -> Result<(Table, ShuffleStats)> {
+    let world = ctx.world();
+    let mut stats = ShuffleStats { rows_in: t.num_rows(), ..ShuffleStats::default() };
+
+    // Partition phase: ids, then one take per column per part.
+    let t0 = Instant::now();
+    let ids: Vec<u32> = match routing {
+        Routing::Key(col) => {
+            if col >= t.num_columns() {
+                return Err(Error::invalid(format!(
+                    "shuffle key column {col} out of range for {} columns",
+                    t.num_columns()
+                )));
+            }
+            match (ctx.runtime(), t.column(col).as_ref()) {
+                // AOT hot path: null-free int64 keys through the PJRT
+                // artifact (bit-identical to the native fallback).
+                (Some(rt), Array::Int64(keys)) if keys.null_count() == 0 => {
+                    let ids = rt.hash_partition_ids(keys.values(), world as u32)?;
+                    stats.used_kernel = true;
+                    ids
+                }
+                _ => partition_ids_by_key(t, col, world)?,
+            }
+        }
+        Routing::Row => partition_ids_by_row(t, world)?,
+    };
+    let parts = partition_by_ids(t, &ids, world)?;
+    stats.partition_secs = t0.elapsed().as_secs_f64();
+
+    // Comm superstep: AllToAll the parts, concat what we received.
+    let t1 = Instant::now();
+    let comm = ctx.communicator();
+    let bytes_before = comm.comm_bytes();
+    let out = comm.shuffle_tables(parts)?;
+    stats.comm_bytes = comm.comm_bytes() - bytes_before;
+    stats.comm_secs = t1.elapsed().as_secs_f64();
+    stats.rows_out = out.num_rows();
+    Ok((out, stats))
+}
+
+/// Hash-shuffle `t` on `key_col`: every worker ends with the rows whose
+/// key hashes to its rank. The building block of [`super::dist_join`]
+/// and [`super::dist_group_by`].
+pub fn shuffle(ctx: &mut CylonContext, t: &Table, key_col: usize) -> Result<(Table, ShuffleStats)> {
+    shuffle_with(ctx, t, Routing::Key(key_col))
+}
+
+/// Row-identity shuffle: identical rows (across all columns, nulls and
+/// NaNs included) are colocated. The building block of the distributed
+/// set operators.
+pub fn shuffle_rows(ctx: &mut CylonContext, t: &Table) -> Result<(Table, ShuffleStats)> {
+    shuffle_with(ctx, t, Routing::Row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_workers;
+    use crate::dist::testutil::{gather, row_multiset};
+    use crate::io::generator::{paper_table, random_table};
+    use crate::net::CommConfig;
+    use crate::ops::hash::{hash_i64, hash_row};
+
+    #[test]
+    fn conserves_rows_for_all_world_sizes() {
+        for world in [1usize, 2, 3, 5] {
+            let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                let t = random_table(40, 0xA11 + ctx.rank() as u64);
+                let (out, stats) = shuffle(ctx, &t, 0).unwrap();
+                assert_eq!(stats.rows_in, 40);
+                assert_eq!(stats.rows_out, out.num_rows());
+                (t, out)
+            });
+            let ins: Vec<Table> = outs.iter().map(|(i, _)| i.clone()).collect();
+            let shuffled: Vec<Table> = outs.into_iter().map(|(_, o)| o).collect();
+            assert_eq!(
+                row_multiset(&gather(ins)),
+                row_multiset(&gather(shuffled)),
+                "world={world}"
+            );
+        }
+    }
+
+    #[test]
+    fn key_locality_after_shuffle() {
+        let world = 4;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let t = paper_table(300, 1.0, 7 + ctx.rank() as u64);
+            (ctx.rank(), shuffle(ctx, &t, 0).unwrap().0)
+        });
+        for (rank, t) in outs {
+            let keys = t.column(0).as_i64().unwrap();
+            for i in 0..t.num_rows() {
+                assert_eq!(hash_i64(keys.value(i)) % world as u32, rank as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn row_shuffle_colocates_duplicates() {
+        let world = 3;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            // low-cardinality random tables => duplicates across ranks
+            let t = random_table(60, 0xD0 + ctx.rank() as u64);
+            (ctx.rank(), shuffle_rows(ctx, &t).unwrap().0)
+        });
+        for (rank, t) in outs {
+            for r in 0..t.num_rows() {
+                assert_eq!(hash_row(&t, r) as usize % world, rank);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            run_workers(3, &CommConfig::default(), |ctx| {
+                let t = random_table(80, 0x5EED + ctx.rank() as u64);
+                shuffle(ctx, &t, 0).unwrap().0
+            })
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.data_equals(y));
+        }
+    }
+
+    #[test]
+    fn single_worker_shuffle_is_identity() {
+        let mut ctx = CylonContext::init_local();
+        let t = paper_table(50, 1.0, 3);
+        let (out, stats) = shuffle(&mut ctx, &t, 0).unwrap();
+        assert!(out.data_equals(&t));
+        assert_eq!(stats.comm_bytes, 0); // self part never hits the wire
+        assert!(!stats.used_kernel);
+    }
+
+    #[test]
+    fn remote_bytes_counted() {
+        let outs = run_workers(2, &CommConfig::default(), |ctx| {
+            let t = paper_table(100, 1.0, 11 + ctx.rank() as u64);
+            shuffle(ctx, &t, 0).unwrap().1
+        });
+        for stats in outs {
+            // one remote message with a table header at minimum
+            assert!(stats.comm_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn bad_key_column_rejected() {
+        let mut ctx = CylonContext::init_local();
+        let t = paper_table(10, 1.0, 1);
+        assert!(shuffle(&mut ctx, &t, 99).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Distributed sort — sample-based range partitioning + local sort.
+//!
+//! Hash routing (the other operators' shuffle) destroys order, so sort
+//! uses the classic sample-sort plan instead:
+//!
+//! 1. every worker draws ≤[`SAMPLES_PER_WORKER`] evenly-spaced keys
+//!    from its chunk and AllGathers them (tiny messages — α-dominated);
+//! 2. the pooled sample is sorted and `world - 1` splitters are drawn
+//!    at even quantiles, identically on every rank (same input ⇒ same
+//!    splitters, no broadcast needed);
+//! 3. rows route to the partition whose key range contains them
+//!    (`id = #splitters ≤ key`), one AllToAll moves them, and each
+//!    worker sorts its range locally.
+//!
+//! Afterwards rank `r` holds the `r`-th global key range in sorted
+//! order: concatenating outputs by rank yields the totally sorted
+//! table. Nulls sort first, matching the local sort's null-first
+//! order: every null key routes to one rank — rank 0 usually, since
+//! nulls compare `Less` to valid splitters, or rank `k` when the
+//! column is null-heavy enough that the sorted sample's first `k`
+//! splitters are themselves null. Either way null rows route
+//! identically and the concatenated output stays totally ordered.
+
+use super::OpStats;
+use crate::ctx::CylonContext;
+use crate::error::{Error, Result};
+use crate::net::serialize::{deserialize_table, serialize_table};
+use crate::ops::partition::partition_by_ids;
+use crate::ops::project::project;
+use crate::ops::sort::{cmp_cells_across, sort};
+use crate::table::take::{concat_tables, take_table};
+use crate::table::Table;
+use std::cmp::Ordering;
+use std::time::Instant;
+
+/// Upper bound on sampled keys per worker. 64 splitter candidates per
+/// rank keeps partition skew low while the sample AllGather stays a
+/// few hundred bytes.
+pub const SAMPLES_PER_WORKER: usize = 64;
+
+/// Distributed sort of `t` by `col`. Returns this rank's globally
+/// range-partitioned, locally sorted slice.
+pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table, OpStats)> {
+    if col >= t.num_columns() {
+        return Err(Error::invalid(format!(
+            "sort column {col} out of range for {} columns",
+            t.num_columns()
+        )));
+    }
+    let world = ctx.world();
+    let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
+    if world == 1 {
+        let t0 = Instant::now();
+        let out = sort(t, col)?;
+        stats.local_secs = t0.elapsed().as_secs_f64();
+        stats.rows_out = out.num_rows();
+        return Ok((out, stats));
+    }
+
+    // 1. Local sample of the key column (as a single-column table so
+    //    the wire format carries any key type).
+    let t0 = Instant::now();
+    let key_only = project(t, &[col])?;
+    let n = t.num_rows();
+    let sample_rows: Vec<usize> = if n == 0 {
+        Vec::new()
+    } else {
+        let step = n.div_ceil(SAMPLES_PER_WORKER).max(1);
+        (0..n).step_by(step).collect()
+    };
+    let local_sample = take_table(&key_only, &sample_rows);
+    let mut partition_secs = t0.elapsed().as_secs_f64();
+
+    // 2. Pool samples on every rank.
+    let t1 = Instant::now();
+    let comm = ctx.communicator();
+    let bytes_before = comm.comm_bytes();
+    let blobs = comm.all_gather_bytes(serialize_table(&local_sample))?;
+    let mut comm_secs = t1.elapsed().as_secs_f64();
+
+    let t2 = Instant::now();
+    let mut gathered: Vec<Table> = Vec::with_capacity(blobs.len());
+    for b in &blobs {
+        gathered.push(deserialize_table(b)?);
+    }
+    let refs: Vec<&Table> = gathered.iter().collect();
+    let pooled = sort(&concat_tables(&refs)?, 0)?;
+    let pooled_rows = pooled.num_rows();
+    let splitters = if pooled_rows == 0 {
+        // Globally empty input: everything (nothing) routes to rank 0.
+        pooled.clone()
+    } else {
+        let idxs: Vec<usize> = (1..world)
+            .map(|w| (w * pooled_rows / world).min(pooled_rows - 1))
+            .collect();
+        take_table(&pooled, &idxs)
+    };
+
+    // 3. Range-partition: id = number of splitters <= key (binary
+    //    search over the sorted splitter column; nulls sort first).
+    let key = t.column(col).as_ref();
+    let sk = splitters.column(0).as_ref();
+    let nsplit = splitters.num_rows();
+    let mut ids: Vec<u32> = Vec::with_capacity(n);
+    for row in 0..n {
+        let mut lo = 0usize;
+        let mut hi = nsplit;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cmp_cells_across(sk, mid, key, row) != Ordering::Greater {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        ids.push(lo as u32);
+    }
+    let parts = partition_by_ids(t, &ids, world)?;
+    partition_secs += t2.elapsed().as_secs_f64();
+
+    // 4. Shuffle ranges into place and sort locally.
+    let t3 = Instant::now();
+    let comm = ctx.communicator();
+    let merged = comm.shuffle_tables(parts)?;
+    stats.comm_bytes = comm.comm_bytes() - bytes_before;
+    comm_secs += t3.elapsed().as_secs_f64();
+
+    let t4 = Instant::now();
+    let out = sort(&merged, col)?;
+    stats.local_secs = t4.elapsed().as_secs_f64();
+    stats.partition_secs = partition_secs;
+    stats.comm_secs = comm_secs;
+    stats.rows_out = out.num_rows();
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_workers;
+    use crate::dist::testutil::{gather, row_multiset};
+    use crate::io::generator::{paper_table, random_table};
+    use crate::net::CommConfig;
+    use crate::ops::sort::is_sorted;
+
+    #[test]
+    fn globally_sorted_and_row_conserving() {
+        for world in [2usize, 4] {
+            let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                let t = paper_table(250, 1.0, 0xBEE + ctx.rank() as u64);
+                let (sorted, stats) = dist_sort(ctx, &t, 0).unwrap();
+                assert!(is_sorted(&sorted, 0), "locally sorted");
+                assert_eq!(stats.rows_in, 250);
+                (t, sorted)
+            });
+            let ins: Vec<Table> = outs.iter().map(|(i, _)| i.clone()).collect();
+            let sorted: Vec<Table> = outs.into_iter().map(|(_, s)| s).collect();
+            let global = gather(sorted);
+            assert!(is_sorted(&global, 0), "world={world}: rank ranges in order");
+            assert_eq!(
+                row_multiset(&gather(ins)),
+                row_multiset(&global),
+                "world={world}: rows conserved"
+            );
+        }
+    }
+
+    #[test]
+    fn handles_nulls_and_mixed_types() {
+        // random_table's key column has nulls; they must all land in
+        // the first range and sort before every valid key.
+        let world = 3;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let t = random_table(120, 0xA0 + ctx.rank() as u64);
+            dist_sort(ctx, &t, 0).unwrap().0
+        });
+        let global = gather(outs);
+        assert!(is_sorted(&global, 0));
+    }
+
+    #[test]
+    fn sorts_string_keys() {
+        let world = 2;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let t = random_table(80, 0x57 + ctx.rank() as u64);
+            // column 2 is the utf8 column
+            dist_sort(ctx, &t, 2).unwrap().0
+        });
+        let global = gather(outs);
+        assert!(is_sorted(&global, 2));
+    }
+
+    #[test]
+    fn empty_chunks_are_fine() {
+        let world = 3;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            // only rank 1 holds data
+            let rows = if ctx.rank() == 1 { 90 } else { 0 };
+            let t = paper_table(rows, 1.0, 5);
+            dist_sort(ctx, &t, 0).unwrap().0
+        });
+        let global = gather(outs);
+        assert_eq!(global.num_rows(), 90);
+        assert!(is_sorted(&global, 0));
+    }
+
+    #[test]
+    fn world_one_is_local_sort() {
+        let mut ctx = CylonContext::init_local();
+        let t = paper_table(100, 1.0, 9);
+        let (out, stats) = dist_sort(&mut ctx, &t, 0).unwrap();
+        assert!(out.data_equals(&sort(&t, 0).unwrap()));
+        assert_eq!(stats.comm_bytes, 0);
+    }
+
+    #[test]
+    fn bad_column_rejected() {
+        let mut ctx = CylonContext::init_local();
+        let t = paper_table(10, 1.0, 1);
+        assert!(dist_sort(&mut ctx, &t, 42).is_err());
+    }
+}

@@ -27,7 +27,10 @@
 //! let right = rylon::io::generator::uniform_table(1000, 4, 0.9, 43);
 //! let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash);
 //! let joined = rylon::ops::join::join(&left, &right, &cfg).unwrap();
-//! assert!(joined.num_columns() == left.num_columns() + right.num_columns() - 0);
+//! // Both key columns are kept (the right one renamed `c0_r`), so the
+//! // output is exactly the two schemas side by side.
+//! assert_eq!(joined.num_columns(), left.num_columns() + right.num_columns());
+//! assert_eq!(joined.schema().field(left.num_columns()).name, "c0_r");
 //! ```
 
 pub mod api;

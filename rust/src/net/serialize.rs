@@ -343,4 +343,63 @@ mod tests {
         let ratio = big as f64 / small as f64;
         assert!(ratio > 8.0 && ratio < 12.0, "ratio={ratio}");
     }
+
+    #[test]
+    fn roundtrip_all_null_columns() {
+        // 70 rows so the validity bitmap crosses the 64-bit word
+        // boundary with a trailing partial word.
+        let rows = 70;
+        let t = Table::from_arrays(vec![
+            ("i", Array::from_i64_opts(vec![None; rows])),
+            ("f", Array::from_f64_opts(vec![None; rows])),
+            (
+                "s",
+                Array::Utf8(crate::table::column::Utf8Array::from_options(
+                    &vec![None::<&str>; rows],
+                )),
+            ),
+        ])
+        .unwrap();
+        let r = deserialize_table(&serialize_table(&t)).unwrap();
+        assert!(t.data_equals(&r));
+        assert_eq!(t.schema(), r.schema());
+        for c in 0..r.num_columns() {
+            assert_eq!(r.column(c).null_count(), rows, "column {c}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_empty_table_keeps_validity_and_schema() {
+        // Zero rows but validity-carrying columns: the wire format must
+        // carry the empty bitmap without tripping its truncation guards.
+        let t = Table::from_arrays(vec![
+            ("i", Array::from_i64_opts(vec![])),
+            ("s", Array::from_strs::<&str>(&[])),
+        ])
+        .unwrap();
+        let r = deserialize_table(&serialize_table(&t)).unwrap();
+        assert_eq!(r.num_rows(), 0);
+        assert_eq!(t.schema(), r.schema());
+        assert!(t.data_equals(&r));
+    }
+
+    #[test]
+    fn roundtrip_preserves_row_order_and_null_positions() {
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64_opts(vec![Some(5), None, Some(3), None, Some(1)])),
+            ("s", Array::from_strs(&["e", "d", "c", "b", "a"])),
+        ])
+        .unwrap();
+        let r = deserialize_table(&serialize_table(&t)).unwrap();
+        let k = r.column(0).as_i64().unwrap();
+        assert_eq!(
+            (0..5).map(|i| k.get(i)).collect::<Vec<_>>(),
+            vec![Some(5), None, Some(3), None, Some(1)]
+        );
+        let s = r.column(1).as_utf8().unwrap();
+        assert_eq!(
+            (0..5).map(|i| s.value(i)).collect::<Vec<_>>(),
+            vec!["e", "d", "c", "b", "a"]
+        );
+    }
 }

@@ -202,4 +202,97 @@ mod tests {
         let r = Bitmap::from_words(b.words().to_vec(), b.len());
         assert_eq!(b, r);
     }
+
+    #[test]
+    fn bit_zero_is_addressable() {
+        let mut b = Bitmap::new_null(1);
+        assert!(!b.get(0));
+        b.set(0, true);
+        assert!(b.get(0));
+        assert_eq!(b.words(), &[1u64]);
+        b.set(0, false);
+        assert_eq!(b.count_valid(), 0);
+    }
+
+    #[test]
+    fn word_boundary_63_64_is_independent() {
+        // Bits 63 and 64 live in different words; toggling one must
+        // never disturb the other.
+        let mut b = Bitmap::new_null(130);
+        b.set(63, true);
+        assert!(b.get(63) && !b.get(64));
+        b.set(64, true);
+        assert!(b.get(63) && b.get(64));
+        b.set(63, false);
+        assert!(!b.get(63) && b.get(64));
+        assert_eq!(b.words()[0], 0);
+        assert_eq!(b.words()[1], 1);
+    }
+
+    #[test]
+    fn push_across_word_boundary() {
+        let mut b = Bitmap::new_null(0);
+        for i in 0..64 {
+            b.push(i == 63);
+        }
+        assert_eq!(b.words().len(), 1);
+        b.push(true); // bit 64 — must allocate a second word
+        assert_eq!(b.len(), 65);
+        assert_eq!(b.words().len(), 2);
+        assert!(b.get(63) && b.get(64));
+        assert_eq!(b.count_valid(), 2);
+    }
+
+    #[test]
+    fn trailing_partial_word_is_masked_everywhere() {
+        // len 70: word 1 holds only 6 live bits; constructors and
+        // from_words must keep the dead tail zeroed so count_valid and
+        // wire round-trips stay exact.
+        let b = Bitmap::new_valid(70);
+        assert_eq!(b.words()[1], (1u64 << 6) - 1);
+        assert_eq!(b.count_valid(), 70);
+        // from_words with a dirty tail must re-mask it.
+        let r = Bitmap::from_words(vec![u64::MAX, u64::MAX], 70);
+        assert_eq!(r.count_valid(), 70);
+        assert_eq!(r.words()[1], (1u64 << 6) - 1);
+        // ... and with too many / too few words, resize to fit.
+        let extra = Bitmap::from_words(vec![u64::MAX; 5], 70);
+        assert_eq!(extra.words().len(), 2);
+        assert_eq!(extra.count_valid(), 70);
+        let short = Bitmap::from_words(vec![u64::MAX], 70);
+        assert_eq!(short.words().len(), 2);
+        assert_eq!(short.count_valid(), 64);
+        assert!(!short.get(69));
+    }
+
+    #[test]
+    fn take_and_concat_across_boundaries() {
+        let mut b = Bitmap::new_null(128);
+        b.set(0, true);
+        b.set(63, true);
+        b.set(64, true);
+        b.set(127, true);
+        let t = b.take(&[0, 62, 63, 64, 127]);
+        assert_eq!(
+            (0..5).map(|i| t.get(i)).collect::<Vec<_>>(),
+            vec![true, false, true, true, true]
+        );
+        // Concat that lands the second bitmap astride a word boundary.
+        let a = Bitmap::from_bools(&[true; 63]);
+        let c = a.concat(&Bitmap::from_bools(&[false, true, true]));
+        assert_eq!(c.len(), 66);
+        assert!(c.get(62) && !c.get(63) && c.get(64) && c.get(65));
+        assert_eq!(c.count_valid(), 65);
+    }
+
+    #[test]
+    fn empty_bitmap_edge() {
+        let b = Bitmap::new_null(0);
+        assert!(b.is_empty());
+        assert_eq!(b.words().len(), 0);
+        assert_eq!(b.count_valid(), 0);
+        let v = Bitmap::new_valid(0);
+        assert_eq!(v.count_null(), 0);
+        assert_eq!(Bitmap::from_words(vec![], 0), b);
+    }
 }

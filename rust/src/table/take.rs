@@ -267,6 +267,76 @@ mod tests {
     }
 
     #[test]
+    fn concat_of_zero_tables_is_an_error() {
+        assert!(matches!(
+            concat_tables(&[]),
+            Err(crate::error::Error::Invalid(_))
+        ));
+        assert!(concat_arrays(&[]).is_err());
+    }
+
+    #[test]
+    fn concat_rejects_column_count_mismatch() {
+        let a = t(); // 2 columns
+        let wide = Table::from_arrays(vec![
+            ("a", Array::from_i64(vec![1])),
+            ("s", Array::from_strs(&["x"])),
+            ("extra", Array::from_f64(vec![0.0])),
+        ])
+        .unwrap();
+        assert!(matches!(
+            concat_tables(&[&a, &wide]),
+            Err(crate::error::Error::SchemaMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn concat_rejects_same_arity_different_types() {
+        let a = t(); // (int64, utf8)
+        let b = Table::from_arrays(vec![
+            ("a", Array::from_i64(vec![1])),
+            ("s", Array::from_f64(vec![2.0])), // utf8 vs float64
+        ])
+        .unwrap();
+        assert!(matches!(
+            concat_tables(&[&a, &b]),
+            Err(crate::error::Error::SchemaMismatch(_))
+        ));
+        // The mismatch is positional: swapped column order fails too.
+        let swapped = Table::from_arrays(vec![
+            ("s", Array::from_strs(&["x"])),
+            ("a", Array::from_i64(vec![1])),
+        ])
+        .unwrap();
+        assert!(concat_tables(&[&a, &swapped]).is_err());
+    }
+
+    #[test]
+    fn concat_accepts_renamed_columns_and_keeps_first_schema() {
+        // Schema equality is type-level (the paper's "homogeneous
+        // tables"); names come from the first table.
+        let a = t();
+        let renamed = Table::from_arrays(vec![
+            ("other", Array::from_i64(vec![7])),
+            ("name", Array::from_strs(&["y"])),
+        ])
+        .unwrap();
+        let c = concat_tables(&[&a, &renamed]).unwrap();
+        assert_eq!(c.num_rows(), 5);
+        assert_eq!(c.schema().field(0).name, "a");
+        assert_eq!(c.column(0).as_i64().unwrap().get(4), Some(7));
+    }
+
+    #[test]
+    fn concat_preserves_row_order_across_parts() {
+        let x = Table::from_arrays(vec![("k", Array::from_i64(vec![1, 2]))]).unwrap();
+        let y = Table::from_arrays(vec![("k", Array::from_i64(vec![3]))]).unwrap();
+        let z = Table::from_arrays(vec![("k", Array::from_i64(vec![4, 5]))]).unwrap();
+        let c = concat_tables(&[&x, &y, &z]).unwrap();
+        assert_eq!(c.column(0).as_i64().unwrap().values(), &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
     fn concat_no_nulls_skips_bitmap() {
         let x = Array::from_i64(vec![1, 2]);
         let y = Array::from_i64(vec![3]);

@@ -1,6 +1,8 @@
 //! Cross-layer bit-exactness: the native Rust hash must equal the
-//! JAX/Pallas reference (`python/compile/kernels/ref.py`) on pinned
-//! golden vectors. Regenerate with `python -m compile.kernels.ref`.
+//! JAX/Pallas reference (`python/compile/kernels/ref.py`) on the pinned
+//! golden fixture `tests/fixtures/golden_hash.tsv`, which
+//! `python/tests/test_golden_hash.py` asserts against the Python side
+//! of the contract. Regenerate with `python -m compile.kernels.ref`.
 //!
 //! If this test fails, the routing contract between the AOT artifact
 //! and the native fallback is broken — distributed joins would route
@@ -8,28 +10,44 @@
 
 use rylon::ops::hash::hash_i64;
 
-/// (key, fmix32-based hash) pairs emitted by ref.py.
-const GOLDEN: &[(i64, u32)] = &[
-    (0, 0x00000000),
-    (1, 0x514e28b7),
-    (-1, 0xce2d4699),
-    (42, 0x087fcd5c),
-    (-42, 0x6365c8fd),
-    (2147483647, 0xf9cc0ea8),
-    (2147483648, 0x6d3c65a0),
-    (9223372036854775807, 0xc17a5544),
-    (-9223372036854775808, 0x2390fe25),
-    (81985529216486895, 0x5f5ab57b),
-    (-81985529216486895, 0xa83fb934),
-];
+/// The committed fixture, shared verbatim with the Python tests.
+const FIXTURE: &str = include_str!("fixtures/golden_hash.tsv");
+
+/// Parse `key<TAB>hex` lines, skipping comments and blanks.
+fn golden_pairs() -> Vec<(i64, u32)> {
+    FIXTURE
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|l| {
+            let (k, h) = l.split_once('\t').expect("fixture line has a tab");
+            (
+                k.parse::<i64>().expect("fixture key parses as i64"),
+                u32::from_str_radix(h, 16).expect("fixture hash parses as hex u32"),
+            )
+        })
+        .collect()
+}
 
 #[test]
-fn native_hash_matches_jax_reference() {
-    for &(key, want) in GOLDEN {
+fn fixture_is_well_formed() {
+    let pairs = golden_pairs();
+    assert_eq!(pairs.len(), 11, "fixture should pin 11 vectors");
+    // The interesting boundary keys must be present.
+    let keys: Vec<i64> = pairs.iter().map(|(k, _)| *k).collect();
+    for k in [0, 1, -1, i64::MAX, i64::MIN, i32::MAX as i64, i32::MAX as i64 + 1] {
+        assert!(keys.contains(&k), "fixture missing boundary key {k}");
+    }
+}
+
+#[test]
+fn native_hash_matches_golden_fixture() {
+    for (key, want) in golden_pairs() {
         assert_eq!(
             hash_i64(key),
             want,
-            "hash_i64({key}) diverged from kernels/ref.py"
+            "hash_i64({key}) diverged from the committed golden fixture \
+             (kernels/ref.py is the oracle)"
         );
     }
 }
@@ -38,4 +56,24 @@ fn native_hash_matches_jax_reference() {
 fn fmix32_one_is_murmur_constant() {
     // fmix32(1) is a well-known murmur3 constant; pin it independently.
     assert_eq!(rylon::ops::hash::fmix32(1), 0x514e28b7);
+}
+
+#[test]
+fn partition_path_routes_golden_keys_by_committed_hashes() {
+    // The property the contract exists for: the shuffle's actual
+    // partition-id computation (including the null-free int64 fast
+    // path) must route the golden keys exactly as the committed hash
+    // values dictate, for any world size.
+    use rylon::ops::partition::partition_ids_by_key;
+    use rylon::table::{Array, Table};
+
+    let pairs = golden_pairs();
+    let keys: Vec<i64> = pairs.iter().map(|(k, _)| *k).collect();
+    let t = Table::from_arrays(vec![("k", Array::from_i64(keys))]).unwrap();
+    for world in [1usize, 2, 5, 16, 160] {
+        let ids = partition_ids_by_key(&t, 0, world).unwrap();
+        for ((key, hash), id) in pairs.iter().zip(&ids) {
+            assert_eq!(*id, hash % world as u32, "key {key} world {world}");
+        }
+    }
 }

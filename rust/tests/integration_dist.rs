@@ -4,31 +4,12 @@
 //! failure injection must error, not hang.
 
 use rylon::coordinator::{run_workers, try_run_workers};
+use rylon::dist::testutil::{gather, row_multiset};
 use rylon::io::generator::{random_table, SplitMix64};
 use rylon::net::{CommConfig, FailurePlan, NetworkProfile};
 use rylon::ops::join::{nested_loop_join, JoinAlgorithm, JoinConfig, JoinType};
-use rylon::table::pretty::cell_to_string;
-use rylon::table::take::concat_tables;
 use rylon::table::Table;
-use std::collections::BTreeMap;
 use std::sync::Arc;
-
-fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
-    let mut m = BTreeMap::new();
-    for r in 0..t.num_rows() {
-        let key = (0..t.num_columns())
-            .map(|c| cell_to_string(t.column(c), r))
-            .collect::<Vec<_>>()
-            .join("\u{1}");
-        *m.entry(key).or_insert(0) += 1;
-    }
-    m
-}
-
-fn gather(tables: Vec<Table>) -> Table {
-    let refs: Vec<&Table> = tables.iter().collect();
-    concat_tables(&refs).unwrap()
-}
 
 #[test]
 fn dist_join_equals_local_all_types_random_worlds() {
