@@ -7,7 +7,8 @@
 
 use rylon::io::generator::paper_table;
 use rylon::metrics::{measure, Report};
-use rylon::ops::join::{join, JoinAlgorithm, JoinConfig};
+use rylon::ops::aggregate::{group_by_par, AggFn, AggSpec};
+use rylon::ops::join::{join, join_par, JoinAlgorithm, JoinConfig};
 use rylon::ops::partition::hash_partition;
 use rylon::ops::select::select_i64;
 use rylon::ops::sort::sort;
@@ -69,6 +70,22 @@ fn main() {
         2 * n,
     );
     add("union distinct", bench(runs, || union(&l, &r).unwrap()), 2 * n);
+    // Morsel-parallel thread sweep (same canonical output at every
+    // thread count — only the wall clock moves).
+    let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash);
+    let aggs = [AggSpec::new(AggFn::Sum, 1), AggSpec::new(AggFn::Mean, 2)];
+    for threads in [1usize, 2, 4] {
+        add(
+            &format!("hash join inner (t={threads})"),
+            bench(runs, || join_par(&l, &r, &cfg, threads).unwrap()),
+            2 * n,
+        );
+        add(
+            &format!("group-by sum+mean (t={threads})"),
+            bench(runs, || group_by_par(&l, 0, &aggs, threads).unwrap()),
+            n,
+        );
+    }
     add(
         "serialize+deserialize",
         bench(runs, || {

@@ -7,27 +7,41 @@
 //! bench_driver fig9   [--op join|union]   engine comparison (Fig. 9 a/b)
 //! bench_driver table2                     Table II (join times + speedups)
 //! bench_driver fig10                      binding overhead (Fig. 10)
+//! bench_driver local  [--op join|groupby|partition|shuffle] thread sweep
 //! bench_driver all                        everything above
 //! ```
 //!
 //! Common flags:
 //!   --rows-per-worker N   weak-scaling load (default 20_000)
-//!   --total-rows N        strong-scaling load (default 1_000_000)
+//!   --total-rows N        strong-scaling + local load (default 1_000_000)
 //!   --max-workers W       truncate the worker sweep (default 160)
 //!   --runs R              repetitions, median reported (default 3)
-//!   --out-dir DIR         also save TSVs (default bench_out)
+//!   --out-dir DIR         also save TSVs + BENCH_results.json (default bench_out)
 //!   --profile P           loopback|infiniband|tcp10g|tcp1g (default infiniband)
+//!   --threads LIST        local-target parallelism sweep (default 1,2,4,8)
 //!   --quick               tiny sizes for smoke runs
 //!   --no-aot              skip the PJRT kernel runtime
 //!
 //! Scaling is measured on the BSP virtual clock (`rylon::sim`): worker
 //! compute is executed sequentially and timed for real; AllToAll cost
 //! comes from the calibrated α/β profile. See DESIGN.md §Substitutions.
+//! The `local` target instead times the morsel-parallel local operators
+//! for real at each `--threads` value (the perf_opt acceptance gate:
+//! join/group-by speedup at parallelism 4 vs 1 on ≥1M-row inputs).
+//!
+//! Every run also appends to `<out-dir>/BENCH_results.json` — one
+//! record per (target, op, rows, world, threads) with wall seconds and
+//! the partition/comm split where the op shuffles — so the repo's perf
+//! trajectory is machine-readable from this PR onward and consecutive
+//! invocations into one out-dir accumulate.
 
-use rylon::io::generator::worker_partition;
-use rylon::metrics::Report;
-use rylon::net::NetworkProfile;
-use rylon::ops::join::{JoinAlgorithm, JoinConfig};
+use rylon::coordinator::run_workers;
+use rylon::io::generator::{paper_table, paper_table_with_keyspace, worker_partition};
+use rylon::metrics::{append_bench_json, BenchRecord, Report};
+use rylon::net::{CommConfig, NetworkProfile};
+use rylon::ops::aggregate::{group_by_par, AggFn, AggSpec};
+use rylon::ops::join::{join_par, JoinAlgorithm, JoinConfig};
+use rylon::ops::partition::{partition_by_ids_par, partition_ids_by_key_par};
 use rylon::runtime::KernelRuntime;
 use rylon::sim::{
     sim_rowstore_join, sim_rowstore_union, sim_rylon_join, sim_rylon_union, sim_taskgraph_join,
@@ -36,6 +50,7 @@ use rylon::sim::{
 use rylon::table::Table;
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 type CliResult<T> = std::result::Result<T, String>;
 
@@ -51,7 +66,11 @@ struct Opts {
     out_dir: String,
     profile: NetworkProfile,
     op: String,
+    /// Whether `--op` was passed explicitly (the `local` target treats
+    /// the implicit "join" default as "all ops").
+    op_explicit: bool,
     use_aot: bool,
+    threads_list: Vec<usize>,
 }
 
 impl Opts {
@@ -100,7 +119,27 @@ fn parse_opts(args: &[String]) -> CliResult<Opts> {
             other => return Err(format!("unknown profile {other}")),
         },
         op: flags.get("op").cloned().unwrap_or_else(|| "join".into()),
+        op_explicit: flags.contains_key("op"),
         use_aot: !flags.contains_key("no-aot"),
+        threads_list: match flags.get("threads") {
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| format!("bad --threads entry '{x}'"))
+                })
+                .collect::<CliResult<Vec<usize>>>()?,
+            None => {
+                if quick {
+                    vec![1, 2]
+                } else {
+                    vec![1, 2, 4, 8]
+                }
+            }
+        },
     })
 }
 
@@ -145,8 +184,29 @@ fn load_runtime(opts: &Opts) -> Option<Arc<KernelRuntime>> {
     }
 }
 
+/// The sim paths run local compute under the process-default
+/// parallelism knob; record it so BENCH_results.json rows are
+/// attributable.
+fn sim_threads() -> usize {
+    rylon::ops::parallelism()
+}
+
+/// Fold one SimResult into a bench record.
+fn sim_record(target: &str, op: &str, rows: usize, world: usize, sim: &SimResult) -> BenchRecord {
+    BenchRecord {
+        target: target.into(),
+        op: op.into(),
+        rows,
+        world,
+        threads: sim_threads(),
+        wall_secs: sim.virtual_secs,
+        partition_secs: sim.phase_secs("partition"),
+        comm_secs: sim.phase_secs("comm"),
+    }
+}
+
 /// Fig. 7: weak scaling — rows_per_worker × W rows total, time vs W.
-fn fig7(opts: &Opts) -> CliResult<()> {
+fn fig7(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     let runtime = load_runtime(opts);
     let join_mode = opts.op != "union";
     let title = if join_mode {
@@ -188,6 +248,8 @@ fn fig7(opts: &Opts) -> CliResult<()> {
             let spark = median_sim(opts.runs, || {
                 sim_rowstore_join(&l, &r, 0, 0, &bcfg).expect("sim rowstore")
             });
+            records.push(sim_record("fig7", "join_hash", total, w, &hash));
+            records.push(sim_record("fig7", "join_sort", total, w, &sort));
             report.add_row(vec![
                 w.to_string(),
                 total.to_string(),
@@ -202,6 +264,7 @@ fn fig7(opts: &Opts) -> CliResult<()> {
             let spark = median_sim(opts.runs, || {
                 sim_rowstore_union(&l, &r, &bcfg).expect("sim rowstore union")
             });
+            records.push(sim_record("fig7", "union", total, w, &rylon));
             report.add_row(vec![
                 w.to_string(),
                 total.to_string(),
@@ -217,7 +280,7 @@ fn fig7(opts: &Opts) -> CliResult<()> {
 }
 
 /// Fig. 8: strong scaling speedup over each engine's own serial time.
-fn fig8(opts: &Opts) -> CliResult<()> {
+fn fig8(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     let runtime = load_runtime(opts);
     let join_mode = opts.op != "union";
     let title = if join_mode {
@@ -258,6 +321,8 @@ fn fig8(opts: &Opts) -> CliResult<()> {
                 )
                 .expect("sim join")
             });
+            records.push(sim_record("fig8", "join_hash", opts.total_rows, w, &hash));
+            records.push(sim_record("fig8", "join_sort", opts.total_rows, w, &sort));
             let h0 = *serial.entry("hash").or_insert(hash.virtual_secs);
             let s0 = *serial.entry("sort").or_insert(sort.virtual_secs);
             report.add_row(vec![
@@ -271,6 +336,7 @@ fn fig8(opts: &Opts) -> CliResult<()> {
             let u = median_sim(opts.runs, || {
                 sim_rylon_union(&l, &r, opts.profile).expect("sim union")
             });
+            records.push(sim_record("fig8", "union", opts.total_rows, w, &u));
             let u0 = *serial.entry("union").or_insert(u.virtual_secs);
             report.add_row(vec![
                 w.to_string(),
@@ -350,7 +416,7 @@ fn compare_engines(
 }
 
 /// Fig. 9: wall-clock comparison Rylon vs Spark-like vs Dask-like.
-fn fig9(opts: &Opts) -> CliResult<()> {
+fn fig9(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     let runtime = load_runtime(opts);
     if opts.op == "union" {
         // Fig 9(b): Dask has no distributed union — two engines only.
@@ -368,6 +434,7 @@ fn fig9(opts: &Opts) -> CliResult<()> {
             let spark = median_sim(opts.runs, || {
                 sim_rowstore_union(&a, &b, &bcfg).expect("sim rowstore union")
             });
+            records.push(sim_record("fig9", "union", opts.total_rows, w, &rylon));
             report.add_row(vec![
                 w.to_string(),
                 fmt_s(spark.virtual_secs),
@@ -385,6 +452,15 @@ fn fig9(opts: &Opts) -> CliResult<()> {
         &["workers", "dask_like", "spark_like", "rylon_hash", "rylon_sort"],
     );
     for (w, dask, spark, hash, sort) in rows {
+        records.push(BenchRecord {
+            target: "fig9".into(),
+            op: "join_hash".into(),
+            rows: opts.total_rows,
+            world: w,
+            threads: sim_threads(),
+            wall_secs: hash,
+            ..BenchRecord::default()
+        });
         report.add_row(vec![
             w.to_string(),
             dask.map(fmt_s).unwrap_or_else(|| "FAIL(mem)".into()),
@@ -484,13 +560,137 @@ fn fig10(opts: &Opts) -> CliResult<()> {
     Ok(())
 }
 
-fn run_target(name: &str, opts: &Opts) -> CliResult<()> {
+/// The `local` target: morsel-parallel local operators timed for real
+/// across the `--threads` sweep (join / group-by / partition /
+/// shuffle), with per-op speedup vs the sweep's first entry. This is
+/// the perf_opt acceptance gate: at `--total-rows 1_000_000`,
+/// `--threads 1,4` must show ≥2× on join and group-by.
+fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
+    let n = opts.total_rows;
+    let ops: Vec<&str> = match opts.op.as_str() {
+        "join" if opts.op_explicit => vec!["join"],
+        "groupby" => vec!["groupby"],
+        "partition" => vec!["partition"],
+        "shuffle" => vec!["shuffle"],
+        // Implicit default ("join" from parse_opts) or explicit "all".
+        "all" | "join" => vec!["join", "groupby", "partition", "shuffle"],
+        other => return Err(format!("unknown local op '{other}'")),
+    };
+    let mut report = Report::new(
+        format!("local morsel-parallel operators, {n} rows/relation"),
+        &["op", "threads", "median_s", "speedup_vs_first"],
+    );
+    for op in ops {
+        let mut base: Option<f64> = None;
+        for &threads in &opts.threads_list {
+            let (wall, part, comm, world) = bench_local_op(opts, op, threads)?;
+            let speedup = base.map(|b| b / wall).unwrap_or(1.0);
+            base.get_or_insert(wall);
+            report.add_row(vec![
+                op.to_string(),
+                threads.to_string(),
+                fmt_s(wall),
+                format!("{speedup:.2}x"),
+            ]);
+            records.push(BenchRecord {
+                target: "local".into(),
+                op: op.to_string(),
+                rows: n,
+                world,
+                threads,
+                wall_secs: wall,
+                partition_secs: part,
+                comm_secs: comm,
+            });
+            eprintln!("[local/{op}] threads={threads} done");
+        }
+    }
+    print!("{}", report.render());
+    save(&report, opts, "local");
+    Ok(())
+}
+
+/// One (op, threads) measurement. Returns (wall, partition, comm,
+/// world); the partition/comm split comes from `ShuffleStats` and is 0
+/// for purely local ops.
+fn bench_local_op(opts: &Opts, op: &str, threads: usize) -> CliResult<(f64, f64, f64, usize)> {
+    let n = opts.total_rows;
+    let runs = opts.runs.max(1);
+    match op {
+        "join" => {
+            let l = paper_table(n, 0.9, 0x10CA1);
+            let r = paper_table(n, 0.9, 0x10CA2);
+            let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Hash);
+            let m = rylon::metrics::measure(runs, 1, || {
+                let t0 = Instant::now();
+                let out = join_par(&l, &r, &cfg, threads).expect("join");
+                std::hint::black_box(out.num_rows());
+                t0.elapsed().as_secs_f64()
+            });
+            Ok((m.median_secs, 0.0, 0.0, 1))
+        }
+        "groupby" => {
+            // ~1% distinct keys: the aggregation shape where the
+            // two-phase (morsel partials → ordered merge) plan pays.
+            let t = paper_table_with_keyspace(n, (n as u64 / 100).max(1), 0x6B0B);
+            let aggs = [AggSpec::new(AggFn::Sum, 1), AggSpec::new(AggFn::Mean, 2)];
+            let m = rylon::metrics::measure(runs, 1, || {
+                let t0 = Instant::now();
+                let out = group_by_par(&t, 0, &aggs, threads).expect("group_by");
+                std::hint::black_box(out.num_rows());
+                t0.elapsed().as_secs_f64()
+            });
+            Ok((m.median_secs, 0.0, 0.0, 1))
+        }
+        "partition" => {
+            let t = paper_table(n, 0.9, 0x9A27);
+            let m = rylon::metrics::measure(runs, 1, || {
+                let t0 = Instant::now();
+                let ids = partition_ids_by_key_par(&t, 0, 64, threads).expect("ids");
+                let parts = partition_by_ids_par(&t, &ids, 64, threads).expect("parts");
+                std::hint::black_box(parts.len());
+                t0.elapsed().as_secs_f64()
+            });
+            Ok((m.median_secs, 0.0, 0.0, 1))
+        }
+        "shuffle" => {
+            let world = 4;
+            // One (wall, partition, comm) triple per run; phases are
+            // the BSP straggler max across workers. The median run is
+            // chosen by wall so the reported phase split stays
+            // internally consistent (one run, one triple).
+            let mut samples: Vec<(f64, f64, f64)> = Vec::with_capacity(runs);
+            for _ in 0..runs {
+                let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                    ctx.set_parallelism(threads);
+                    let t = worker_partition(n, world, ctx.rank(), 0.9, 0x5501);
+                    let t0 = Instant::now();
+                    let (out, stats) = rylon::dist::shuffle(ctx, &t, 0).expect("shuffle");
+                    std::hint::black_box(out.num_rows());
+                    (t0.elapsed().as_secs_f64(), stats)
+                });
+                samples.push((
+                    outs.iter().map(|(w, _)| *w).fold(0.0f64, f64::max),
+                    outs.iter().map(|(_, s)| s.partition_secs).fold(0.0f64, f64::max),
+                    outs.iter().map(|(_, s)| s.comm_secs).fold(0.0f64, f64::max),
+                ));
+            }
+            samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let (wall, part, comm) = samples[samples.len() / 2];
+            Ok((wall, part, comm, world))
+        }
+        other => Err(format!("unknown local op {other}")),
+    }
+}
+
+fn run_target(name: &str, opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     match name {
-        "fig7" => fig7(opts),
-        "fig8" => fig8(opts),
-        "fig9" => fig9(opts),
+        "fig7" => fig7(opts, records),
+        "fig8" => fig8(opts, records),
+        "fig9" => fig9(opts, records),
         "table2" => table2(opts),
         "fig10" => fig10(opts),
+        "local" => local(opts, records),
         other => Err(format!("unknown target {other}")),
     }
 }
@@ -498,7 +698,7 @@ fn run_target(name: &str, opts: &Opts) -> CliResult<()> {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(which) = argv.first().cloned() else {
-        eprintln!("usage: bench_driver <fig7|fig8|fig9|table2|fig10|all> [flags]");
+        eprintln!("usage: bench_driver <fig7|fig8|fig9|table2|fig10|local|all> [flags]");
         std::process::exit(2);
     };
     let opts = match parse_opts(&argv[1..]) {
@@ -508,24 +708,39 @@ fn main() {
             std::process::exit(2);
         }
     };
+    let mut records: Vec<BenchRecord> = Vec::new();
     let result = if which == "all" {
-        // Both sub-figures of 7/8/9, then table2 and fig10.
+        // Both sub-figures of 7/8/9, then table2, fig10 and the local
+        // thread sweep.
         let mut r: CliResult<()> = Ok(());
         'outer: for name in ["fig7", "fig8", "fig9"] {
             for op in ["join", "union"] {
                 let mut o = opts.clone();
                 o.op = op.to_string();
-                if let Err(e) = run_target(name, &o) {
+                if let Err(e) = run_target(name, &o, &mut records) {
                     r = Err(e);
                     break 'outer;
                 }
             }
         }
-        r.and_then(|_| run_target("table2", &opts))
-            .and_then(|_| run_target("fig10", &opts))
+        r.and_then(|_| run_target("table2", &opts, &mut records))
+            .and_then(|_| run_target("fig10", &opts, &mut records))
+            .and_then(|_| {
+                let mut o = opts.clone();
+                o.op = "all".into();
+                run_target("local", &o, &mut records)
+            })
     } else {
-        run_target(&which, &opts)
+        run_target(&which, &opts, &mut records)
     };
+    // Perf trajectory: always write what was measured, even on error;
+    // consecutive invocations into one out-dir accumulate.
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    let json_path = format!("{}/BENCH_results.json", opts.out_dir);
+    match append_bench_json(&json_path, &records) {
+        Ok(()) => eprintln!("[bench] wrote {json_path} (+{} records)", records.len()),
+        Err(e) => eprintln!("warn: could not save {json_path}: {e}"),
+    }
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);

@@ -16,6 +16,16 @@ pub struct CylonContext {
     comm: Communicator,
     /// Optional AOT kernel runtime shared by all workers in the process.
     runtime: Option<Arc<KernelRuntime>>,
+    /// Intra-worker thread budget for the morsel-parallel local
+    /// operators (see [`crate::ops::parallel`]). Changing it never
+    /// changes results, only speed.
+    parallelism: usize,
+}
+
+/// Per-worker thread budget: co-located in-process workers split the
+/// machine instead of oversubscribing it.
+fn shared_parallelism(world: usize) -> usize {
+    (crate::ops::parallel::parallelism() / world.max(1)).max(1)
 }
 
 impl CylonContext {
@@ -23,7 +33,7 @@ impl CylonContext {
     pub fn init_local() -> Self {
         let mut fabric = ChannelFabric::new(1);
         let comm = Communicator::new(Box::new(fabric.pop().unwrap()), &CommConfig::default());
-        CylonContext { comm, runtime: None }
+        CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) }
     }
 
     /// Connected contexts for `world` in-process workers
@@ -36,15 +46,37 @@ impl CylonContext {
                 CylonContext {
                     comm: Communicator::new(Box::new(t), config),
                     runtime: None,
+                    parallelism: shared_parallelism(world),
                 }
             })
             .collect()
     }
 
     /// Wrap an existing communicator (custom transports, e.g.
-    /// [`crate::net::tcp::TcpFabric`] endpoints).
+    /// [`crate::net::tcp::TcpFabric`] endpoints). External transports
+    /// typically place one rank per machine, so the worker keeps the
+    /// full local thread budget — unlike [`Self::init_distributed`],
+    /// whose in-process workers split it. Override with
+    /// [`Self::with_parallelism`] when co-locating ranks.
     pub fn from_communicator(comm: Communicator) -> Self {
-        CylonContext { comm, runtime: None }
+        CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) }
+    }
+
+    /// Builder-style override of the intra-worker thread budget.
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads.max(1);
+        self
+    }
+
+    /// Set the intra-worker thread budget on an existing context.
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.parallelism = threads.max(1);
+    }
+
+    /// Intra-worker thread budget used by the morsel-parallel paths of
+    /// the distributed operators.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
     }
 
     /// Attach a shared AOT kernel runtime (hash-partition on the PJRT
@@ -95,5 +127,16 @@ mod tests {
         let ranks: Vec<_> = ctxs.iter().map(|c| c.rank()).collect();
         assert_eq!(ranks, vec![0, 1, 2, 3]);
         assert!(ctxs.iter().all(|c| c.world() == 4));
+        // Co-located workers share the machine's thread budget.
+        assert!(ctxs.iter().all(|c| c.parallelism() >= 1));
+    }
+
+    #[test]
+    fn parallelism_knob_overrides() {
+        let mut ctx = CylonContext::init_local().with_parallelism(3);
+        assert_eq!(ctx.parallelism(), 3);
+        ctx.set_parallelism(0); // clamped to 1
+        assert_eq!(ctx.parallelism(), 1);
+        ctx.finalize().unwrap();
     }
 }

@@ -25,6 +25,18 @@
 //! operators in the same order (collective tags are generation-counted,
 //! so a skipped call on one rank surfaces as a timeout, not a hang).
 //!
+//! # Intra-worker parallelism and determinism
+//!
+//! Inside each worker, the partition phase and the local operator run
+//! on the morsel-parallel engine ([`crate::ops::parallel`]) with the
+//! thread budget of [`crate::ctx::CylonContext::parallelism`] —
+//! in-process workers default to an equal share of the machine.
+//! Routing is unaffected by the thread count: partition ids are
+//! `hash(key) % world` / `hash(row) % world` cell-for-cell identical
+//! at any parallelism (and to the AOT Pallas kernel), so per-rank
+//! shuffle outputs — and therefore every distributed operator's
+//! result — are bit-identical whether a worker uses 1 thread or 16.
+//!
 //! ```
 //! use rylon::coordinator::run_workers;
 //! use rylon::net::CommConfig;

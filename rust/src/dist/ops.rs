@@ -12,9 +12,8 @@ use super::shuffle::{shuffle, shuffle_rows};
 use super::OpStats;
 use crate::ctx::CylonContext;
 use crate::error::{Error, Result};
-use crate::ops::aggregate::{group_by_partial, merge_partials, AggFn, AggSpec};
-use crate::ops::join::{join, JoinConfig};
-use crate::ops::{difference, intersect, union};
+use crate::ops::aggregate::{group_by_partial_par, merge_partials_par, AggFn, AggSpec};
+use crate::ops::join::{join_par, JoinConfig};
 use crate::table::Table;
 use std::time::Instant;
 
@@ -41,19 +40,20 @@ pub fn dist_join(
     let (rshuf, rs) = shuffle(ctx, right, cfg.right_col)?;
     stats.absorb(&rs);
     let t0 = Instant::now();
-    let out = join(&lshuf, &rshuf, cfg)?;
+    let out = join_par(&lshuf, &rshuf, cfg, ctx.parallelism())?;
     stats.local_secs = t0.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
     Ok((out, stats))
 }
 
 /// Shared shape of the three set operators: row-shuffle both sides,
-/// apply the local operator to the colocated partitions.
+/// apply the local operator to the colocated partitions under the
+/// worker's thread budget.
 fn dist_setop(
     ctx: &mut CylonContext,
     a: &Table,
     b: &Table,
-    op: fn(&Table, &Table) -> Result<Table>,
+    op: fn(&Table, &Table, usize) -> Result<Table>,
     what: &str,
 ) -> Result<(Table, OpStats)> {
     if !a.schema_equals(b) {
@@ -70,7 +70,7 @@ fn dist_setop(
     let (bshuf, bstats) = shuffle_rows(ctx, b)?;
     stats.absorb(&bstats);
     let t0 = Instant::now();
-    let out = op(&ashuf, &bshuf)?;
+    let out = op(&ashuf, &bshuf, ctx.parallelism())?;
     stats.local_secs = t0.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
     Ok((out, stats))
@@ -79,17 +79,17 @@ fn dist_setop(
 /// Distributed union-distinct (§II-B4). Identical rows hash to one
 /// rank, so per-rank `distinct` is globally distinct.
 pub fn dist_union(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
-    dist_setop(ctx, a, b, union, "union")
+    dist_setop(ctx, a, b, crate::ops::union::union_par, "union")
 }
 
 /// Distributed intersect (§II-B5).
 pub fn dist_intersect(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
-    dist_setop(ctx, a, b, intersect, "intersect")
+    dist_setop(ctx, a, b, crate::ops::intersect::intersect_par, "intersect")
 }
 
 /// Distributed symmetric difference (§II-B6, the paper's Difference).
 pub fn dist_difference(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
-    dist_setop(ctx, a, b, difference, "difference")
+    dist_setop(ctx, a, b, crate::ops::difference::difference_par, "difference")
 }
 
 /// Distributed group-by: the two-phase plan. Workers pre-aggregate
@@ -104,14 +104,14 @@ pub fn dist_group_by(
 ) -> Result<(Table, OpStats)> {
     let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
     let t0 = Instant::now();
-    let partial = group_by_partial(t, key_col, aggs)?;
+    let partial = group_by_partial_par(t, key_col, aggs, ctx.parallelism())?;
     let mut local_secs = t0.elapsed().as_secs_f64();
     // The partial table's key is column 0 by construction.
     let (shuffled, sstats) = shuffle(ctx, &partial, 0)?;
     stats.absorb(&sstats);
     let funcs: Vec<AggFn> = aggs.iter().map(|s| s.func).collect();
     let t1 = Instant::now();
-    let out = merge_partials(&shuffled, &funcs)?;
+    let out = merge_partials_par(&shuffled, &funcs, ctx.parallelism())?;
     local_secs += t1.elapsed().as_secs_f64();
     stats.local_secs = local_secs;
     stats.rows_out = out.num_rows();
@@ -127,6 +127,7 @@ mod tests {
     use crate::net::CommConfig;
     use crate::ops::aggregate::group_by;
     use crate::ops::join::nested_loop_join;
+    use crate::ops::{difference, intersect, union};
 
     #[test]
     fn join_matches_local_oracle() {

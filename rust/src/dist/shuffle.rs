@@ -24,7 +24,9 @@
 
 use crate::ctx::CylonContext;
 use crate::error::{Error, Result};
-use crate::ops::partition::{partition_by_ids, partition_ids_by_key, partition_ids_by_row};
+use crate::ops::partition::{
+    partition_by_ids_par, partition_ids_by_key_par, partition_ids_by_row_par,
+};
 use crate::table::{Array, Table};
 use std::time::Instant;
 
@@ -59,9 +61,12 @@ fn shuffle_with(
     routing: Routing,
 ) -> Result<(Table, ShuffleStats)> {
     let world = ctx.world();
+    let threads = ctx.parallelism();
     let mut stats = ShuffleStats { rows_in: t.num_rows(), ..ShuffleStats::default() };
 
-    // Partition phase: ids, then one take per column per part.
+    // Partition phase: ids, then one take per column per part, both
+    // morsel-parallel on the worker's thread budget (routing itself is
+    // thread-count independent — see `crate::ops::parallel`).
     let t0 = Instant::now();
     let ids: Vec<u32> = match routing {
         Routing::Key(col) => {
@@ -79,12 +84,12 @@ fn shuffle_with(
                     stats.used_kernel = true;
                     ids
                 }
-                _ => partition_ids_by_key(t, col, world)?,
+                _ => partition_ids_by_key_par(t, col, world, threads)?,
             }
         }
-        Routing::Row => partition_ids_by_row(t, world)?,
+        Routing::Row => partition_ids_by_row_par(t, world, threads)?,
     };
-    let parts = partition_by_ids(t, &ids, world)?;
+    let parts = partition_by_ids_par(t, &ids, world, threads)?;
     stats.partition_secs = t0.elapsed().as_secs_f64();
 
     // Comm superstep: AllToAll the parts, concat what we received.

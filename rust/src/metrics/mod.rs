@@ -117,6 +117,109 @@ impl Report {
     }
 }
 
+/// One machine-readable bench measurement — a row of
+/// `BENCH_results.json`, the file that records the repo's perf
+/// trajectory across PRs. `partition_secs` / `comm_secs` carry the
+/// [`crate::dist::ShuffleStats`]-style phase split where the op has
+/// one (0 otherwise).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchRecord {
+    /// Bench target that produced the record (`local`, `fig7`, ...).
+    pub target: String,
+    /// Operator measured (`join`, `groupby`, `shuffle`, ...).
+    pub op: String,
+    /// Total input rows per relation.
+    pub rows: usize,
+    /// Workers participating (1 for purely local ops). `rows` is
+    /// always the whole relation, even when split across workers.
+    pub world: usize,
+    /// Intra-worker parallelism the run used.
+    pub threads: usize,
+    /// Median wall seconds for the op.
+    pub wall_secs: f64,
+    /// Seconds in the partition phase (shuffle split), else 0.
+    pub partition_secs: f64,
+    /// Seconds in the comm phase (shuffle split), else 0.
+    pub comm_secs: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"target\":\"{}\",\"op\":\"{}\",\"rows\":{},\"world\":{},\"threads\":{},\
+             \"wall_secs\":{:.6},\"partition_secs\":{:.6},\"comm_secs\":{:.6}}}",
+            json_escape(&self.target),
+            json_escape(&self.op),
+            self.rows,
+            self.world,
+            self.threads,
+            self.wall_secs,
+            self.partition_secs,
+            self.comm_secs
+        )
+    }
+}
+
+/// Assemble pre-serialized record lines into the
+/// `{"schema_version": 1, "results": [...]}` document layout — the
+/// single source of truth shared by the fresh-render and append paths.
+fn render_bench_doc(record_lines: &[String]) -> String {
+    if record_lines.is_empty() {
+        return "{\n  \"schema_version\": 1,\n  \"results\": []\n}\n".to_string();
+    }
+    let body: Vec<String> = record_lines.iter().map(|l| format!("    {l}")).collect();
+    format!(
+        "{{\n  \"schema_version\": 1,\n  \"results\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    )
+}
+
+/// Serialize bench records as the `BENCH_results.json` document.
+/// Dependency-free by construction — the field set is the schema the
+/// CI smoke step checks.
+pub fn bench_records_to_json(records: &[BenchRecord]) -> String {
+    let lines: Vec<String> = records.iter().map(|r| r.to_json()).collect();
+    render_bench_doc(&lines)
+}
+
+/// Write `BENCH_results.json`, keeping records already in the file so
+/// consecutive bench invocations into one out-dir accumulate a single
+/// trajectory instead of clobbering each other. Existing record lines
+/// are recognized by this module's own one-record-per-line layout.
+pub fn append_bench_json(
+    path: impl AsRef<std::path::Path>,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let mut lines: Vec<String> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(path) {
+        for l in existing.lines() {
+            let t = l.trim().trim_end_matches(',');
+            if t.starts_with("{\"target\"") {
+                lines.push(t.to_string());
+            }
+        }
+        // Guard against clobbering a file this module didn't write
+        // (pretty-printed / hand-edited layouts yield zero recognized
+        // record lines): refuse rather than silently drop history.
+        if lines.is_empty()
+            && !existing.trim().is_empty()
+            && !existing.contains("\"results\": []")
+        {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unrecognized layout in {}; not overwriting", path.display()),
+            ));
+        }
+    }
+    lines.extend(records.iter().map(|r| r.to_json()));
+    std::fs::write(path, render_bench_doc(&lines))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +241,61 @@ mod tests {
         });
         assert_eq!(m.runs, 5);
         assert!(m.min_secs <= m.median_secs && m.median_secs <= m.max_secs);
+    }
+
+    #[test]
+    fn bench_json_schema_and_escaping() {
+        let rec = BenchRecord {
+            target: "local".into(),
+            op: "join\"x".into(),
+            rows: 1_000_000,
+            world: 1,
+            threads: 4,
+            wall_secs: 0.25,
+            partition_secs: 0.0,
+            comm_secs: 0.0,
+        };
+        let doc = bench_records_to_json(&[rec]);
+        assert!(doc.contains("\"schema_version\": 1"));
+        assert!(doc.contains("\"target\":\"local\""));
+        assert!(doc.contains("\"op\":\"join\\\"x\""));
+        assert!(doc.contains("\"rows\":1000000"));
+        assert!(doc.contains("\"threads\":4"));
+        assert!(doc.contains("\"wall_secs\":0.250000"));
+        // Empty set still yields a valid document.
+        assert!(bench_records_to_json(&[]).contains("\"results\": []"));
+    }
+
+    #[test]
+    fn bench_json_append_accumulates() {
+        let rec = |op: &str| BenchRecord {
+            target: "local".into(),
+            op: op.into(),
+            rows: 10,
+            world: 1,
+            threads: 1,
+            wall_secs: 0.1,
+            partition_secs: 0.0,
+            comm_secs: 0.0,
+        };
+        let path = std::env::temp_dir().join(format!(
+            "rylon_bench_append_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        append_bench_json(&path, &[rec("join")]).unwrap();
+        append_bench_json(&path, &[rec("groupby")]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(doc.matches("{\"target\"").count(), 2);
+        assert!(doc.contains("\"op\":\"join\""));
+        assert!(doc.contains("\"op\":\"groupby\""));
+        assert!(doc.contains("\"schema_version\": 1"));
+        // A foreign layout is refused rather than clobbered.
+        std::fs::write(&path, "{\n  \"something\": true\n}\n").unwrap();
+        assert!(append_bench_json(&path, &[rec("join")]).is_err());
+        assert!(std::fs::read_to_string(&path).unwrap().contains("something"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -6,13 +6,27 @@
 //! operator: workers pre-aggregate locally, shuffle the (much smaller)
 //! partial states by key, and merge — the classic two-phase plan whose
 //! benefit the `groupby` ablation bench quantifies.
+//!
+//! # Morsel-parallel accumulation
+//!
+//! Accumulation is itself two-phase on the morsel thread pool: key
+//! hashes are computed columnarly, each fixed-size morsel builds a
+//! partial group map, and partials are merged **in morsel order** into
+//! the final map. Merging in morsel order reproduces exactly the
+//! serial first-appearance group order, so the output table is
+//! identical at every thread count. Morsel boundaries are fixed
+//! ([`crate::ops::parallel::MORSEL_ROWS`]) — never thread-derived — so
+//! per-group f64 sums are chunked identically at every `parallelism`
+//! and the output stays bit-for-bit reproducible.
 
-use super::hash::hash_cell;
+use super::hash::hash_column;
+use super::parallel::{map_morsels, parallelism};
 use super::sort::cmp_cells_across;
 use crate::error::{Error, Result};
 use crate::table::{builder::ArrayBuilder, Array, DataType, Field, Schema, Table};
 use std::cmp::Ordering;
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::Arc;
 
 /// Supported aggregate functions.
@@ -137,8 +151,9 @@ impl Groups {
         Groups { index: HashMap::new(), reps: Vec::new(), states: Vec::new() }
     }
 
-    fn find_or_insert(&mut self, key_col: &Array, row: usize, naggs: usize) -> usize {
-        let h = hash_cell(key_col, row);
+    /// `h` must equal `hash_cell(key_col, row)` (callers precompute it
+    /// columnarly via [`hash_column`]).
+    fn find_or_insert(&mut self, key_col: &Array, row: usize, h: u32, naggs: usize) -> usize {
         let bucket = self.index.entry(h).or_default();
         for &gid in bucket.iter() {
             let rep = self.reps[gid];
@@ -208,11 +223,18 @@ fn validate(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Result<()> {
     Ok(())
 }
 
-fn accumulate(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Groups {
+/// Serial accumulation over one morsel of rows.
+fn accumulate_range(
+    t: &Table,
+    key_col: usize,
+    hashes: &[u32],
+    aggs: &[AggSpec],
+    r: Range<usize>,
+) -> Groups {
     let key = t.column(key_col).as_ref();
     let mut groups = Groups::new();
-    for row in 0..t.num_rows() {
-        let gid = groups.find_or_insert(key, row, aggs.len());
+    for row in r {
+        let gid = groups.find_or_insert(key, row, hashes[row], aggs.len());
         for (ai, spec) in aggs.iter().enumerate() {
             if spec.func == AggFn::Count {
                 // Count counts rows (including null value cells) when the
@@ -223,6 +245,29 @@ fn accumulate(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Groups {
                 }
             } else if let Some(v) = value_of(t.column(spec.col), row) {
                 groups.states[gid][ai].update(v);
+            }
+        }
+    }
+    groups
+}
+
+/// Morsel-parallel accumulation: per-morsel partial maps merged in
+/// morsel order (reproducing the serial first-appearance group order
+/// exactly — see module docs).
+fn accumulate(t: &Table, key_col: usize, aggs: &[AggSpec], threads: usize) -> Groups {
+    let key = t.column(key_col).as_ref();
+    let hashes = hash_column(key, threads);
+    let parts = map_morsels(t.num_rows(), threads, |r| {
+        accumulate_range(t, key_col, &hashes, aggs, r)
+    });
+    let mut iter = parts.into_iter();
+    let mut groups = iter.next().unwrap_or_else(Groups::new);
+    for part in iter {
+        for (src_gid, &rep) in part.reps.iter().enumerate() {
+            let gid = groups.find_or_insert(key, rep, hashes[rep], aggs.len());
+            let dst = &mut groups.states[gid];
+            for (d, s) in dst.iter_mut().zip(&part.states[src_gid]) {
+                d.merge(s);
             }
         }
     }
@@ -268,24 +313,46 @@ fn emit(
 }
 
 /// Local group-by: one output row per distinct key (null key is its own
-/// group), one f64 column per aggregate.
+/// group), one f64 column per aggregate. Process-default parallelism.
 pub fn group_by(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Result<Table> {
+    group_by_par(t, key_col, aggs, parallelism())
+}
+
+/// [`group_by`] with an explicit thread budget; the output table is
+/// bit-identical at every `threads` value.
+pub fn group_by_par(t: &Table, key_col: usize, aggs: &[AggSpec], threads: usize) -> Result<Table> {
     validate(t, key_col, aggs)?;
-    let groups = accumulate(t, key_col, aggs);
+    let groups = accumulate(t, key_col, aggs, threads);
     emit(t, key_col, aggs, &groups, false)
 }
 
 /// Phase 1 of the two-phase distributed plan: mergeable partial states
 /// (`__<agg>_{count,sum,min,max}` columns) per local key.
 pub fn group_by_partial(t: &Table, key_col: usize, aggs: &[AggSpec]) -> Result<Table> {
+    group_by_partial_par(t, key_col, aggs, parallelism())
+}
+
+/// [`group_by_partial`] with an explicit thread budget.
+pub fn group_by_partial_par(
+    t: &Table,
+    key_col: usize,
+    aggs: &[AggSpec],
+    threads: usize,
+) -> Result<Table> {
     validate(t, key_col, aggs)?;
-    let groups = accumulate(t, key_col, aggs);
+    let groups = accumulate(t, key_col, aggs, threads);
     emit(t, key_col, aggs, &groups, true)
 }
 
 /// Phase 2: merge shuffled partial tables (key + 4 state columns per
 /// agg) and finalize. `aggs` must match the specs used in phase 1.
 pub fn merge_partials(partial: &Table, aggs: &[AggFn]) -> Result<Table> {
+    merge_partials_par(partial, aggs, parallelism())
+}
+
+/// [`merge_partials`] with an explicit thread budget for the key-hash
+/// pass (the merge scan itself is serial, preserving group order).
+pub fn merge_partials_par(partial: &Table, aggs: &[AggFn], threads: usize) -> Result<Table> {
     let expect_cols = 1 + 4 * aggs.len();
     if partial.num_columns() != expect_cols {
         return Err(Error::schema(format!(
@@ -294,9 +361,10 @@ pub fn merge_partials(partial: &Table, aggs: &[AggFn]) -> Result<Table> {
         )));
     }
     let key = partial.column(0).as_ref();
+    let key_hashes = hash_column(key, threads);
     let mut groups = Groups::new();
     for row in 0..partial.num_rows() {
-        let gid = groups.find_or_insert(key, row, aggs.len());
+        let gid = groups.find_or_insert(key, row, key_hashes[row], aggs.len());
         for ai in 0..aggs.len() {
             let base = 1 + ai * 4;
             let get = |c: usize| -> f64 {
@@ -463,5 +531,47 @@ mod tests {
         let m = by_key(&out);
         assert_eq!(m[&1], vec![3.0]);
         assert_eq!(m[&2], vec![2.0]);
+    }
+
+    #[test]
+    fn group_by_par_bit_identical_across_thread_counts() {
+        let aggs = [
+            AggSpec::new(AggFn::Sum, 1),
+            AggSpec::new(AggFn::Count, 1),
+            AggSpec::new(AggFn::Mean, 1),
+            AggSpec::new(AggFn::Min, 1),
+            AggSpec::new(AggFn::Max, 1),
+        ];
+        let serial = group_by_par(&t(), 0, &aggs, 1).unwrap();
+        let serial_partial = group_by_partial_par(&t(), 0, &aggs, 1).unwrap();
+        for threads in [2usize, 7] {
+            assert!(group_by_par(&t(), 0, &aggs, threads).unwrap().data_equals(&serial));
+            assert!(group_by_partial_par(&t(), 0, &aggs, threads)
+                .unwrap()
+                .data_equals(&serial_partial));
+        }
+    }
+
+    #[test]
+    fn group_by_parallel_merge_crosses_morsel_boundaries() {
+        // Force multiple morsels so the ordered partial-map merge runs,
+        // with few distinct keys so every morsel shares groups.
+        let n = crate::ops::parallel::MORSEL_ROWS + 1000;
+        let keys: Vec<i64> = (0..n as i64).map(|i| i % 5).collect();
+        let vals: Vec<f64> = (0..n).map(|i| (i % 13) as f64).collect();
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64(keys)),
+            ("v", Array::from_f64(vals)),
+        ])
+        .unwrap();
+        let aggs = [AggSpec::new(AggFn::Sum, 1), AggSpec::new(AggFn::Count, 1)];
+        let serial = group_by_par(&t, 0, &aggs, 1).unwrap();
+        assert_eq!(serial.num_rows(), 5);
+        // Keys first appear in 0,1,2,3,4 order — the canonical
+        // first-appearance order must survive the morsel merge.
+        assert_eq!(serial.column(0).as_i64().unwrap().values(), &[0, 1, 2, 3, 4]);
+        for threads in [2usize, 7] {
+            assert!(group_by_par(&t, 0, &aggs, threads).unwrap().data_equals(&serial));
+        }
     }
 }

@@ -6,37 +6,48 @@
 //! `EXCEPT`. Both are provided; the distributed operator uses the
 //! symmetric form to match the paper.
 
+use super::hash::hash_rows;
+use super::parallel::parallelism;
 use super::rowset::RowSet;
 use crate::error::{Error, Result};
 use crate::table::{builder::TableBuilder, Table};
 
 /// Symmetric difference `(a ∪ b) \ (a ∩ b)`, distinct rows, paper
 /// semantics. Order: a-only rows (first occurrence), then b-only rows.
+/// Row hashes for both sides are precomputed columnarly.
 pub fn difference(a: &Table, b: &Table) -> Result<Table> {
+    difference_par(a, b, parallelism())
+}
+
+/// [`difference`] with an explicit thread budget for the row-hash pass
+/// (identical output at every thread count).
+pub fn difference_par(a: &Table, b: &Table, threads: usize) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("difference of schema-incompatible tables"));
     }
+    let ha = hash_rows(a, threads);
+    let hb = hash_rows(b, threads);
     let mut aset = RowSet::with_capacity(a.num_rows());
     let atid = aset.add_table(a);
     for r in 0..a.num_rows() {
-        aset.insert(atid, r);
+        aset.insert_hashed(atid, r, ha[r]);
     }
     let mut bset = RowSet::with_capacity(b.num_rows());
     let btid = bset.add_table(b);
     for r in 0..b.num_rows() {
-        bset.insert(btid, r);
+        bset.insert_hashed(btid, r, hb[r]);
     }
     let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
     let mut emitted = RowSet::new();
     let ea = emitted.add_table(a);
     let eb = emitted.add_table(b);
     for r in 0..a.num_rows() {
-        if !bset.contains(a, r) && emitted.insert(ea, r) {
+        if !bset.contains_hashed(a, r, ha[r]) && emitted.insert_hashed(ea, r, ha[r]) {
             out.push_row(a, r)?;
         }
     }
     for r in 0..b.num_rows() {
-        if !aset.contains(b, r) && emitted.insert(eb, r) {
+        if !aset.contains_hashed(b, r, hb[r]) && emitted.insert_hashed(eb, r, hb[r]) {
             out.push_row(b, r)?;
         }
     }
@@ -49,16 +60,19 @@ pub fn except(a: &Table, b: &Table) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("except of schema-incompatible tables"));
     }
+    let threads = parallelism();
+    let ha = hash_rows(a, threads);
+    let hb = hash_rows(b, threads);
     let mut bset = RowSet::with_capacity(b.num_rows());
     let btid = bset.add_table(b);
     for r in 0..b.num_rows() {
-        bset.insert(btid, r);
+        bset.insert_hashed(btid, r, hb[r]);
     }
     let mut emitted = RowSet::with_capacity(a.num_rows());
     let ea = emitted.add_table(a);
     let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows());
     for r in 0..a.num_rows() {
-        if !bset.contains(a, r) && emitted.insert(ea, r) {
+        if !bset.contains_hashed(a, r, ha[r]) && emitted.insert_hashed(ea, r, ha[r]) {
             out.push_row(a, r)?;
         }
     }

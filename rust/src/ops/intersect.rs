@@ -1,11 +1,20 @@
 //! Intersect — rows present in both tables, distinct (§II-B5).
 
+use super::hash::hash_rows;
+use super::parallel::parallelism;
 use super::rowset::RowSet;
 use crate::error::{Error, Result};
 use crate::table::{builder::TableBuilder, Table};
 
-/// `a ∩ b` (distinct). Output order: first occurrence in `a`.
+/// `a ∩ b` (distinct). Output order: first occurrence in `a`. Row
+/// hashes for both sides are precomputed columnarly (morsel-parallel).
 pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
+    intersect_par(a, b, parallelism())
+}
+
+/// [`intersect`] with an explicit thread budget for the row-hash pass
+/// (identical output at every thread count).
+pub fn intersect_par(a: &Table, b: &Table, threads: usize) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("intersect of schema-incompatible tables"));
     }
@@ -16,10 +25,12 @@ pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
     } else {
         (b, a, true)
     };
+    let bh = hash_rows(build, threads);
+    let ph = hash_rows(probe, threads);
     let mut bset = RowSet::with_capacity(build.num_rows());
     let btid = bset.add_table(build);
     for r in 0..build.num_rows() {
-        bset.insert(btid, r);
+        bset.insert_hashed(btid, r, bh[r]);
     }
     // Emit distinct probe rows that exist in the build set. To keep
     // "order of first occurrence in `a`", when probe is b we still emit
@@ -29,7 +40,7 @@ pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
     let stid = seen.add_table(probe);
     let mut out = TableBuilder::with_capacity(a.schema().clone(), build.num_rows());
     for r in 0..probe.num_rows() {
-        if bset.contains(probe, r) && seen.insert(stid, r) {
+        if bset.contains_hashed(probe, r, ph[r]) && seen.insert_hashed(stid, r, ph[r]) {
             out.push_row(probe, r)?;
         }
     }

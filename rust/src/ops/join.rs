@@ -13,11 +13,28 @@
 //!
 //! Null semantics: SQL-style — a null key never matches anything (not
 //! even another null), but null-keyed rows still appear in outer results.
+//!
+//! # Morsel-parallel hash join and its canonical output order
+//!
+//! The hash join is radix-partitioned: both sides' key columns are
+//! hashed columnarly ([`super::hash::hash_column`]), rows are split
+//! into [`RADIX_PARTITIONS`] partitions by
+//! [`super::hash::hash_to_partition`] (equal keys share a hash, so
+//! matches never cross partitions), and each partition builds and
+//! probes its own chained table — one task per partition on the morsel
+//! thread pool. Output order is **canonical and thread-count
+//! independent**: matches partition-major, within a partition in
+//! ascending probe-row order (build candidates most-recent-first),
+//! then unmatched build rows partition-major, ascending. Inputs below
+//! [`RADIX_MIN_ROWS`] use a single partition, which reduces exactly to
+//! the seed's serial probe order.
 
-use super::hash::hash_cell;
+use super::hash::{hash_column, hash_to_partition};
+use super::parallel::{concat_chunks, map_morsels, map_tasks, parallelism};
+use super::partition::partition_indices;
 use super::sort::cmp_cells_across;
 use crate::error::{Error, Result};
-use crate::table::{take::take_table_opt, Schema, Table};
+use crate::table::{take::take_table_opt_par, Array, Schema, Table};
 use std::cmp::Ordering;
 use std::sync::Arc;
 
@@ -74,8 +91,15 @@ impl JoinConfig {
     }
 }
 
-/// Local join entry point.
+/// Local join entry point (process-default parallelism).
 pub fn join(left: &Table, right: &Table, cfg: &JoinConfig) -> Result<Table> {
+    join_par(left, right, cfg, parallelism())
+}
+
+/// [`join`] with an explicit thread budget. The output table is bit
+/// identical at every `threads` value (see module docs for the
+/// canonical order).
+pub fn join_par(left: &Table, right: &Table, cfg: &JoinConfig, threads: usize) -> Result<Table> {
     if cfg.left_col >= left.num_columns() || cfg.right_col >= right.num_columns() {
         return Err(Error::invalid("join column out of range"));
     }
@@ -89,22 +113,24 @@ pub fn join(left: &Table, right: &Table, cfg: &JoinConfig) -> Result<Table> {
         )));
     }
     let (li, ri) = match cfg.algorithm {
-        JoinAlgorithm::Hash => hash_join_indices(left, right, cfg),
+        JoinAlgorithm::Hash => hash_join_indices(left, right, cfg, threads),
         JoinAlgorithm::Sort => sort_join_indices(left, right, cfg),
     };
-    materialize(left, right, &li, &ri)
+    materialize(left, right, &li, &ri, threads)
 }
 
-/// Build the output table from matched index pairs (None = outer null).
+/// Build the output table from matched index pairs (None = outer null);
+/// one gather task per output column.
 fn materialize(
     left: &Table,
     right: &Table,
     li: &[Option<usize>],
     ri: &[Option<usize>],
+    threads: usize,
 ) -> Result<Table> {
     debug_assert_eq!(li.len(), ri.len());
-    let lt = take_table_opt(left, li);
-    let rt = take_table_opt(right, ri);
+    let lt = take_table_opt_par(left, li, threads);
+    let rt = take_table_opt_par(right, ri, threads);
     let schema = Arc::new(left.schema().join(right.schema()));
     let mut cols = Vec::with_capacity(lt.num_columns() + rt.num_columns());
     cols.extend(lt.columns().iter().cloned());
@@ -112,73 +138,104 @@ fn materialize(
     Table::try_new(schema, cols)
 }
 
-/// A flat chained hash table over row indices: `first[bucket]` heads a
-/// linked list threaded through `next[row]`. One allocation each, no
-/// per-bucket Vecs — ~2–3× faster to build than `HashMap<u32, Vec>` and
-/// the probe walk is cache-linear in `next`.
-pub(crate) struct ChainTable {
-    mask: u32,
-    first: Vec<u32>,
-    next: Vec<u32>,
-    hashes: Vec<u32>,
+const CHAIN_END: u32 = u32::MAX;
+
+/// Rows (build + probe) below which the hash join stays
+/// single-partition — the radix split only pays off once per-partition
+/// tables stop fitting in cache / there is enough work per thread.
+pub const RADIX_MIN_ROWS: usize = 1 << 14;
+
+/// Fixed radix fan-out for large hash joins. Deliberately **not**
+/// derived from the thread count, so the canonical output order is the
+/// same at every `parallelism`.
+pub const RADIX_PARTITIONS: usize = 64;
+
+/// One radix partition's matched pairs + unmatched build rows.
+struct PartJoin {
+    bi: Vec<Option<usize>>,
+    pi: Vec<Option<usize>>,
+    unmatched_build: Vec<usize>,
 }
 
-pub(crate) const CHAIN_END: u32 = u32::MAX;
-
-impl ChainTable {
-    /// Build over the valid rows of `key`.
-    pub(crate) fn build(key: &crate::table::Array, rows: usize) -> ChainTable {
-        let buckets = (rows.max(1) * 2).next_power_of_two();
-        let mask = (buckets - 1) as u32;
-        let mut first = vec![CHAIN_END; buckets];
-        let mut next = vec![CHAIN_END; rows];
-        let mut hashes = vec![0u32; rows];
-        for i in 0..rows {
-            if key.is_valid(i) {
-                let h = hash_cell(key, i);
-                hashes[i] = h;
-                let b = (h & mask) as usize;
-                next[i] = first[b];
-                first[b] = i as u32;
+/// Build a chained hash table over this partition's build rows and
+/// probe it with the partition's probe rows, in ascending row order.
+/// `bh`/`ph` are the full-column hashes indexed by global row id.
+fn join_partition(
+    bk: &Array,
+    pk: &Array,
+    bh: &[u32],
+    ph: &[u32],
+    build_rows: &[usize],
+    probe_rows: &[usize],
+    probe_outer: bool,
+) -> PartJoin {
+    // Flat chained-index table: `first[bucket]` heads a list threaded
+    // through `next[slot]`. One allocation each, no per-bucket Vecs —
+    // ~2–3× faster to build than `HashMap<u32, Vec>` and the probe
+    // walk is cache-linear in `next`. Null build keys are never
+    // inserted (SQL: null matches nothing) but stay tracked for outer
+    // emission.
+    let n = build_rows.len();
+    let buckets = (n.max(1) * 2).next_power_of_two();
+    let mask = (buckets - 1) as u32;
+    let mut first = vec![CHAIN_END; buckets];
+    let mut next = vec![CHAIN_END; n];
+    for (slot, &row) in build_rows.iter().enumerate() {
+        if bk.is_valid(row) {
+            let b = (bh[row] & mask) as usize;
+            next[slot] = first[b];
+            first[b] = slot as u32;
+        }
+    }
+    let mut matched = vec![false; n];
+    let mut bi: Vec<Option<usize>> = Vec::new();
+    let mut pi: Vec<Option<usize>> = Vec::new();
+    for &j in probe_rows {
+        let mut any = false;
+        if pk.is_valid(j) {
+            let h = ph[j];
+            let mut cur = first[(h & mask) as usize];
+            while cur != CHAIN_END {
+                let slot = cur as usize;
+                cur = next[slot];
+                let i = build_rows[slot];
+                if bh[i] == h && cmp_cells_across(bk, i, pk, j) == Ordering::Equal {
+                    bi.push(Some(i));
+                    pi.push(Some(j));
+                    matched[slot] = true;
+                    any = true;
+                }
             }
         }
-        ChainTable { mask, first, next, hashes }
-    }
-
-    /// Iterate candidate build rows whose hash equals `h`.
-    #[inline]
-    pub(crate) fn candidates(&self, h: u32) -> ChainIter<'_> {
-        ChainIter { table: self, cur: self.first[(h & self.mask) as usize], hash: h }
-    }
-}
-
-pub(crate) struct ChainIter<'a> {
-    table: &'a ChainTable,
-    cur: u32,
-    hash: u32,
-}
-
-impl Iterator for ChainIter<'_> {
-    type Item = usize;
-
-    #[inline]
-    fn next(&mut self) -> Option<usize> {
-        while self.cur != CHAIN_END {
-            let i = self.cur as usize;
-            self.cur = self.table.next[i];
-            if self.table.hashes[i] == self.hash {
-                return Some(i);
-            }
+        if !any && probe_outer {
+            bi.push(None);
+            pi.push(Some(j));
         }
-        None
     }
+    let unmatched_build = build_rows
+        .iter()
+        .enumerate()
+        .filter(|(slot, _)| !matched[*slot])
+        .map(|(_, &row)| row)
+        .collect();
+    PartJoin { bi, pi, unmatched_build }
 }
 
-/// Hash join: build on the smaller side, probe with the larger.
+/// Radix ids for precomputed hashes (morsel-parallel).
+fn radix_ids(hashes: &[u32], p: usize, threads: usize) -> Vec<u32> {
+    let chunks = map_morsels(hashes.len(), threads, |r| {
+        hashes[r].iter().map(|&h| hash_to_partition(h, p)).collect::<Vec<u32>>()
+    });
+    concat_chunks(chunks, hashes.len())
+}
+
+/// Hash join: build on the smaller side, probe with the larger,
+/// radix-partitioned across the morsel thread pool.
 fn hash_join_indices(
     left: &Table,
     right: &Table,
     cfg: &JoinConfig,
+    threads: usize,
 ) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
     // Swap so `build` is the smaller relation; remember orientation.
     let left_builds = left.num_rows() <= right.num_rows();
@@ -189,13 +246,12 @@ fn hash_join_indices(
     };
     let bk = build_t.column(build_col).as_ref();
     let pk = probe_t.column(probe_col).as_ref();
+    let (nb, np) = (build_t.num_rows(), probe_t.num_rows());
 
-    // Chained-index table; hash collisions resolved by key comparison.
-    let map = ChainTable::build(bk, build_t.num_rows());
-
-    let mut build_matched = vec![false; build_t.num_rows()];
-    let mut bi: Vec<Option<usize>> = Vec::with_capacity(probe_t.num_rows());
-    let mut pi: Vec<Option<usize>> = Vec::with_capacity(probe_t.num_rows());
+    // Columnar key hashes, one pass per side (shared by radix split,
+    // chain build, and probe).
+    let bh = hash_column(bk, threads);
+    let ph = hash_column(pk, threads);
 
     let probe_outer = match (cfg.join_type, left_builds) {
         (JoinType::Inner, _) => false,
@@ -214,26 +270,39 @@ fn hash_join_indices(
         (JoinType::Right, false) => true,
     };
 
-    for j in 0..probe_t.num_rows() {
-        let mut matched = false;
-        if pk.is_valid(j) {
-            for i in map.candidates(hash_cell(pk, j)) {
-                if cmp_cells_across(bk, i, pk, j) == Ordering::Equal {
-                    bi.push(Some(i));
-                    pi.push(Some(j));
-                    build_matched[i] = true;
-                    matched = true;
-                }
-            }
-        }
-        if !matched && probe_outer {
-            bi.push(None);
-            pi.push(Some(j));
-        }
+    // Partition count is a pure function of the input size (never of
+    // `threads`), so the partition-major output order is canonical.
+    let p = if nb + np < RADIX_MIN_ROWS { 1 } else { RADIX_PARTITIONS };
+    let (build_parts, probe_parts) = if p == 1 {
+        (vec![(0..nb).collect::<Vec<usize>>()], vec![(0..np).collect::<Vec<usize>>()])
+    } else {
+        // Equal keys have equal hashes, so matches never cross
+        // partitions; null rows ride along on the null-sentinel hash.
+        (
+            partition_indices(&radix_ids(&bh, p, threads), p),
+            partition_indices(&radix_ids(&ph, p, threads), p),
+        )
+    };
+
+    let parts = map_tasks(p, threads, |pid| {
+        join_partition(bk, pk, &bh, &ph, &build_parts[pid], &probe_parts[pid], probe_outer)
+    });
+
+    // Canonical assembly: matches partition-major, then (if outer)
+    // unmatched build rows partition-major.
+    let mut total: usize = parts.iter().map(|x| x.bi.len()).sum();
+    if build_outer {
+        total += parts.iter().map(|x| x.unmatched_build.len()).sum::<usize>();
+    }
+    let mut bi: Vec<Option<usize>> = Vec::with_capacity(total);
+    let mut pi: Vec<Option<usize>> = Vec::with_capacity(total);
+    for part in &parts {
+        bi.extend_from_slice(&part.bi);
+        pi.extend_from_slice(&part.pi);
     }
     if build_outer {
-        for (i, m) in build_matched.iter().enumerate() {
-            if !m {
+        for part in &parts {
+            for &i in &part.unmatched_build {
                 bi.push(Some(i));
                 pi.push(None);
             }
@@ -373,7 +442,7 @@ pub fn nested_loop_join(left: &Table, right: &Table, cfg: &JoinConfig) -> Result
             }
         }
     }
-    materialize(left, right, &li, &ri)
+    materialize(left, right, &li, &ri, 1)
 }
 
 /// Schema the join output will have (exposed for planners/builders).
@@ -523,6 +592,36 @@ mod tests {
         let l = Table::from_arrays(vec![("k", Array::from_i64(vec![1]))]).unwrap();
         let r = Table::from_arrays(vec![("k", Array::from_f64(vec![1.0]))]).unwrap();
         assert!(join(&l, &r, &JoinConfig::inner(0, 0)).is_err());
+    }
+
+    #[test]
+    fn join_par_bit_identical_across_thread_counts() {
+        for jt in [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter] {
+            let cfg = JoinConfig::new(jt, 0, 0);
+            let serial = join_par(&lt(), &rt(), &cfg, 1).unwrap();
+            for threads in [2usize, 7] {
+                let par = join_par(&lt(), &rt(), &cfg, threads).unwrap();
+                assert!(par.data_equals(&serial), "{jt:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn radix_path_matches_single_partition_multiset() {
+        // Big enough to cross RADIX_MIN_ROWS so the radix path runs;
+        // verify against the sort join (same multiset, different order).
+        let n = (RADIX_MIN_ROWS / 2 + 100) as i64;
+        let l = Table::from_arrays(vec![("k", Array::from_i64((0..n).map(|i| i % 97).collect()))])
+            .unwrap();
+        let r = Table::from_arrays(vec![("k", Array::from_i64((0..n).map(|i| i * 2).collect()))])
+            .unwrap();
+        let cfg = JoinConfig::inner(0, 0);
+        let hash = join_par(&l, &r, &cfg, 4).unwrap();
+        let sort = join(&l, &r, &cfg.with_algorithm(JoinAlgorithm::Sort)).unwrap();
+        assert_eq!(row_multiset(&hash), row_multiset(&sort));
+        // And the radix order itself is thread-count independent.
+        let serial = join_par(&l, &r, &cfg, 1).unwrap();
+        assert!(hash.data_equals(&serial));
     }
 
     #[test]

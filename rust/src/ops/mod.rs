@@ -3,6 +3,32 @@
 //! Local operators work entirely on the data available to this process;
 //! distributed counterparts in [`crate::dist`] compose them with the
 //! AllToAll network operator (Fig. 3).
+//!
+//! # Morsel-parallel execution model
+//!
+//! The hot operators (hash join, group-by, hash partition, row-hash
+//! dedup, take materialization) run on the stdlib-only morsel engine in
+//! [`parallel`]: inputs are chunked into fixed 64Ki-row morsels, key
+//! and row hashes are computed **columnarly** ([`hash::hash_column`] /
+//! [`hash::hash_rows`], one typed pass, no per-cell enum dispatch), and
+//! scoped worker threads pull chunks off a shared counter. The thread
+//! budget comes from [`parallel::parallelism`] (or the explicit `_par`
+//! operator variants, or [`crate::ctx::CylonContext::parallelism`] in
+//! the distributed layer).
+//!
+//! # Determinism contract
+//!
+//! Parallelism changes speed, **never results**: every operator's
+//! output is bit-identical at every thread count, because morsel
+//! boundaries and radix fan-outs are pure functions of the input (never
+//! of the thread count) and results are reassembled in task order.
+//! Orders are canonical per operator: group-by keeps first-appearance
+//! key order, set operators keep first-occurrence row order, the hash
+//! join emits radix-partition-major order (see the `join` module
+//! docs), and shuffle
+//! routing stays `hash(key) % world` — the bit-exact contract shared
+//! with the AOT Pallas kernel. `tests/prop_parallel.rs` pins all of
+//! this at `parallelism ∈ {1, 2, 7}`.
 
 pub mod aggregate;
 pub mod difference;
@@ -11,6 +37,7 @@ pub mod hash;
 pub mod intersect;
 pub mod join;
 pub mod merge;
+pub mod parallel;
 pub mod partition;
 pub mod project;
 pub(crate) mod rowset;
@@ -18,12 +45,13 @@ pub mod select;
 pub mod sort;
 pub mod union;
 
-pub use aggregate::{group_by, AggFn, AggSpec};
+pub use aggregate::{group_by, group_by_par, AggFn, AggSpec};
 pub use difference::difference;
 pub use expr::Expr;
 pub use intersect::intersect;
-pub use join::{join, JoinAlgorithm, JoinConfig, JoinType};
+pub use join::{join, join_par, JoinAlgorithm, JoinConfig, JoinType};
 pub use merge::merge_sorted;
+pub use parallel::{parallelism, set_parallelism};
 pub use partition::{hash_partition, partition_indices};
 pub use project::project;
 pub use select::select;

@@ -1,0 +1,231 @@
+//! Morsel-driven parallel execution for the local operators.
+//!
+//! The paper's performance claim (§IV) rests on local operators that
+//! saturate the cores of each node. This module is the (stdlib-only)
+//! engine behind that: inputs are split into fixed-size **morsels**
+//! (chunks of [`MORSEL_ROWS`] rows) and a small pool of scoped threads
+//! pulls morsels off a shared atomic counter.
+//!
+//! # Determinism contract
+//!
+//! Every parallel operator built on these helpers produces **bit
+//! identical output at any thread count**, because nothing observable
+//! depends on scheduling:
+//!
+//! * morsel boundaries are a fixed function of the input length
+//!   ([`MORSEL_ROWS`]), *never* of the thread count;
+//! * [`map_morsels`] / [`map_tasks`] return results in task order, no
+//!   matter which thread computed them;
+//! * threads share no mutable state beyond the task counter.
+//!
+//! Callers therefore only choose *how fast* an operator runs, never
+//! *what* it returns — the serial/parallel equivalence property tests
+//! in `tests/prop_parallel.rs` pin this at `parallelism ∈ {1, 2, 7}`.
+//!
+//! # The parallelism knob
+//!
+//! [`parallelism`] resolves the process-wide default thread budget:
+//! an explicit [`set_parallelism`] wins, then the `RYLON_PARALLELISM`
+//! environment variable, then the machine's available parallelism.
+//! [`crate::ctx::CylonContext`] carries a per-worker knob derived from
+//! it (divided by the in-process world size) so co-located workers
+//! share the machine instead of oversubscribing it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Rows per morsel. Fixed (not derived from the thread count) so that
+/// chunk boundaries — and thus any per-chunk floating-point reduction
+/// order — are a pure function of the input.
+pub const MORSEL_ROWS: usize = 1 << 16;
+
+/// Row count below which task-per-column / task-per-partition fan-out
+/// is not worth a thread spawn; callers drop to 1 thread under it.
+/// (Purely a speed heuristic — results are identical either way.)
+pub const PAR_MIN_ROWS: usize = 1 << 12;
+
+/// Process-wide override; 0 = unset (fall back to env / hardware).
+static PARALLELISM: AtomicUsize = AtomicUsize::new(0);
+
+fn default_parallelism() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("RYLON_PARALLELISM")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Set the process-wide parallelism knob (0 restores the default:
+/// `RYLON_PARALLELISM` env var, else hardware parallelism).
+pub fn set_parallelism(n: usize) {
+    PARALLELISM.store(n, Ordering::Relaxed);
+}
+
+/// The process-wide thread budget local operators use when no explicit
+/// per-call parallelism is given.
+pub fn parallelism() -> usize {
+    match PARALLELISM.load(Ordering::Relaxed) {
+        0 => default_parallelism(),
+        n => n,
+    }
+}
+
+/// Run `n` independent tasks on up to `threads` scoped threads and
+/// return their results **in task order**. Tasks are pulled from a
+/// shared atomic counter (morsel-driven work stealing), so skew in
+/// per-task cost balances out. `threads <= 1` (or `n <= 1`) runs
+/// inline with zero thread spawns.
+pub fn map_tasks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let collected = std::thread::scope(|s| {
+        let next = &next;
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            handles.push(s.spawn(move || {
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                local
+            }));
+        }
+        let mut parts = Vec::with_capacity(threads);
+        for h in handles {
+            parts.push(h.join().expect("morsel worker panicked"));
+        }
+        parts
+    });
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for part in collected {
+        for (i, v) in part {
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|v| v.expect("every task produced a result")).collect()
+}
+
+/// Split `[0, len)` into [`MORSEL_ROWS`]-sized morsels, map each range
+/// through `f` on up to `threads` threads, and return the per-morsel
+/// results in morsel order. Inputs shorter than one morsel never spawn.
+pub fn map_morsels<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let n = len.div_ceil(MORSEL_ROWS);
+    map_tasks(n, threads, |m| {
+        let start = m * MORSEL_ROWS;
+        f(start..(start + MORSEL_ROWS).min(len))
+    })
+}
+
+/// Side-effect-only variant of [`map_morsels`].
+pub fn for_each_morsel<F>(len: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let _: Vec<()> = map_morsels(len, threads, f);
+}
+
+/// Reassemble per-morsel chunks into one flat vector of `len` elements.
+pub fn concat_chunks<T: Copy>(chunks: Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut out = Vec::with_capacity(len);
+    for c in chunks {
+        out.extend_from_slice(&c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_tasks_preserves_order_across_thread_counts() {
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for threads in [1, 2, 7, 64] {
+            assert_eq!(map_tasks(100, threads, |i| i * i), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_tasks_empty_and_single() {
+        assert_eq!(map_tasks(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(map_tasks(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn morsel_boundaries_fixed_and_covering() {
+        // 2.5 morsels worth of rows: ranges must tile [0, len) exactly
+        // and be identical at every thread count.
+        let len = MORSEL_ROWS * 2 + MORSEL_ROWS / 2;
+        let serial = map_morsels(len, 1, |r| (r.start, r.end));
+        assert_eq!(serial.len(), 3);
+        assert_eq!(serial[0], (0, MORSEL_ROWS));
+        assert_eq!(serial[2].1, len);
+        for threads in [2, 7] {
+            assert_eq!(map_morsels(len, threads, |r| (r.start, r.end)), serial);
+        }
+    }
+
+    #[test]
+    fn morsel_sums_equal_serial() {
+        let len = MORSEL_ROWS + 123;
+        let want: u64 = (0..len as u64).sum();
+        for threads in [1, 3, 8] {
+            let got: u64 = map_morsels(len, threads, |r| {
+                r.map(|i| i as u64).sum::<u64>()
+            })
+            .into_iter()
+            .sum();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn for_each_morsel_visits_every_row_once() {
+        use std::sync::atomic::AtomicU64;
+        let len = MORSEL_ROWS + 7;
+        let sum = AtomicU64::new(0);
+        for_each_morsel(len, 4, |r| {
+            let s: u64 = r.map(|i| i as u64).sum();
+            sum.fetch_add(s, Ordering::Relaxed);
+        });
+        assert_eq!(sum.into_inner(), (0..len as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn concat_chunks_flattens_in_order() {
+        let chunks = vec![vec![1u32, 2], vec![], vec![3, 4, 5]];
+        assert_eq!(concat_chunks(chunks, 5), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn knob_roundtrip() {
+        // The knob only changes speed, never results, so briefly setting
+        // it is safe even with concurrently running tests.
+        set_parallelism(3);
+        assert_eq!(parallelism(), 3);
+        set_parallelism(0);
+        assert!(parallelism() >= 1);
+    }
+}

@@ -11,12 +11,27 @@
 //! * **by whole row** (Union/Intersect/Difference): the row hash of every
 //!   column, §II-B4.
 
-use super::hash::{hash_cell, hash_i64, hash_row};
+use super::hash::{hash_column_range, hash_rows_range};
+use super::parallel::{concat_chunks, map_morsels, map_tasks, parallelism};
 use crate::error::{Error, Result};
-use crate::table::{take::take_table, Array, Table};
+use crate::table::{take::take_table, Table};
 
-/// Compute the partition id of every row, keyed on column `col`.
+/// Compute the partition id of every row, keyed on column `col`
+/// (process-default parallelism).
 pub fn partition_ids_by_key(t: &Table, col: usize, p: usize) -> Result<Vec<u32>> {
+    partition_ids_by_key_par(t, col, p, parallelism())
+}
+
+/// [`partition_ids_by_key`] with an explicit thread budget. Ids are
+/// `hash_cell(key, row) % p` — bit-identical at every thread count and
+/// to the AOT Pallas kernel on null-free int64 keys (the routing
+/// contract pinned by `tests/golden_hash.rs`).
+pub fn partition_ids_by_key_par(
+    t: &Table,
+    col: usize,
+    p: usize,
+    threads: usize,
+) -> Result<Vec<u32>> {
     if p == 0 {
         return Err(Error::invalid("zero partitions"));
     }
@@ -24,26 +39,36 @@ pub fn partition_ids_by_key(t: &Table, col: usize, p: usize) -> Result<Vec<u32>>
         return Err(Error::invalid(format!("partition column {col} out of range")));
     }
     let a = t.column(col).as_ref();
-    let ids = match a {
-        // Typed fast path == the kernel's computation.
-        Array::Int64(k) if k.null_count() == 0 => k
-            .values()
-            .iter()
-            .map(|&v| hash_i64(v) % p as u32)
-            .collect(),
-        _ => (0..t.num_rows())
-            .map(|i| hash_cell(a, i) % p as u32)
-            .collect(),
-    };
-    Ok(ids)
+    let chunks = map_morsels(t.num_rows(), threads, |r| {
+        let mut h = hash_column_range(a, r);
+        for x in &mut h {
+            *x %= p as u32;
+        }
+        h
+    });
+    Ok(concat_chunks(chunks, t.num_rows()))
 }
 
-/// Compute the partition id of every row from the whole-row hash.
+/// Compute the partition id of every row from the whole-row hash
+/// (process-default parallelism).
 pub fn partition_ids_by_row(t: &Table, p: usize) -> Result<Vec<u32>> {
+    partition_ids_by_row_par(t, p, parallelism())
+}
+
+/// [`partition_ids_by_row`] with an explicit thread budget
+/// (`hash_row(t, row) % p`, bit-identical at every thread count).
+pub fn partition_ids_by_row_par(t: &Table, p: usize, threads: usize) -> Result<Vec<u32>> {
     if p == 0 {
         return Err(Error::invalid("zero partitions"));
     }
-    Ok((0..t.num_rows()).map(|i| hash_row(t, i) % p as u32).collect())
+    let chunks = map_morsels(t.num_rows(), threads, |r| {
+        let mut h = hash_rows_range(t, r);
+        for x in &mut h {
+            *x %= p as u32;
+        }
+        h
+    });
+    Ok(concat_chunks(chunks, t.num_rows()))
 }
 
 /// Group row indices by a precomputed partition-id vector.
@@ -61,18 +86,31 @@ pub fn partition_indices(ids: &[u32], p: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Materialize partitions from a precomputed id vector.
+/// Materialize partitions from a precomputed id vector
+/// (process-default parallelism).
 pub fn partition_by_ids(t: &Table, ids: &[u32], p: usize) -> Result<Vec<Table>> {
+    partition_by_ids_par(t, ids, p, parallelism())
+}
+
+/// [`partition_by_ids`] with an explicit thread budget: one take-table
+/// task per partition, results in partition order.
+pub fn partition_by_ids_par(
+    t: &Table,
+    ids: &[u32],
+    p: usize,
+    threads: usize,
+) -> Result<Vec<Table>> {
     if ids.len() != t.num_rows() {
         return Err(Error::invalid("partition id vector length != rows"));
     }
     if let Some(&bad) = ids.iter().find(|&&id| id as usize >= p) {
         return Err(Error::invalid(format!("partition id {bad} >= {p}")));
     }
-    Ok(partition_indices(ids, p)
-        .iter()
-        .map(|idx| take_table(t, idx))
-        .collect())
+    // Small tables materialize inline — a thread spawn per partition
+    // costs more than the gathers themselves.
+    let threads = if t.num_rows() < super::parallel::PAR_MIN_ROWS { 1 } else { threads };
+    let idx = partition_indices(ids, p);
+    Ok(map_tasks(p, threads, |pid| take_table(t, &idx[pid])))
 }
 
 /// HashPartition keyed on a column: the full local operator.
@@ -90,6 +128,7 @@ pub fn hash_partition_rows(t: &Table, p: usize) -> Result<Vec<Table>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::hash::{hash_cell, hash_i64};
     use crate::table::Array;
 
     fn t(n: i64) -> Table {
@@ -168,6 +207,42 @@ mod tests {
         assert!(hash_partition(&t, 9, 4).is_err());
         assert!(partition_by_ids(&t, &[0, 0], 1).is_err());
         assert!(partition_by_ids(&t, &[0, 0, 0, 0, 9], 4).is_err());
+    }
+
+    #[test]
+    fn par_ids_bit_identical_across_thread_counts() {
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64_opts((0..500i64).map(|i| (i % 7 != 0).then_some(i)).collect())),
+            ("s", Array::from_strs(&(0..500).map(|i| format!("s{i}")).collect::<Vec<_>>())),
+        ])
+        .unwrap();
+        for p in [1usize, 2, 7] {
+            let key1 = partition_ids_by_key_par(&t, 0, p, 1).unwrap();
+            let row1 = partition_ids_by_row_par(&t, p, 1).unwrap();
+            for threads in [2usize, 7] {
+                assert_eq!(partition_ids_by_key_par(&t, 0, p, threads).unwrap(), key1);
+                assert_eq!(partition_ids_by_row_par(&t, p, threads).unwrap(), row1);
+            }
+            // The routing contract: hash_cell(key) % p, nulls included.
+            let key_col = t.column(0).as_ref();
+            for (i, &id) in key1.iter().enumerate() {
+                assert_eq!(id, hash_cell(key_col, i) % p as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn par_partition_tables_identical_across_thread_counts() {
+        let t = t(300);
+        let ids = partition_ids_by_key(&t, 0, 5).unwrap();
+        let serial = partition_by_ids_par(&t, &ids, 5, 1).unwrap();
+        for threads in [2usize, 7] {
+            let par = partition_by_ids_par(&t, &ids, 5, threads).unwrap();
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in par.iter().zip(&serial) {
+                assert!(a.data_equals(b), "threads={threads}");
+            }
+        }
     }
 
     #[test]

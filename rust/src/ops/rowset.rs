@@ -90,8 +90,17 @@ impl<'a> RowSet<'a> {
     /// Insert row `row` of registered table `tid`. Returns `true` if the
     /// row was new (not identical to any present row).
     pub fn insert(&mut self, tid: usize, row: usize) -> bool {
+        let h = hash_row(self.tables[tid], row);
+        self.insert_hashed(tid, row, h)
+    }
+
+    /// [`Self::insert`] with a precomputed row hash (`h` must equal
+    /// `hash_row(tables[tid], row)`). The set operators hash whole
+    /// columns up front ([`crate::ops::hash::hash_rows`]) instead of
+    /// dispatching per cell on the insert path.
+    pub fn insert_hashed(&mut self, tid: usize, row: usize, h: u32) -> bool {
         let t = self.tables[tid];
-        let h = hash_row(t, row);
+        debug_assert_eq!(h, hash_row(t, row));
         if self.find(t, row, h).is_some() {
             return false;
         }
@@ -110,6 +119,12 @@ impl<'a> RowSet<'a> {
     /// Membership test for row `row` of table `t` (t need not be registered).
     pub fn contains(&self, t: &Table, row: usize) -> bool {
         self.find(t, row, hash_row(t, row)).is_some()
+    }
+
+    /// [`Self::contains`] with a precomputed row hash.
+    pub fn contains_hashed(&self, t: &Table, row: usize, h: u32) -> bool {
+        debug_assert_eq!(h, hash_row(t, row));
+        self.find(t, row, h).is_some()
     }
 
     /// Iterate distinct rows in insertion order as (tid, row).

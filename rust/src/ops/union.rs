@@ -2,27 +2,39 @@
 //! (§II-B4). Row-based traversal: the paper notes this is the workload
 //! whose scaling suffers most from abandoning columnar access (Fig. 7b).
 
+use super::hash::hash_rows;
+use super::parallel::parallelism;
 use super::rowset::RowSet;
 use crate::error::{Error, Result};
 use crate::table::{builder::TableBuilder, Table};
 
 /// `a ∪ b` with duplicates removed. Output order: first occurrence in
-/// `a` then first occurrences of `b`-only rows.
+/// `a` then first occurrences of `b`-only rows. Row hashes are computed
+/// columnarly (morsel-parallel) up front; the dedup scan stays serial
+/// so the insertion order — and thus the output — is unchanged.
 pub fn union(a: &Table, b: &Table) -> Result<Table> {
+    union_par(a, b, parallelism())
+}
+
+/// [`union`] with an explicit thread budget for the row-hash pass
+/// (identical output at every thread count).
+pub fn union_par(a: &Table, b: &Table, threads: usize) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("union of schema-incompatible tables"));
     }
+    let ha = hash_rows(a, threads);
+    let hb = hash_rows(b, threads);
     let mut set = RowSet::with_capacity(a.num_rows() + b.num_rows());
     let ta = set.add_table(a);
     let tb = set.add_table(b);
     let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
     for r in 0..a.num_rows() {
-        if set.insert(ta, r) {
+        if set.insert_hashed(ta, r, ha[r]) {
             out.push_row(a, r)?;
         }
     }
     for r in 0..b.num_rows() {
-        if set.insert(tb, r) {
+        if set.insert_hashed(tb, r, hb[r]) {
             out.push_row(b, r)?;
         }
     }
@@ -32,11 +44,17 @@ pub fn union(a: &Table, b: &Table) -> Result<Table> {
 /// Distinct rows of a single table (Union's degenerate form; used by the
 /// distributed set ops after shuffling).
 pub fn distinct(t: &Table) -> Result<Table> {
+    distinct_par(t, parallelism())
+}
+
+/// [`distinct`] with an explicit thread budget.
+pub fn distinct_par(t: &Table, threads: usize) -> Result<Table> {
+    let hashes = hash_rows(t, threads);
     let mut set = RowSet::with_capacity(t.num_rows());
     let tid = set.add_table(t);
     let mut out = TableBuilder::with_capacity(t.schema().clone(), t.num_rows());
     for r in 0..t.num_rows() {
-        if set.insert(tid, r) {
+        if set.insert_hashed(tid, r, hashes[r]) {
             out.push_row(t, r)?;
         }
     }

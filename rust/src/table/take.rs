@@ -70,7 +70,10 @@ fn take_prim_opt<T: Copy + Default>(
 
 fn take_utf8(a: &Utf8Array, idx: &[usize]) -> Utf8Array {
     let mut offsets = Vec::with_capacity(idx.len() + 1);
-    let mut data = Vec::new();
+    // Pre-size the byte buffer: one counting pass over the offsets is
+    // far cheaper than repeated reallocation on the materialize path.
+    let total: usize = idx.iter().map(|&i| (a.offsets[i + 1] - a.offsets[i]) as usize).sum();
+    let mut data = Vec::with_capacity(total);
     offsets.push(0u32);
     for &i in idx {
         let (s, e) = (a.offsets[i] as usize, a.offsets[i + 1] as usize);
@@ -83,7 +86,12 @@ fn take_utf8(a: &Utf8Array, idx: &[usize]) -> Utf8Array {
 
 fn take_utf8_opt(a: &Utf8Array, idx: &[Option<usize>]) -> Utf8Array {
     let mut offsets = Vec::with_capacity(idx.len() + 1);
-    let mut data = Vec::new();
+    let total: usize = idx
+        .iter()
+        .flatten()
+        .map(|&i| (a.offsets[i + 1] - a.offsets[i]) as usize)
+        .sum();
+    let mut data = Vec::with_capacity(total);
     let mut validity = Bitmap::new_null(idx.len());
     offsets.push(0u32);
     for (k, i) in idx.iter().enumerate() {
@@ -108,6 +116,26 @@ pub fn take_table(t: &Table, indices: &[usize]) -> Table {
 /// Row gather with optional indices (nulls for `None`).
 pub fn take_table_opt(t: &Table, indices: &[Option<usize>]) -> Table {
     let cols = t.columns().iter().map(|c| Arc::new(take_opt(c, indices))).collect();
+    Table::try_new(t.schema().clone(), cols).expect("take preserves schema")
+}
+
+/// [`take_table`] with the per-column gathers fanned out over up to
+/// `threads` threads (column order — and thus the output — is
+/// identical at every thread count). Small gathers stay inline.
+pub fn take_table_par(t: &Table, indices: &[usize], threads: usize) -> Table {
+    let threads = if indices.len() < crate::ops::parallel::PAR_MIN_ROWS { 1 } else { threads };
+    let cols = crate::ops::parallel::map_tasks(t.num_columns(), threads, |c| {
+        Arc::new(take(t.column(c), indices))
+    });
+    Table::try_new(t.schema().clone(), cols).expect("take preserves schema")
+}
+
+/// [`take_table_opt`] with per-column parallel gathers.
+pub fn take_table_opt_par(t: &Table, indices: &[Option<usize>], threads: usize) -> Table {
+    let threads = if indices.len() < crate::ops::parallel::PAR_MIN_ROWS { 1 } else { threads };
+    let cols = crate::ops::parallel::map_tasks(t.num_columns(), threads, |c| {
+        Arc::new(take_opt(t.column(c), indices))
+    });
     Table::try_new(t.schema().clone(), cols).expect("take preserves schema")
 }
 
@@ -358,5 +386,18 @@ mod tests {
         let out = take_table(&t(), &[]);
         assert_eq!(out.num_rows(), 0);
         assert_eq!(out.num_columns(), 2);
+    }
+
+    #[test]
+    fn par_take_identical_across_thread_counts() {
+        let src = t();
+        let idx = [3usize, 1, 1, 0, 2];
+        let opt_idx = [Some(0), None, Some(2), Some(3), None, Some(1)];
+        let serial = take_table(&src, &idx);
+        let serial_opt = take_table_opt(&src, &opt_idx);
+        for threads in [1usize, 2, 7] {
+            assert!(take_table_par(&src, &idx, threads).data_equals(&serial));
+            assert!(take_table_opt_par(&src, &opt_idx, threads).data_equals(&serial_opt));
+        }
     }
 }

@@ -1,0 +1,231 @@
+//! Serial/parallel equivalence property tests: every morsel-parallel
+//! operator must produce **bit-identical** tables at `parallelism ∈
+//! {1, 2, 7}` — the determinism contract of `rylon::ops::parallel` —
+//! including on null-heavy and all-null key columns, across the radix
+//! join threshold, and through the distributed shuffle path.
+//!
+//! proptest is not vendored in this offline image; as in the sibling
+//! suites, a deterministic seed sweep over adversarial generators
+//! stands in.
+
+use rylon::coordinator::run_workers;
+use rylon::io::generator::{paper_table, random_table, SplitMix64};
+use rylon::net::CommConfig;
+use rylon::ops::aggregate::{group_by_par, AggFn, AggSpec};
+use rylon::ops::hash::{hash_cell, hash_column, hash_row, hash_rows};
+use rylon::ops::join::{
+    join, join_par, nested_loop_join, JoinAlgorithm, JoinConfig, JoinType, RADIX_MIN_ROWS,
+};
+use rylon::ops::partition::{
+    partition_by_ids_par, partition_ids_by_key_par, partition_ids_by_row_par,
+};
+use rylon::table::pretty::cell_to_string;
+use rylon::table::take::{take_table, take_table_opt, take_table_opt_par, take_table_par};
+use rylon::table::{Array, Table};
+use std::collections::BTreeMap;
+
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for r in 0..t.num_rows() {
+        let key = (0..t.num_columns())
+            .map(|c| cell_to_string(t.column(c), r))
+            .collect::<Vec<_>>()
+            .join("\u{1}");
+        *m.entry(key).or_insert(0) += 1;
+    }
+    m
+}
+
+/// All-null key column plus a payload, the degenerate case the radix
+/// split must route through the null-sentinel hash.
+fn all_null_keys(rows: usize) -> Table {
+    Table::from_arrays(vec![
+        ("k", Array::from_i64_opts(vec![None; rows])),
+        ("v", Array::from_f64((0..rows).map(|i| i as f64).collect())),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn join_identical_at_every_parallelism() {
+    let mut rng = SplitMix64::new(0x9A12A11E1);
+    for case in 0..24usize {
+        let l = random_table(rng.next_below(60) as usize, rng.next_u64());
+        let r = random_table(rng.next_below(60) as usize, rng.next_u64());
+        let jt = [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter]
+            [case % 4];
+        let cfg = JoinConfig::new(jt, 0, 0);
+        let serial = join_par(&l, &r, &cfg, 1).unwrap();
+        for threads in THREADS {
+            let par = join_par(&l, &r, &cfg, threads).unwrap();
+            assert!(par.data_equals(&serial), "case {case}: {jt:?} threads={threads}");
+        }
+        // And the canonical order still carries the right multiset.
+        let want = nested_loop_join(&l, &r, &cfg).unwrap();
+        assert_eq!(row_multiset(&serial), row_multiset(&want), "case {case}");
+    }
+}
+
+#[test]
+fn join_identical_across_radix_threshold() {
+    // Big enough that build + probe crosses RADIX_MIN_ROWS, so the
+    // 64-way radix path runs and must agree with itself at every
+    // thread count and with the sort join's multiset.
+    let rows = RADIX_MIN_ROWS;
+    let l = paper_table(rows, 0.5, 0xA);
+    let r = paper_table(rows, 0.5, 0xB);
+    for jt in [JoinType::Inner, JoinType::FullOuter] {
+        let cfg = JoinConfig::new(jt, 0, 0);
+        let serial = join_par(&l, &r, &cfg, 1).unwrap();
+        for threads in [2usize, 7] {
+            assert!(join_par(&l, &r, &cfg, threads).unwrap().data_equals(&serial), "{jt:?}");
+        }
+        let sorted = join(&l, &r, &cfg.with_algorithm(JoinAlgorithm::Sort)).unwrap();
+        assert_eq!(row_multiset(&serial), row_multiset(&sorted), "{jt:?}");
+    }
+}
+
+#[test]
+fn join_all_null_keys_identical_and_correct() {
+    let l = all_null_keys(97);
+    let r = all_null_keys(41);
+    for jt in [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter] {
+        let cfg = JoinConfig::new(jt, 0, 0);
+        let serial = join_par(&l, &r, &cfg, 1).unwrap();
+        for threads in THREADS {
+            assert!(join_par(&l, &r, &cfg, threads).unwrap().data_equals(&serial), "{jt:?}");
+        }
+        let want = match jt {
+            JoinType::Inner => 0,
+            JoinType::Left => 97,
+            JoinType::Right => 41,
+            JoinType::FullOuter => 138,
+        };
+        assert_eq!(serial.num_rows(), want, "{jt:?}");
+    }
+}
+
+#[test]
+fn group_by_identical_at_every_parallelism() {
+    let aggs = [
+        AggSpec::new(AggFn::Sum, 1),
+        AggSpec::new(AggFn::Count, 1),
+        AggSpec::new(AggFn::Min, 1),
+        AggSpec::new(AggFn::Max, 1),
+        AggSpec::new(AggFn::Mean, 1),
+    ];
+    let mut rng = SplitMix64::new(0x66B);
+    for case in 0..12 {
+        let t = random_table(rng.next_below(200) as usize, rng.next_u64());
+        let serial = group_by_par(&t, 0, &aggs, 1).unwrap();
+        for threads in THREADS {
+            assert!(
+                group_by_par(&t, 0, &aggs, threads).unwrap().data_equals(&serial),
+                "case {case} threads={threads}"
+            );
+        }
+    }
+    // All-null key column: one group, identical everywhere.
+    let t = all_null_keys(50);
+    let serial = group_by_par(&t, 0, &aggs, 1).unwrap();
+    assert_eq!(serial.num_rows(), 1);
+    for threads in THREADS {
+        assert!(group_by_par(&t, 0, &aggs, threads).unwrap().data_equals(&serial));
+    }
+}
+
+#[test]
+fn partition_routing_identical_and_contractual() {
+    let mut rng = SplitMix64::new(0x9A97);
+    for _ in 0..10 {
+        let t = random_table(rng.next_below(150) as usize, rng.next_u64());
+        for p in [1usize, 2, 7] {
+            let key1 = partition_ids_by_key_par(&t, 0, p, 1).unwrap();
+            let row1 = partition_ids_by_row_par(&t, p, 1).unwrap();
+            for threads in THREADS {
+                assert_eq!(partition_ids_by_key_par(&t, 0, p, threads).unwrap(), key1);
+                assert_eq!(partition_ids_by_row_par(&t, p, threads).unwrap(), row1);
+            }
+            // The routing contract the golden-hash suite pins: ids are
+            // the null-aware cell hash (resp. row hash) mod p.
+            let key_col = t.column(0).as_ref();
+            for i in 0..t.num_rows() {
+                assert_eq!(key1[i], hash_cell(key_col, i) % p as u32);
+                assert_eq!(row1[i], hash_row(&t, i) % p as u32);
+            }
+            let serial_parts = partition_by_ids_par(&t, &key1, p, 1).unwrap();
+            for threads in THREADS {
+                let parts = partition_by_ids_par(&t, &key1, p, threads).unwrap();
+                for (a, b) in parts.iter().zip(&serial_parts) {
+                    assert!(a.data_equals(b));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn columnar_hashes_match_scalar_oracles() {
+    let t = random_table(300, 0xC01);
+    for c in t.columns() {
+        let serial = hash_column(c, 1);
+        for threads in THREADS {
+            assert_eq!(hash_column(c, threads), serial);
+        }
+        for (i, &h) in serial.iter().enumerate() {
+            assert_eq!(h, hash_cell(c, i));
+        }
+    }
+    let rows = hash_rows(&t, 1);
+    for threads in THREADS {
+        assert_eq!(hash_rows(&t, threads), rows);
+    }
+    for (i, &h) in rows.iter().enumerate() {
+        assert_eq!(h, hash_row(&t, i));
+    }
+}
+
+#[test]
+fn take_identical_at_every_parallelism() {
+    let t = random_table(120, 0x7A1E);
+    let mut rng = SplitMix64::new(0x7A2E);
+    let idx: Vec<usize> = (0..200).map(|_| rng.next_below(120) as usize).collect();
+    let opt_idx: Vec<Option<usize>> = (0..200)
+        .map(|_| {
+            if rng.next_below(5) == 0 {
+                None
+            } else {
+                Some(rng.next_below(120) as usize)
+            }
+        })
+        .collect();
+    let serial = take_table(&t, &idx);
+    let serial_opt = take_table_opt(&t, &opt_idx);
+    for threads in THREADS {
+        assert!(take_table_par(&t, &idx, threads).data_equals(&serial));
+        assert!(take_table_opt_par(&t, &opt_idx, threads).data_equals(&serial_opt));
+    }
+}
+
+#[test]
+fn shuffle_outputs_identical_at_every_worker_parallelism() {
+    let run = |threads: usize| {
+        run_workers(3, &CommConfig::default(), move |ctx| {
+            ctx.set_parallelism(threads);
+            let t = random_table(80, 0x5EED + ctx.rank() as u64);
+            let key = rylon::dist::shuffle(ctx, &t, 0).unwrap().0;
+            let row = rylon::dist::shuffle_rows(ctx, &t).unwrap().0;
+            (key, row)
+        })
+    };
+    let serial = run(1);
+    for threads in [2usize, 7] {
+        let par = run(threads);
+        for ((ks, rs), (kp, rp)) in serial.iter().zip(&par) {
+            assert!(kp.data_equals(ks), "key shuffle, threads={threads}");
+            assert!(rp.data_equals(rs), "row shuffle, threads={threads}");
+        }
+    }
+}
