@@ -7,7 +7,7 @@
 //! bench_driver fig9   [--op join|union]   engine comparison (Fig. 9 a/b)
 //! bench_driver table2                     Table II (join times + speedups)
 //! bench_driver fig10                      binding overhead (Fig. 10)
-//! bench_driver local  [--op join|groupby|partition|shuffle] thread sweep
+//! bench_driver local  [--op join|groupby|sort|partition|shuffle] thread sweep
 //! bench_driver all                        everything above
 //! ```
 //!
@@ -42,6 +42,7 @@ use rylon::net::{CommConfig, NetworkProfile};
 use rylon::ops::aggregate::{group_by_par, AggFn, AggSpec};
 use rylon::ops::join::{join_par, JoinAlgorithm, JoinConfig};
 use rylon::ops::partition::{partition_by_ids_par, partition_ids_by_key_par};
+use rylon::ops::sort::sort_par;
 use rylon::runtime::KernelRuntime;
 use rylon::sim::{
     sim_rowstore_join, sim_rowstore_union, sim_rylon_join, sim_rylon_union, sim_taskgraph_join,
@@ -561,7 +562,7 @@ fn fig10(opts: &Opts) -> CliResult<()> {
 }
 
 /// The `local` target: morsel-parallel local operators timed for real
-/// across the `--threads` sweep (join / group-by / partition /
+/// across the `--threads` sweep (join / group-by / sort / partition /
 /// shuffle), with per-op speedup vs the sweep's first entry. This is
 /// the perf_opt acceptance gate: at `--total-rows 1_000_000`,
 /// `--threads 1,4` must show ≥2× on join and group-by.
@@ -570,10 +571,11 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     let ops: Vec<&str> = match opts.op.as_str() {
         "join" if opts.op_explicit => vec!["join"],
         "groupby" => vec!["groupby"],
+        "sort" => vec!["sort"],
         "partition" => vec!["partition"],
         "shuffle" => vec!["shuffle"],
         // Implicit default ("join" from parse_opts) or explicit "all".
-        "all" | "join" => vec!["join", "groupby", "partition", "shuffle"],
+        "all" | "join" => vec!["join", "groupby", "sort", "partition", "shuffle"],
         other => return Err(format!("unknown local op '{other}'")),
     };
     let mut report = Report::new(
@@ -637,6 +639,18 @@ fn bench_local_op(opts: &Opts, op: &str, threads: usize) -> CliResult<(f64, f64,
             let m = rylon::metrics::measure(runs, 1, || {
                 let t0 = Instant::now();
                 let out = group_by_par(&t, 0, &aggs, threads).expect("group_by");
+                std::hint::black_box(out.num_rows());
+                t0.elapsed().as_secs_f64()
+            });
+            Ok((m.median_secs, 0.0, 0.0, 1))
+        }
+        "sort" => {
+            // ~10% duplicate keys: exercises the stable-tie merge while
+            // staying representative of the paper's uniform index keys.
+            let t = paper_table(n, 0.9, 0x5027);
+            let m = rylon::metrics::measure(runs, 1, || {
+                let t0 = Instant::now();
+                let out = sort_par(&t, 0, threads).expect("sort");
                 std::hint::black_box(out.num_rows());
                 t0.elapsed().as_secs_f64()
             });

@@ -33,7 +33,9 @@ impl CylonContext {
     pub fn init_local() -> Self {
         let mut fabric = ChannelFabric::new(1);
         let comm = Communicator::new(Box::new(fabric.pop().unwrap()), &CommConfig::default());
-        CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) }
+        let mut ctx = CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) };
+        ctx.comm.set_parallelism(ctx.parallelism);
+        ctx
     }
 
     /// Connected contexts for `world` in-process workers
@@ -43,11 +45,10 @@ impl CylonContext {
             .into_iter()
             .map(|mut t| {
                 t.recv_timeout = config.recv_timeout;
-                CylonContext {
-                    comm: Communicator::new(Box::new(t), config),
-                    runtime: None,
-                    parallelism: shared_parallelism(world),
-                }
+                let parallelism = shared_parallelism(world);
+                let mut comm = Communicator::new(Box::new(t), config);
+                comm.set_parallelism(parallelism);
+                CylonContext { comm, runtime: None, parallelism }
             })
             .collect()
     }
@@ -59,18 +60,23 @@ impl CylonContext {
     /// whose in-process workers split it. Override with
     /// [`Self::with_parallelism`] when co-locating ranks.
     pub fn from_communicator(comm: Communicator) -> Self {
-        CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) }
+        let mut ctx = CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) };
+        ctx.comm.set_parallelism(ctx.parallelism);
+        ctx
     }
 
     /// Builder-style override of the intra-worker thread budget.
     pub fn with_parallelism(mut self, threads: usize) -> Self {
-        self.parallelism = threads.max(1);
+        self.set_parallelism(threads);
         self
     }
 
-    /// Set the intra-worker thread budget on an existing context.
+    /// Set the intra-worker thread budget on an existing context (also
+    /// caps the communicator's wire-serializer fan-out, so co-located
+    /// workers share the machine on the shuffle path too).
     pub fn set_parallelism(&mut self, threads: usize) {
         self.parallelism = threads.max(1);
+        self.comm.set_parallelism(self.parallelism);
     }
 
     /// Intra-worker thread budget used by the morsel-parallel paths of

@@ -20,16 +20,30 @@
 //! column is null-heavy enough that the sorted sample's first `k`
 //! splitters are themselves null. Either way null rows route
 //! identically and the concatenated output stays totally ordered.
+//!
+//! # Intra-worker parallelism and determinism
+//!
+//! Splitter selection is a pure function of the pooled sample (every
+//! rank computes identical splitters without a broadcast), range
+//! routing resolves the splitter/key columns to one typed comparator
+//! ([`crate::ops::sort::KeyCol`]) and binary-searches morsel-parallel,
+//! and both local sorts run on the typed morsel-parallel engine with
+//! the worker's [`crate::ctx::CylonContext::parallelism`] budget.
+//! Because routing and the stable `(key, row)` sort order are
+//! input-derived — never thread-derived — every rank's output is
+//! **bit-identical at any thread count** (pinned at parallelism
+//! 1/2/7 in `tests/prop_sort.rs`).
 
 use super::OpStats;
 use crate::ctx::CylonContext;
 use crate::error::{Error, Result};
 use crate::net::serialize::{deserialize_table, serialize_table};
-use crate::ops::partition::partition_by_ids;
+use crate::ops::parallel::{concat_chunks, map_morsels};
+use crate::ops::partition::partition_by_ids_par;
 use crate::ops::project::project;
-use crate::ops::sort::{cmp_cells_across, sort};
+use crate::ops::sort::{sort_par, BoolKey, F64Key, I64Key, KeyCol, StrKey};
 use crate::table::take::{concat_tables, take_table};
-use crate::table::Table;
+use crate::table::{Array, Table};
 use std::cmp::Ordering;
 use std::time::Instant;
 
@@ -48,10 +62,11 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
         )));
     }
     let world = ctx.world();
+    let threads = ctx.parallelism();
     let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
     if world == 1 {
         let t0 = Instant::now();
-        let out = sort(t, col)?;
+        let out = sort_par(t, col, threads)?;
         stats.local_secs = t0.elapsed().as_secs_f64();
         stats.rows_out = out.num_rows();
         return Ok((out, stats));
@@ -84,7 +99,9 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
         gathered.push(deserialize_table(b)?);
     }
     let refs: Vec<&Table> = gathered.iter().collect();
-    let pooled = sort(&concat_tables(&refs)?, 0)?;
+    // Same splitters on every rank: sort output is a pure function of
+    // the pooled sample, whatever each rank's thread budget is.
+    let pooled = sort_par(&concat_tables(&refs)?, 0, threads)?;
     let pooled_rows = pooled.num_rows();
     let splitters = if pooled_rows == 0 {
         // Globally empty input: everything (nothing) routes to rank 0.
@@ -98,24 +115,20 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
 
     // 3. Range-partition: id = number of splitters <= key (binary
     //    search over the sorted splitter column; nulls sort first).
+    //    One typed-comparator resolution, then morsel-parallel rows.
     let key = t.column(col).as_ref();
     let sk = splitters.column(0).as_ref();
     let nsplit = splitters.num_rows();
-    let mut ids: Vec<u32> = Vec::with_capacity(n);
-    for row in 0..n {
-        let mut lo = 0usize;
-        let mut hi = nsplit;
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if cmp_cells_across(sk, mid, key, row) != Ordering::Greater {
-                lo = mid + 1;
-            } else {
-                hi = mid;
-            }
+    let ids: Vec<u32> = match (sk, key) {
+        (Array::Int64(s), Array::Int64(k)) => route_ids(I64Key(s), nsplit, I64Key(k), n, threads),
+        (Array::Float64(s), Array::Float64(k)) => {
+            route_ids(F64Key(s), nsplit, F64Key(k), n, threads)
         }
-        ids.push(lo as u32);
-    }
-    let parts = partition_by_ids(t, &ids, world)?;
+        (Array::Utf8(s), Array::Utf8(k)) => route_ids(StrKey(s), nsplit, StrKey(k), n, threads),
+        (Array::Bool(s), Array::Bool(k)) => route_ids(BoolKey(s), nsplit, BoolKey(k), n, threads),
+        _ => unreachable!("the sample column shares the key column's type"),
+    };
+    let parts = partition_by_ids_par(t, &ids, world, threads)?;
     partition_secs += t2.elapsed().as_secs_f64();
 
     // 4. Shuffle ranges into place and sort locally.
@@ -126,12 +139,37 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     comm_secs += t3.elapsed().as_secs_f64();
 
     let t4 = Instant::now();
-    let out = sort(&merged, col)?;
+    let out = sort_par(&merged, col, threads)?;
     stats.local_secs = t4.elapsed().as_secs_f64();
     stats.partition_secs = partition_secs;
     stats.comm_secs = comm_secs;
     stats.rows_out = out.num_rows();
     Ok((out, stats))
+}
+
+/// Range-routing ids for every key row: `id = #splitters ≤ key`, via
+/// binary search over the sorted splitter column with the typed
+/// comparator (nulls first). Morsel-parallel and input-derived, so ids
+/// are identical at every thread count.
+fn route_ids<K: KeyCol>(sk: K, nsplit: usize, key: K, n: usize, threads: usize) -> Vec<u32> {
+    concat_chunks(
+        map_morsels(n, threads, |r| {
+            r.map(|row| {
+                let (mut lo, mut hi) = (0usize, nsplit);
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    if sk.cmp_full(mid, &key, row) != Ordering::Greater {
+                        lo = mid + 1;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo as u32
+            })
+            .collect::<Vec<u32>>()
+        }),
+        n,
+    )
 }
 
 #[cfg(test)]
@@ -141,7 +179,7 @@ mod tests {
     use crate::dist::testutil::{gather, row_multiset};
     use crate::io::generator::{paper_table, random_table};
     use crate::net::CommConfig;
-    use crate::ops::sort::is_sorted;
+    use crate::ops::sort::{is_sorted, sort};
 
     #[test]
     fn globally_sorted_and_row_conserving() {

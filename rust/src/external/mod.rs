@@ -16,5 +16,5 @@ pub mod sort;
 pub mod spill;
 
 pub use join::external_join;
-pub use sort::external_sort;
+pub use sort::{external_sort, external_sort_par};
 pub use spill::{SpillReader, SpillWriter};

@@ -1,27 +1,54 @@
 //! External merge sort: sort tables larger than memory.
 //!
 //! Phase 1 — run generation: consume the input in `batch_rows`-row
-//! chunks, sort each in memory, spill as a run file.
+//! chunks, sort each in memory (on the morsel-parallel typed sort
+//! engine, [`crate::ops::sort`]), spill as a run file.
 //! Phase 2 — k-way merge: stream all runs through per-run cursors and a
 //! tournament over the current heads, emitting bounded output batches.
+//! Each cursor caches its head as an owned order-preserving
+//! [`RowKey`] (the [`crate::ops::merge`] kernel's streaming key), so
+//! the tournament compares primitive `u64`s/bytes — enum dispatch
+//! happens once per row advance, never per comparison.
+//!
+//! Determinism: runs cover consecutive row ranges of the input, the
+//! in-memory sort is stable on duplicate keys, and head ties keep the
+//! earliest run — so the streamed output is **bit-identical to
+//! [`crate::ops::sort::sort`]** of the whole input, at every
+//! `batch_rows` and thread count (pinned in `tests/prop_sort.rs`).
 
 use super::spill::{SpillDir, SpillReader, SpillWriter};
 use crate::error::Result;
-use crate::ops::sort::{cmp_cells_across, sort};
+use crate::ops::merge::RowKey;
+use crate::ops::parallel::parallelism;
+use crate::ops::sort::sort_par;
 use crate::table::{builder::TableBuilder, take::slice, Table};
-use std::cmp::Ordering;
 
-/// A cursor over one sorted run: current batch + row position.
+/// A cursor over one sorted run: current batch + row position + the
+/// head's cached typed key.
 struct RunCursor {
     reader: SpillReader,
     batch: Option<Table>,
     row: usize,
+    col: usize,
+    key: RowKey,
 }
 
 impl RunCursor {
-    fn new(mut reader: SpillReader) -> Result<Self> {
-        let batch = reader.next_batch()?;
-        Ok(RunCursor { reader, batch, row: 0 })
+    fn new(mut reader: SpillReader, col: usize) -> Result<Self> {
+        let mut batch = reader.next_batch()?;
+        // skip empty batches defensively
+        while matches!(&batch, Some(t) if t.num_rows() == 0) {
+            batch = reader.next_batch()?;
+        }
+        let mut c = RunCursor { reader, batch, row: 0, col, key: RowKey::Null };
+        c.refresh_key();
+        Ok(c)
+    }
+
+    fn refresh_key(&mut self) {
+        if let Some(t) = &self.batch {
+            self.key.encode_into(t.column(self.col), self.row);
+        }
     }
 
     fn exhausted(&self) -> bool {
@@ -45,16 +72,32 @@ impl RunCursor {
                 }
             }
         }
+        self.refresh_key();
         Ok(())
     }
 }
 
 /// Sort `input` by column `col` using at most ~`batch_rows` rows of
-/// memory per run, emitting sorted output batches through `emit`.
+/// memory per run, emitting sorted output batches through `emit`
+/// (process-default parallelism for run generation).
 pub fn external_sort_streaming(
     input: &Table,
     col: usize,
     batch_rows: usize,
+    emit: impl FnMut(Table) -> Result<()>,
+) -> Result<usize> {
+    external_sort_streaming_par(input, col, batch_rows, parallelism(), emit)
+}
+
+/// [`external_sort_streaming`] with an explicit thread budget for the
+/// per-run sorts (the budget callers with a
+/// [`crate::ctx::CylonContext`] should pass is `ctx.parallelism()`).
+/// Output batches are bit-identical at every `threads` value.
+pub fn external_sort_streaming_par(
+    input: &Table,
+    col: usize,
+    batch_rows: usize,
+    threads: usize,
     mut emit: impl FnMut(Table) -> Result<()>,
 ) -> Result<usize> {
     let batch_rows = batch_rows.max(1);
@@ -66,13 +109,13 @@ pub fn external_sort_streaming(
     while start < input.num_rows() {
         let end = (start + batch_rows).min(input.num_rows());
         let chunk = slice(input, start, end)?;
-        let sorted = sort(&chunk, col)?;
+        let sorted = sort_par(&chunk, col, threads)?;
         let mut w = SpillWriter::create(dir.next_path())?;
         // spill the run itself in bounded batches too
         let mut s = 0;
         while s < sorted.num_rows() {
             let e = (s + batch_rows).min(sorted.num_rows());
-            w.write(&slice(&sorted, s, e)?)?;
+            w.write_par(&slice(&sorted, s, e)?, threads)?;
             s = e;
         }
         run_paths.push(w.finish()?);
@@ -85,14 +128,16 @@ pub fn external_sort_streaming(
     // Phase 2: k-way merge of run cursors.
     let mut cursors = run_paths
         .iter()
-        .map(|p| RunCursor::new(SpillReader::open(p)?))
+        .map(|p| RunCursor::new(SpillReader::open(p)?, col))
         .collect::<Result<Vec<_>>>()?;
     let mut out = TableBuilder::with_capacity(input.schema().clone(), batch_rows);
     let mut total = 0usize;
     loop {
-        // find the cursor with the smallest head (linear scan: run
-        // count is input/batch_rows, small; a loser tree would win only
-        // for thousands of runs)
+        // find the cursor with the smallest cached head key (linear
+        // scan: run count is input/batch_rows, small; a loser tree
+        // would win only for thousands of runs). Strict `<` keeps the
+        // earliest run on ties — runs are consecutive input ranges, so
+        // this preserves the stable (key, original row) order.
         let mut best: Option<usize> = None;
         for (i, c) in cursors.iter().enumerate() {
             if c.exhausted() {
@@ -101,11 +146,7 @@ pub fn external_sort_streaming(
             best = Some(match best {
                 None => i,
                 Some(b) => {
-                    let (bt, br) = cursors[b].head().expect("not exhausted");
-                    let (ct, cr) = c.head().expect("not exhausted");
-                    if cmp_cells_across(ct.column(col), cr, bt.column(col), br)
-                        == Ordering::Less
-                    {
+                    if c.key < cursors[b].key {
                         i
                     } else {
                         b
@@ -133,10 +174,21 @@ pub fn external_sort_streaming(
 }
 
 /// Convenience: external sort materializing the full sorted table
-/// (tests / moderate sizes).
+/// (tests / moderate sizes; process-default parallelism).
 pub fn external_sort(input: &Table, col: usize, batch_rows: usize) -> Result<Table> {
+    external_sort_par(input, col, batch_rows, parallelism())
+}
+
+/// [`external_sort`] with an explicit thread budget; bit-identical to
+/// the in-memory [`sort_par`] at every `threads` value.
+pub fn external_sort_par(
+    input: &Table,
+    col: usize,
+    batch_rows: usize,
+    threads: usize,
+) -> Result<Table> {
     let mut parts = Vec::new();
-    external_sort_streaming(input, col, batch_rows, |b| {
+    external_sort_streaming_par(input, col, batch_rows, threads, |b| {
         parts.push(b);
         Ok(())
     })?;
@@ -151,10 +203,10 @@ pub fn external_sort(input: &Table, col: usize, batch_rows: usize) -> Result<Tab
 mod tests {
     use super::*;
     use crate::io::generator::{paper_table, random_table};
-    use crate::ops::sort::is_sorted;
+    use crate::ops::sort::{is_sorted, sort};
 
-    /// Order-insensitive row multiset (ties may order differently
-    /// between the unstable in-memory sort and the run merge).
+    /// Order-insensitive row multiset (a redundant-but-cheap check on
+    /// top of the bit-identity asserts).
     fn multiset(t: &Table) -> std::collections::BTreeMap<String, usize> {
         let mut m = std::collections::BTreeMap::new();
         for r in 0..t.num_rows() {
@@ -174,11 +226,9 @@ mod tests {
         for batch_rows in [64, 700, 10_000] {
             let got = external_sort(&t, 0, batch_rows).unwrap();
             assert!(is_sorted(&got, 0), "batch_rows={batch_rows}");
-            assert_eq!(
-                got.column(0).as_i64().unwrap().values(),
-                want.column(0).as_i64().unwrap().values(),
-                "key order batch_rows={batch_rows}"
-            );
+            // Stable ties + earliest-run-wins merge: bit-identical to
+            // the in-memory sort, not merely the same multiset.
+            assert!(got.data_equals(&want), "batch_rows={batch_rows}");
             assert_eq!(multiset(&got), multiset(&want), "batch_rows={batch_rows}");
         }
     }
@@ -211,7 +261,15 @@ mod tests {
         let got = external_sort(&t, 0, 100).unwrap();
         assert!(is_sorted(&got, 0));
         assert_eq!(got.column(0).null_count(), want.column(0).null_count());
-        assert_eq!(multiset(&got), multiset(&want));
+        assert!(got.data_equals(&want));
+        // Float keys (NaN-bearing) and string keys through the same
+        // cached-RowKey merge path.
+        for col in [1usize, 2] {
+            let want = sort(&t, col).unwrap();
+            let got = external_sort(&t, col, 97).unwrap();
+            assert!(is_sorted(&got, col), "col {col}");
+            assert!(got.data_equals(&want), "col {col}");
+        }
     }
 
     #[test]

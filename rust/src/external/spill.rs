@@ -2,7 +2,8 @@
 //! on disk. The unit all out-of-core operators stream through.
 
 use crate::error::{Error, Result};
-use crate::net::serialize::{deserialize_table, serialize_table};
+use crate::net::serialize::{deserialize_table, serialize_table_par};
+use crate::ops::parallel::parallelism;
 use crate::table::Table;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -24,9 +25,17 @@ impl SpillWriter {
         Ok(SpillWriter { path, out: BufWriter::new(file), batches: 0, rows: 0 })
     }
 
-    /// Append one batch.
+    /// Append one batch (process-default serializer parallelism).
     pub fn write(&mut self, t: &Table) -> Result<()> {
-        let bytes = serialize_table(t);
+        self.write_par(t, parallelism())
+    }
+
+    /// [`SpillWriter::write`] with an explicit serializer thread budget
+    /// (callers holding a per-worker budget thread it through here, as
+    /// the shuffle wire path does). Bytes on disk are identical at
+    /// every `threads` value.
+    pub fn write_par(&mut self, t: &Table, threads: usize) -> Result<()> {
+        let bytes = serialize_table_par(t, threads);
         self.out.write_all(&(bytes.len() as u64).to_le_bytes())?;
         self.out.write_all(&bytes)?;
         self.batches += 1;
@@ -49,10 +58,13 @@ impl SpillWriter {
     }
 }
 
-/// Streaming reader of table batches.
+/// Streaming reader of table batches. The wire buffer is reused across
+/// batches, so a long merge allocates once per high-water batch size
+/// instead of once per batch.
 pub struct SpillReader {
     input: BufReader<File>,
     path: PathBuf,
+    buf: Vec<u8>,
 }
 
 impl SpillReader {
@@ -60,7 +72,7 @@ impl SpillReader {
         let path = path.as_ref().to_path_buf();
         let file = File::open(&path)
             .map_err(|e| Error::io(format!("{}: {e}", path.display())))?;
-        Ok(SpillReader { input: BufReader::new(file), path })
+        Ok(SpillReader { input: BufReader::new(file), path, buf: Vec::new() })
     }
 
     /// Next batch, or `None` at end of file.
@@ -72,11 +84,12 @@ impl SpillReader {
             Err(e) => return Err(Error::io(format!("{}: {e}", self.path.display()))),
         }
         let len = u64::from_le_bytes(len_buf) as usize;
-        let mut buf = vec![0u8; len];
+        self.buf.clear();
+        self.buf.resize(len, 0);
         self.input
-            .read_exact(&mut buf)
+            .read_exact(&mut self.buf)
             .map_err(|e| Error::io(format!("{}: truncated batch: {e}", self.path.display())))?;
-        deserialize_table(&buf).map(Some)
+        deserialize_table(&self.buf).map(Some)
     }
 
     /// Drain all batches (tests / small files).

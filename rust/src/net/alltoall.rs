@@ -6,7 +6,7 @@
 //! tag, so consecutive supersteps never cross-match (BSP discipline).
 
 use super::model::NetworkModel;
-use super::serialize::{deserialize_table, serialize_table};
+use super::serialize::{deserialize_table, serialize_table_par};
 use super::{CommConfig, Transport};
 use crate::error::{Error, Result};
 use crate::table::{take::concat_tables, Table};
@@ -25,6 +25,12 @@ pub struct Communicator {
     transport: Box<dyn Transport>,
     model: NetworkModel,
     generation: u64,
+    /// Intra-worker thread budget for wire serialization (synced from
+    /// [`crate::ctx::CylonContext::set_parallelism`] so co-located
+    /// workers don't oversubscribe the machine). `0` means "defer to
+    /// the process-wide knob at call time", so bare communicators track
+    /// [`crate::ops::parallel::set_parallelism`] like every other path.
+    parallelism: usize,
 }
 
 impl Communicator {
@@ -35,13 +41,29 @@ impl Communicator {
             transport,
             model: NetworkModel::new(config.profile, apply),
             generation: 0,
+            parallelism: 0,
         }
     }
 
     /// Build a communicator with explicit model-application control
     /// (the BSP simulator accounts costs without waiting).
     pub fn with_model(transport: Box<dyn Transport>, model: NetworkModel) -> Self {
-        Communicator { transport, model, generation: 0 }
+        Communicator { transport, model, generation: 0, parallelism: 0 }
+    }
+
+    /// Thread budget used to serialize outgoing partitions (speed only —
+    /// wire bytes are identical at every value).
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.parallelism = threads.max(1);
+    }
+
+    /// Resolve the serializer budget: an explicit per-worker setting
+    /// wins, else the process knob as of this call.
+    fn wire_parallelism(&self) -> usize {
+        match self.parallelism {
+            0 => crate::ops::parallel::parallelism(),
+            n => n,
+        }
     }
 
     pub fn rank(&self) -> usize {
@@ -111,7 +133,7 @@ impl Communicator {
                 own = Some(p); // keep the local partition unserialized
                 wire.push(Vec::new());
             } else {
-                wire.push(serialize_table(&p));
+                wire.push(serialize_table_par(&p, self.wire_parallelism()));
             }
         }
         let buffers = self.all_to_all_bytes(wire)?;

@@ -16,11 +16,20 @@
 //! Zero interpretation happens between serialize and deserialize — the
 //! column buffers are memcpy'd, which is what makes shuffle cost linear
 //! in bytes (the β term of the network model).
+//!
+//! Serialization is **column-parallel**: every column block's exact
+//! wire size is computable up front (`column_wire_size` — plain
+//! arithmetic over row counts and offset tails), so the output buffer
+//! is allocated once at its final size and, above the small-input
+//! threshold, column blocks are encoded concurrently on the morsel
+//! thread pool and concatenated in schema order — byte-identical to
+//! the serial encoding at every thread count.
 
 use crate::error::{Error, Result};
+use crate::ops::parallel::{map_tasks, parallelism, PAR_MIN_ROWS};
 use crate::table::{
     bitmap::Bitmap,
-    column::{Array, BoolArray, Float64Array, Int64Array, PrimitiveArray, Utf8Array},
+    column::{Array, BoolArray, Float64Array, Int64Array, Utf8Array},
     DataType, Field, Schema, Table,
 };
 use std::sync::Arc;
@@ -44,10 +53,6 @@ fn dtype_from(code: u8) -> Result<DataType> {
         3 => DataType::Bool,
         c => return Err(Error::comm(format!("bad dtype code {c}"))),
     })
-}
-
-struct Writer {
-    buf: Vec<u8>,
 }
 
 /// Bulk little-endian copy of a u64-sized slice (the wire is LE; on LE
@@ -90,19 +95,14 @@ fn get_words<T: Copy + Default>(bytes: &[u8], n: usize) -> Vec<T> {
     out
 }
 
-impl Writer {
-    fn u8(&mut self, v: u8) {
-        self.buf.push(v);
-    }
-    fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn bytes(&mut self, b: &[u8]) {
-        self.buf.extend_from_slice(b);
-    }
+#[inline]
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
 }
 
 struct Reader<'a> {
@@ -158,55 +158,100 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize a table to bytes.
-pub fn serialize_table(t: &Table) -> Vec<u8> {
-    let nrows = t.num_rows();
-    let mut w = Writer { buf: Vec::with_capacity(t.byte_size() + 64) };
-    w.u32(MAGIC);
-    w.u32(t.num_columns() as u32);
-    w.u64(nrows as u64);
-    for (f, col) in t.schema().fields().iter().zip(t.columns()) {
-        w.u32(f.name.len() as u32);
-        w.bytes(f.name.as_bytes());
-        w.u8(dtype_code(f.data_type));
-        let validity = match col.as_ref() {
-            Array::Int64(a) => a.validity(),
-            Array::Float64(a) => a.validity(),
-            Array::Bool(a) => a.validity(),
-            Array::Utf8(a) => a.validity(),
-        };
-        w.u8(validity.is_some() as u8);
-        if let Some(b) = validity {
-            put_words(&mut w.buf, b.words());
+/// Exact wire size of one column block (name header + dtype/validity
+/// flags + validity words + payload). This is what lets the serializer
+/// pre-size its output buffer to the final byte count and hand each
+/// column an exactly-sized scratch buffer on the parallel path.
+fn column_wire_size(name: &str, col: &Array, nrows: usize) -> usize {
+    let mut sz = 4 + name.len() + 1 + 1;
+    if col.validity().is_some() {
+        sz += nrows.div_ceil(64) * 8;
+    }
+    sz += match col {
+        Array::Int64(_) | Array::Float64(_) => nrows * 8,
+        Array::Bool(_) => nrows,
+        Array::Utf8(a) => (nrows + 1) * 4 + 8 + a.offsets[nrows] as usize,
+    };
+    sz
+}
+
+/// Encode one column block (the per-column unit of the wire format).
+fn write_column(buf: &mut Vec<u8>, f: &Field, col: &Array, nrows: usize) {
+    put_u32(buf, f.name.len() as u32);
+    buf.extend_from_slice(f.name.as_bytes());
+    buf.push(dtype_code(f.data_type));
+    let validity = col.validity();
+    buf.push(validity.is_some() as u8);
+    if let Some(b) = validity {
+        put_words(buf, b.words());
+    }
+    match col {
+        Array::Int64(a) => put_words(buf, a.values()),
+        Array::Float64(a) => put_words(buf, a.values()),
+        Array::Bool(a) => {
+            for v in a.values() {
+                buf.push(*v as u8);
+            }
         }
-        match col.as_ref() {
-            Array::Int64(a) => put_words(&mut w.buf, a.values()),
-            Array::Float64(a) => put_words(&mut w.buf, a.values()),
-            Array::Bool(a) => {
-                for v in a.values() {
-                    w.u8(*v as u8);
-                }
+        Array::Utf8(a) => {
+            #[cfg(target_endian = "little")]
+            // SAFETY: u32 slice viewed as bytes, exact bounds.
+            unsafe {
+                buf.extend_from_slice(std::slice::from_raw_parts(
+                    a.offsets.as_ptr() as *const u8,
+                    (nrows + 1) * 4,
+                ));
             }
-            Array::Utf8(a) => {
-                #[cfg(target_endian = "little")]
-                // SAFETY: u32 slice viewed as bytes, exact bounds.
-                unsafe {
-                    w.buf.extend_from_slice(std::slice::from_raw_parts(
-                        a.offsets.as_ptr() as *const u8,
-                        (nrows + 1) * 4,
-                    ));
-                }
-                #[cfg(target_endian = "big")]
-                for i in 0..=nrows {
-                    w.u32(a.offsets[i]);
-                }
-                let dlen = a.offsets[nrows] as usize;
-                w.u64(dlen as u64);
-                w.bytes(&a.data[..dlen]);
+            #[cfg(target_endian = "big")]
+            for i in 0..=nrows {
+                put_u32(buf, a.offsets[i]);
             }
+            let dlen = a.offsets[nrows] as usize;
+            put_u64(buf, dlen as u64);
+            buf.extend_from_slice(&a.data[..dlen]);
         }
     }
-    w.buf
+}
+
+/// Serialize a table to bytes (process-default parallelism).
+pub fn serialize_table(t: &Table) -> Vec<u8> {
+    serialize_table_par(t, parallelism())
+}
+
+/// [`serialize_table`] with an explicit thread budget: column blocks
+/// encode concurrently above the small-input threshold, into a buffer
+/// pre-sized from the exact per-column byte lengths. Output bytes are
+/// identical at every `threads` value.
+pub fn serialize_table_par(t: &Table, threads: usize) -> Vec<u8> {
+    let nrows = t.num_rows();
+    let fields = t.schema().fields();
+    let cols = t.columns();
+    let sizes: Vec<usize> = fields
+        .iter()
+        .zip(cols)
+        .map(|(f, c)| column_wire_size(&f.name, c, nrows))
+        .collect();
+    let total = 16 + sizes.iter().sum::<usize>();
+    let mut buf = Vec::with_capacity(total);
+    put_u32(&mut buf, MAGIC);
+    put_u32(&mut buf, cols.len() as u32);
+    put_u64(&mut buf, nrows as u64);
+    if threads <= 1 || cols.len() <= 1 || nrows < PAR_MIN_ROWS {
+        for (f, c) in fields.iter().zip(cols) {
+            write_column(&mut buf, f, c.as_ref(), nrows);
+        }
+    } else {
+        let blocks = map_tasks(cols.len(), threads, |c| {
+            let mut b = Vec::with_capacity(sizes[c]);
+            write_column(&mut b, &fields[c], cols[c].as_ref(), nrows);
+            b
+        });
+        for b in blocks {
+            buf.extend_from_slice(&b);
+        }
+    }
+    debug_assert_eq!(buf.len(), total, "column_wire_size must be exact");
+    buf
 }
 
 /// Deserialize a table from bytes.
@@ -271,10 +316,6 @@ pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
     }
     Table::try_new(Arc::new(Schema::new(fields)), columns)
 }
-
-// Keep the PrimitiveArray import used (constructors above).
-#[allow(dead_code)]
-fn _assert_types(_: PrimitiveArray<i64>) {}
 
 #[cfg(test)]
 mod tests {
@@ -381,6 +422,28 @@ mod tests {
         assert_eq!(r.num_rows(), 0);
         assert_eq!(t.schema(), r.schema());
         assert!(t.data_equals(&r));
+    }
+
+    #[test]
+    fn parallel_serialize_is_byte_identical_and_exactly_sized() {
+        use crate::io::generator::random_table;
+        // Cross the PAR_MIN_ROWS threshold so the column-parallel path
+        // actually runs; mixed types + nulls + NaN cover every branch.
+        let t = random_table(crate::ops::parallel::PAR_MIN_ROWS + 37, 0xE11);
+        let serial = serialize_table_par(&t, 1);
+        for threads in [2usize, 7] {
+            assert_eq!(serialize_table_par(&t, threads), serial, "threads={threads}");
+        }
+        // The exact-size pass matches the bytes actually written.
+        let expected: usize = 16
+            + t.schema()
+                .fields()
+                .iter()
+                .zip(t.columns())
+                .map(|(f, c)| column_wire_size(&f.name, c, t.num_rows()))
+                .sum::<usize>();
+        assert_eq!(serial.len(), expected);
+        assert!(t.data_equals(&deserialize_table(&serial).unwrap()));
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //! * **Hash join**: build a hash map on the smaller relation's key column,
 //!   probe with the larger (the build/probe swap is why Table II's hash
 //!   join beats sort join at scale).
-//! * **Sort join**: sort both sides on the key (permutation indices only),
-//!   then a linear merge scan with duplicate-block cross products.
+//! * **Sort join**: sort both sides on the key (permutation indices only,
+//!   morsel-parallel and stable — see [`super::sort`]), then a linear
+//!   merge scan with duplicate-block cross products. The scan is
+//!   monomorphized over the typed key pair ([`super::sort::KeyCol`]),
+//!   so no per-comparison enum dispatch survives in the hot loop.
 //!
 //! Both produce identical multisets of output rows for all four join
 //! semantics (property-tested in `tests/prop_join.rs`).
@@ -32,7 +35,7 @@
 use super::hash::{hash_column, hash_to_partition};
 use super::parallel::{concat_chunks, map_morsels, map_tasks, parallelism};
 use super::partition::partition_indices;
-use super::sort::cmp_cells_across;
+use super::sort::{cmp_cells_across, sort_indices_par, BoolKey, F64Key, I64Key, KeyCol, StrKey};
 use crate::error::{Error, Result};
 use crate::table::{take::take_table_opt_par, Array, Schema, Table};
 use std::cmp::Ordering;
@@ -114,7 +117,7 @@ pub fn join_par(left: &Table, right: &Table, cfg: &JoinConfig, threads: usize) -
     }
     let (li, ri) = match cfg.algorithm {
         JoinAlgorithm::Hash => hash_join_indices(left, right, cfg, threads),
-        JoinAlgorithm::Sort => sort_join_indices(left, right, cfg),
+        JoinAlgorithm::Sort => sort_join_indices(left, right, cfg, threads),
     };
     materialize(left, right, &li, &ri, threads)
 }
@@ -160,9 +163,11 @@ struct PartJoin {
 /// Build a chained hash table over this partition's build rows and
 /// probe it with the partition's probe rows, in ascending row order.
 /// `bh`/`ph` are the full-column hashes indexed by global row id.
-fn join_partition(
-    bk: &Array,
-    pk: &Array,
+/// Generic over the typed key pair ([`KeyCol`]) so the probe's
+/// candidate-equality check is a primitive compare, not enum dispatch.
+fn join_partition<K: KeyCol>(
+    bk: K,
+    pk: K,
     bh: &[u32],
     ph: &[u32],
     build_rows: &[usize],
@@ -181,7 +186,7 @@ fn join_partition(
     let mut first = vec![CHAIN_END; buckets];
     let mut next = vec![CHAIN_END; n];
     for (slot, &row) in build_rows.iter().enumerate() {
-        if bk.is_valid(row) {
+        if bk.valid(row) {
             let b = (bh[row] & mask) as usize;
             next[slot] = first[b];
             first[b] = slot as u32;
@@ -192,14 +197,16 @@ fn join_partition(
     let mut pi: Vec<Option<usize>> = Vec::new();
     for &j in probe_rows {
         let mut any = false;
-        if pk.is_valid(j) {
+        if pk.valid(j) {
             let h = ph[j];
             let mut cur = first[(h & mask) as usize];
             while cur != CHAIN_END {
                 let slot = cur as usize;
                 cur = next[slot];
                 let i = build_rows[slot];
-                if bh[i] == h && cmp_cells_across(bk, i, pk, j) == Ordering::Equal {
+                // Both rows are valid here (null build keys were never
+                // inserted), so the typed value compare suffices.
+                if bh[i] == h && bk.cmp_values(i, &pk, j) == Ordering::Equal {
                     bi.push(Some(i));
                     pi.push(Some(j));
                     matched[slot] = true;
@@ -284,9 +291,25 @@ fn hash_join_indices(
         )
     };
 
-    let parts = map_tasks(p, threads, |pid| {
-        join_partition(bk, pk, &bh, &ph, &build_parts[pid], &probe_parts[pid], probe_outer)
-    });
+    // Resolve the key pair to typed columns once; every partition task
+    // then probes with monomorphized primitive compares. The shared
+    // arguments travel as one tuple so each match arm stays short.
+    type PartArgs<'x> =
+        (&'x [u32], &'x [u32], &'x [Vec<usize>], &'x [Vec<usize>], bool, usize, usize);
+    fn run_partitions<K: KeyCol>(bk: K, pk: K, args: PartArgs<'_>) -> Vec<PartJoin> {
+        let (bh, ph, build_parts, probe_parts, probe_outer, p, threads) = args;
+        map_tasks(p, threads, |pid| {
+            join_partition(bk, pk, bh, ph, &build_parts[pid], &probe_parts[pid], probe_outer)
+        })
+    }
+    let args = (&bh[..], &ph[..], &build_parts[..], &probe_parts[..], probe_outer, p, threads);
+    let parts = match (bk, pk) {
+        (Array::Int64(x), Array::Int64(y)) => run_partitions(I64Key(x), I64Key(y), args),
+        (Array::Float64(x), Array::Float64(y)) => run_partitions(F64Key(x), F64Key(y), args),
+        (Array::Utf8(x), Array::Utf8(y)) => run_partitions(StrKey(x), StrKey(y), args),
+        (Array::Bool(x), Array::Bool(y)) => run_partitions(BoolKey(x), BoolKey(y), args),
+        _ => unreachable!("join key types validated by join_par"),
+    };
 
     // Canonical assembly: matches partition-major, then (if outer)
     // unmatched build rows partition-major.
@@ -315,34 +338,64 @@ fn hash_join_indices(
     }
 }
 
-/// Sort join: sort index permutations on both keys, linear merge scan.
+/// Sort join: sort index permutations on both keys (morsel-parallel,
+/// stable), then a linear merge scan with duplicate-block cross
+/// products. The scan is monomorphized over the typed key pair
+/// ([`KeyCol`]) — one enum resolution, primitive compares throughout.
 fn sort_join_indices(
     left: &Table,
     right: &Table,
     cfg: &JoinConfig,
+    threads: usize,
 ) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
     let lk = left.column(cfg.left_col).as_ref();
     let rk = right.column(cfg.right_col).as_ref();
-    let lidx = super::sort::sort_indices(left, cfg.left_col).expect("validated");
-    let ridx = super::sort::sort_indices(right, cfg.right_col).expect("validated");
+    let lidx = sort_indices_par(left, cfg.left_col, threads).expect("validated");
+    let ridx = sort_indices_par(right, cfg.right_col, threads).expect("validated");
 
     let left_outer = matches!(cfg.join_type, JoinType::Left | JoinType::FullOuter);
     let right_outer = matches!(cfg.join_type, JoinType::Right | JoinType::FullOuter);
 
+    match (lk, rk) {
+        (Array::Int64(x), Array::Int64(y)) => {
+            sort_join_scan(I64Key(x), I64Key(y), &lidx, &ridx, left_outer, right_outer)
+        }
+        (Array::Float64(x), Array::Float64(y)) => {
+            sort_join_scan(F64Key(x), F64Key(y), &lidx, &ridx, left_outer, right_outer)
+        }
+        (Array::Utf8(x), Array::Utf8(y)) => {
+            sort_join_scan(StrKey(x), StrKey(y), &lidx, &ridx, left_outer, right_outer)
+        }
+        (Array::Bool(x), Array::Bool(y)) => {
+            sort_join_scan(BoolKey(x), BoolKey(y), &lidx, &ridx, left_outer, right_outer)
+        }
+        _ => unreachable!("join key types validated by join_par"),
+    }
+}
+
+/// The sort-join merge scan over pre-sorted permutations.
+fn sort_join_scan<K: KeyCol>(
+    lk: K,
+    rk: K,
+    lidx: &[usize],
+    ridx: &[usize],
+    left_outer: bool,
+    right_outer: bool,
+) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
     let mut li: Vec<Option<usize>> = Vec::new();
     let mut ri: Vec<Option<usize>> = Vec::new();
     let (mut i, mut j) = (0usize, 0usize);
     let (nl, nr) = (lidx.len(), ridx.len());
 
     // Nulls sort first and never match: emit them as outer rows up front.
-    while i < nl && !lk.is_valid(lidx[i]) {
+    while i < nl && !lk.valid(lidx[i]) {
         if left_outer {
             li.push(Some(lidx[i]));
             ri.push(None);
         }
         i += 1;
     }
-    while j < nr && !rk.is_valid(ridx[j]) {
+    while j < nr && !rk.valid(ridx[j]) {
         if right_outer {
             li.push(None);
             ri.push(Some(ridx[j]));
@@ -351,7 +404,9 @@ fn sort_join_indices(
     }
 
     while i < nl && j < nr {
-        match cmp_cells_across(lk, lidx[i], rk, ridx[j]) {
+        // Both heads are valid (the null prefixes are consumed above
+        // and blocks below only advance past valid rows).
+        match lk.cmp_values(lidx[i], &rk, ridx[j]) {
             Ordering::Less => {
                 if left_outer {
                     li.push(Some(lidx[i]));
@@ -370,14 +425,14 @@ fn sort_join_indices(
                 // Find the duplicate blocks on both sides, cross product.
                 let i_end = {
                     let mut e = i + 1;
-                    while e < nl && cmp_cells_across(lk, lidx[e], lk, lidx[i]) == Ordering::Equal {
+                    while e < nl && lk.cmp_values(lidx[e], &lk, lidx[i]) == Ordering::Equal {
                         e += 1;
                     }
                     e
                 };
                 let j_end = {
                     let mut e = j + 1;
-                    while e < nr && cmp_cells_across(rk, ridx[e], rk, ridx[j]) == Ordering::Equal {
+                    while e < nr && rk.cmp_values(ridx[e], &rk, ridx[j]) == Ordering::Equal {
                         e += 1;
                     }
                     e

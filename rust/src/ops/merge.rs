@@ -1,11 +1,99 @@
-//! Merge — combine two tables already sorted on a column into one sorted
-//! table (the `Merge` local operator; also the reassembly step of a
-//! sorted shuffle).
+//! Merge — combine sorted tables into one sorted table (the `Merge`
+//! local operator; also the reassembly step of a sorted shuffle and
+//! the in-memory half of the external sort's k-way merge).
+//!
+//! Comparison cost follows the sort engine's typed-key contract
+//! ([`super::sort`]): the key column pair is resolved to a concrete
+//! [`KeyCol`] once, and the merge scan runs on primitive compares —
+//! no `Array`-enum dispatch per element. For streaming merges whose
+//! cursors outlive any one batch (external sort), [`RowKey`] carries
+//! an owned, order-preserving copy of one cell so heads compare with
+//! primitive `u64`/byte comparisons.
 
-use super::sort::{cmp_cells_across, is_sorted};
+use super::sort::{
+    encode_bool, encode_f64, encode_i64, is_sorted, BoolKey, F64Key, I64Key, KeyCol, StrKey,
+};
 use crate::error::{Error, Result};
-use crate::table::{builder::TableBuilder, Table};
+use crate::table::{builder::TableBuilder, Array, Table};
 use std::cmp::Ordering;
+
+/// An owned, order-preserving key for one cell. `RowKey`s of one
+/// column type order exactly like [`super::sort::cmp_cells`]: `Null`
+/// sorts first, primitives through the sort engine's `u64` encodings,
+/// strings by UTF-8 bytes (= `char` order). Enum dispatch happens once
+/// per [`RowKey::encode`]; every comparison afterwards is primitive —
+/// the head-caching contract of the external sort's k-way merge.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RowKey {
+    /// Null cell — sorts before every valid key.
+    Null,
+    /// Encoded `i64` / `f64` / `bool` cell.
+    U64(u64),
+    /// UTF-8 bytes of a string cell.
+    Bytes(Vec<u8>),
+}
+
+impl RowKey {
+    /// Extract the order-preserving key of cell `row` of `a`.
+    pub fn encode(a: &Array, row: usize) -> RowKey {
+        if !a.is_valid(row) {
+            return RowKey::Null;
+        }
+        match a {
+            Array::Int64(p) => RowKey::U64(encode_i64(p.value(row))),
+            Array::Float64(p) => RowKey::U64(encode_f64(p.value(row))),
+            Array::Bool(b) => RowKey::U64(encode_bool(b.value(row))),
+            Array::Utf8(s) => RowKey::Bytes(s.value(row).as_bytes().to_vec()),
+        }
+    }
+
+    /// Re-encode in place. Equivalent to `*self = RowKey::encode(..)`
+    /// but reuses the `Bytes` allocation across consecutive string
+    /// cells — the external sort advances a cursor head once per output
+    /// row, and this keeps that step malloc-free after warm-up.
+    pub fn encode_into(&mut self, a: &Array, row: usize) {
+        if let (Array::Utf8(s), RowKey::Bytes(buf)) = (a, &mut *self) {
+            if s.is_valid(row) {
+                buf.clear();
+                buf.extend_from_slice(s.value(row).as_bytes());
+                return;
+            }
+        }
+        *self = RowKey::encode(a, row);
+    }
+}
+
+/// Typed two-pointer merge driving the builder directly: `ka`/`kb` are
+/// the typed views of `a`/`b`'s key columns. Stable: ties take `a`'s
+/// rows first.
+fn merge_into<K: KeyCol>(
+    ka: K,
+    kb: K,
+    a: &Table,
+    b: &Table,
+    out: &mut TableBuilder,
+) -> Result<()> {
+    let (na, nb) = (a.num_rows(), b.num_rows());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < na && j < nb {
+        if ka.cmp_full(i, &kb, j) == Ordering::Greater {
+            out.push_row(b, j)?;
+            j += 1;
+        } else {
+            out.push_row(a, i)?;
+            i += 1;
+        }
+    }
+    while i < na {
+        out.push_row(a, i)?;
+        i += 1;
+    }
+    while j < nb {
+        out.push_row(b, j)?;
+        j += 1;
+    }
+    Ok(())
+}
 
 /// Merge `a` and `b` (both sorted ascending on column `col`, type-equal
 /// schemas) into one sorted table. Stable: ties take `a`'s rows first.
@@ -17,28 +105,17 @@ pub fn merge_sorted(a: &Table, b: &Table, col: usize) -> Result<Table> {
         return Err(Error::invalid(format!("merge column {col} out of range")));
     }
     debug_assert!(is_sorted(a, col) && is_sorted(b, col));
-    let (ka, kb) = (a.column(col).as_ref(), b.column(col).as_ref());
     let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
-    let (mut i, mut j) = (0usize, 0usize);
-    while i < a.num_rows() && j < b.num_rows() {
-        match cmp_cells_across(ka, i, kb, j) {
-            Ordering::Greater => {
-                out.push_row(b, j)?;
-                j += 1;
-            }
-            _ => {
-                out.push_row(a, i)?;
-                i += 1;
-            }
+    // One enum resolution for the whole scan (schema equality above
+    // guarantees the pair matches).
+    match (a.column(col).as_ref(), b.column(col).as_ref()) {
+        (Array::Int64(x), Array::Int64(y)) => merge_into(I64Key(x), I64Key(y), a, b, &mut out)?,
+        (Array::Float64(x), Array::Float64(y)) => {
+            merge_into(F64Key(x), F64Key(y), a, b, &mut out)?
         }
-    }
-    while i < a.num_rows() {
-        out.push_row(a, i)?;
-        i += 1;
-    }
-    while j < b.num_rows() {
-        out.push_row(b, j)?;
-        j += 1;
+        (Array::Utf8(x), Array::Utf8(y)) => merge_into(StrKey(x), StrKey(y), a, b, &mut out)?,
+        (Array::Bool(x), Array::Bool(y)) => merge_into(BoolKey(x), BoolKey(y), a, b, &mut out)?,
+        _ => unreachable!("schema_equals guarantees matching key types"),
     }
     out.finish()
 }
@@ -71,7 +148,7 @@ pub fn merge_sorted_many(parts: &[&Table], col: usize) -> Result<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::sort::{is_sorted, sort};
+    use crate::ops::sort::{cmp_cells_across, is_sorted, sort};
     use crate::table::Array;
 
     fn t(keys: Vec<i64>) -> Table {
@@ -120,5 +197,92 @@ mod tests {
         let a = t(vec![1]);
         let b = Table::from_arrays(vec![("k", Array::from_i64(vec![1]))]).unwrap();
         assert!(merge_sorted(&a, &b, 0).is_err());
+    }
+
+    #[test]
+    fn merge_is_stable_on_ties() {
+        // Equal keys: all of a's rows precede b's (payload disambiguates).
+        let a = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![1, 1])),
+            ("v", Array::from_strs(&["a0", "a1"])),
+        ])
+        .unwrap();
+        let b = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![1, 1])),
+            ("v", Array::from_strs(&["b0", "b1"])),
+        ])
+        .unwrap();
+        let m = merge_sorted(&a, &b, 0).unwrap();
+        let v = m.column(1).as_utf8().unwrap();
+        assert_eq!(
+            (0..4).map(|i| v.value(i)).collect::<Vec<_>>(),
+            vec!["a0", "a1", "b0", "b1"]
+        );
+    }
+
+    #[test]
+    fn merge_nulls_first_and_floats_total_order() {
+        let a = Table::from_arrays(vec![(
+            "k",
+            Array::from_f64_opts(vec![None, Some(-0.0), Some(1.0), Some(f64::NAN)]),
+        )])
+        .unwrap();
+        let b = Table::from_arrays(vec![(
+            "k",
+            Array::from_f64_opts(vec![None, Some(0.0), Some(2.0)]),
+        )])
+        .unwrap();
+        let m = merge_sorted(&a, &b, 0).unwrap();
+        assert!(is_sorted(&m, 0));
+        let k = m.column(0).as_f64().unwrap();
+        assert!(!k.is_valid(0) && !k.is_valid(1), "nulls first");
+        // -0.0 (from a) precedes +0.0 (from b) under total order.
+        assert_eq!(k.value(2).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(k.value(3).to_bits(), 0.0f64.to_bits());
+        assert!(k.value(6).is_nan());
+    }
+
+    #[test]
+    fn encode_into_matches_encode_across_variant_transitions() {
+        let s = Array::Utf8(crate::table::column::Utf8Array::from_options(&[
+            Some("aa"),
+            None,
+            Some(""),
+            Some("zz"),
+        ]));
+        let i = Array::from_i64_opts(vec![Some(7), None]);
+        let mut k = RowKey::Null;
+        // Bytes reuse, Bytes→Null→Bytes, then Bytes→U64→Null fallbacks.
+        for row in 0..4 {
+            k.encode_into(&s, row);
+            assert_eq!(k, RowKey::encode(&s, row), "utf8 row {row}");
+        }
+        for row in 0..2 {
+            k.encode_into(&i, row);
+            assert_eq!(k, RowKey::encode(&i, row), "i64 row {row}");
+        }
+    }
+
+    #[test]
+    fn rowkey_orders_like_cmp_cells() {
+        let cols = [
+            Array::from_i64_opts(vec![Some(i64::MIN), None, Some(-1), Some(0), Some(i64::MAX)]),
+            Array::from_f64_opts(vec![Some(f64::NAN), Some(-0.0), None, Some(0.0), Some(-1.5)]),
+            Array::from_strs(&["", "b", "aa", "a", "ba"]),
+            Array::from_bools(vec![true, false, true, false, true]),
+        ];
+        for a in &cols {
+            let keys: Vec<RowKey> = (0..a.len()).map(|i| RowKey::encode(a, i)).collect();
+            for i in 0..a.len() {
+                for j in 0..a.len() {
+                    assert_eq!(
+                        keys[i].cmp(&keys[j]),
+                        cmp_cells_across(a, i, a, j),
+                        "col {:?} ({i},{j})",
+                        a.data_type()
+                    );
+                }
+            }
+        }
     }
 }

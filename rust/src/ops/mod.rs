@@ -25,10 +25,18 @@
 //! Orders are canonical per operator: group-by keeps first-appearance
 //! key order, set operators keep first-occurrence row order, the hash
 //! join emits radix-partition-major order (see the `join` module
-//! docs), and shuffle
+//! docs), sort orders by `(key, original row)` — stable on duplicate
+//! keys, so morsel runs merge to one unique permutation — and shuffle
 //! routing stays `hash(key) % world` — the bit-exact contract shared
 //! with the AOT Pallas kernel. `tests/prop_parallel.rs` pins all of
-//! this at `parallelism ∈ {1, 2, 7}`.
+//! this at `parallelism ∈ {1, 2, 7}`; `tests/prop_sort.rs` pins the
+//! sort/external-sort/dist-sort chain the same way.
+//!
+//! Order-based operators (sort, merge, sort-join, sample-sort routing)
+//! additionally share the **typed sort-key contract** of [`sort`]:
+//! the `Array` enum is resolved once at key-extraction time (u64
+//! encodings / [`sort::KeyCol`] comparators), so no per-comparison
+//! enum dispatch survives in any hot loop.
 
 pub mod aggregate;
 pub mod difference;
@@ -50,10 +58,10 @@ pub use difference::difference;
 pub use expr::Expr;
 pub use intersect::intersect;
 pub use join::{join, join_par, JoinAlgorithm, JoinConfig, JoinType};
-pub use merge::merge_sorted;
+pub use merge::{merge_sorted, RowKey};
 pub use parallel::{parallelism, set_parallelism};
 pub use partition::{hash_partition, partition_indices};
 pub use project::project;
 pub use select::select;
-pub use sort::{sort, sort_indices};
+pub use sort::{sort, sort_indices, sort_indices_par, sort_par};
 pub use union::union;

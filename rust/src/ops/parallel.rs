@@ -155,6 +155,47 @@ pub fn concat_chunks<T: Copy>(chunks: Vec<Vec<T>>, len: usize) -> Vec<T> {
     out
 }
 
+/// K-way merge of sorted runs into one sorted vector (the reassembly
+/// step of the morsel-parallel sort): runs are merged pairwise in run
+/// order over `log₂ k` passes, each pass fanning the pair merges out
+/// on [`map_tasks`]. `le(a, b)` must mean "`a` may precede `b`" —
+/// on ties the element from the earlier run wins, so with a total
+/// order (e.g. `(key, row)` pairs) the result is the unique globally
+/// sorted sequence regardless of `threads` or run boundaries.
+pub fn merge_runs<T, F>(mut runs: Vec<Vec<T>>, threads: usize, le: F) -> Vec<T>
+where
+    T: Copy + Send + Sync,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    while runs.len() > 1 {
+        // An odd tail run rides through the pass by move, not copy; it
+        // re-joins at the end, keeping the pairing in run order.
+        let tail = if runs.len() % 2 == 1 { runs.pop() } else { None };
+        let cur = &runs;
+        let le = &le;
+        let mut next = map_tasks(cur.len() / 2, threads, |k| {
+            let (a, b) = (&cur[2 * k], &cur[2 * k + 1]);
+            let mut out = Vec::with_capacity(a.len() + b.len());
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < a.len() && j < b.len() {
+                if le(&a[i], &b[j]) {
+                    out.push(a[i]);
+                    i += 1;
+                } else {
+                    out.push(b[j]);
+                    j += 1;
+                }
+            }
+            out.extend_from_slice(&a[i..]);
+            out.extend_from_slice(&b[j..]);
+            out
+        });
+        next.extend(tail);
+        runs = next;
+    }
+    runs.pop().unwrap_or_default()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +258,38 @@ mod tests {
     fn concat_chunks_flattens_in_order() {
         let chunks = vec![vec![1u32, 2], vec![], vec![3, 4, 5]];
         assert_eq!(concat_chunks(chunks, 5), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn merge_runs_equals_global_sort_at_every_thread_count() {
+        // Deterministic pseudo-random runs, each individually sorted.
+        let mut x = 0x12345u64;
+        let mut next = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (x >> 33) as u32
+        };
+        let mut all: Vec<u32> = (0..5000).map(|_| next() % 97).collect();
+        let runs: Vec<Vec<u32>> = all
+            .chunks(617)
+            .map(|c| {
+                let mut r = c.to_vec();
+                r.sort_unstable();
+                r
+            })
+            .collect();
+        all.sort_unstable();
+        for threads in [1usize, 2, 7] {
+            assert_eq!(merge_runs(runs.clone(), threads, |a, b| a <= b), all);
+        }
+    }
+
+    #[test]
+    fn merge_runs_edge_shapes() {
+        assert_eq!(merge_runs(Vec::<Vec<u8>>::new(), 4, |a, b| a <= b), Vec::<u8>::new());
+        assert_eq!(merge_runs(vec![vec![1u8, 2]], 4, |a, b| a <= b), vec![1, 2]);
+        // Odd run count: the unpaired tail run survives the pass intact.
+        let runs = vec![vec![1u8, 9], vec![2, 3], vec![0, 5]];
+        assert_eq!(merge_runs(runs, 2, |a, b| a <= b), vec![0, 1, 2, 3, 5, 9]);
     }
 
     #[test]

@@ -1,16 +1,109 @@
-//! Sort — order a table by one column (internal building block for
-//! sort-join and the user-facing `Sort` local operator).
+//! Sort — the typed, morsel-parallel sort engine behind the local
+//! `Sort` operator, sort-join, external sort, and distributed
+//! sample-sort.
 //!
-//! Sorting is done on a permutation-index vector (pdqsort via
-//! `sort_unstable_by`) and materialized with one columnar `take` per
-//! column, so payload columns are moved once.
+//! # Typed sort keys
+//!
+//! The seed sorted through [`cmp_cells`], paying `Array`-enum dispatch
+//! plus a validity branch on *every comparison*. The engine instead
+//! resolves the key column's type **once**, at key-extraction time:
+//!
+//! * `Int64` → order-preserving `u64` ([`encode_i64`]: flip the sign
+//!   bit);
+//! * `Float64` → order-preserving `u64` ([`encode_f64`]: IEEE-754
+//!   total-order bit twiddling, bit-compatible with `f64::total_cmp` —
+//!   `-NaN < -∞ < … < -0.0 < +0.0 < … < +∞ < +NaN`);
+//! * `Bool` → rank `u64` ([`encode_bool`]);
+//! * `Utf8` → no fixed-width encoding; indices are compared through a
+//!   typed `&str` comparator (UTF-8 byte order equals `char` order).
+//!
+//! Null rows never enter a comparison at all: validity is scanned 64
+//! rows at a time ([`crate::table::bitmap::Bitmap::for_each_word_range`],
+//! the same word-wise fast path the columnar hash kernels use) and null
+//! rows are emitted **first**, in ascending row order — exactly where
+//! `cmp_cells`'s null-first ordering would place them.
+//!
+//! # Determinism contract (stable ties)
+//!
+//! [`sort_indices`] orders by `(key, original row index)`: duplicate
+//! keys keep their input order, so the output permutation is a pure
+//! function of the input — bit-identical at every thread count, the
+//! same contract the join/group-by engines pin in
+//! `tests/prop_parallel.rs` (sort adds `tests/prop_sort.rs`). Once the
+//! valid rows span more than one morsel ([`SORT_PAR_MIN_ROWS`]), fixed
+//! 64Ki-row morsels are sorted concurrently and k-way-merged in morsel
+//! order ([`super::parallel::merge_runs`]); at or below it the serial
+//! path runs — both produce the unique `(key, row)`-ascending
+//! permutation.
+//!
+//! ```
+//! use rylon::ops::sort::sort;
+//! use rylon::table::{Array, Table};
+//!
+//! // Duplicate keys keep their original relative order (stable ties):
+//! let t = Table::from_arrays(vec![
+//!     ("k", Array::from_i64(vec![2, 1, 2, 1])),
+//!     ("v", Array::from_strs(&["a", "b", "c", "d"])),
+//! ])
+//! .unwrap();
+//! let s = sort(&t, 0).unwrap();
+//! let v = s.column(1).as_utf8().unwrap();
+//! assert_eq!(
+//!     (0..4).map(|i| v.value(i)).collect::<Vec<_>>(),
+//!     vec!["b", "d", "a", "c"] // 1@row1, 1@row3, 2@row0, 2@row2
+//! );
+//! ```
+//!
+//! Sorting is done on a permutation-index vector and materialized with
+//! one columnar `take` per column, so payload columns are moved once.
 
+use super::parallel::{concat_chunks, map_morsels, merge_runs, parallelism, MORSEL_ROWS};
 use crate::error::{Error, Result};
+use crate::table::bitmap::{classify_word, WordKind};
+use crate::table::column::{BoolArray, Float64Array, Int64Array, Utf8Array};
 use crate::table::{take::take_table, Array, Table};
 use std::cmp::Ordering;
 
+/// Valid-row count above which `sort_indices` takes the morsel-parallel
+/// path: the input must span **more than one** [`MORSEL_ROWS`] morsel,
+/// because a single run would be a copy of the serial sort, not a
+/// concurrency win. Purely a speed heuristic: both paths produce the
+/// identical `(key, row)`-ascending permutation.
+pub const SORT_PAR_MIN_ROWS: usize = MORSEL_ROWS;
+
+/// Order-preserving `u64` encoding of an `i64` (flip the sign bit):
+/// `a < b  ⇔  encode_i64(a) < encode_i64(b)`.
+#[inline(always)]
+pub fn encode_i64(v: i64) -> u64 {
+    (v as u64) ^ (1u64 << 63)
+}
+
+/// Order-preserving `u64` encoding of an `f64` under IEEE-754 total
+/// order (bit-compatible with `f64::total_cmp`): negative values flip
+/// all bits, non-negative values flip the sign bit.
+#[inline(always)]
+pub fn encode_f64(v: f64) -> u64 {
+    let b = v.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1u64 << 63)
+    }
+}
+
+/// Rank encoding of a `bool` (`false < true`), leaving 0 free as a
+/// null-first sentinel for consumers that need one.
+#[inline(always)]
+pub fn encode_bool(v: bool) -> u64 {
+    v as u64 + 1
+}
+
 /// Total-order comparison of two cells of one column. Nulls sort first;
 /// floats use IEEE total order (NaN last among valids).
+///
+/// This is the *reference* comparator — the typed engine below must
+/// (and, property-tested, does) order exactly like it. Hot loops use
+/// the typed paths; keep this for oracles and one-off comparisons.
 #[inline]
 pub fn cmp_cells(a: &Array, i: usize, j: usize) -> Ordering {
     match (a.is_valid(i), a.is_valid(j)) {
@@ -27,7 +120,9 @@ pub fn cmp_cells(a: &Array, i: usize, j: usize) -> Ordering {
 }
 
 /// Compare cell `i` of column `a` against cell `j` of column `b`
-/// (same type required) — used by sort-join's cross-table merge scan.
+/// (same type required). Reference counterpart of [`KeyCol`] — merge
+/// scans resolve the pair to typed keys once instead of dispatching
+/// here per comparison.
 #[inline]
 pub fn cmp_cells_across(a: &Array, i: usize, b: &Array, j: usize) -> Ordering {
     match (a.is_valid(i), b.is_valid(j)) {
@@ -44,36 +139,227 @@ pub fn cmp_cells_across(a: &Array, i: usize, b: &Array, j: usize) -> Ordering {
     }
 }
 
-/// Ascending permutation of row indices ordering `t` by column `col`.
+/// Typed order access to one column: the `Array` enum is resolved to a
+/// concrete `KeyCol` once, then the consumer's comparison loop is
+/// monomorphized over it — primitive compares with no enum dispatch on
+/// the hot path. Orders exactly like [`cmp_cells_across`].
+pub trait KeyCol: Copy + Send + Sync {
+    /// Row `i` is non-null.
+    fn valid(&self, i: usize) -> bool;
+
+    /// Compare two *valid* cells (`self[i]` vs `other[j]`).
+    fn cmp_values(&self, i: usize, other: &Self, j: usize) -> Ordering;
+
+    /// Null-aware comparison (nulls first, like [`cmp_cells`]).
+    #[inline]
+    fn cmp_full(&self, i: usize, other: &Self, j: usize) -> Ordering {
+        match (self.valid(i), other.valid(j)) {
+            (false, false) => Ordering::Equal,
+            (false, true) => Ordering::Less,
+            (true, false) => Ordering::Greater,
+            (true, true) => self.cmp_values(i, other, j),
+        }
+    }
+}
+
+/// [`KeyCol`] over an `Int64` column.
+#[derive(Clone, Copy)]
+pub struct I64Key<'a>(pub &'a Int64Array);
+
+/// [`KeyCol`] over a `Float64` column (IEEE total order).
+#[derive(Clone, Copy)]
+pub struct F64Key<'a>(pub &'a Float64Array);
+
+/// [`KeyCol`] over a `Utf8` column.
+#[derive(Clone, Copy)]
+pub struct StrKey<'a>(pub &'a Utf8Array);
+
+/// [`KeyCol`] over a `Bool` column.
+#[derive(Clone, Copy)]
+pub struct BoolKey<'a>(pub &'a BoolArray);
+
+impl KeyCol for I64Key<'_> {
+    #[inline]
+    fn valid(&self, i: usize) -> bool {
+        self.0.is_valid(i)
+    }
+    #[inline]
+    fn cmp_values(&self, i: usize, other: &Self, j: usize) -> Ordering {
+        self.0.value(i).cmp(&other.0.value(j))
+    }
+}
+
+impl KeyCol for F64Key<'_> {
+    #[inline]
+    fn valid(&self, i: usize) -> bool {
+        self.0.is_valid(i)
+    }
+    #[inline]
+    fn cmp_values(&self, i: usize, other: &Self, j: usize) -> Ordering {
+        self.0.value(i).total_cmp(&other.0.value(j))
+    }
+}
+
+impl KeyCol for StrKey<'_> {
+    #[inline]
+    fn valid(&self, i: usize) -> bool {
+        self.0.is_valid(i)
+    }
+    #[inline]
+    fn cmp_values(&self, i: usize, other: &Self, j: usize) -> Ordering {
+        self.0.value(i).cmp(other.0.value(j))
+    }
+}
+
+impl KeyCol for BoolKey<'_> {
+    #[inline]
+    fn valid(&self, i: usize) -> bool {
+        self.0.is_valid(i)
+    }
+    #[inline]
+    fn cmp_values(&self, i: usize, other: &Self, j: usize) -> Ordering {
+        self.0.value(i).cmp(&other.0.value(j))
+    }
+}
+
+/// Split `a`'s row indices into (null rows, valid rows), both in
+/// ascending row order, scanning validity 64 rows at a time.
+fn split_null_first(a: &Array) -> (Vec<usize>, Vec<usize>) {
+    let n = a.len();
+    let Some(v) = a.validity() else {
+        return (Vec::new(), (0..n).collect());
+    };
+    let nv = v.count_valid();
+    let mut nulls = Vec::with_capacity(n - nv);
+    let mut valids = Vec::with_capacity(nv);
+    v.for_each_word_range(0..n, |lo, hi, bits| match classify_word(bits, hi - lo) {
+        WordKind::Valid => valids.extend(lo..hi),
+        WordKind::Null => nulls.extend(lo..hi),
+        WordKind::Mixed => {
+            for k in 0..(hi - lo) {
+                if (bits >> k) & 1 == 1 {
+                    valids.push(lo + k);
+                } else {
+                    nulls.push(lo + k);
+                }
+            }
+        }
+    });
+    (nulls, valids)
+}
+
+/// One-pass typed key extraction: order-preserving `u64` keys for
+/// every row (`None` for `Utf8`, which compares through [`StrKey`]).
+/// Entries at null rows are never compared — the null split happens
+/// before any comparison. Morsel-parallel; bit-identical at any
+/// `threads`.
+fn encode_keys(a: &Array, threads: usize) -> Option<Vec<u64>> {
+    let n = a.len();
+    match a {
+        Array::Int64(p) => Some(concat_chunks(
+            map_morsels(n, threads, |r| {
+                p.values()[r].iter().map(|&v| encode_i64(v)).collect::<Vec<u64>>()
+            }),
+            n,
+        )),
+        Array::Float64(p) => Some(concat_chunks(
+            map_morsels(n, threads, |r| {
+                p.values()[r].iter().map(|&v| encode_f64(v)).collect::<Vec<u64>>()
+            }),
+            n,
+        )),
+        Array::Bool(b) => Some(concat_chunks(
+            map_morsels(n, threads, |r| {
+                b.values()[r].iter().map(|&v| encode_bool(v)).collect::<Vec<u64>>()
+            }),
+            n,
+        )),
+        Array::Utf8(_) => None,
+    }
+}
+
+/// Sort the valid-row index vector by `cmp` (a total order — in
+/// practice `(key, row)`). Serial at or below [`SORT_PAR_MIN_ROWS`]
+/// (a single morsel); otherwise fixed 64Ki-row morsels sort
+/// concurrently and merge in morsel order. Both paths yield the
+/// identical permutation.
+fn sort_valid_indices<F>(mut valids: Vec<usize>, threads: usize, cmp: F) -> Vec<usize>
+where
+    F: Fn(&usize, &usize) -> Ordering + Sync,
+{
+    // Serial when there is nothing to win: one thread requested, or
+    // only a single morsel would exist (its "parallel" sort is the
+    // serial sort plus a copy).
+    if threads <= 1 || valids.len() <= SORT_PAR_MIN_ROWS {
+        valids.sort_unstable_by(|a, b| cmp(a, b));
+        return valids;
+    }
+    let runs: Vec<Vec<usize>> = map_morsels(valids.len(), threads, |r| {
+        let mut run = valids[r].to_vec();
+        run.sort_unstable_by(|a, b| cmp(a, b));
+        run
+    });
+    merge_runs(runs, threads, |a, b| cmp(a, b) != Ordering::Greater)
+}
+
+/// Ascending permutation of row indices ordering `t` by column `col`:
+/// nulls first (in row order), then valid rows by `(key, row)` —
+/// duplicate keys keep their input order. Uses the process-default
+/// thread budget; see [`sort_indices_par`].
 pub fn sort_indices(t: &Table, col: usize) -> Result<Vec<usize>> {
+    sort_indices_par(t, col, parallelism())
+}
+
+/// [`sort_indices`] with an explicit thread budget. The permutation is
+/// bit-identical at every `threads` value.
+pub fn sort_indices_par(t: &Table, col: usize, threads: usize) -> Result<Vec<usize>> {
     if col >= t.num_columns() {
         return Err(Error::invalid(format!("sort column {col} out of range")));
     }
     let a = t.column(col).as_ref();
-    let mut idx: Vec<usize> = (0..t.num_rows()).collect();
-    // Typed fast path for the common int64 key column: sort by cached keys
-    // instead of re-dereferencing through the enum per comparison.
-    if let Array::Int64(p) = a {
-        if p.null_count() == 0 {
-            let vals = p.values();
-            idx.sort_unstable_by_key(|&i| vals[i]);
-            return Ok(idx);
+    let (nulls, valids) = split_null_first(a);
+    let sorted = match encode_keys(a, threads) {
+        Some(keys) => sort_valid_indices(valids, threads, |&i, &j| {
+            keys[i].cmp(&keys[j]).then(i.cmp(&j))
+        }),
+        None => {
+            let s = a.as_utf8().expect("non-primitive sort keys are utf8");
+            sort_valid_indices(valids, threads, |&i, &j| {
+                s.value(i).cmp(s.value(j)).then(i.cmp(&j))
+            })
         }
-    }
-    idx.sort_unstable_by(|&i, &j| cmp_cells(a, i, j));
-    Ok(idx)
+    };
+    let mut out = nulls;
+    out.extend(sorted);
+    Ok(out)
 }
 
-/// Materialized sort of a table by column `col`.
+/// Materialized sort of a table by column `col` (stable on duplicate
+/// keys; process-default parallelism).
 pub fn sort(t: &Table, col: usize) -> Result<Table> {
-    let idx = sort_indices(t, col)?;
+    sort_par(t, col, parallelism())
+}
+
+/// [`sort`] with an explicit thread budget; output is bit-identical at
+/// every `threads` value.
+pub fn sort_par(t: &Table, col: usize, threads: usize) -> Result<Table> {
+    let idx = sort_indices_par(t, col, threads)?;
     Ok(take_table(t, &idx))
 }
 
 /// Check ascending order of `col` (testing / merge preconditions).
+/// Typed: one enum resolution, primitive compares per row.
 pub fn is_sorted(t: &Table, col: usize) -> bool {
-    let a = t.column(col).as_ref();
-    (1..t.num_rows()).all(|i| cmp_cells(a, i - 1, i) != Ordering::Greater)
+    fn run<K: KeyCol>(k: K, n: usize) -> bool {
+        (1..n).all(|i| k.cmp_full(i - 1, &k, i) != Ordering::Greater)
+    }
+    let n = t.num_rows();
+    match t.column(col).as_ref() {
+        Array::Int64(p) => run(I64Key(p), n),
+        Array::Float64(p) => run(F64Key(p), n),
+        Array::Utf8(s) => run(StrKey(s), n),
+        Array::Bool(b) => run(BoolKey(b), n),
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +420,33 @@ mod tests {
     }
 
     #[test]
+    fn sorts_bools_with_nulls_stably() {
+        let t = Table::from_arrays(vec![
+            (
+                "k",
+                Array::Bool(crate::table::column::BoolArray::from_options(vec![
+                    Some(true),
+                    None,
+                    Some(false),
+                    Some(true),
+                    None,
+                    Some(false),
+                ])),
+            ),
+            ("row", Array::from_i64((0..6).collect())),
+        ])
+        .unwrap();
+        for threads in [1usize, 2, 7] {
+            let s = sort_par(&t, 0, threads).unwrap();
+            // nulls (rows 1, 4), then false (2, 5), then true (0, 3) —
+            // each block in original row order (stable ties).
+            let r = s.column(1).as_i64().unwrap();
+            assert_eq!(r.values(), &[1, 4, 2, 5, 0, 3], "threads={threads}");
+            assert!(is_sorted(&s, 0));
+        }
+    }
+
+    #[test]
     fn payload_moves_with_key() {
         let t = Table::from_arrays(vec![
             ("k", Array::from_i64(vec![2, 1])),
@@ -154,5 +467,85 @@ mod tests {
     fn empty_table_sorts() {
         let t = Table::from_arrays(vec![("k", Array::from_i64(vec![]))]).unwrap();
         assert_eq!(sort(&t, 0).unwrap().num_rows(), 0);
+    }
+
+    #[test]
+    fn encodings_preserve_order() {
+        let ints = [i64::MIN, -2, -1, 0, 1, 2, i64::MAX];
+        for w in ints.windows(2) {
+            assert!(encode_i64(w[0]) < encode_i64(w[1]), "{w:?}");
+        }
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1u64 << 63));
+        let floats = [
+            neg_nan,
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            1.5,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        for w in floats.windows(2) {
+            assert!(encode_f64(w[0]) < encode_f64(w[1]), "{w:?}");
+            assert_eq!(w[0].total_cmp(&w[1]), Ordering::Less, "{w:?}");
+        }
+        // Equal bit patterns encode equal.
+        assert_eq!(encode_f64(1.5), encode_f64(1.5));
+        assert!(encode_bool(false) < encode_bool(true));
+        assert!(encode_bool(false) > 0, "0 stays free for a null sentinel");
+    }
+
+    #[test]
+    fn stable_on_duplicate_keys() {
+        // Payload records the original row; equal keys must keep it
+        // ascending at every thread count.
+        let keys: Vec<i64> = (0..500).map(|i| (i * 7) % 5).collect();
+        let rows: Vec<i64> = (0..500).collect();
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64(keys)),
+            ("row", Array::from_i64(rows)),
+        ])
+        .unwrap();
+        for threads in [1usize, 2, 7] {
+            let s = sort_par(&t, 0, threads).unwrap();
+            let k = s.column(0).as_i64().unwrap();
+            let r = s.column(1).as_i64().unwrap();
+            for i in 1..s.num_rows() {
+                assert!(k.value(i - 1) <= k.value(i));
+                if k.value(i - 1) == k.value(i) {
+                    assert!(r.value(i - 1) < r.value(i), "unstable tie at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_keycol_matches_cmp_cells_across() {
+        let a = Array::from_f64_opts(vec![Some(1.0), None, Some(f64::NAN), Some(-0.0)]);
+        let b = Array::from_f64_opts(vec![Some(0.0), Some(2.0), None, Some(f64::NAN)]);
+        let (Array::Float64(x), Array::Float64(y)) = (&a, &b) else { unreachable!() };
+        let (ka, kb) = (F64Key(x), F64Key(y));
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(
+                    ka.cmp_full(i, &kb, j),
+                    cmp_cells_across(&a, i, &b, j),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn null_split_is_word_exact() {
+        // Nulls at word boundaries: rows 0, 63, 64 and 127 null.
+        let vals: Vec<Option<i64>> = (0..130)
+            .map(|i| if [0, 63, 64, 127].contains(&i) { None } else { Some(i) })
+            .collect();
+        let t = Table::from_arrays(vec![("k", Array::from_i64_opts(vals))]).unwrap();
+        let idx = sort_indices(&t, 0).unwrap();
+        assert_eq!(&idx[..4], &[0, 63, 64, 127], "nulls first, row order");
+        assert!(is_sorted(&sort(&t, 0).unwrap(), 0));
     }
 }

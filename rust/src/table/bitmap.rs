@@ -1,5 +1,32 @@
 //! Validity bitmap: one bit per row, 1 = valid (non-null).
 
+/// Uniformity of one [`Bitmap::for_each_word_range`] chunk: `Valid` and
+/// `Null` chunks take bulk fast paths, only `Mixed` chunks walk bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WordKind {
+    /// Every row in the chunk is valid.
+    Valid,
+    /// Every row in the chunk is null.
+    Null,
+    /// The chunk mixes valid and null rows.
+    Mixed,
+}
+
+/// Classify a chunk's `bits` over `width` rows (bits at `width` and
+/// above must be clear, as [`Bitmap::for_each_word_range`] guarantees).
+/// The single definition of the valid/null/mixed trichotomy shared by
+/// the hash kernels and the sort engine's null split.
+#[inline]
+pub fn classify_word(bits: u64, width: usize) -> WordKind {
+    if bits == 0 {
+        WordKind::Null
+    } else if bits.count_ones() as usize == width {
+        WordKind::Valid
+    } else {
+        WordKind::Mixed
+    }
+}
+
 /// A packed validity bitmap. `None` at the array level means "all valid";
 /// this type is only materialized when at least one null exists.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -115,6 +142,36 @@ impl Bitmap {
     /// Raw words (tail bits beyond `len` are zero).
     pub fn words(&self) -> &[u64] {
         &self.bits
+    }
+
+    /// Visit rows `r` one 64-bit validity word at a time: `f(lo, hi,
+    /// bits)` is called for each maximal sub-range `lo..hi` of `r` that
+    /// lives in a single word, with bit `k` of `bits` holding row
+    /// `lo + k`'s validity and all bits at `hi - lo` and above cleared.
+    /// `bits.count_ones() as usize == hi - lo` therefore tests an
+    /// all-valid chunk and `bits == 0` an all-null one — the shared
+    /// fast path of the columnar hash kernels ([`crate::ops::hash`])
+    /// and the sort engine's null extraction ([`crate::ops::sort`]),
+    /// which skip per-bit [`Bitmap::get`] entirely on uniform words.
+    #[inline]
+    pub fn for_each_word_range(
+        &self,
+        r: std::ops::Range<usize>,
+        mut f: impl FnMut(usize, usize, u64),
+    ) {
+        debug_assert!(r.end <= self.len);
+        let mut lo = r.start;
+        while lo < r.end {
+            let w = lo / 64;
+            let hi = ((w + 1) * 64).min(r.end);
+            let width = hi - lo;
+            let mut bits = self.bits[w] >> (lo % 64);
+            if width < 64 {
+                bits &= (1u64 << width) - 1;
+            }
+            f(lo, hi, bits);
+            lo = hi;
+        }
     }
 
     /// Rebuild from raw words + length (used by the wire format).
@@ -283,6 +340,50 @@ mod tests {
         assert_eq!(c.len(), 66);
         assert!(c.get(62) && !c.get(63) && c.get(64) && c.get(65));
         assert_eq!(c.count_valid(), 65);
+    }
+
+    #[test]
+    fn word_range_visits_match_per_bit_get() {
+        // Length straddling three words with a mixed pattern; every
+        // sub-range must reproduce exactly what per-bit get() reports.
+        let pattern: Vec<bool> = (0..150).map(|i| i % 3 != 0 && i != 64).collect();
+        let b = Bitmap::from_bools(&pattern);
+        for r in [0..150usize, 0..64, 64..128, 63..65, 7..130, 149..150, 10..10] {
+            let mut seen: Vec<bool> = Vec::new();
+            let mut last_hi = r.start;
+            b.for_each_word_range(r.clone(), |lo, hi, bits| {
+                assert_eq!(lo, last_hi, "chunks must tile the range");
+                assert!(hi > lo && hi <= r.end);
+                assert_eq!(lo / 64, (hi - 1) / 64, "chunk stays in one word");
+                if hi - lo < 64 {
+                    assert_eq!(bits >> (hi - lo), 0, "high bits cleared");
+                }
+                for k in 0..(hi - lo) {
+                    seen.push((bits >> k) & 1 == 1);
+                }
+                last_hi = hi;
+            });
+            assert_eq!(last_hi, if r.is_empty() { r.start } else { r.end });
+            let want: Vec<bool> = r.clone().map(|i| b.get(i)).collect();
+            assert_eq!(seen, want, "range {r:?}");
+        }
+    }
+
+    #[test]
+    fn word_range_uniform_chunks_detectable() {
+        let mut b = Bitmap::new_valid(200);
+        for i in 64..128 {
+            b.set(i, false);
+        }
+        b.set(190, false);
+        let mut kinds = Vec::new();
+        b.for_each_word_range(0..200, |lo, hi, bits| {
+            kinds.push(classify_word(bits, hi - lo));
+        });
+        assert_eq!(
+            kinds,
+            vec![WordKind::Valid, WordKind::Null, WordKind::Valid, WordKind::Mixed]
+        );
     }
 
     #[test]

@@ -252,6 +252,16 @@ impl Array {
         }
     }
 
+    /// The validity bitmap, if any (`None` means every row is valid).
+    pub fn validity(&self) -> Option<&Bitmap> {
+        match self {
+            Array::Int64(a) => a.validity(),
+            Array::Float64(a) => a.validity(),
+            Array::Utf8(a) => a.validity(),
+            Array::Bool(a) => a.validity(),
+        }
+    }
+
     pub fn as_i64(&self) -> Option<&Int64Array> {
         match self {
             Array::Int64(a) => Some(a),
