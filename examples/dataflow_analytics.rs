@@ -43,16 +43,27 @@ fn main() -> Result<()> {
     let g = build_graph();
     println!("[dataflow] plan:\n{}", g.explain());
     let world = 4;
+    // What the query planner does to this graph at world 4: the unused
+    // join payload columns never cross the wire, and the group-by's
+    // partial shuffle is elided (its input is already hash-partitioned
+    // on the key by the distributed join).
+    let preview = [
+        ("orders", paper_table(64, 0.3, 1)),
+        ("refunds", paper_table(64, 0.3, 2)),
+    ];
+    println!("[planner]\n{}", g.explain_optimized(world, &preview)?);
     let outs = run_workers(world, &CommConfig::default(), move |ctx| {
         let orders = paper_table(40_000, 0.3, 3000 + ctx.rank() as u64);
         let refunds = paper_table(10_000, 0.3, 4000 + ctx.rank() as u64);
-        build_graph()
-            .execute_with(ctx, &[("orders", orders), ("refunds", refunds)])
-            .unwrap()
-            .remove(0)
+        let (mut tables, stats) = build_graph()
+            .execute_with_stats(ctx, &[("orders", orders), ("refunds", refunds)])
+            .unwrap();
+        (tables.remove(0), stats)
     });
-    let groups: usize = outs.iter().map(|t| t.num_rows()).sum();
+    let groups: usize = outs.iter().map(|(t, _)| t.num_rows()).sum();
+    let elided: usize = outs[0].1.shuffles_elided;
     println!("[dataflow] distributed group-by produced {groups} key groups across {world} workers");
+    println!("[dataflow] planner elided {elided} AllToAll shuffle(s) per worker");
 
     // ---- 2. Out-of-core: same join, 4k-row memory budget. ----------
     let big_l = paper_table(200_000, 0.5, 61);

@@ -7,7 +7,7 @@
 //! bench_driver fig9   [--op join|union]   engine comparison (Fig. 9 a/b)
 //! bench_driver table2                     Table II (join times + speedups)
 //! bench_driver fig10                      binding overhead (Fig. 10)
-//! bench_driver local  [--op join|groupby|sort|partition|shuffle] thread sweep
+//! bench_driver local  [--op join|groupby|sort|partition|shuffle|pipeline] thread sweep
 //! bench_driver all                        everything above
 //! ```
 //!
@@ -27,7 +27,12 @@
 //! comes from the calibrated α/β profile. See DESIGN.md §Substitutions.
 //! The `local` target instead times the morsel-parallel local operators
 //! for real at each `--threads` value (the perf_opt acceptance gate:
-//! join/group-by speedup at parallelism 4 vs 1 on ≥1M-row inputs).
+//! join/group-by speedup at parallelism 4 vs 1 on ≥1M-row inputs). Its
+//! `pipeline` op ablates the query planner: the same
+//! join→filter→project→group_by dataflow graph with the planner off
+//! (`pipeline_naive`) vs on (`pipeline_opt`), at world 1 (predicate +
+//! projection pushdown) and world 3 (plus shuffle elision) — outputs
+//! are bit-identical, so the wall-time delta is pure plan quality.
 //!
 //! Every run also appends to `<out-dir>/BENCH_results.json` — one
 //! record per (target, op, rows, world, threads) with wall seconds and
@@ -36,10 +41,12 @@
 //! invocations into one out-dir accumulate.
 
 use rylon::coordinator::run_workers;
+use rylon::dataflow::Graph;
 use rylon::io::generator::{paper_table, paper_table_with_keyspace, worker_partition};
 use rylon::metrics::{append_bench_json, BenchRecord, Report};
 use rylon::net::{CommConfig, NetworkProfile};
 use rylon::ops::aggregate::{group_by_par, AggFn, AggSpec};
+use rylon::ops::expr::Expr;
 use rylon::ops::join::{join_par, JoinAlgorithm, JoinConfig};
 use rylon::ops::partition::{partition_by_ids_par, partition_ids_by_key_par};
 use rylon::ops::sort::sort_par;
@@ -574,8 +581,9 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
         "sort" => vec!["sort"],
         "partition" => vec!["partition"],
         "shuffle" => vec!["shuffle"],
+        "pipeline" => vec!["pipeline"],
         // Implicit default ("join" from parse_opts) or explicit "all".
-        "all" | "join" => vec!["join", "groupby", "sort", "partition", "shuffle"],
+        "all" | "join" => vec!["join", "groupby", "sort", "partition", "shuffle", "pipeline"],
         other => return Err(format!("unknown local op '{other}'")),
     };
     let mut report = Report::new(
@@ -585,6 +593,11 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     for op in ops {
         let mut base: Option<f64> = None;
         for &threads in &opts.threads_list {
+            if op == "pipeline" {
+                bench_pipeline(opts, threads, &mut report, records)?;
+                eprintln!("[local/pipeline] threads={threads} done");
+                continue;
+            }
             let (wall, part, comm, world) = bench_local_op(opts, op, threads)?;
             let speedup = base.map(|b| b / wall).unwrap_or(1.0);
             base.get_or_insert(wall);
@@ -609,6 +622,107 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
     }
     print!("{}", report.render());
     save(&report, opts, "local");
+    Ok(())
+}
+
+/// The query-planner ablation pipeline: join → filter → project →
+/// group-by ([`rylon::plan`]'s tentpole shapes — predicate pushdown
+/// into the join, projection-pruned join payload, and at world 3 the
+/// group-by's partial shuffle elided). Naive (planner off) vs
+/// optimized, world 1 and world 3; optimized output is bit-identical,
+/// so the delta is pure plan quality.
+fn pipeline_graph() -> Graph {
+    let mut g = Graph::new();
+    let a = g.source("a");
+    let b = g.source("b");
+    let j = g.join(a, b, JoinConfig::inner(0, 0));
+    let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.5)));
+    let p = g.project(f, vec![0, 1]);
+    let s = g.group_by(p, 0, vec![AggSpec::new(AggFn::Sum, 1)]);
+    g.sink(s);
+    g
+}
+
+fn bench_pipeline(
+    opts: &Opts,
+    threads: usize,
+    report: &mut Report,
+    records: &mut Vec<BenchRecord>,
+) -> CliResult<()> {
+    let n = opts.total_rows;
+    let runs = opts.runs.max(1);
+    let mut emit = |label: &str, world: usize, wall: f64, naive_wall: Option<f64>| {
+        let speedup = naive_wall.map(|b| format!("{:.2}x", b / wall)).unwrap_or("1.00x".into());
+        report.add_row(vec![
+            format!("{label}_w{world}"),
+            threads.to_string(),
+            fmt_s(wall),
+            speedup,
+        ]);
+        records.push(BenchRecord {
+            target: "local".into(),
+            op: label.to_string(),
+            rows: n,
+            world,
+            threads,
+            wall_secs: wall,
+            partition_secs: 0.0,
+            comm_secs: 0.0,
+        });
+    };
+
+    // ---- world 1: planner off vs on -------------------------------
+    let a = paper_table(n, 0.9, 0x51FE1);
+    let b = paper_table(n / 2 + 1, 0.9, 0x51FE2);
+    let srcs = [("a", a), ("b", b)];
+    let mut walls = [0.0f64; 2];
+    for (slot, optimized) in [(0usize, false), (1usize, true)] {
+        let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(threads);
+        ctx.set_optimize(optimized);
+        let g = pipeline_graph();
+        let m = rylon::metrics::measure(runs, 1, || {
+            let t0 = Instant::now();
+            let out = g.execute_with(&mut ctx, &srcs).expect("pipeline");
+            std::hint::black_box(out[0].num_rows());
+            t0.elapsed().as_secs_f64()
+        });
+        walls[slot] = m.median_secs;
+    }
+    emit("pipeline_naive", 1, walls[0], None);
+    emit("pipeline_opt", 1, walls[1], Some(walls[0]));
+
+    // ---- world 3: with vs without shuffle elision + pruning -------
+    let world = 3;
+    let mut dist_walls = [0.0f64; 2];
+    for (slot, optimized) in [(0usize, false), (1usize, true)] {
+        let mut samples: Vec<f64> = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                ctx.set_optimize(optimized);
+                let srcs = [
+                    ("a", worker_partition(n, world, ctx.rank(), 0.9, 0x51FE3)),
+                    ("b", worker_partition(n / 2 + 1, world, ctx.rank(), 0.9, 0x51FE4)),
+                ];
+                let g = pipeline_graph();
+                let t0 = Instant::now();
+                let (out, stats) = g.execute_with_stats(ctx, &srcs).expect("pipeline");
+                std::hint::black_box(out[0].num_rows());
+                (t0.elapsed().as_secs_f64(), stats.shuffles_elided)
+            });
+            if optimized {
+                assert!(
+                    outs.iter().all(|(_, e)| *e >= 1),
+                    "world-3 pipeline should elide the group-by shuffle"
+                );
+            }
+            samples.push(outs.iter().map(|(w, _)| *w).fold(0.0f64, f64::max));
+        }
+        samples.sort_by(|x, y| x.total_cmp(y));
+        dist_walls[slot] = samples[samples.len() / 2];
+    }
+    emit("pipeline_naive", world, dist_walls[0], None);
+    emit("pipeline_opt", world, dist_walls[1], Some(dist_walls[0]));
     Ok(())
 }
 

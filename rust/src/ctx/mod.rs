@@ -20,6 +20,12 @@ pub struct CylonContext {
     /// operators (see [`crate::ops::parallel`]). Changing it never
     /// changes results, only speed.
     parallelism: usize,
+    /// Whether [`crate::dataflow::Graph::execute_with`] runs the
+    /// rule-based planner ([`crate::plan`]). On by default; turning it
+    /// off never changes results (optimized plans are bit-identical),
+    /// only speed. SPMD caveat: all ranks of one graph execution must
+    /// agree, or collective sequences diverge.
+    optimize: bool,
 }
 
 /// Per-worker thread budget: co-located in-process workers split the
@@ -33,7 +39,12 @@ impl CylonContext {
     pub fn init_local() -> Self {
         let mut fabric = ChannelFabric::new(1);
         let comm = Communicator::new(Box::new(fabric.pop().unwrap()), &CommConfig::default());
-        let mut ctx = CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) };
+        let mut ctx = CylonContext {
+            comm,
+            runtime: None,
+            parallelism: shared_parallelism(1),
+            optimize: true,
+        };
         ctx.comm.set_parallelism(ctx.parallelism);
         ctx
     }
@@ -48,7 +59,7 @@ impl CylonContext {
                 let parallelism = shared_parallelism(world);
                 let mut comm = Communicator::new(Box::new(t), config);
                 comm.set_parallelism(parallelism);
-                CylonContext { comm, runtime: None, parallelism }
+                CylonContext { comm, runtime: None, parallelism, optimize: true }
             })
             .collect()
     }
@@ -60,7 +71,12 @@ impl CylonContext {
     /// whose in-process workers split it. Override with
     /// [`Self::with_parallelism`] when co-locating ranks.
     pub fn from_communicator(comm: Communicator) -> Self {
-        let mut ctx = CylonContext { comm, runtime: None, parallelism: shared_parallelism(1) };
+        let mut ctx = CylonContext {
+            comm,
+            runtime: None,
+            parallelism: shared_parallelism(1),
+            optimize: true,
+        };
         ctx.comm.set_parallelism(ctx.parallelism);
         ctx
     }
@@ -83,6 +99,27 @@ impl CylonContext {
     /// the distributed operators.
     pub fn parallelism(&self) -> usize {
         self.parallelism
+    }
+
+    /// Enable/disable the query planner for dataflow graphs executed
+    /// on this context (default: enabled). Results never change —
+    /// optimized plans are bit-identical — so this is a debugging and
+    /// benchmarking knob (`bench_driver local --op pipeline` ablates
+    /// it). At world > 1 every rank executing the same graph must use
+    /// the same setting, or their collective sequences diverge.
+    pub fn set_optimize(&mut self, on: bool) {
+        self.optimize = on;
+    }
+
+    /// Builder-style [`Self::set_optimize`].
+    pub fn with_optimize(mut self, on: bool) -> Self {
+        self.optimize = on;
+        self
+    }
+
+    /// Whether dataflow graphs run through the planner here.
+    pub fn optimize_enabled(&self) -> bool {
+        self.optimize
     }
 
     /// Attach a shared AOT kernel runtime (hash-partition on the PJRT
@@ -144,5 +181,15 @@ mod tests {
         ctx.set_parallelism(0); // clamped to 1
         assert_eq!(ctx.parallelism(), 1);
         ctx.finalize().unwrap();
+    }
+
+    #[test]
+    fn optimize_knob_defaults_on_and_toggles() {
+        let mut ctx = CylonContext::init_local();
+        assert!(ctx.optimize_enabled());
+        ctx.set_optimize(false);
+        assert!(!ctx.optimize_enabled());
+        let ctx2 = CylonContext::init_local().with_optimize(false);
+        assert!(!ctx2.optimize_enabled());
     }
 }

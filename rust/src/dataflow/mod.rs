@@ -33,6 +33,7 @@ use crate::error::{Error, Result};
 use crate::ops::aggregate::AggSpec;
 use crate::ops::expr::Expr;
 use crate::ops::join::JoinConfig;
+use crate::plan::{execute_plan, optimize, ExecStats, LogicalNode, LogicalOp, LogicalPlan};
 use crate::table::Table;
 use std::collections::HashMap;
 
@@ -41,6 +42,7 @@ use std::collections::HashMap;
 pub struct NodeId(usize);
 
 /// Operator nodes.
+#[derive(Clone)]
 enum Node {
     /// Named input bound at execution time.
     Source { name: String },
@@ -88,7 +90,7 @@ impl Node {
 }
 
 /// A lazily-built operator DAG.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct Graph {
     nodes: Vec<Node>,
     sinks: Vec<NodeId>,
@@ -161,11 +163,108 @@ impl Graph {
         out
     }
 
+    /// Lower into the planner IR, binding source schemas from `bound`.
+    fn lower(&self, bound: &HashMap<&str, &Table>) -> Result<LogicalPlan> {
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let (op, inputs) = match node {
+                Node::Source { name } => {
+                    let t = bound
+                        .get(name.as_str())
+                        .ok_or_else(|| Error::invalid(format!("unbound source '{name}'")))?;
+                    (
+                        LogicalOp::Source { name: name.clone(), schema: t.schema().clone() },
+                        vec![],
+                    )
+                }
+                Node::Filter { input, pred } => {
+                    (LogicalOp::Filter { pred: pred.clone() }, vec![input.0])
+                }
+                Node::Project { input, columns } => {
+                    (LogicalOp::Project { columns: columns.clone() }, vec![input.0])
+                }
+                Node::WithColumn { input, name, expr } => (
+                    LogicalOp::WithColumn { name: name.clone(), expr: expr.clone() },
+                    vec![input.0],
+                ),
+                Node::Sort { input, col } => (LogicalOp::Sort { col: *col }, vec![input.0]),
+                Node::Join { left, right, cfg } => (
+                    LogicalOp::Join {
+                        cfg: *cfg,
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    vec![left.0, right.0],
+                ),
+                Node::Union { left, right } => (
+                    LogicalOp::Union { pin: None, elide_left: false, elide_right: false },
+                    vec![left.0, right.0],
+                ),
+                Node::Intersect { left, right } => (
+                    LogicalOp::Intersect { pin: None, elide_left: false, elide_right: false },
+                    vec![left.0, right.0],
+                ),
+                Node::Difference { left, right } => (
+                    LogicalOp::Difference { pin: None, elide_left: false, elide_right: false },
+                    vec![left.0, right.0],
+                ),
+                Node::GroupBy { input, key, aggs } => (
+                    LogicalOp::GroupBy { key: *key, aggs: aggs.clone(), elide: false },
+                    vec![input.0],
+                ),
+            };
+            nodes.push(LogicalNode { op, inputs });
+        }
+        Ok(LogicalPlan { nodes, sinks: self.sinks.iter().map(|s| s.0).collect() })
+    }
+
     /// Execute on a context (world size 1 = local; >1 = distributed),
     /// binding `sources` by name. Returns the sink tables in
-    /// declaration order. Node results are cached, so diamond-shaped
-    /// graphs evaluate each node once.
+    /// declaration order.
+    ///
+    /// The graph is lowered into a [`crate::plan::LogicalPlan`],
+    /// optimized by [`crate::plan::rules::optimize`] (disable per
+    /// worker with [`CylonContext::set_optimize`]), and run on the
+    /// `Arc`-sharing executor — diamond-shaped graphs evaluate each
+    /// node once and share the result, and intermediates are dropped
+    /// at their last use. Optimized output is bit-identical to naive
+    /// execution ([`Graph::execute_naive_with`]) at every thread count
+    /// and world size.
     pub fn execute_with(
+        &self,
+        ctx: &mut CylonContext,
+        sources: &[(&str, Table)],
+    ) -> Result<Vec<Table>> {
+        Ok(self.execute_with_stats(ctx, sources)?.0)
+    }
+
+    /// [`Graph::execute_with`] returning [`ExecStats`] as well —
+    /// shuffles run/elided, nodes executed, comm bytes.
+    pub fn execute_with_stats(
+        &self,
+        ctx: &mut CylonContext,
+        sources: &[(&str, Table)],
+    ) -> Result<(Vec<Table>, ExecStats)> {
+        if self.sinks.is_empty() {
+            return Err(Error::invalid("graph has no sinks"));
+        }
+        let bound: HashMap<&str, &Table> = sources.iter().map(|(n, t)| (*n, t)).collect();
+        let plan = self.lower(&bound)?;
+        if !ctx.optimize_enabled() {
+            return execute_plan(&plan, ctx, sources, true);
+        }
+        let opt = optimize(&plan, ctx.world());
+        // A fallback plan is the unoptimized original: run it naively
+        // so any validation error surfaces exactly as it always did.
+        execute_plan(&opt.plan, ctx, sources, opt.fell_back)
+    }
+
+    /// Execute node-by-node with no optimization — every node (dead
+    /// ones included) evaluates in declaration order, exactly the
+    /// pre-planner semantics. The bit-identity oracle for
+    /// `tests/prop_plan.rs`.
+    pub fn execute_naive_with(
         &self,
         ctx: &mut CylonContext,
         sources: &[(&str, Table)],
@@ -174,87 +273,36 @@ impl Graph {
             return Err(Error::invalid("graph has no sinks"));
         }
         let bound: HashMap<&str, &Table> = sources.iter().map(|(n, t)| (*n, t)).collect();
-        let mut results: Vec<Option<Table>> = (0..self.nodes.len()).map(|_| None).collect();
-        // Nodes are append-only, so index order IS a topological order.
-        for (i, node) in self.nodes.iter().enumerate() {
-            let get = |id: NodeId, results: &Vec<Option<Table>>| -> Result<Table> {
-                results[id.0]
-                    .clone()
-                    .ok_or_else(|| Error::internal("dataflow dependency not computed"))
-            };
-            let value = match node {
-                Node::Source { name } => bound
-                    .get(name.as_str())
-                    .map(|t| (*t).clone())
-                    .ok_or_else(|| Error::invalid(format!("unbound source '{name}'")))?,
-                Node::Filter { input, pred } => {
-                    crate::ops::expr::filter(&get(*input, &results)?, pred)?
-                }
-                Node::Project { input, columns } => {
-                    crate::ops::project::project(&get(*input, &results)?, columns)?
-                }
-                Node::WithColumn { input, name, expr } => {
-                    crate::ops::expr::with_column(&get(*input, &results)?, name, expr)?
-                }
-                Node::Sort { input, col } => {
-                    let t = get(*input, &results)?;
-                    if ctx.world() > 1 {
-                        crate::dist::dist_sort(ctx, &t, *col)?.0
-                    } else {
-                        crate::ops::sort::sort(&t, *col)?
-                    }
-                }
-                Node::Join { left, right, cfg } => {
-                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
-                    if ctx.world() > 1 {
-                        crate::dist::dist_join(ctx, &l, &r, cfg)?.0
-                    } else {
-                        crate::ops::join::join(&l, &r, cfg)?
-                    }
-                }
-                Node::Union { left, right } => {
-                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
-                    if ctx.world() > 1 {
-                        crate::dist::dist_union(ctx, &l, &r)?.0
-                    } else {
-                        crate::ops::union::union(&l, &r)?
-                    }
-                }
-                Node::Intersect { left, right } => {
-                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
-                    if ctx.world() > 1 {
-                        crate::dist::dist_intersect(ctx, &l, &r)?.0
-                    } else {
-                        crate::ops::intersect::intersect(&l, &r)?
-                    }
-                }
-                Node::Difference { left, right } => {
-                    let (l, r) = (get(*left, &results)?, get(*right, &results)?);
-                    if ctx.world() > 1 {
-                        crate::dist::dist_difference(ctx, &l, &r)?.0
-                    } else {
-                        crate::ops::difference::difference(&l, &r)?
-                    }
-                }
-                Node::GroupBy { input, key, aggs } => {
-                    let t = get(*input, &results)?;
-                    if ctx.world() > 1 {
-                        crate::dist::dist_group_by(ctx, &t, *key, aggs)?.0
-                    } else {
-                        crate::ops::aggregate::group_by(&t, *key, aggs)?
-                    }
-                }
-            };
-            results[i] = Some(value);
+        let plan = self.lower(&bound)?;
+        Ok(execute_plan(&plan, ctx, sources, true)?.0)
+    }
+
+    /// Render the plan before and after optimization for a
+    /// `world`-rank execution (sources provide the bound schemas),
+    /// with the applied-rule log and elided shuffles annotated.
+    pub fn explain_optimized(
+        &self,
+        world: usize,
+        sources: &[(&str, Table)],
+    ) -> Result<String> {
+        let bound: HashMap<&str, &Table> = sources.iter().map(|(n, t)| (*n, t)).collect();
+        let plan = self.lower(&bound)?;
+        let opt = optimize(&plan, world);
+        let mut out = String::new();
+        out.push_str("== naive plan ==\n");
+        out.push_str(&plan.explain());
+        out.push_str(&format!("== optimized plan (world {world}) ==\n"));
+        out.push_str(&opt.plan.explain());
+        out.push_str("== rules applied ==\n");
+        if opt.log.is_empty() {
+            out.push_str("(none)\n");
+        } else {
+            for line in &opt.log {
+                out.push_str(line);
+                out.push('\n');
+            }
         }
-        self.sinks
-            .iter()
-            .map(|s| {
-                results[s.0]
-                    .clone()
-                    .ok_or_else(|| Error::internal("sink not computed"))
-            })
-            .collect()
+        Ok(out)
     }
 }
 
@@ -366,5 +414,82 @@ mod tests {
         let plan = g.explain();
         assert!(plan.contains("join(#0, #1)"));
         assert!(plan.contains("[sink]"));
+    }
+
+    #[test]
+    fn optimized_matches_naive_bit_for_bit_locally() {
+        let a = paper_table(600, 0.8, 31);
+        let b = paper_table(350, 0.8, 32);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let naive = pipeline()
+            .execute_naive_with(&mut ctx, &[("a", a.clone()), ("b", b.clone())])
+            .unwrap();
+        let (opt, stats) = pipeline()
+            .execute_with_stats(&mut ctx, &[("a", a.clone()), ("b", b.clone())])
+            .unwrap();
+        assert!(opt[0].data_equals(&naive[0]));
+        assert!(opt[0].schema().type_equals(naive[0].schema()));
+        // the optimizer pruned at least the dead original join/filter
+        assert!(stats.nodes_executed >= 5);
+        // disabling optimization per worker is honored
+        ctx.set_optimize(false);
+        let raw = pipeline().execute_with(&mut ctx, &[("a", a), ("b", b)]).unwrap();
+        assert!(raw[0].data_equals(&naive[0]));
+    }
+
+    #[test]
+    fn explain_optimized_shows_rules_and_elisions() {
+        let mut g = Graph::new();
+        let a = g.source("a");
+        let b = g.source("b");
+        let j = g.join(a, b, JoinConfig::inner(0, 0));
+        let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.5)));
+        let p = g.project(f, vec![0, 1]);
+        let s = g.group_by(p, 0, vec![AggSpec::new(AggFn::Sum, 1)]);
+        g.sink(s);
+        let srcs = [("a", paper_table(50, 1.0, 1)), ("b", paper_table(50, 1.0, 2))];
+        let one = g.explain_optimized(1, &srcs).unwrap();
+        assert!(one.contains("== naive plan =="));
+        assert!(one.contains("== optimized plan (world 1) =="));
+        assert!(one.contains("predicate pushdown"));
+        assert!(one.contains("projection pushdown"));
+        let three = g.explain_optimized(3, &srcs).unwrap();
+        assert!(three.contains("shuffle elision"), "{three}");
+        assert!(three.contains("[elide shuffle]"), "{three}");
+    }
+
+    #[test]
+    fn elision_fires_and_matches_naive_distributed() {
+        // join → group_by on the join key: the group-by's partial
+        // shuffle rides the join's hash partitioning at world 3.
+        let build = || {
+            let mut g = Graph::new();
+            let a = g.source("a");
+            let b = g.source("b");
+            let j = g.join(a, b, JoinConfig::inner(0, 0));
+            let s = g.group_by(j, 0, vec![AggSpec::new(AggFn::Sum, 1)]);
+            g.sink(s);
+            g
+        };
+        let world = 3;
+        let run = |naive: bool| {
+            run_workers(world, &CommConfig::default(), move |ctx| {
+                let a = paper_table(150, 0.5, 40 + ctx.rank() as u64);
+                let b = paper_table(150, 0.5, 50 + ctx.rank() as u64);
+                let srcs = [("a", a), ("b", b)];
+                if naive {
+                    (build().execute_naive_with(ctx, &srcs).unwrap(), ExecStats::default())
+                } else {
+                    let (t, s) = build().execute_with_stats(ctx, &srcs).unwrap();
+                    (t, s)
+                }
+            })
+        };
+        let naive = run(true);
+        let opt = run(false);
+        for ((nt, _), (ot, os)) in naive.iter().zip(&opt) {
+            assert!(ot[0].data_equals(&nt[0]), "per-rank bit-identity");
+            assert!(os.shuffles_elided >= 1, "group-by shuffle should be elided: {os:?}");
+        }
     }
 }

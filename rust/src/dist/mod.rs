@@ -60,7 +60,11 @@ pub mod ops;
 pub mod shuffle;
 pub mod sort;
 
-pub use ops::{dist_difference, dist_group_by, dist_intersect, dist_join, dist_union};
+pub use ops::{
+    dist_difference, dist_difference_partitioned, dist_group_by, dist_group_by_partitioned,
+    dist_intersect, dist_intersect_partitioned, dist_join, dist_join_partitioned, dist_union,
+    dist_union_partitioned,
+};
 pub use shuffle::{shuffle, shuffle_rows, ShuffleStats};
 pub use sort::dist_sort;
 
@@ -83,6 +87,11 @@ pub struct OpStats {
     pub rows_out: usize,
     /// Whether the AOT PJRT kernel computed the partition ids.
     pub used_kernel: bool,
+    /// AllToAll supersteps this operator actually ran.
+    pub shuffles: usize,
+    /// AllToAll supersteps skipped because the planner proved the
+    /// input already partitioned (see [`crate::plan`]).
+    pub shuffles_elided: usize,
 }
 
 impl OpStats {
@@ -100,6 +109,10 @@ impl OpStats {
             agg.rows_in += s.rows_in;
             agg.rows_out += s.rows_out;
             agg.used_kernel |= s.used_kernel;
+            // SPMD: every rank runs (or elides) the same collectives,
+            // so counts are identical across workers — max, not sum.
+            agg.shuffles = agg.shuffles.max(s.shuffles);
+            agg.shuffles_elided = agg.shuffles_elided.max(s.shuffles_elided);
         }
         agg
     }
@@ -111,6 +124,11 @@ impl OpStats {
         self.comm_secs += s.comm_secs;
         self.comm_bytes += s.comm_bytes;
         self.used_kernel |= s.used_kernel;
+        if s.elided {
+            self.shuffles_elided += 1;
+        } else {
+            self.shuffles += 1;
+        }
     }
 }
 
@@ -159,6 +177,8 @@ mod tests {
             rows_in: 100,
             rows_out: 40,
             used_kernel: false,
+            shuffles: 2,
+            shuffles_elided: 0,
         };
         let b = OpStats {
             partition_secs: 0.25,
@@ -168,6 +188,8 @@ mod tests {
             rows_in: 50,
             rows_out: 60,
             used_kernel: true,
+            shuffles: 2,
+            shuffles_elided: 1,
         };
         let m = OpStats::bsp_max(&[a, b]);
         assert_eq!(m.partition_secs, 1.0);
@@ -177,6 +199,9 @@ mod tests {
         assert_eq!(m.rows_in, 150);
         assert_eq!(m.rows_out, 100);
         assert!(m.used_kernel);
+        // SPMD-identical counts take the max, never the sum
+        assert_eq!(m.shuffles, 2);
+        assert_eq!(m.shuffles_elided, 1);
     }
 
     #[test]
@@ -194,6 +219,7 @@ mod tests {
             comm_bytes: 42,
             rows_in: 10,
             rows_out: 12,
+            ..ShuffleStats::default()
         };
         op.absorb(&s);
         op.absorb(&s);
@@ -201,8 +227,14 @@ mod tests {
         assert_eq!(op.comm_secs, 0.5);
         assert_eq!(op.comm_bytes, 84);
         assert!(op.used_kernel);
+        assert_eq!(op.shuffles, 2);
         // rows are the operator's job, not absorb's
         assert_eq!(op.rows_in, 0);
         assert_eq!(op.rows_out, 0);
+        // an elided shuffle counts separately and adds no time
+        op.absorb(&ShuffleStats::elided(5, crate::plan::Partitioning::RowHash));
+        assert_eq!(op.shuffles, 2);
+        assert_eq!(op.shuffles_elided, 1);
+        assert_eq!(op.comm_bytes, 84);
     }
 }

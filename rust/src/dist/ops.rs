@@ -8,12 +8,13 @@
 //! global result by concatenation — `tests/integration_dist.rs` checks
 //! this against local oracles for every operator and world size.
 
-use super::shuffle::{shuffle, shuffle_rows};
+use super::shuffle::{shuffle, shuffle_rows, ShuffleStats};
 use super::OpStats;
 use crate::ctx::CylonContext;
 use crate::error::{Error, Result};
 use crate::ops::aggregate::{group_by_partial_par, merge_partials_par, AggFn, AggSpec};
 use crate::ops::join::{join_par, JoinConfig};
+use crate::plan::Partitioning;
 use crate::table::Table;
 use std::time::Instant;
 
@@ -28,6 +29,27 @@ pub fn dist_join(
     right: &Table,
     cfg: &JoinConfig,
 ) -> Result<(Table, OpStats)> {
+    dist_join_partitioned(ctx, left, right, cfg, false, false)
+}
+
+/// [`dist_join`] with "already partitioned" entry points: when
+/// `left_partitioned` (resp. `right_partitioned`) is true the caller
+/// guarantees every local row `r` of that side satisfies
+/// `hash_cell(key, r) % world == rank` — exactly what a prior key
+/// shuffle on the same column establishes — so that side's AllToAll is
+/// skipped. A shuffle of an already-partitioned table is the identity,
+/// making elision bit-exact; the skip is recorded in the returned
+/// [`OpStats::shuffles_elided`]. The query planner
+/// ([`crate::plan::rules`]) is the intended caller; passing `true` for
+/// an unpartitioned input silently mis-colocates rows.
+pub fn dist_join_partitioned(
+    ctx: &mut CylonContext,
+    left: &Table,
+    right: &Table,
+    cfg: &JoinConfig,
+    left_partitioned: bool,
+    right_partitioned: bool,
+) -> Result<(Table, OpStats)> {
     if cfg.left_col >= left.num_columns() || cfg.right_col >= right.num_columns() {
         return Err(Error::invalid("join column out of range"));
     }
@@ -35,9 +57,20 @@ pub fn dist_join(
         rows_in: left.num_rows() + right.num_rows(),
         ..OpStats::default()
     };
-    let (lshuf, ls) = shuffle(ctx, left, cfg.left_col)?;
+    let (lshuf, ls) = if left_partitioned {
+        (left.clone(), ShuffleStats::elided(left.num_rows(), Partitioning::Hash(cfg.left_col)))
+    } else {
+        shuffle(ctx, left, cfg.left_col)?
+    };
     stats.absorb(&ls);
-    let (rshuf, rs) = shuffle(ctx, right, cfg.right_col)?;
+    let (rshuf, rs) = if right_partitioned {
+        (
+            right.clone(),
+            ShuffleStats::elided(right.num_rows(), Partitioning::Hash(cfg.right_col)),
+        )
+    } else {
+        shuffle(ctx, right, cfg.right_col)?
+    };
     stats.absorb(&rs);
     let t0 = Instant::now();
     let out = join_par(&lshuf, &rshuf, cfg, ctx.parallelism())?;
@@ -46,13 +79,16 @@ pub fn dist_join(
     Ok((out, stats))
 }
 
-/// Shared shape of the three set operators: row-shuffle both sides,
+/// Shared shape of the three set operators: row-shuffle both sides
+/// (skipping sides the planner proved already row-hash partitioned),
 /// apply the local operator to the colocated partitions under the
 /// worker's thread budget.
 fn dist_setop(
     ctx: &mut CylonContext,
     a: &Table,
     b: &Table,
+    a_partitioned: bool,
+    b_partitioned: bool,
     op: fn(&Table, &Table, usize) -> Result<Table>,
     what: &str,
 ) -> Result<(Table, OpStats)> {
@@ -65,9 +101,17 @@ fn dist_setop(
         rows_in: a.num_rows() + b.num_rows(),
         ..OpStats::default()
     };
-    let (ashuf, astats) = shuffle_rows(ctx, a)?;
+    let (ashuf, astats) = if a_partitioned {
+        (a.clone(), ShuffleStats::elided(a.num_rows(), Partitioning::RowHash))
+    } else {
+        shuffle_rows(ctx, a)?
+    };
     stats.absorb(&astats);
-    let (bshuf, bstats) = shuffle_rows(ctx, b)?;
+    let (bshuf, bstats) = if b_partitioned {
+        (b.clone(), ShuffleStats::elided(b.num_rows(), Partitioning::RowHash))
+    } else {
+        shuffle_rows(ctx, b)?
+    };
     stats.absorb(&bstats);
     let t0 = Instant::now();
     let out = op(&ashuf, &bshuf, ctx.parallelism())?;
@@ -79,17 +123,69 @@ fn dist_setop(
 /// Distributed union-distinct (§II-B4). Identical rows hash to one
 /// rank, so per-rank `distinct` is globally distinct.
 pub fn dist_union(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
-    dist_setop(ctx, a, b, crate::ops::union::union_par, "union")
+    dist_setop(ctx, a, b, false, false, crate::ops::union::union_par, "union")
+}
+
+/// [`dist_union`] with "already partitioned" sides (planner shuffle
+/// elision — see [`dist_join_partitioned`]).
+pub fn dist_union_partitioned(
+    ctx: &mut CylonContext,
+    a: &Table,
+    b: &Table,
+    a_partitioned: bool,
+    b_partitioned: bool,
+) -> Result<(Table, OpStats)> {
+    dist_setop(ctx, a, b, a_partitioned, b_partitioned, crate::ops::union::union_par, "union")
 }
 
 /// Distributed intersect (§II-B5).
 pub fn dist_intersect(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
-    dist_setop(ctx, a, b, crate::ops::intersect::intersect_par, "intersect")
+    dist_setop(ctx, a, b, false, false, crate::ops::intersect::intersect_par, "intersect")
+}
+
+/// [`dist_intersect`] with "already partitioned" sides (planner
+/// shuffle elision — see [`dist_join_partitioned`]).
+pub fn dist_intersect_partitioned(
+    ctx: &mut CylonContext,
+    a: &Table,
+    b: &Table,
+    a_partitioned: bool,
+    b_partitioned: bool,
+) -> Result<(Table, OpStats)> {
+    dist_setop(
+        ctx,
+        a,
+        b,
+        a_partitioned,
+        b_partitioned,
+        crate::ops::intersect::intersect_par,
+        "intersect",
+    )
 }
 
 /// Distributed symmetric difference (§II-B6, the paper's Difference).
 pub fn dist_difference(ctx: &mut CylonContext, a: &Table, b: &Table) -> Result<(Table, OpStats)> {
-    dist_setop(ctx, a, b, crate::ops::difference::difference_par, "difference")
+    dist_setop(ctx, a, b, false, false, crate::ops::difference::difference_par, "difference")
+}
+
+/// [`dist_difference`] with "already partitioned" sides (planner
+/// shuffle elision — see [`dist_join_partitioned`]).
+pub fn dist_difference_partitioned(
+    ctx: &mut CylonContext,
+    a: &Table,
+    b: &Table,
+    a_partitioned: bool,
+    b_partitioned: bool,
+) -> Result<(Table, OpStats)> {
+    dist_setop(
+        ctx,
+        a,
+        b,
+        a_partitioned,
+        b_partitioned,
+        crate::ops::difference::difference_par,
+        "difference",
+    )
 }
 
 /// Distributed group-by: the two-phase plan. Workers pre-aggregate
@@ -102,12 +198,33 @@ pub fn dist_group_by(
     key_col: usize,
     aggs: &[AggSpec],
 ) -> Result<(Table, OpStats)> {
+    dist_group_by_partitioned(ctx, t, key_col, aggs, false)
+}
+
+/// [`dist_group_by`] with an "already partitioned" entry point: when
+/// `input_partitioned` is true the caller guarantees the input is
+/// hash-partitioned on `key_col`, so every partial-state key already
+/// lives on its owning rank and the partial shuffle is skipped (the
+/// partial → merge pipeline itself is unchanged, keeping the output
+/// bit-identical to the shuffled path).
+pub fn dist_group_by_partitioned(
+    ctx: &mut CylonContext,
+    t: &Table,
+    key_col: usize,
+    aggs: &[AggSpec],
+    input_partitioned: bool,
+) -> Result<(Table, OpStats)> {
     let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
     let t0 = Instant::now();
     let partial = group_by_partial_par(t, key_col, aggs, ctx.parallelism())?;
     let mut local_secs = t0.elapsed().as_secs_f64();
     // The partial table's key is column 0 by construction.
-    let (shuffled, sstats) = shuffle(ctx, &partial, 0)?;
+    let (shuffled, sstats) = if input_partitioned {
+        let rows = partial.num_rows();
+        (partial, ShuffleStats::elided(rows, Partitioning::Hash(0)))
+    } else {
+        shuffle(ctx, &partial, 0)?
+    };
     stats.absorb(&sstats);
     let funcs: Vec<AggFn> = aggs.iter().map(|s| s.func).collect();
     let t1 = Instant::now();
@@ -207,6 +324,43 @@ mod tests {
         let t = random_table(5, 2);
         assert!(dist_join(&mut ctx, &t, &t, &JoinConfig::inner(99, 0)).is_err());
         assert!(dist_join(&mut ctx, &t, &t, &JoinConfig::inner(0, 99)).is_err());
+    }
+
+    #[test]
+    fn partitioned_entry_points_match_shuffled_path_bit_for_bit() {
+        // Once inputs are key/row-shuffled, the elided entry points
+        // must reproduce the re-shuffling path exactly (a shuffle of
+        // an already-partitioned table is the identity).
+        let world = 3;
+        let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+            let l = random_table(40, 0x91 + ctx.rank() as u64);
+            let r = random_table(40, 0xA2 + ctx.rank() as u64);
+            let cfg = JoinConfig::inner(0, 0);
+            let (ls, _) = crate::dist::shuffle(ctx, &l, 0).unwrap();
+            let (rs, _) = crate::dist::shuffle(ctx, &r, 0).unwrap();
+            let (j_plain, sp) = dist_join(ctx, &ls, &rs, &cfg).unwrap();
+            let (j_elided, se) = dist_join_partitioned(ctx, &ls, &rs, &cfg, true, true).unwrap();
+            assert_eq!(sp.shuffles, 2);
+            assert_eq!(se.shuffles, 0);
+            assert_eq!(se.shuffles_elided, 2);
+            assert_eq!(se.comm_bytes, 0);
+            assert!(j_elided.data_equals(&j_plain));
+
+            let (as_, _) = crate::dist::shuffle_rows(ctx, &l).unwrap();
+            let (bs_, _) = crate::dist::shuffle_rows(ctx, &r).unwrap();
+            let (u_plain, _) = dist_union(ctx, &as_, &bs_).unwrap();
+            let (u_elided, ue) = dist_union_partitioned(ctx, &as_, &bs_, true, true).unwrap();
+            assert_eq!(ue.shuffles_elided, 2);
+            assert!(u_elided.data_equals(&u_plain));
+
+            let aggs = [AggSpec::new(AggFn::Count, 1)];
+            let (g_plain, _) = dist_group_by(ctx, &ls, 0, &aggs).unwrap();
+            let (g_elided, ge) = dist_group_by_partitioned(ctx, &ls, 0, &aggs, true).unwrap();
+            assert_eq!(ge.shuffles_elided, 1);
+            assert!(g_elided.data_equals(&g_plain));
+            true
+        });
+        assert!(outs.into_iter().all(|x| x));
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::error::{Error, Result};
 use crate::ops::partition::{
     partition_by_ids_par, partition_ids_by_key_par, partition_ids_by_row_par,
 };
+use crate::plan::Partitioning;
 use crate::table::{Array, Table};
 use std::time::Instant;
 
@@ -35,6 +36,11 @@ use std::time::Instant;
 pub struct ShuffleStats {
     /// Whether the AOT PJRT kernel computed the partition ids.
     pub used_kernel: bool,
+    /// The AllToAll was skipped entirely: the planner proved the input
+    /// already satisfies [`ShuffleStats::established`], and a shuffle
+    /// of an already-partitioned table is the identity. All phase
+    /// timings/bytes are zero.
+    pub elided: bool,
     /// Seconds computing partition ids + materializing the parts.
     pub partition_secs: f64,
     /// Seconds in AllToAll + concat (serialize, wire, deserialize).
@@ -45,6 +51,26 @@ pub struct ShuffleStats {
     pub rows_in: usize,
     /// Rows this worker holds after the shuffle.
     pub rows_out: usize,
+    /// The cross-rank distribution this shuffle's output satisfies —
+    /// `Hash(key_col)` for key shuffles, `RowHash` for row shuffles.
+    /// This is what the planner's partitioning pass propagates to
+    /// decide downstream elisions.
+    pub established: Partitioning,
+}
+
+impl ShuffleStats {
+    /// Stats for a shuffle the planner elided: `rows` pass through
+    /// untouched, `established` records the distribution the input
+    /// already had.
+    pub fn elided(rows: usize, established: Partitioning) -> ShuffleStats {
+        ShuffleStats {
+            elided: true,
+            rows_in: rows,
+            rows_out: rows,
+            established,
+            ..ShuffleStats::default()
+        }
+    }
 }
 
 /// Routing mode.
@@ -62,7 +88,12 @@ fn shuffle_with(
 ) -> Result<(Table, ShuffleStats)> {
     let world = ctx.world();
     let threads = ctx.parallelism();
-    let mut stats = ShuffleStats { rows_in: t.num_rows(), ..ShuffleStats::default() };
+    let established = match &routing {
+        Routing::Key(col) => Partitioning::Hash(*col),
+        Routing::Row => Partitioning::RowHash,
+    };
+    let mut stats =
+        ShuffleStats { rows_in: t.num_rows(), established, ..ShuffleStats::default() };
 
     // Partition phase: ids, then one take per column per part, both
     // morsel-parallel on the worker's thread budget (routing itself is
@@ -199,6 +230,16 @@ mod tests {
         assert!(out.data_equals(&t));
         assert_eq!(stats.comm_bytes, 0); // self part never hits the wire
         assert!(!stats.used_kernel);
+        // shuffles record the distribution they establish
+        assert_eq!(stats.established, Partitioning::Hash(0));
+        assert!(!stats.elided);
+        let (_, rstats) = shuffle_rows(&mut ctx, &t).unwrap();
+        assert_eq!(rstats.established, Partitioning::RowHash);
+        // and the planner's elided marker carries rows + distribution
+        let e = ShuffleStats::elided(42, Partitioning::Hash(3));
+        assert!(e.elided);
+        assert_eq!((e.rows_in, e.rows_out), (42, 42));
+        assert_eq!(e.comm_bytes, 0);
     }
 
     #[test]

@@ -144,6 +144,7 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     stats.partition_secs = partition_secs;
     stats.comm_secs = comm_secs;
     stats.rows_out = out.num_rows();
+    stats.shuffles = 1; // the range AllToAll (the sample AllGather is not a shuffle)
     Ok((out, stats))
 }
 

@@ -8,6 +8,8 @@
 //!
 //! ```text
 //!   [api]          language-binding layer (safe Rust API + C ABI)
+//!   [plan]         query planner: logical IR, rule optimizer, executor
+//!   [dataflow]     declarative operator DAG lowered into [plan]
 //!   [dist]         distributed operators  = local ops + AllToAll shuffle
 //!   [ops]          local relational operators (Table I)
 //!   [table]        Arrow-like columnar table abstraction
@@ -45,6 +47,7 @@ pub mod io;
 pub mod metrics;
 pub mod net;
 pub mod ops;
+pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod table;
@@ -52,11 +55,13 @@ pub mod table;
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
     pub use crate::ctx::{CylonContext, WorkerId};
+    pub use crate::dataflow::Graph;
     pub use crate::dist::{
         dist_difference, dist_intersect, dist_join, dist_sort, dist_union, shuffle,
     };
     pub use crate::error::{Error, Result};
     pub use crate::net::{CommConfig, NetworkProfile};
     pub use crate::ops::join::{JoinAlgorithm, JoinConfig, JoinType};
+    pub use crate::plan::{ExecStats, Partitioning};
     pub use crate::table::{Array, DataType, Field, Schema, Table};
 }

@@ -7,51 +7,67 @@
 //! symmetric form to match the paper.
 
 use super::hash::hash_rows;
+use super::join::radix_fanout;
 use super::parallel::parallelism;
-use super::rowset::RowSet;
+use super::rowset::{radix_setop, RowSet, SIDE_A, SIDE_B};
 use crate::error::{Error, Result};
 use crate::table::{builder::TableBuilder, Table};
 
 /// Symmetric difference `(a ∪ b) \ (a ∩ b)`, distinct rows, paper
-/// semantics. Order: a-only rows (first occurrence), then b-only rows.
-/// Row hashes for both sides are precomputed columnarly.
+/// semantics. Order: per radix partition, a-only rows (first
+/// occurrence) then b-only rows; a single partition — always the case
+/// below [`super::join::RADIX_MIN_ROWS`] total rows — reduces to the
+/// historical serial order. Row hashes for both sides are precomputed
+/// columnarly and the per-partition scans run on the morsel pool.
 pub fn difference(a: &Table, b: &Table) -> Result<Table> {
     difference_par(a, b, parallelism())
 }
 
-/// [`difference`] with an explicit thread budget for the row-hash pass
-/// (identical output at every thread count).
+/// [`difference`] with an explicit thread budget (identical output at
+/// every thread count).
 pub fn difference_par(a: &Table, b: &Table, threads: usize) -> Result<Table> {
+    difference_radix(a, b, threads, radix_fanout(a.num_rows() + b.num_rows()))
+}
+
+/// [`difference_par`] with the radix fan-out pinned by the caller (the
+/// planner replays the pre-pushdown partition regime through this).
+/// `partitions == 1` is the serial scan.
+pub fn difference_radix(a: &Table, b: &Table, threads: usize, partitions: usize) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("difference of schema-incompatible tables"));
     }
+    if partitions == 0 {
+        return Err(Error::invalid("zero radix partitions"));
+    }
     let ha = hash_rows(a, threads);
     let hb = hash_rows(b, threads);
-    let mut aset = RowSet::with_capacity(a.num_rows());
-    let atid = aset.add_table(a);
-    for r in 0..a.num_rows() {
-        aset.insert_hashed(atid, r, ha[r]);
-    }
-    let mut bset = RowSet::with_capacity(b.num_rows());
-    let btid = bset.add_table(b);
-    for r in 0..b.num_rows() {
-        bset.insert_hashed(btid, r, hb[r]);
-    }
-    let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
-    let mut emitted = RowSet::new();
-    let ea = emitted.add_table(a);
-    let eb = emitted.add_table(b);
-    for r in 0..a.num_rows() {
-        if !bset.contains_hashed(a, r, ha[r]) && emitted.insert_hashed(ea, r, ha[r]) {
-            out.push_row(a, r)?;
+    radix_setop(a, b, &ha, &hb, threads, partitions, |pa, pb| {
+        let mut aset = RowSet::with_capacity(pa.len());
+        let atid = aset.add_table(a);
+        for &r in pa {
+            aset.insert_hashed(atid, r, ha[r]);
         }
-    }
-    for r in 0..b.num_rows() {
-        if !aset.contains_hashed(b, r, hb[r]) && emitted.insert_hashed(eb, r, hb[r]) {
-            out.push_row(b, r)?;
+        let mut bset = RowSet::with_capacity(pb.len());
+        let btid = bset.add_table(b);
+        for &r in pb {
+            bset.insert_hashed(btid, r, hb[r]);
         }
-    }
-    out.finish()
+        let mut emitted = RowSet::new();
+        let ea = emitted.add_table(a);
+        let eb = emitted.add_table(b);
+        let mut kept = Vec::new();
+        for &r in pa {
+            if !bset.contains_hashed(a, r, ha[r]) && emitted.insert_hashed(ea, r, ha[r]) {
+                kept.push((SIDE_A, r));
+            }
+        }
+        for &r in pb {
+            if !aset.contains_hashed(b, r, hb[r]) && emitted.insert_hashed(eb, r, hb[r]) {
+                kept.push((SIDE_B, r));
+            }
+        }
+        kept
+    })
 }
 
 /// SQL-style `a EXCEPT b` (distinct a-rows not in b). Not used by the

@@ -16,9 +16,22 @@
 //! let filtered = rylon::ops::expr::filter(&t, &pred).unwrap();
 //! assert!(filtered.num_rows() < t.num_rows());
 //! ```
+//!
+//! Utf8 columns participate in comparisons (`Eq`/`Ne`/`Lt`/.../`IsNull`
+//! against [`Expr::lit_str`] or other Utf8 columns, lexicographic byte
+//! order) but not arithmetic. Null semantics are uniform across types:
+//! a comparison touching a null cell is null, and nulls collapse to
+//! `false` at [`filter`] time (SQL three-valued logic).
+//!
+//! The planner ([`crate::plan`]) manipulates expressions symbolically:
+//! [`Expr::columns_referenced`] reports the input columns a predicate
+//! needs, [`Expr::map_columns`] rewrites column indices when a
+//! predicate sinks below a projection, and [`Expr::infer_type`]
+//! type-checks an expression against a schema without evaluating it
+//! (mirroring [`Expr::eval`]'s promotion rules exactly).
 
 use crate::error::{Error, Result};
-use crate::table::{take::filter_table, Array, Table};
+use crate::table::{take::filter_table, Array, DataType, Schema, Table};
 
 /// A vectorized scalar expression.
 #[derive(Debug, Clone)]
@@ -28,6 +41,7 @@ pub enum Expr {
     LitI64(i64),
     LitF64(f64),
     LitBool(bool),
+    LitStr(String),
     Add(Box<Expr>, Box<Expr>),
     Sub(Box<Expr>, Box<Expr>),
     Mul(Box<Expr>, Box<Expr>),
@@ -54,6 +68,7 @@ pub enum Value {
     I64(Vec<i64>, Vec<bool>),
     F64(Vec<f64>, Vec<bool>),
     Bool(Vec<bool>, Vec<bool>),
+    Str(Vec<String>, Vec<bool>),
 }
 
 impl Value {
@@ -62,6 +77,7 @@ impl Value {
             Value::I64(v, _) => v.len(),
             Value::F64(v, _) => v.len(),
             Value::Bool(v, _) => v.len(),
+            Value::Str(v, _) => v.len(),
         }
     }
 
@@ -71,7 +87,7 @@ impl Value {
 
     fn validity(&self) -> &[bool] {
         match self {
-            Value::I64(_, m) | Value::F64(_, m) | Value::Bool(_, m) => m,
+            Value::I64(_, m) | Value::F64(_, m) | Value::Bool(_, m) | Value::Str(_, m) => m,
         }
     }
 
@@ -115,16 +131,30 @@ impl Value {
                     b.finish()
                 }
             }
+            Value::Str(v, m) => {
+                let mut b =
+                    crate::table::builder::ArrayBuilder::new(crate::table::DataType::Utf8);
+                for (x, ok) in v.into_iter().zip(m) {
+                    if ok {
+                        b.push_str(&x).expect("utf8 builder");
+                    } else {
+                        b.push_null();
+                    }
+                }
+                b.finish()
+            }
         }
     }
 }
 
-/// Promote (i64, f64) pairs to f64 for mixed arithmetic.
+/// Promote (i64, f64, bool) to f64 for mixed arithmetic. Callers guard
+/// against `Value::Str` before promoting.
 fn as_f64(v: &Value) -> (Vec<f64>, Vec<bool>) {
     match v {
         Value::I64(x, m) => (x.iter().map(|&a| a as f64).collect(), m.clone()),
         Value::F64(x, m) => (x.clone(), m.clone()),
         Value::Bool(x, m) => (x.iter().map(|&a| a as u8 as f64).collect(), m.clone()),
+        Value::Str(..) => unreachable!("utf8 operands rejected before promotion"),
     }
 }
 
@@ -136,6 +166,9 @@ macro_rules! arith {
     ($a:expr, $b:expr, $op:tt, $name:literal) => {{
         let (l, r) = ($a, $b);
         match (&l, &r) {
+            (Value::Str(..), _) | (_, Value::Str(..)) => {
+                Err(Error::schema(format!("{} over utf8 operands", $name)))
+            }
             (Value::I64(x, mx), Value::I64(y, my)) => {
                 if $name == "div" || $name == "mod" {
                     // guard zero divisors -> null
@@ -184,6 +217,14 @@ macro_rules! compare {
                 let v = x.iter().zip(y).map(|(&a, &b)| a $op b).collect();
                 Ok(Value::Bool(v, zip_validity(mx, my)))
             }
+            // Utf8: lexicographic byte order, only against Utf8.
+            (Value::Str(x, mx), Value::Str(y, my)) => {
+                let v = x.iter().zip(y).map(|(a, b)| a $op b).collect();
+                Ok(Value::Bool(v, zip_validity(mx, my)))
+            }
+            (Value::Str(..), _) | (_, Value::Str(..)) => {
+                Err(Error::schema("comparison of utf8 with non-utf8 operand"))
+            }
             _ => {
                 let (x, mx) = as_f64(&l);
                 let (y, my) = as_f64(&r);
@@ -207,6 +248,9 @@ impl Expr {
     }
     pub fn lit_bool(v: bool) -> Expr {
         Expr::LitBool(v)
+    }
+    pub fn lit_str(v: impl Into<String>) -> Expr {
+        Expr::LitStr(v.into())
     }
 
     // -- combinators ----------------------------------------------------
@@ -271,14 +315,15 @@ impl Expr {
                     Array::Int64(a) => Value::I64(a.values().to_vec(), validity),
                     Array::Float64(a) => Value::F64(a.values().to_vec(), validity),
                     Array::Bool(a) => Value::Bool(a.values().to_vec(), validity),
-                    Array::Utf8(_) => {
-                        return Err(Error::schema("utf8 columns not supported in expressions"))
+                    Array::Utf8(a) => {
+                        Value::Str((0..n).map(|r| a.value(r).to_string()).collect(), validity)
                     }
                 })
             }
             Expr::LitI64(v) => Ok(Value::I64(vec![*v; n], vec![true; n])),
             Expr::LitF64(v) => Ok(Value::F64(vec![*v; n], vec![true; n])),
             Expr::LitBool(v) => Ok(Value::Bool(vec![*v; n], vec![true; n])),
+            Expr::LitStr(v) => Ok(Value::Str(vec![v.clone(); n], vec![true; n])),
             Expr::Add(a, b) => arith!(a.eval(t)?, b.eval(t)?, +, "add"),
             Expr::Sub(a, b) => arith!(a.eval(t)?, b.eval(t)?, -, "sub"),
             Expr::Mul(a, b) => arith!(a.eval(t)?, b.eval(t)?, *, "mul"),
@@ -319,6 +364,180 @@ impl Expr {
                 let mask: Vec<bool> = inner.validity().iter().map(|&ok| !ok).collect();
                 Ok(Value::Bool(mask, vec![true; n]))
             }
+        }
+    }
+
+    /// The two children of a binary node, one child of a unary node.
+    fn children(&self) -> Vec<&Expr> {
+        match self {
+            Expr::Col(_)
+            | Expr::LitI64(_)
+            | Expr::LitF64(_)
+            | Expr::LitBool(_)
+            | Expr::LitStr(_) => vec![],
+            Expr::Not(a) | Expr::IsNull(a) => vec![a.as_ref()],
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Mod(a, b)
+            | Expr::Eq(a, b)
+            | Expr::Ne(a, b)
+            | Expr::Lt(a, b)
+            | Expr::Le(a, b)
+            | Expr::Gt(a, b)
+            | Expr::Ge(a, b)
+            | Expr::And(a, b)
+            | Expr::Or(a, b) => vec![a.as_ref(), b.as_ref()],
+        }
+    }
+
+    /// The set of input columns this expression reads, ascending and
+    /// deduplicated. The planner uses it for projection pushdown (a
+    /// predicate keeps exactly these columns alive below it) and to
+    /// decide which join side a predicate can sink into.
+    pub fn columns_referenced(&self) -> Vec<usize> {
+        fn walk(e: &Expr, out: &mut Vec<usize>) {
+            if let Expr::Col(i) = e {
+                out.push(*i);
+            }
+            for c in e.children() {
+                walk(c, out);
+            }
+        }
+        let mut out = Vec::new();
+        walk(self, &mut out);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Rewrite every column reference through `f` — the remapping step
+    /// when a predicate sinks below a Project (old output index → the
+    /// projected-from input index) or into the right side of a join
+    /// (subtract the left arity).
+    pub fn map_columns(&self, f: &impl Fn(usize) -> usize) -> Expr {
+        let m = |e: &Expr| Box::new(e.map_columns(f));
+        match self {
+            Expr::Col(i) => Expr::Col(f(*i)),
+            Expr::LitI64(v) => Expr::LitI64(*v),
+            Expr::LitF64(v) => Expr::LitF64(*v),
+            Expr::LitBool(v) => Expr::LitBool(*v),
+            Expr::LitStr(v) => Expr::LitStr(v.clone()),
+            Expr::Add(a, b) => Expr::Add(m(a), m(b)),
+            Expr::Sub(a, b) => Expr::Sub(m(a), m(b)),
+            Expr::Mul(a, b) => Expr::Mul(m(a), m(b)),
+            Expr::Div(a, b) => Expr::Div(m(a), m(b)),
+            Expr::Mod(a, b) => Expr::Mod(m(a), m(b)),
+            Expr::Eq(a, b) => Expr::Eq(m(a), m(b)),
+            Expr::Ne(a, b) => Expr::Ne(m(a), m(b)),
+            Expr::Lt(a, b) => Expr::Lt(m(a), m(b)),
+            Expr::Le(a, b) => Expr::Le(m(a), m(b)),
+            Expr::Gt(a, b) => Expr::Gt(m(a), m(b)),
+            Expr::Ge(a, b) => Expr::Ge(m(a), m(b)),
+            Expr::And(a, b) => Expr::And(m(a), m(b)),
+            Expr::Or(a, b) => Expr::Or(m(a), m(b)),
+            Expr::Not(a) => Expr::Not(m(a)),
+            Expr::IsNull(a) => Expr::IsNull(m(a)),
+        }
+    }
+
+    /// Static type of this expression over `schema`, mirroring
+    /// [`Expr::eval`]'s promotion rules exactly: every expression that
+    /// type-checks here evaluates without error on any table of this
+    /// schema (runtime hazards like division by zero produce nulls,
+    /// never errors). The optimizer validates every node with this
+    /// before transforming a plan, so rewrites can't mask a type error
+    /// the naive executor would have surfaced.
+    pub fn infer_type(&self, schema: &Schema) -> Result<DataType> {
+        let arith = |a: &Expr, b: &Expr, what: &str| -> Result<DataType> {
+            match (a.infer_type(schema)?, b.infer_type(schema)?) {
+                (DataType::Utf8, _) | (_, DataType::Utf8) => {
+                    Err(Error::schema(format!("{what} over utf8 operands")))
+                }
+                (DataType::Int64, DataType::Int64) => Ok(DataType::Int64),
+                _ => Ok(DataType::Float64),
+            }
+        };
+        let compare = |a: &Expr, b: &Expr| -> Result<DataType> {
+            match (a.infer_type(schema)?, b.infer_type(schema)?) {
+                (DataType::Utf8, DataType::Utf8) => Ok(DataType::Bool),
+                (DataType::Utf8, _) | (_, DataType::Utf8) => {
+                    Err(Error::schema("comparison of utf8 with non-utf8 operand"))
+                }
+                _ => Ok(DataType::Bool),
+            }
+        };
+        let boolean = |a: &Expr, b: &Expr, what: &str| -> Result<DataType> {
+            match (a.infer_type(schema)?, b.infer_type(schema)?) {
+                (DataType::Bool, DataType::Bool) => Ok(DataType::Bool),
+                _ => Err(Error::schema(format!("{what} over non-bool operands"))),
+            }
+        };
+        match self {
+            Expr::Col(i) => {
+                if *i >= schema.num_fields() {
+                    return Err(Error::invalid(format!("expr column {i} out of range")));
+                }
+                Ok(schema.field(*i).data_type)
+            }
+            Expr::LitI64(_) => Ok(DataType::Int64),
+            Expr::LitF64(_) => Ok(DataType::Float64),
+            Expr::LitBool(_) => Ok(DataType::Bool),
+            Expr::LitStr(_) => Ok(DataType::Utf8),
+            Expr::Add(a, b) => arith(a, b, "add"),
+            Expr::Sub(a, b) => arith(a, b, "sub"),
+            Expr::Mul(a, b) => arith(a, b, "mul"),
+            Expr::Div(a, b) => arith(a, b, "div"),
+            Expr::Mod(a, b) => arith(a, b, "mod"),
+            Expr::Eq(a, b)
+            | Expr::Ne(a, b)
+            | Expr::Lt(a, b)
+            | Expr::Le(a, b)
+            | Expr::Gt(a, b)
+            | Expr::Ge(a, b) => compare(a, b),
+            Expr::And(a, b) => boolean(a, b, "AND"),
+            Expr::Or(a, b) => boolean(a, b, "OR"),
+            Expr::Not(a) => match a.infer_type(schema)? {
+                DataType::Bool => Ok(DataType::Bool),
+                _ => Err(Error::schema("NOT over non-bool operand")),
+            },
+            Expr::IsNull(a) => {
+                a.infer_type(schema)?;
+                Ok(DataType::Bool)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Expr {
+    /// Compact infix rendering used by plan explainers: `c0`, `(c1 +
+    /// 0.5)`, `(c0 % 2 == 0)`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let bin = |f: &mut std::fmt::Formatter<'_>, a: &Expr, op: &str, b: &Expr| {
+            write!(f, "({a} {op} {b})")
+        };
+        match self {
+            Expr::Col(i) => write!(f, "c{i}"),
+            Expr::LitI64(v) => write!(f, "{v}"),
+            Expr::LitF64(v) => write!(f, "{v:?}"),
+            Expr::LitBool(v) => write!(f, "{v}"),
+            Expr::LitStr(v) => write!(f, "{v:?}"),
+            Expr::Add(a, b) => bin(f, a, "+", b),
+            Expr::Sub(a, b) => bin(f, a, "-", b),
+            Expr::Mul(a, b) => bin(f, a, "*", b),
+            Expr::Div(a, b) => bin(f, a, "/", b),
+            Expr::Mod(a, b) => bin(f, a, "%", b),
+            Expr::Eq(a, b) => bin(f, a, "==", b),
+            Expr::Ne(a, b) => bin(f, a, "!=", b),
+            Expr::Lt(a, b) => bin(f, a, "<", b),
+            Expr::Le(a, b) => bin(f, a, "<=", b),
+            Expr::Gt(a, b) => bin(f, a, ">", b),
+            Expr::Ge(a, b) => bin(f, a, ">=", b),
+            Expr::And(a, b) => bin(f, a, "&&", b),
+            Expr::Or(a, b) => bin(f, a, "||", b),
+            Expr::Not(a) => write!(f, "!({a})"),
+            Expr::IsNull(a) => write!(f, "is_null({a})"),
         }
     }
 }
@@ -429,6 +648,117 @@ mod tests {
         assert!(Expr::col(0).and(Expr::col(1)).eval(&t()).is_err());
         assert!(filter(&t(), &Expr::col(0).add(Expr::col(1))).is_err());
         let s = Table::from_arrays(vec![("s", Array::from_strs(&["x"]))]).unwrap();
-        assert!(Expr::col(0).eval(&s).is_err());
+        // Utf8 compares but never does arithmetic or mixed comparison.
+        assert!(Expr::col(0).add(Expr::lit_i64(1)).eval(&s).is_err());
+        assert!(Expr::col(0).eq(Expr::lit_i64(1)).eval(&s).is_err());
+        assert!(Expr::col(0).eq(Expr::lit_str("x")).eval(&s).is_ok());
+    }
+
+    fn st() -> Table {
+        Table::from_arrays(vec![
+            (
+                "s",
+                Array::Utf8(crate::table::column::Utf8Array::from_options(&[
+                    Some("apple"),
+                    Some("banana"),
+                    None,
+                    Some("cherry"),
+                ])),
+            ),
+            ("k", Array::from_i64(vec![1, 2, 3, 4])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn utf8_comparisons_filter() {
+        // equality against a literal; the null row is excluded
+        let out = filter(&st(), &Expr::col(0).eq(Expr::lit_str("banana"))).unwrap();
+        assert_eq!(out.num_rows(), 1);
+        assert_eq!(out.column(1).as_i64().unwrap().value(0), 2);
+        // lexicographic range
+        let out = filter(&st(), &Expr::col(0).gt(Expr::lit_str("apple"))).unwrap();
+        assert_eq!(out.num_rows(), 2); // banana, cherry (null row -> false)
+        // ne keeps the other valid rows, drops the null row
+        let out = filter(&st(), &Expr::col(0).ne(Expr::lit_str("apple"))).unwrap();
+        assert_eq!(out.num_rows(), 2);
+        // is_null works on utf8
+        let out = filter(&st(), &Expr::col(0).is_null()).unwrap();
+        assert_eq!(out.num_rows(), 1);
+        assert_eq!(out.column(1).as_i64().unwrap().value(0), 3);
+    }
+
+    #[test]
+    fn utf8_with_column_materializes() {
+        let out = with_column(&st(), "copy", &Expr::col(0)).unwrap();
+        assert_eq!(out.num_columns(), 3);
+        assert_eq!(out.column(2).as_utf8().unwrap().value(1), "banana");
+        assert!(!out.column(2).is_valid(2));
+    }
+
+    #[test]
+    fn columns_referenced_and_remap() {
+        let e = Expr::col(3).add(Expr::col(1)).gt(Expr::lit_f64(0.0)).and(
+            Expr::col(1).is_null().not(),
+        );
+        assert_eq!(e.columns_referenced(), vec![1, 3]);
+        let shifted = e.map_columns(&|c| c + 10);
+        assert_eq!(shifted.columns_referenced(), vec![11, 13]);
+        // remapped expression evaluates identically on a shifted table
+        let t = t();
+        let wide = Table::from_arrays(vec![
+            ("i", Array::from_i64_opts(vec![Some(1), Some(2), None, Some(4)])),
+            ("f", Array::from_f64(vec![0.5, 1.5, 2.5, 3.5])),
+        ])
+        .unwrap();
+        let e2 = Expr::col(0).gt(Expr::lit_i64(1));
+        let r1 = filter(&t, &e2).unwrap();
+        let r2 = filter(&wide, &e2.map_columns(&|c| c)).unwrap();
+        assert_eq!(r1.num_rows(), r2.num_rows());
+    }
+
+    #[test]
+    fn infer_type_mirrors_eval() {
+        use crate::table::DataType;
+        let schema = t().schema().as_ref().clone();
+        let cases: Vec<(Expr, DataType)> = vec![
+            (Expr::col(0), DataType::Int64),
+            (Expr::col(0).add(Expr::lit_i64(1)), DataType::Int64),
+            (Expr::col(0).add(Expr::col(1)), DataType::Float64),
+            (Expr::col(2).mul(Expr::lit_f64(2.0)), DataType::Float64),
+            (Expr::col(0).gt(Expr::lit_i64(0)), DataType::Bool),
+            (Expr::col(2).and(Expr::lit_bool(true)), DataType::Bool),
+            (Expr::col(1).is_null(), DataType::Bool),
+        ];
+        for (e, want) in cases {
+            assert_eq!(e.infer_type(&schema).unwrap(), want, "{e}");
+            // what infer says, eval produces
+            let v = e.eval(&t()).unwrap();
+            let got = match v {
+                Value::I64(..) => DataType::Int64,
+                Value::F64(..) => DataType::Float64,
+                Value::Bool(..) => DataType::Bool,
+                Value::Str(..) => DataType::Utf8,
+            };
+            assert_eq!(got, want, "{e}");
+        }
+        // errors match eval's errors
+        assert!(Expr::col(9).infer_type(&schema).is_err());
+        assert!(Expr::col(0).and(Expr::col(1)).infer_type(&schema).is_err());
+        let ss = st().schema().as_ref().clone();
+        assert!(Expr::col(0).add(Expr::lit_i64(1)).infer_type(&ss).is_err());
+        assert!(Expr::col(0).eq(Expr::lit_i64(1)).infer_type(&ss).is_err());
+        assert_eq!(
+            Expr::col(0).lt(Expr::lit_str("m")).infer_type(&ss).unwrap(),
+            crate::table::DataType::Bool
+        );
+    }
+
+    #[test]
+    fn display_is_compact_infix() {
+        let e = Expr::col(0).modulo(Expr::lit_i64(2)).eq(Expr::lit_i64(0));
+        assert_eq!(format!("{e}"), "((c0 % 2) == 0)");
+        let s = Expr::col(1).eq(Expr::lit_str("x"));
+        assert_eq!(format!("{s}"), "(c1 == \"x\")");
     }
 }

@@ -1,50 +1,83 @@
 //! Intersect — rows present in both tables, distinct (§II-B5).
+//!
+//! Above [`super::join::RADIX_MIN_ROWS`] total rows the dedup runs
+//! radix-parallel ([`super::rowset::radix_setop`]): the output order is
+//! canonical partition-major (distinct probe-side first occurrences
+//! ascending per partition), bit-identical at every thread count; below
+//! the threshold the serial scan and its order are preserved exactly.
 
 use super::hash::hash_rows;
+use super::join::radix_fanout;
 use super::parallel::parallelism;
-use super::rowset::RowSet;
+use super::rowset::{radix_setop, RowSet, SIDE_A, SIDE_B};
 use crate::error::{Error, Result};
-use crate::table::{builder::TableBuilder, Table};
+use crate::table::Table;
 
-/// `a ∩ b` (distinct). Output order: first occurrence in `a`. Row
-/// hashes for both sides are precomputed columnarly (morsel-parallel).
+/// `a ∩ b` (distinct). Row hashes for both sides are precomputed
+/// columnarly (morsel-parallel); see module docs for the output order.
 pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
     intersect_par(a, b, parallelism())
 }
 
-/// [`intersect`] with an explicit thread budget for the row-hash pass
-/// (identical output at every thread count).
+/// [`intersect`] with an explicit thread budget (identical output at
+/// every thread count).
 pub fn intersect_par(a: &Table, b: &Table, threads: usize) -> Result<Table> {
+    // Build the set on the smaller side, probe with the other — mirrors
+    // the hash-join build/probe swap.
+    intersect_radix(
+        a,
+        b,
+        threads,
+        a.num_rows() <= b.num_rows(),
+        radix_fanout(a.num_rows() + b.num_rows()),
+    )
+}
+
+/// [`intersect_par`] with the build side and radix fan-out pinned by
+/// the caller instead of derived from the current input sizes (the
+/// planner replays the pre-pushdown decisions through this — see
+/// [`super::join::join_par_pinned`] for the rationale). `build_is_a`
+/// names the side the membership set is built on; output rows come
+/// from the *other* (probe) side. `partitions == 1` is the serial scan.
+pub fn intersect_radix(
+    a: &Table,
+    b: &Table,
+    threads: usize,
+    build_is_a: bool,
+    partitions: usize,
+) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("intersect of schema-incompatible tables"));
     }
-    // Build the set on the smaller side, probe with the other — mirrors
-    // the hash-join build/probe swap.
-    let (build, probe, probe_is_a) = if a.num_rows() <= b.num_rows() {
-        (a, b, false)
-    } else {
-        (b, a, true)
-    };
-    let bh = hash_rows(build, threads);
-    let ph = hash_rows(probe, threads);
-    let mut bset = RowSet::with_capacity(build.num_rows());
-    let btid = bset.add_table(build);
-    for r in 0..build.num_rows() {
-        bset.insert_hashed(btid, r, bh[r]);
+    if partitions == 0 {
+        return Err(Error::invalid("zero radix partitions"));
     }
-    // Emit distinct probe rows that exist in the build set. To keep
-    // "order of first occurrence in `a`", when probe is b we still emit
-    // probe-side rows (identical content to the a-side rows by identity).
-    let _ = probe_is_a;
-    let mut seen = RowSet::with_capacity(build.num_rows().min(probe.num_rows()));
-    let stid = seen.add_table(probe);
-    let mut out = TableBuilder::with_capacity(a.schema().clone(), build.num_rows());
-    for r in 0..probe.num_rows() {
-        if bset.contains_hashed(probe, r, ph[r]) && seen.insert_hashed(stid, r, ph[r]) {
-            out.push_row(probe, r)?;
+    let ha = hash_rows(a, threads);
+    let hb = hash_rows(b, threads);
+    let probe_side = if build_is_a { SIDE_B } else { SIDE_A };
+    radix_setop(a, b, &ha, &hb, threads, partitions, |pa, pb| {
+        let (build, probe, bh, ph, prows, brows) = if build_is_a {
+            (a, b, &ha, &hb, pb, pa)
+        } else {
+            (b, a, &hb, &ha, pa, pb)
+        };
+        let mut bset = RowSet::with_capacity(brows.len());
+        let btid = bset.add_table(build);
+        for &r in brows {
+            bset.insert_hashed(btid, r, bh[r]);
         }
-    }
-    out.finish()
+        // Emit distinct probe rows that exist in the build set (row
+        // identity makes the emitted content side-agnostic).
+        let mut seen = RowSet::with_capacity(brows.len().min(prows.len()));
+        let stid = seen.add_table(probe);
+        let mut kept = Vec::new();
+        for &r in prows {
+            if bset.contains_hashed(probe, r, ph[r]) && seen.insert_hashed(stid, r, ph[r]) {
+                kept.push((probe_side, r));
+            }
+        }
+        kept
+    })
 }
 
 #[cfg(test)]

@@ -32,8 +32,8 @@
 //! [`RADIX_MIN_ROWS`] use a single partition, which reduces exactly to
 //! the seed's serial probe order.
 
-use super::hash::{hash_column, hash_to_partition};
-use super::parallel::{concat_chunks, map_morsels, map_tasks, parallelism};
+use super::hash::{hash_column, radix_ids};
+use super::parallel::{map_tasks, parallelism};
 use super::partition::partition_indices;
 use super::sort::{cmp_cells_across, sort_indices_par, BoolKey, F64Key, I64Key, KeyCol, StrKey};
 use crate::error::{Error, Result};
@@ -117,6 +117,50 @@ pub fn join_par(left: &Table, right: &Table, cfg: &JoinConfig, threads: usize) -
     }
     let (li, ri) = match cfg.algorithm {
         JoinAlgorithm::Hash => hash_join_indices(left, right, cfg, threads),
+        JoinAlgorithm::Sort => sort_join_indices(left, right, cfg, threads),
+    };
+    materialize(left, right, &li, &ri, threads)
+}
+
+/// [`join_par`] with the hash join's build/probe orientation and radix
+/// fan-out pinned by the caller rather than derived from the current
+/// input sizes.
+///
+/// This is the hook behind the planner's predicate pushdown: filtering
+/// a join input shrinks it, which could flip which side builds or drop
+/// the input under the radix threshold — both change the canonical
+/// output *order* (never the multiset). Pinning `build_left` and
+/// `partitions` to the decisions the naive plan would have made keeps
+/// the pushed-down join's output bit-identical to filtering after the
+/// join. Sort joins have no such data-dependent choices and ignore the
+/// pins.
+pub fn join_par_pinned(
+    left: &Table,
+    right: &Table,
+    cfg: &JoinConfig,
+    threads: usize,
+    build_left: bool,
+    partitions: usize,
+) -> Result<Table> {
+    if cfg.left_col >= left.num_columns() || cfg.right_col >= right.num_columns() {
+        return Err(Error::invalid("join column out of range"));
+    }
+    if partitions == 0 {
+        return Err(Error::invalid("zero radix partitions"));
+    }
+    let lk = left.column(cfg.left_col).as_ref();
+    let rk = right.column(cfg.right_col).as_ref();
+    if lk.data_type() != rk.data_type() {
+        return Err(Error::schema(format!(
+            "join key types differ: {:?} vs {:?}",
+            lk.data_type(),
+            rk.data_type()
+        )));
+    }
+    let (li, ri) = match cfg.algorithm {
+        JoinAlgorithm::Hash => {
+            hash_join_indices_with(left, right, cfg, threads, build_left, partitions)
+        }
         JoinAlgorithm::Sort => sort_join_indices(left, right, cfg, threads),
     };
     materialize(left, right, &li, &ri, threads)
@@ -228,12 +272,18 @@ fn join_partition<K: KeyCol>(
     PartJoin { bi, pi, unmatched_build }
 }
 
-/// Radix ids for precomputed hashes (morsel-parallel).
-fn radix_ids(hashes: &[u32], p: usize, threads: usize) -> Vec<u32> {
-    let chunks = map_morsels(hashes.len(), threads, |r| {
-        hashes[r].iter().map(|&h| hash_to_partition(h, p)).collect::<Vec<u32>>()
-    });
-    concat_chunks(chunks, hashes.len())
+/// The radix fan-out the hash join (and the radix set operators) use
+/// for `rows` total input rows: single-partition below
+/// [`RADIX_MIN_ROWS`], [`RADIX_PARTITIONS`] above. Pure function of the
+/// row count — the planner pins it when predicate pushdown changes an
+/// operator's input cardinality, so the optimized operator replays the
+/// naive plan's partition regime bit-for-bit.
+pub fn radix_fanout(rows: usize) -> usize {
+    if rows < RADIX_MIN_ROWS {
+        1
+    } else {
+        RADIX_PARTITIONS
+    }
 }
 
 /// Hash join: build on the smaller side, probe with the larger,
@@ -244,8 +294,32 @@ fn hash_join_indices(
     cfg: &JoinConfig,
     threads: usize,
 ) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
-    // Swap so `build` is the smaller relation; remember orientation.
-    let left_builds = left.num_rows() <= right.num_rows();
+    // Swap so `build` is the smaller relation; partition count is a
+    // pure function of the input size (never of `threads`), so the
+    // partition-major output order is canonical.
+    hash_join_indices_with(
+        left,
+        right,
+        cfg,
+        threads,
+        left.num_rows() <= right.num_rows(),
+        radix_fanout(left.num_rows() + right.num_rows()),
+    )
+}
+
+/// [`hash_join_indices`] with the orientation (which side builds) and
+/// radix fan-out chosen by the caller instead of derived from the
+/// current input sizes. The output order is canonical *given* those
+/// two choices; [`join_par_pinned`] exposes this so the query planner
+/// can replay the pre-pushdown decisions.
+fn hash_join_indices_with(
+    left: &Table,
+    right: &Table,
+    cfg: &JoinConfig,
+    threads: usize,
+    left_builds: bool,
+    p: usize,
+) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
     let (build_t, build_col, probe_t, probe_col) = if left_builds {
         (left, cfg.left_col, right, cfg.right_col)
     } else {
@@ -277,9 +351,6 @@ fn hash_join_indices(
         (JoinType::Right, false) => true,
     };
 
-    // Partition count is a pure function of the input size (never of
-    // `threads`), so the partition-major output order is canonical.
-    let p = if nb + np < RADIX_MIN_ROWS { 1 } else { RADIX_PARTITIONS };
     let (build_parts, probe_parts) = if p == 1 {
         (vec![(0..nb).collect::<Vec<usize>>()], vec![(0..np).collect::<Vec<usize>>()])
     } else {
@@ -690,5 +761,53 @@ mod tests {
         let out = join(&l, &r, &JoinConfig::inner(1, 0)).unwrap();
         assert_eq!(out.num_rows(), 1);
         assert_eq!(out.column(0).as_utf8().unwrap().value(0), "q");
+    }
+
+    #[test]
+    fn pinned_join_with_default_pins_equals_join_par() {
+        let l = crate::io::generator::paper_table(500, 0.8, 0x71A);
+        let r = crate::io::generator::paper_table(700, 0.8, 0x71B);
+        let cfg = JoinConfig::inner(0, 0);
+        let want = join_par(&l, &r, &cfg, 2).unwrap();
+        let got = join_par_pinned(
+            &l,
+            &r,
+            &cfg,
+            2,
+            l.num_rows() <= r.num_rows(),
+            radix_fanout(l.num_rows() + r.num_rows()),
+        )
+        .unwrap();
+        assert!(got.data_equals(&want));
+    }
+
+    #[test]
+    fn pinned_join_replays_prefilter_decisions_bit_identically() {
+        // The planner's pushdown contract: join-then-filter equals
+        // filter-then-pinned-join *including row order*, even when the
+        // filter shrinks a side enough to flip the default build side.
+        let l = crate::io::generator::paper_table(900, 0.8, 0xF1A);
+        let r = crate::io::generator::paper_table(400, 0.8, 0xF1B);
+        for jt in [JoinType::Inner, JoinType::Left] {
+            let cfg = JoinConfig::new(jt, 0, 0);
+            let joined = join_par(&l, &r, &cfg, 3).unwrap();
+            // pred on a left column: keep c1 < 0.25 (kills ~3/4 of l,
+            // so |l'| < |r| while |l| > |r|).
+            let pred = crate::ops::expr::Expr::col(1)
+                .lt(crate::ops::expr::Expr::lit_f64(0.25));
+            let naive = crate::ops::expr::filter(&joined, &pred).unwrap();
+            let lf = crate::ops::expr::filter(&l, &pred).unwrap();
+            assert!(lf.num_rows() < r.num_rows() && l.num_rows() > r.num_rows());
+            let pushed = join_par_pinned(
+                &lf,
+                &r,
+                &cfg,
+                3,
+                l.num_rows() <= r.num_rows(),
+                radix_fanout(l.num_rows() + r.num_rows()),
+            )
+            .unwrap();
+            assert!(pushed.data_equals(&naive), "join_type {jt:?}");
+        }
     }
 }

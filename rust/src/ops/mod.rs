@@ -23,14 +23,23 @@
 //! boundaries and radix fan-outs are pure functions of the input (never
 //! of the thread count) and results are reassembled in task order.
 //! Orders are canonical per operator: group-by keeps first-appearance
-//! key order, set operators keep first-occurrence row order, the hash
-//! join emits radix-partition-major order (see the `join` module
-//! docs), sort orders by `(key, original row)` — stable on duplicate
-//! keys, so morsel runs merge to one unique permutation — and shuffle
-//! routing stays `hash(key) % world` — the bit-exact contract shared
-//! with the AOT Pallas kernel. `tests/prop_parallel.rs` pins all of
-//! this at `parallelism ∈ {1, 2, 7}`; `tests/prop_sort.rs` pins the
-//! sort/external-sort/dist-sort chain the same way.
+//! key order, the hash join and the set operators emit
+//! radix-partition-major order above [`join::RADIX_MIN_ROWS`] (the
+//! serial first-occurrence order below it — see the `join` and
+//! `rowset` module docs), sort orders by `(key, original row)` —
+//! stable on duplicate keys, so morsel runs merge to one unique
+//! permutation — and shuffle routing stays `hash(key) % world` — the
+//! bit-exact contract shared with the AOT Pallas kernel.
+//! `tests/prop_parallel.rs` pins all of this at `parallelism ∈ {1, 2,
+//! 7}`; `tests/prop_sort.rs` pins the sort/external-sort/dist-sort
+//! chain the same way; `tests/prop_plan.rs` pins that the query
+//! planner ([`crate::plan`]) preserves every one of these orders.
+//!
+//! The size-derived choices the hash join and set operators make
+//! (build side, radix fan-out) are exposed as pinned entry points
+//! ([`join::join_par_pinned`], `union_radix` / `intersect_radix` /
+//! `difference_radix`) so the planner's predicate pushdown can replay
+//! the pre-pushdown decisions bit-for-bit.
 //!
 //! Order-based operators (sort, merge, sort-join, sample-sort routing)
 //! additionally share the **typed sort-key contract** of [`sort`]:
@@ -54,14 +63,14 @@ pub mod sort;
 pub mod union;
 
 pub use aggregate::{group_by, group_by_par, AggFn, AggSpec};
-pub use difference::difference;
+pub use difference::{difference, difference_radix};
 pub use expr::Expr;
-pub use intersect::intersect;
-pub use join::{join, join_par, JoinAlgorithm, JoinConfig, JoinType};
+pub use intersect::{intersect, intersect_radix};
+pub use join::{join, join_par, join_par_pinned, radix_fanout, JoinAlgorithm, JoinConfig, JoinType};
 pub use merge::{merge_sorted, RowKey};
 pub use parallel::{parallelism, set_parallelism};
 pub use partition::{hash_partition, partition_indices};
 pub use project::project;
 pub use select::select;
 pub use sort::{sort, sort_indices, sort_indices_par, sort_par};
-pub use union::union;
+pub use union::{distinct, union, union_radix};

@@ -7,8 +7,28 @@
 //! Vecs — ~2× faster inserts on the union hot path (§Perf log).
 //! Collisions on the 32-bit row hash are resolved by full row
 //! comparison, so results are exact regardless of hash quality.
+//!
+//! # Radix-parallel dedup ([`radix_setop`])
+//!
+//! Large set-operator inputs reuse the hash join's 64-way radix recipe:
+//! rows of both tables split into [`super::join::RADIX_PARTITIONS`]
+//! partitions by [`super::hash::hash_to_partition`] over the whole-row
+//! hash (identical rows share a hash, so duplicates never cross
+//! partitions), each partition dedups independently with its own
+//! `RowSet` on the morsel thread pool, and per-partition outputs
+//! concatenate **partition-major**. The fan-out is a pure function of
+//! the input row count ([`super::join::radix_fanout`]) — never of the
+//! thread count — so the output order is canonical and bit-identical
+//! at every parallelism; below [`super::join::RADIX_MIN_ROWS`] a
+//! single partition reduces exactly to the serial first-occurrence
+//! scan.
 
-use super::hash::hash_row;
+use super::hash::{hash_row, radix_ids};
+use super::parallel::map_tasks;
+use super::partition::partition_indices;
+use crate::error::Result;
+use crate::table::builder::TableBuilder;
+use crate::table::take::concat_tables;
 use crate::table::{row::row_equals, Table};
 
 const CHAIN_END: u32 = u32::MAX;
@@ -137,6 +157,59 @@ impl Default for RowSet<'_> {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Which table a kept row comes from in a two-table radix kernel.
+pub(crate) const SIDE_A: u32 = 0;
+/// See [`SIDE_A`].
+pub(crate) const SIDE_B: u32 = 1;
+
+/// Radix-partitioned driver for the set operators' dedup scans.
+///
+/// Splits the rows of `a` and `b` into `partitions` partitions by
+/// whole-row hash (`ha`/`hb` are the precomputed columnar row hashes),
+/// runs `kernel` once per partition on the morsel thread pool — it
+/// receives the partition's ascending row lists for both sides and
+/// returns the kept `(side, row)` pairs in output order — and
+/// materializes the kept rows partition-major into one table with
+/// `a`'s schema.
+///
+/// With `partitions == 1` this is exactly the serial scan the set
+/// operators always had (one partition holding every row ascending),
+/// so callers below the radix threshold keep their historical
+/// first-occurrence output order bit-for-bit.
+pub(crate) fn radix_setop(
+    a: &Table,
+    b: &Table,
+    ha: &[u32],
+    hb: &[u32],
+    threads: usize,
+    partitions: usize,
+    kernel: impl Fn(&[usize], &[usize]) -> Vec<(u32, usize)> + Sync,
+) -> Result<Table> {
+    debug_assert!(partitions >= 1);
+    let (parts_a, parts_b) = if partitions == 1 {
+        (
+            vec![(0..a.num_rows()).collect::<Vec<usize>>()],
+            vec![(0..b.num_rows()).collect::<Vec<usize>>()],
+        )
+    } else {
+        (
+            partition_indices(&radix_ids(ha, partitions, threads), partitions),
+            partition_indices(&radix_ids(hb, partitions, threads), partitions),
+        )
+    };
+    let built: Vec<Result<Table>> = map_tasks(partitions, threads, |p| {
+        let kept = kernel(&parts_a[p], &parts_b[p]);
+        let mut out = TableBuilder::with_capacity(a.schema().clone(), kept.len());
+        for &(side, row) in &kept {
+            out.push_row(if side == SIDE_A { a } else { b }, row)?;
+        }
+        out.finish()
+    });
+    let tables = built.into_iter().collect::<Result<Vec<Table>>>()?;
+    let refs: Vec<&Table> = tables.iter().collect();
+    concat_tables(&refs)
 }
 
 #[cfg(test)]

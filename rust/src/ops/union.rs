@@ -1,64 +1,88 @@
 //! Union (distinct) — all records from both tables, duplicates removed
 //! (§II-B4). Row-based traversal: the paper notes this is the workload
 //! whose scaling suffers most from abandoning columnar access (Fig. 7b).
+//!
+//! Above [`super::join::RADIX_MIN_ROWS`] total rows the dedup runs
+//! radix-parallel ([`super::rowset::radix_setop`]): the output order is
+//! **canonical partition-major** — per partition, first occurrences in
+//! `a` ascending then `b`-only first occurrences ascending — and
+//! bit-identical at every thread count. Below the threshold the serial
+//! first-occurrence scan (and its historical order) is preserved
+//! exactly.
 
 use super::hash::hash_rows;
+use super::join::radix_fanout;
 use super::parallel::parallelism;
-use super::rowset::RowSet;
+use super::rowset::{radix_setop, RowSet, SIDE_A, SIDE_B};
 use crate::error::{Error, Result};
-use crate::table::{builder::TableBuilder, Table};
+use crate::table::Table;
 
-/// `a ∪ b` with duplicates removed. Output order: first occurrence in
-/// `a` then first occurrences of `b`-only rows. Row hashes are computed
-/// columnarly (morsel-parallel) up front; the dedup scan stays serial
-/// so the insertion order — and thus the output — is unchanged.
+/// `a ∪ b` with duplicates removed (canonical order — see module docs).
 pub fn union(a: &Table, b: &Table) -> Result<Table> {
     union_par(a, b, parallelism())
 }
 
-/// [`union`] with an explicit thread budget for the row-hash pass
-/// (identical output at every thread count).
+/// [`union`] with an explicit thread budget (identical output at every
+/// thread count).
 pub fn union_par(a: &Table, b: &Table, threads: usize) -> Result<Table> {
+    union_radix(a, b, threads, radix_fanout(a.num_rows() + b.num_rows()))
+}
+
+/// [`union_par`] with the radix fan-out pinned by the caller (the
+/// planner replays the pre-pushdown partition regime through this —
+/// see [`super::join::join_par_pinned`] for the rationale).
+/// `partitions == 1` is the serial first-occurrence scan.
+pub fn union_radix(a: &Table, b: &Table, threads: usize, partitions: usize) -> Result<Table> {
     if !a.schema_equals(b) {
         return Err(Error::schema("union of schema-incompatible tables"));
     }
+    if partitions == 0 {
+        return Err(Error::invalid("zero radix partitions"));
+    }
     let ha = hash_rows(a, threads);
     let hb = hash_rows(b, threads);
-    let mut set = RowSet::with_capacity(a.num_rows() + b.num_rows());
-    let ta = set.add_table(a);
-    let tb = set.add_table(b);
-    let mut out = TableBuilder::with_capacity(a.schema().clone(), a.num_rows() + b.num_rows());
-    for r in 0..a.num_rows() {
-        if set.insert_hashed(ta, r, ha[r]) {
-            out.push_row(a, r)?;
+    radix_setop(a, b, &ha, &hb, threads, partitions, |pa, pb| {
+        let mut set = RowSet::with_capacity(pa.len() + pb.len());
+        let ta = set.add_table(a);
+        let tb = set.add_table(b);
+        let mut kept = Vec::new();
+        for &r in pa {
+            if set.insert_hashed(ta, r, ha[r]) {
+                kept.push((SIDE_A, r));
+            }
         }
-    }
-    for r in 0..b.num_rows() {
-        if set.insert_hashed(tb, r, hb[r]) {
-            out.push_row(b, r)?;
+        for &r in pb {
+            if set.insert_hashed(tb, r, hb[r]) {
+                kept.push((SIDE_B, r));
+            }
         }
-    }
-    out.finish()
+        kept
+    })
 }
 
 /// Distinct rows of a single table (Union's degenerate form; used by the
-/// distributed set ops after shuffling).
+/// distributed set ops after shuffling). Same canonical partition-major
+/// order as [`union`] above the radix threshold.
 pub fn distinct(t: &Table) -> Result<Table> {
     distinct_par(t, parallelism())
 }
 
 /// [`distinct`] with an explicit thread budget.
 pub fn distinct_par(t: &Table, threads: usize) -> Result<Table> {
+    let empty = Table::empty(t.schema().clone());
     let hashes = hash_rows(t, threads);
-    let mut set = RowSet::with_capacity(t.num_rows());
-    let tid = set.add_table(t);
-    let mut out = TableBuilder::with_capacity(t.schema().clone(), t.num_rows());
-    for r in 0..t.num_rows() {
-        if set.insert_hashed(tid, r, hashes[r]) {
-            out.push_row(t, r)?;
+    let partitions = radix_fanout(t.num_rows());
+    radix_setop(t, &empty, &hashes, &[], threads, partitions, |pt, _| {
+        let mut set = RowSet::with_capacity(pt.len());
+        let tid = set.add_table(t);
+        let mut kept = Vec::new();
+        for &r in pt {
+            if set.insert_hashed(tid, r, hashes[r]) {
+                kept.push((SIDE_A, r));
+            }
         }
-    }
-    out.finish()
+        kept
+    })
 }
 
 #[cfg(test)]
@@ -120,5 +144,42 @@ mod tests {
         let a = Table::from_arrays(vec![("k", Array::from_i64_opts(vec![None, None]))]).unwrap();
         let d = distinct(&a).unwrap();
         assert_eq!(d.num_rows(), 1);
+    }
+
+    #[test]
+    fn radix_union_is_canonical_and_thread_independent() {
+        use crate::ops::join::RADIX_MIN_ROWS;
+        let n = RADIX_MIN_ROWS; // 2n total rows: radix path runs
+        let mk = |seed: i64| {
+            let keys: Vec<i64> = (0..n as i64).map(|i| (i * 7 + seed) % 5000).collect();
+            let vals: Vec<f64> = (0..n).map(|i| (i % 13) as f64).collect();
+            t(keys, vals)
+        };
+        let a = mk(0);
+        let b = mk(3);
+        let base = union_par(&a, &b, 1).unwrap();
+        for threads in [2, 7] {
+            assert!(union_par(&a, &b, threads).unwrap().data_equals(&base));
+        }
+        // Same distinct multiset as the serial single-partition scan.
+        let serial = union_radix(&a, &b, 1, 1).unwrap();
+        assert_eq!(base.num_rows(), serial.num_rows());
+        let count = |t: &Table| {
+            let mut v: Vec<(i64, u64)> = (0..t.num_rows())
+                .map(|r| {
+                    (
+                        t.column(0).as_i64().unwrap().value(r),
+                        t.column(1).as_f64().unwrap().value(r).to_bits(),
+                    )
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(count(&base), count(&serial));
+        // distinct == union with self, in the radix regime too
+        let d = distinct(&a).unwrap();
+        let u = union(&a, &a).unwrap();
+        assert!(d.data_equals(&u));
     }
 }

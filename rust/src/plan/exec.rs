@@ -1,0 +1,382 @@
+//! Physical executor for [`LogicalPlan`]s — replaces the old inline
+//! match in `Graph::execute_with`.
+//!
+//! Node results are held as `Arc<Table>` so diamond fan-out shares one
+//! materialization, and **last-use tracking** drops each intermediate
+//! the moment its final consumer has run — peak memory follows the
+//! plan's frontier, not its total size. Row counts survive the drop
+//! (the planner's pins need them, see [`LogicalOp::Join`]).
+//!
+//! Operator dispatch is world-aware, exactly like the naive executor
+//! always was: world 1 runs the local operators (honoring pins via
+//! [`crate::ops::join::join_par_pinned`] and the `*_radix` set
+//! operators), world > 1 runs the distributed operators through their
+//! "already partitioned" entry points so planner-proved shuffle
+//! elisions actually skip the AllToAll. Per-operator
+//! [`crate::dist::OpStats`] aggregate into the returned [`ExecStats`].
+
+use super::logical::{LogicalOp, LogicalPlan};
+use crate::ctx::CylonContext;
+use crate::dist::OpStats;
+use crate::error::{Error, Result};
+use crate::ops::join::{join_par_pinned, radix_fanout, JoinAlgorithm};
+use crate::table::Table;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// What one plan execution did, beyond its outputs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Plan nodes evaluated (the optimized executor skips dead nodes).
+    pub nodes_executed: usize,
+    /// AllToAll supersteps this worker ran.
+    pub shuffles: usize,
+    /// AllToAll supersteps skipped by planner shuffle elision.
+    pub shuffles_elided: usize,
+    /// Bytes received from remote ranks across all operators.
+    pub comm_bytes: u64,
+    /// Intermediate results dropped early by last-use tracking.
+    pub intermediates_dropped: usize,
+}
+
+impl ExecStats {
+    fn absorb(&mut self, s: &OpStats) {
+        self.shuffles += s.shuffles;
+        self.shuffles_elided += s.shuffles_elided;
+        self.comm_bytes += s.comm_bytes;
+    }
+}
+
+/// Execute `plan` on `ctx`, binding `sources` by name; returns the
+/// sink tables in declaration order plus execution stats.
+///
+/// `include_dead` selects the naive discipline: every node evaluates
+/// in index order (plans straight from lowering are index-topological),
+/// so even unreachable nodes run and surface their errors — exactly
+/// the historical `Graph::execute_with` behavior. Optimized plans pass
+/// `false`: only nodes reachable from the sinks run, in
+/// [`LogicalPlan::topo_order`].
+pub fn execute_plan(
+    plan: &LogicalPlan,
+    ctx: &mut CylonContext,
+    sources: &[(&str, Table)],
+    include_dead: bool,
+) -> Result<(Vec<Table>, ExecStats)> {
+    if plan.sinks.is_empty() {
+        return Err(Error::invalid("graph has no sinks"));
+    }
+    let bound: HashMap<&str, &Table> = sources.iter().map(|(n, t)| (*n, t)).collect();
+    let order: Vec<usize> = if include_dead {
+        (0..plan.nodes.len()).collect()
+    } else {
+        plan.topo_order()
+    };
+    // Position of each node's last consumer in `order`; sinks never die.
+    let mut last_use: Vec<usize> = vec![0; plan.nodes.len()];
+    for (pos, &i) in order.iter().enumerate() {
+        for &d in &plan.nodes[i].inputs {
+            last_use[d] = last_use[d].max(pos);
+        }
+    }
+    for &s in &plan.sinks {
+        last_use[s] = usize::MAX;
+    }
+
+    let world = ctx.world();
+    let threads = ctx.parallelism();
+    let mut results: Vec<Option<Arc<Table>>> = vec![None; plan.nodes.len()];
+    let mut row_counts: Vec<usize> = vec![0; plan.nodes.len()];
+    let mut stats = ExecStats::default();
+
+    for (pos, &i) in order.iter().enumerate() {
+        let node = &plan.nodes[i];
+        let arg = |k: usize| -> Result<Arc<Table>> {
+            results[node.inputs[k]]
+                .clone()
+                .ok_or_else(|| Error::internal("plan dependency not computed"))
+        };
+        // Pre-pushdown row counts driving a pinned operator's
+        // orientation and radix fan-out (world 1; ancestors of this
+        // node, so always already executed).
+        let pinned = |pin: &Option<(usize, usize)>| -> Option<(usize, usize)> {
+            pin.map(|(a, b)| (row_counts[a], row_counts[b]))
+        };
+        let value: Table = match &node.op {
+            LogicalOp::Source { name, .. } => bound
+                .get(name.as_str())
+                .map(|t| (*t).clone())
+                .ok_or_else(|| Error::invalid(format!("unbound source '{name}'")))?,
+            LogicalOp::Filter { pred } => crate::ops::expr::filter(&arg(0)?, pred)?,
+            LogicalOp::Project { columns } => crate::ops::project::project(&arg(0)?, columns)?,
+            LogicalOp::WithColumn { name, expr } => {
+                crate::ops::expr::with_column(&arg(0)?, name, expr)?
+            }
+            LogicalOp::Sort { col } => {
+                let t = arg(0)?;
+                if world > 1 {
+                    let (out, s) = crate::dist::dist_sort(ctx, &t, *col)?;
+                    stats.absorb(&s);
+                    out
+                } else {
+                    crate::ops::sort::sort_par(&t, *col, threads)?
+                }
+            }
+            LogicalOp::Join { cfg, pin, elide_left, elide_right } => {
+                let (l, r) = (arg(0)?, arg(1)?);
+                if world > 1 {
+                    let (out, s) = crate::dist::dist_join_partitioned(
+                        ctx,
+                        &l,
+                        &r,
+                        cfg,
+                        *elide_left,
+                        *elide_right,
+                    )?;
+                    stats.absorb(&s);
+                    out
+                } else if let (Some((nl, nr)), JoinAlgorithm::Hash) =
+                    (pinned(pin), cfg.algorithm)
+                {
+                    join_par_pinned(&l, &r, cfg, threads, nl <= nr, radix_fanout(nl + nr))?
+                } else {
+                    crate::ops::join::join_par(&l, &r, cfg, threads)?
+                }
+            }
+            LogicalOp::Union { pin, elide_left, elide_right } => {
+                let (l, r) = (arg(0)?, arg(1)?);
+                if world > 1 {
+                    let (out, s) = crate::dist::dist_union_partitioned(
+                        ctx,
+                        &l,
+                        &r,
+                        *elide_left,
+                        *elide_right,
+                    )?;
+                    stats.absorb(&s);
+                    out
+                } else if let Some((nl, nr)) = pinned(pin) {
+                    crate::ops::union::union_radix(&l, &r, threads, radix_fanout(nl + nr))?
+                } else {
+                    crate::ops::union::union_par(&l, &r, threads)?
+                }
+            }
+            LogicalOp::Intersect { pin, elide_left, elide_right } => {
+                let (l, r) = (arg(0)?, arg(1)?);
+                if world > 1 {
+                    let (out, s) = crate::dist::dist_intersect_partitioned(
+                        ctx,
+                        &l,
+                        &r,
+                        *elide_left,
+                        *elide_right,
+                    )?;
+                    stats.absorb(&s);
+                    out
+                } else if let Some((nl, nr)) = pinned(pin) {
+                    crate::ops::intersect::intersect_radix(
+                        &l,
+                        &r,
+                        threads,
+                        nl <= nr,
+                        radix_fanout(nl + nr),
+                    )?
+                } else {
+                    crate::ops::intersect::intersect_par(&l, &r, threads)?
+                }
+            }
+            LogicalOp::Difference { pin, elide_left, elide_right } => {
+                let (l, r) = (arg(0)?, arg(1)?);
+                if world > 1 {
+                    let (out, s) = crate::dist::dist_difference_partitioned(
+                        ctx,
+                        &l,
+                        &r,
+                        *elide_left,
+                        *elide_right,
+                    )?;
+                    stats.absorb(&s);
+                    out
+                } else if let Some((nl, nr)) = pinned(pin) {
+                    crate::ops::difference::difference_radix(
+                        &l,
+                        &r,
+                        threads,
+                        radix_fanout(nl + nr),
+                    )?
+                } else {
+                    crate::ops::difference::difference_par(&l, &r, threads)?
+                }
+            }
+            LogicalOp::GroupBy { key, aggs, elide } => {
+                let t = arg(0)?;
+                if world > 1 {
+                    let (out, s) =
+                        crate::dist::dist_group_by_partitioned(ctx, &t, *key, aggs, *elide)?;
+                    stats.absorb(&s);
+                    out
+                } else {
+                    crate::ops::aggregate::group_by_par(&t, *key, aggs, threads)?
+                }
+            }
+        };
+        row_counts[i] = value.num_rows();
+        results[i] = Some(Arc::new(value));
+        stats.nodes_executed += 1;
+        // Last-use drop: inputs whose final consumer just ran release
+        // their table now (move semantics — no clone survives).
+        for &d in &plan.nodes[i].inputs {
+            if last_use[d] == pos && results[d].is_some() {
+                results[d] = None;
+                stats.intermediates_dropped += 1;
+            }
+        }
+    }
+
+    let outs = plan
+        .sinks
+        .iter()
+        .map(|&s| {
+            // Shallow clone (a `Table` is a Vec of column Arcs); the
+            // Arc stays in `results` because one node may be sinked
+            // more than once.
+            results[s]
+                .as_ref()
+                .map(|arc| (**arc).clone())
+                .ok_or_else(|| Error::internal("sink not computed"))
+        })
+        .collect::<Result<Vec<Table>>>()?;
+    Ok((outs, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::aggregate::{AggFn, AggSpec};
+    use crate::ops::expr::Expr;
+    use crate::ops::join::JoinConfig;
+    use crate::plan::logical::LogicalNode;
+    use crate::table::Schema;
+
+    fn paper_src(name: &str) -> LogicalOp {
+        let t = crate::io::generator::paper_table(4, 1.0, 1);
+        LogicalOp::Source { name: name.into(), schema: t.schema().clone() }
+    }
+
+    fn pipeline_plan() -> LogicalPlan {
+        LogicalPlan {
+            nodes: vec![
+                LogicalNode { op: paper_src("a"), inputs: vec![] },
+                LogicalNode { op: paper_src("b"), inputs: vec![] },
+                LogicalNode {
+                    op: LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    inputs: vec![0, 1],
+                },
+                LogicalNode {
+                    op: LogicalOp::Filter { pred: Expr::col(1).gt(Expr::lit_f64(0.25)) },
+                    inputs: vec![2],
+                },
+                LogicalNode { op: LogicalOp::Project { columns: vec![0, 1, 5] }, inputs: vec![3] },
+            ],
+            sinks: vec![4],
+        }
+    }
+
+    #[test]
+    fn executes_like_the_eager_operators() {
+        let a = crate::io::generator::paper_table(300, 0.8, 11);
+        let b = crate::io::generator::paper_table(300, 0.8, 12);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let (outs, stats) =
+            execute_plan(&pipeline_plan(), &mut ctx, &[("a", a.clone()), ("b", b.clone())], true)
+                .unwrap();
+        let j = crate::ops::join::join(&a, &b, &JoinConfig::inner(0, 0)).unwrap();
+        let f = crate::ops::expr::filter(&j, &Expr::col(1).gt(Expr::lit_f64(0.25))).unwrap();
+        let want = crate::ops::project::project(&f, &[0, 1, 5]).unwrap();
+        assert!(outs[0].data_equals(&want));
+        assert_eq!(stats.nodes_executed, 5);
+        // join result and filter result died at their last use
+        assert!(stats.intermediates_dropped >= 2);
+    }
+
+    #[test]
+    fn missing_source_and_empty_sinks_error() {
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        assert!(execute_plan(&pipeline_plan(), &mut ctx, &[], true).is_err());
+        let empty = LogicalPlan::default();
+        assert!(execute_plan(&empty, &mut ctx, &[], true).is_err());
+    }
+
+    #[test]
+    fn diamond_shares_one_materialization() {
+        // source fans out to two filters, union rejoins
+        let plan = LogicalPlan {
+            nodes: vec![
+                LogicalNode { op: paper_src("t"), inputs: vec![] },
+                LogicalNode {
+                    op: LogicalOp::Filter {
+                        pred: Expr::col(0).modulo(Expr::lit_i64(2)).eq(Expr::lit_i64(0)),
+                    },
+                    inputs: vec![0],
+                },
+                LogicalNode {
+                    op: LogicalOp::Filter {
+                        pred: Expr::col(0).modulo(Expr::lit_i64(2)).eq(Expr::lit_i64(1)),
+                    },
+                    inputs: vec![0],
+                },
+                LogicalNode {
+                    op: LogicalOp::Union { pin: None, elide_left: false, elide_right: false },
+                    inputs: vec![1, 2],
+                },
+            ],
+            sinks: vec![3],
+        };
+        let t = crate::io::generator::paper_table(200, 0.9, 5);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let (outs, _) = execute_plan(&plan, &mut ctx, &[("t", t.clone())], true).unwrap();
+        let want = crate::ops::union::distinct(&t).unwrap();
+        assert_eq!(outs[0].num_rows(), want.num_rows());
+    }
+
+    #[test]
+    fn group_by_runs_locally_at_world_one() {
+        let plan = LogicalPlan {
+            nodes: vec![
+                LogicalNode { op: paper_src("t"), inputs: vec![] },
+                LogicalNode {
+                    op: LogicalOp::GroupBy {
+                        key: 0,
+                        aggs: vec![AggSpec::new(AggFn::Count, 0)],
+                        elide: false,
+                    },
+                    inputs: vec![0],
+                },
+            ],
+            sinks: vec![1],
+        };
+        let t = crate::io::generator::paper_table(400, 0.2, 3);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let (outs, stats) = execute_plan(&plan, &mut ctx, &[("t", t.clone())], true).unwrap();
+        let want =
+            crate::ops::aggregate::group_by(&t, 0, &[AggSpec::new(AggFn::Count, 0)]).unwrap();
+        assert_eq!(outs[0].num_rows(), want.num_rows());
+        assert_eq!(stats.shuffles, 0);
+    }
+
+    #[test]
+    fn sink_schema_survives_execution() {
+        let plan = pipeline_plan();
+        let schemas = plan.schemas().unwrap();
+        let a = crate::io::generator::paper_table(50, 1.0, 21);
+        let b = crate::io::generator::paper_table(50, 1.0, 22);
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let (outs, _) = execute_plan(&plan, &mut ctx, &[("a", a), ("b", b)], true).unwrap();
+        let want: &Schema = &schemas[plan.sinks[0]];
+        assert!(outs[0].schema().type_equals(want));
+    }
+}

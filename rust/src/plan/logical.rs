@@ -1,0 +1,519 @@
+//! The logical plan IR — what [`crate::dataflow::Graph`] lowers into
+//! and the rule-based optimizer ([`super::rules`]) rewrites.
+//!
+//! A [`LogicalPlan`] is a flat DAG: `nodes[i]` names its operator
+//! ([`LogicalOp`]) and input node ids; `sinks` are the output nodes.
+//! Sources carry the schema they were bound to, so every node's output
+//! schema — and therefore the validity of every expression and column
+//! reference — is derivable statically ([`LogicalPlan::schemas`])
+//! before anything executes.
+//!
+//! Operator nodes additionally carry the planner's two physical
+//! annotations:
+//!
+//! * **pins** (`pin: Option<(usize, usize)>`) — set when predicate
+//!   pushdown shrinks an operator's input. The hash join and the radix
+//!   set operators make two data-dependent choices (build side, radix
+//!   fan-out) from their input row counts; a pin records the plan
+//!   nodes whose *pre-pushdown* row counts must drive those choices so
+//!   the optimized operator replays the naive plan's canonical output
+//!   order bit-for-bit.
+//! * **elisions** (`elide_*: bool`) — set by the partitioning pass at
+//!   world > 1 when an input's tracked [`Partitioning`] already
+//!   matches the operator's routing, so the executor skips that
+//!   input's AllToAll (a shuffle of an already-partitioned table is
+//!   the identity).
+
+use crate::error::{Error, Result};
+use crate::ops::aggregate::{AggFn, AggSpec};
+use crate::ops::expr::Expr;
+use crate::ops::join::JoinConfig;
+use crate::table::{DataType, Field, Schema};
+use std::sync::Arc;
+
+/// Cross-rank distribution property of a node's output at world > 1 —
+/// the information shuffle elision runs on. Column indices refer to
+/// the node's own output schema.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Partitioning {
+    /// Nothing known.
+    #[default]
+    None,
+    /// Row `r` lives on rank `hash_cell(col, r) % world` — established
+    /// by the key shuffle of dist join / group-by.
+    Hash(usize),
+    /// Row `r` lives on rank `hash_row(r) % world` — established by
+    /// the row shuffle of the distributed set operators.
+    RowHash,
+    /// Range-partitioned by `col` in rank order, locally sorted —
+    /// established by the sample-sort distributed sort.
+    Sorted(usize),
+}
+
+impl std::fmt::Display for Partitioning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Partitioning::None => write!(f, "none"),
+            Partitioning::Hash(c) => write!(f, "hash(c{c})"),
+            Partitioning::RowHash => write!(f, "row-hash"),
+            Partitioning::Sorted(c) => write!(f, "sorted(c{c})"),
+        }
+    }
+}
+
+/// One operator of the logical plan.
+#[derive(Debug, Clone)]
+pub enum LogicalOp {
+    /// Named input, bound to a table at execution time; carries the
+    /// bound schema.
+    Source { name: String, schema: Arc<Schema> },
+    Filter {
+        pred: Expr,
+    },
+    Project {
+        columns: Vec<usize>,
+    },
+    WithColumn {
+        name: String,
+        expr: Expr,
+    },
+    Sort {
+        col: usize,
+    },
+    Join {
+        cfg: JoinConfig,
+        /// Pre-pushdown row-count sources for (left, right).
+        pin: Option<(usize, usize)>,
+        elide_left: bool,
+        elide_right: bool,
+    },
+    Union {
+        pin: Option<(usize, usize)>,
+        elide_left: bool,
+        elide_right: bool,
+    },
+    Intersect {
+        pin: Option<(usize, usize)>,
+        elide_left: bool,
+        elide_right: bool,
+    },
+    Difference {
+        pin: Option<(usize, usize)>,
+        elide_left: bool,
+        elide_right: bool,
+    },
+    GroupBy {
+        key: usize,
+        aggs: Vec<AggSpec>,
+        elide: bool,
+    },
+}
+
+impl LogicalOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LogicalOp::Source { .. } => "source",
+            LogicalOp::Filter { .. } => "filter",
+            LogicalOp::Project { .. } => "project",
+            LogicalOp::WithColumn { .. } => "with_column",
+            LogicalOp::Sort { .. } => "sort",
+            LogicalOp::Join { .. } => "join",
+            LogicalOp::Union { .. } => "union",
+            LogicalOp::Intersect { .. } => "intersect",
+            LogicalOp::Difference { .. } => "difference",
+            LogicalOp::GroupBy { .. } => "group_by",
+        }
+    }
+}
+
+/// One node: operator + input node ids.
+#[derive(Debug, Clone)]
+pub struct LogicalNode {
+    pub op: LogicalOp,
+    pub inputs: Vec<usize>,
+}
+
+/// A flat-DAG logical plan. Plans produced by lowering are in index
+/// order (node `i`'s inputs all have ids `< i`); rewritten plans may
+/// not be — use [`LogicalPlan::topo_order`] before executing those.
+#[derive(Debug, Clone, Default)]
+pub struct LogicalPlan {
+    pub nodes: Vec<LogicalNode>,
+    pub sinks: Vec<usize>,
+}
+
+impl LogicalPlan {
+    /// Which nodes are reachable from the sinks.
+    pub fn reachable(&self) -> Vec<bool> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack: Vec<usize> = self.sinks.clone();
+        while let Some(i) = stack.pop() {
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            stack.extend(self.nodes[i].inputs.iter().copied());
+        }
+        seen
+    }
+
+    /// Deterministic topological order over the nodes reachable from
+    /// the sinks: inputs always precede their consumers; ties resolve
+    /// by sink order then input order, so every rank of an SPMD run
+    /// executes the identical sequence (collectives stay aligned).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let mut order = Vec::new();
+        let mut state = vec![0u8; self.nodes.len()]; // 0 new, 1 open, 2 done
+        for &sink in &self.sinks {
+            // Iterative DFS: (node, next input index to visit).
+            let mut stack: Vec<(usize, usize)> = vec![(sink, 0)];
+            while let Some((n, i)) = stack.pop() {
+                if state[n] == 2 {
+                    continue;
+                }
+                state[n] = 1;
+                if i < self.nodes[n].inputs.len() {
+                    stack.push((n, i + 1));
+                    let dep = self.nodes[n].inputs[i];
+                    if state[dep] != 2 {
+                        stack.push((dep, 0));
+                    }
+                } else {
+                    state[n] = 2;
+                    order.push(n);
+                }
+            }
+        }
+        order
+    }
+
+    /// How many reachable consumers (plus sink slots) each node has —
+    /// the gate the pushdown rules use before rewriting through a node.
+    pub fn parent_counts(&self) -> Vec<usize> {
+        let reach = self.reachable();
+        let mut counts = vec![0usize; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            if !reach[i] {
+                continue;
+            }
+            for &d in &node.inputs {
+                counts[d] += 1;
+            }
+        }
+        for &s in &self.sinks {
+            counts[s] += 1;
+        }
+        counts
+    }
+
+    /// Derive (and thereby validate) every node's output schema. This
+    /// mirrors the runtime operators exactly — expression typing via
+    /// [`Expr::infer_type`], join schema via [`Schema::join`], the
+    /// group-by field naming of [`crate::ops::aggregate`] — so a plan
+    /// whose schemas derive cleanly executes without type/arity errors,
+    /// and the optimizer refuses to touch one that doesn't.
+    pub fn schemas(&self) -> Result<Vec<Arc<Schema>>> {
+        let order = {
+            // Validate *every* node (dead ones included): the naive
+            // executor evaluates them, so their errors are part of the
+            // plan's observable behavior.
+            let mut all = self.clone();
+            all.sinks = (0..all.nodes.len()).collect();
+            all.topo_order()
+        };
+        let mut out: Vec<Option<Arc<Schema>>> = vec![None; self.nodes.len()];
+        for &i in &order {
+            let get = |id: usize| -> Result<Arc<Schema>> {
+                out[id]
+                    .clone()
+                    .ok_or_else(|| Error::internal("plan input schema not derived"))
+            };
+            let node = &self.nodes[i];
+            let schema: Arc<Schema> = match &node.op {
+                LogicalOp::Source { schema, .. } => schema.clone(),
+                LogicalOp::Filter { pred } => {
+                    let s = get(node.inputs[0])?;
+                    if pred.infer_type(&s)? != DataType::Bool {
+                        return Err(Error::schema("filter predicate is not boolean"));
+                    }
+                    s
+                }
+                LogicalOp::Project { columns } => {
+                    let s = get(node.inputs[0])?;
+                    for &c in columns {
+                        if c >= s.num_fields() {
+                            return Err(Error::invalid(format!(
+                                "project column {c} out of range ({} columns)",
+                                s.num_fields()
+                            )));
+                        }
+                    }
+                    Arc::new(s.project(columns))
+                }
+                LogicalOp::WithColumn { name, expr } => {
+                    let s = get(node.inputs[0])?;
+                    let dt = expr.infer_type(&s)?;
+                    let mut fields = s.fields().to_vec();
+                    fields.push(Field::new(name.clone(), dt));
+                    Arc::new(Schema::new(fields))
+                }
+                LogicalOp::Sort { col } => {
+                    let s = get(node.inputs[0])?;
+                    if *col >= s.num_fields() {
+                        return Err(Error::invalid(format!("sort column {col} out of range")));
+                    }
+                    s
+                }
+                LogicalOp::Join { cfg, .. } => {
+                    let l = get(node.inputs[0])?;
+                    let r = get(node.inputs[1])?;
+                    if cfg.left_col >= l.num_fields() || cfg.right_col >= r.num_fields() {
+                        return Err(Error::invalid("join column out of range"));
+                    }
+                    if l.field(cfg.left_col).data_type != r.field(cfg.right_col).data_type {
+                        return Err(Error::schema(format!(
+                            "join key types differ: {:?} vs {:?}",
+                            l.field(cfg.left_col).data_type,
+                            r.field(cfg.right_col).data_type
+                        )));
+                    }
+                    Arc::new(l.join(&r))
+                }
+                LogicalOp::Union { .. }
+                | LogicalOp::Intersect { .. }
+                | LogicalOp::Difference { .. } => {
+                    let l = get(node.inputs[0])?;
+                    let r = get(node.inputs[1])?;
+                    if !l.type_equals(&r) {
+                        return Err(Error::schema(format!(
+                            "distributed {} of schema-incompatible tables",
+                            node.op.name()
+                        )));
+                    }
+                    l
+                }
+                LogicalOp::GroupBy { key, aggs, .. } => {
+                    let s = get(node.inputs[0])?;
+                    if *key >= s.num_fields() {
+                        return Err(Error::invalid("group key column out of range"));
+                    }
+                    if aggs.is_empty() {
+                        return Err(Error::invalid("no aggregates requested"));
+                    }
+                    let mut fields = vec![s.field(*key).clone()];
+                    for spec in aggs {
+                        if spec.col >= s.num_fields() {
+                            return Err(Error::invalid(format!(
+                                "agg column {} out of range",
+                                spec.col
+                            )));
+                        }
+                        if s.field(spec.col).data_type == DataType::Utf8
+                            && spec.func != AggFn::Count
+                        {
+                            return Err(Error::schema(format!(
+                                "{} over utf8 column {} unsupported",
+                                spec.func.name(),
+                                spec.col
+                            )));
+                        }
+                        fields.push(Field::new(
+                            format!("{}_{}", spec.func.name(), s.field(spec.col).name),
+                            DataType::Float64,
+                        ));
+                    }
+                    Arc::new(Schema::new(fields))
+                }
+            };
+            out[i] = Some(schema);
+        }
+        Ok(out.into_iter().map(|s| s.expect("every node derived")).collect())
+    }
+
+    /// Render the plan: one line per reachable node in execution
+    /// order, with operator details and physical annotations.
+    pub fn explain(&self) -> String {
+        let schemas = self.schemas().ok();
+        let mut out = String::new();
+        for &i in &self.topo_order() {
+            let node = &self.nodes[i];
+            let deps: Vec<String> = node.inputs.iter().map(|d| format!("#{d}")).collect();
+            let cols = schemas
+                .as_ref()
+                .map(|s| format!(" [cols={}]", s[i].num_fields()))
+                .unwrap_or_default();
+            let detail = match &node.op {
+                LogicalOp::Source { name, .. } => format!(" '{name}'"),
+                LogicalOp::Filter { pred } => format!(" {pred}"),
+                LogicalOp::Project { columns } => format!(" {columns:?}"),
+                LogicalOp::WithColumn { name, expr } => format!(" {name}={expr}"),
+                LogicalOp::Sort { col } => format!(" by c{col}"),
+                LogicalOp::Join { cfg, .. } => {
+                    format!(" {:?} l.c{}=r.c{}", cfg.join_type, cfg.left_col, cfg.right_col)
+                }
+                LogicalOp::GroupBy { key, aggs, .. } => {
+                    let specs: Vec<String> = aggs
+                        .iter()
+                        .map(|a| format!("{}(c{})", a.func.name(), a.col))
+                        .collect();
+                    format!(" by c{key} {}", specs.join(","))
+                }
+                _ => String::new(),
+            };
+            let mut notes = String::new();
+            match &node.op {
+                LogicalOp::Join { elide_left, elide_right, .. }
+                | LogicalOp::Union { elide_left, elide_right, .. }
+                | LogicalOp::Intersect { elide_left, elide_right, .. }
+                | LogicalOp::Difference { elide_left, elide_right, .. } => {
+                    if *elide_left {
+                        notes.push_str(" [elide left shuffle]");
+                    }
+                    if *elide_right {
+                        notes.push_str(" [elide right shuffle]");
+                    }
+                }
+                LogicalOp::GroupBy { elide, .. } => {
+                    if *elide {
+                        notes.push_str(" [elide shuffle]");
+                    }
+                }
+                _ => {}
+            }
+            let sink = if self.sinks.contains(&i) { "  [sink]" } else { "" };
+            out.push_str(&format!(
+                "#{i}: {}({}){detail}{cols}{notes}{sink}\n",
+                node.op.name(),
+                deps.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::DataType;
+
+    fn src(names_types: &[(&str, DataType)]) -> LogicalOp {
+        LogicalOp::Source {
+            name: "t".into(),
+            schema: Arc::new(Schema::new(
+                names_types.iter().map(|(n, d)| Field::new(*n, *d)).collect(),
+            )),
+        }
+    }
+
+    fn plan_join() -> LogicalPlan {
+        // #0 src, #1 src, #2 join, #3 filter, #4 project (sink)
+        LogicalPlan {
+            nodes: vec![
+                LogicalNode {
+                    op: src(&[("k", DataType::Int64), ("v", DataType::Float64)]),
+                    inputs: vec![],
+                },
+                LogicalNode {
+                    op: src(&[("k", DataType::Int64), ("w", DataType::Float64)]),
+                    inputs: vec![],
+                },
+                LogicalNode {
+                    op: LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    inputs: vec![0, 1],
+                },
+                LogicalNode {
+                    op: LogicalOp::Filter {
+                        pred: Expr::col(1).gt(Expr::lit_f64(0.5)),
+                    },
+                    inputs: vec![2],
+                },
+                LogicalNode { op: LogicalOp::Project { columns: vec![0, 3] }, inputs: vec![3] },
+            ],
+            sinks: vec![4],
+        }
+    }
+
+    #[test]
+    fn schemas_derive_and_validate() {
+        let p = plan_join();
+        let s = p.schemas().unwrap();
+        assert_eq!(s[2].num_fields(), 4);
+        assert_eq!(s[2].field(2).name, "k_r"); // join dedups names
+        assert_eq!(s[4].num_fields(), 2);
+        assert_eq!(s[4].field(1).name, "w");
+    }
+
+    #[test]
+    fn schemas_reject_bad_plans() {
+        let mut p = plan_join();
+        // filter over a non-bool expression
+        p.nodes[3].op = LogicalOp::Filter { pred: Expr::col(0).add(Expr::col(1)) };
+        assert!(p.schemas().is_err());
+        let mut p = plan_join();
+        // project out of range
+        p.nodes[4].op = LogicalOp::Project { columns: vec![9] };
+        assert!(p.schemas().is_err());
+        let mut p = plan_join();
+        // join key type mismatch
+        p.nodes[2].op = LogicalOp::Join {
+            cfg: JoinConfig::inner(0, 1),
+            pin: None,
+            elide_left: false,
+            elide_right: false,
+        };
+        assert!(p.schemas().is_err());
+    }
+
+    #[test]
+    fn dead_nodes_still_validate() {
+        let mut p = plan_join();
+        // An unreachable, ill-typed filter must still fail validation —
+        // the naive executor would have evaluated (and errored on) it.
+        p.nodes.push(LogicalNode {
+            op: LogicalOp::Filter { pred: Expr::col(99).is_null() },
+            inputs: vec![0],
+        });
+        assert!(p.schemas().is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_dependencies() {
+        let p = plan_join();
+        let order = p.topo_order();
+        assert_eq!(order.len(), 5);
+        let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+        assert!(pos(0) < pos(2) && pos(1) < pos(2));
+        assert!(pos(2) < pos(3) && pos(3) < pos(4));
+    }
+
+    #[test]
+    fn parent_counts_ignore_dead_consumers() {
+        let mut p = plan_join();
+        // dead node consuming #0 (valid, just unreachable)
+        p.nodes.push(LogicalNode {
+            op: LogicalOp::Filter { pred: Expr::col(0).is_null() },
+            inputs: vec![0],
+        });
+        let counts = p.parent_counts();
+        assert_eq!(counts[0], 1); // only the join
+        assert_eq!(counts[4], 1); // sink slot
+    }
+
+    #[test]
+    fn explain_renders_annotations() {
+        let mut p = plan_join();
+        if let LogicalOp::Join { elide_left, .. } = &mut p.nodes[2].op {
+            *elide_left = true;
+        }
+        let txt = p.explain();
+        assert!(txt.contains("join(#0, #1)"));
+        assert!(txt.contains("[elide left shuffle]"));
+        assert!(txt.contains("[sink]"));
+        assert!(txt.contains("(c1 > 0.5)"));
+    }
+}

@@ -1,0 +1,71 @@
+//! Query planner — the logical-plan IR, rule-based optimizer, and
+//! physical executor behind [`crate::dataflow::Graph`].
+//!
+//! The paper layers "SQL interfaces … on top of these to enhance
+//! usability" (§I); this module is the seam those layers plug into.
+//! `Graph::execute_with` lowers the declarative DAG into a
+//! [`LogicalPlan`] whose sources carry their bound schemas, runs the
+//! rule passes of [`rules::optimize`], and executes the result on
+//! [`exec::execute_plan`] — an `Arc<Table>`-sharing executor with
+//! last-use drops replacing the old clone-per-node inline match.
+//!
+//! # The rules
+//!
+//! | rule | what it does | world sizes |
+//! |------|--------------|-------------|
+//! | filter fusion | adjacent filters AND-merge into one predicate | all |
+//! | predicate pushdown | filters sink below `project`/`with_column` (column-remapped), and into the matching side of joins / both sides of set operators with the operator's build-side & radix fan-out **pinned** to pre-pushdown row counts | all / world 1 |
+//! | projection pushdown | every operator carries only the columns its consumers read; join payloads are pruned before the shuffle; unused computed columns are never evaluated | all |
+//! | shuffle elision | a dist join/group-by/set-op whose input's tracked [`Partitioning`] already matches its routing skips that AllToAll | world > 1 |
+//!
+//! **Determinism contract:** an optimized plan produces **bit-identical
+//! output** to the naive node-by-node executor at every thread count
+//! and world size (`tests/prop_plan.rs` pins parallelism 1/2/7 ×
+//! world 1/3). Rules that could change an operator's canonical output
+//! order (which depends on input cardinalities) either pin the
+//! affected decisions or stay off — see [`rules`] for the per-rule
+//! arguments.
+//!
+//! # Before/after
+//!
+//! ```
+//! use rylon::dataflow::Graph;
+//! use rylon::io::generator::paper_table;
+//! use rylon::ops::aggregate::{AggFn, AggSpec};
+//! use rylon::ops::expr::Expr;
+//! use rylon::ops::join::JoinConfig;
+//!
+//! let mut g = Graph::new();
+//! let a = g.source("a");
+//! let b = g.source("b");
+//! let j = g.join(a, b, JoinConfig::inner(0, 0));
+//! let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.5)));
+//! let p = g.project(f, vec![0, 1]);
+//! let s = g.group_by(p, 0, vec![AggSpec::new(AggFn::Sum, 1)]);
+//! g.sink(s);
+//!
+//! let sources = [("a", paper_table(100, 0.9, 1)), ("b", paper_table(100, 0.9, 2))];
+//! // At world 1 the filter sinks into the join's left side (orientation
+//! // pinned) and the join carries only the consumed columns.
+//! let plan = g.explain_optimized(1, &sources).unwrap();
+//! assert!(plan.contains("== optimized plan"));
+//! assert!(plan.contains("predicate pushdown"));
+//! assert!(plan.contains("projection pushdown"));
+//! // At world 3 the group-by rides the join's hash partitioning: its
+//! // partial shuffle is elided.
+//! let plan3 = g.explain_optimized(3, &sources).unwrap();
+//! assert!(plan3.contains("shuffle elision"));
+//! assert!(plan3.contains("[elide shuffle]"));
+//! ```
+//!
+//! The executor is reachable standalone via [`exec::execute_plan`];
+//! [`Partitioning`] is shared with [`crate::dist::ShuffleStats`], which
+//! records the distribution each shuffle establishes.
+
+pub mod exec;
+pub mod logical;
+pub mod rules;
+
+pub use exec::{execute_plan, ExecStats};
+pub use logical::{LogicalNode, LogicalOp, LogicalPlan, Partitioning};
+pub use rules::{optimize, Optimized};

@@ -1,0 +1,879 @@
+//! The rule-based optimizer: fixed-point predicate rules, a projection
+//! rewrite, and the shuffle-elision partitioning pass.
+//!
+//! Every rule preserves **bit-identity** with the naive plan — not just
+//! the result multiset but the exact output rows in the exact order, at
+//! every thread count and world size. That constraint shapes the rules:
+//!
+//! * **Filter fusion** — adjacent filters AND-merge (`filter(filter(t,
+//!   p), q) ≡ filter(t, p AND q)` under the three-valued null
+//!   collapse).
+//! * **Predicate pushdown** — filters sink below `project` /
+//!   `with_column` with column remapping at any world size (purely
+//!   local, order-preserving rewrites). Sinking *into* a join or set
+//!   operator additionally changes that operator's input cardinality,
+//!   and the hash join / radix set operators derive two decisions from
+//!   input sizes (build side, radix fan-out) that pick among different
+//!   canonical output orders — so those pushes happen only at world 1
+//!   and **pin** the operator to the pre-pushdown row-count sources
+//!   ([`LogicalOp::Join::pin`]); the executor replays the naive
+//!   decisions via `join_par_pinned` / `*_radix`. At world > 1 the
+//!   per-rank post-shuffle sizes the naive plan would have seen are
+//!   not observable without doing the shuffle, so the rule stays off.
+//! * **Projection pushdown** — a reverse pass computes the columns
+//!   each node's consumers actually use; the plan is rebuilt so every
+//!   operator carries exactly those (plus its own keys/predicate
+//!   columns), join payloads are pruned before they hit the shuffle,
+//!   and computed columns nobody reads are never evaluated. Projection
+//!   never changes row counts or row order, so it is bit-identity-safe
+//!   at any world size.
+//! * **Shuffle elision** (world > 1) — a forward pass tracks the
+//!   [`Partitioning`] each distributed operator establishes
+//!   (`dist_join` leaves its output hash-partitioned on the key,
+//!   `dist_group_by` on the group key, set operators row-hash
+//!   partitioned, `dist_sort` range-partitioned) and how local
+//!   operators preserve or destroy it; when an input already matches
+//!   an operator's routing, the executor skips that AllToAll — a
+//!   shuffle of an already-partitioned table is the identity, so
+//!   elision is bit-exact.
+//!
+//! Before any rule runs, the whole plan (dead nodes included) is
+//! validated via [`LogicalPlan::schemas`]; if validation fails the
+//! optimizer returns the plan unchanged with
+//! [`Optimized::fell_back`] set, and the naive executor surfaces the
+//! original error.
+
+use super::logical::{LogicalNode, LogicalOp, LogicalPlan, Partitioning};
+use crate::ops::aggregate::AggSpec;
+use crate::ops::expr::Expr;
+use crate::ops::join::{JoinConfig, JoinType};
+use crate::table::Schema;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+/// The optimizer's output: the rewritten plan plus a human-readable
+/// rule log (surfaced by `Graph::explain_optimized`).
+#[derive(Debug, Clone)]
+pub struct Optimized {
+    pub plan: LogicalPlan,
+    pub log: Vec<String>,
+    /// Validation failed: `plan` is the input unchanged and must run
+    /// on the naive executor so the original error surfaces.
+    pub fell_back: bool,
+}
+
+/// Run all passes over `plan` for a `world`-rank execution.
+pub fn optimize(plan: &LogicalPlan, world: usize) -> Optimized {
+    let mut log = Vec::new();
+    let fallback = |plan: &LogicalPlan, mut log: Vec<String>, why: String| {
+        log.push(why);
+        Optimized { plan: plan.clone(), log, fell_back: true }
+    };
+    let schemas = match plan.schemas() {
+        Ok(s) => s,
+        Err(e) => return fallback(plan, log, format!("validation failed ({e}); naive execution")),
+    };
+    if schemas.iter().any(|s| s.num_fields() == 0) {
+        return fallback(plan, log, "zero-column node; naive execution".into());
+    }
+    let naive_sink_types: Vec<Arc<Schema>> =
+        plan.sinks.iter().map(|&s| schemas[s].clone()).collect();
+
+    let mut p = plan.clone();
+    let mut schemas = schemas;
+    predicate_pass(&mut p, &mut schemas, world, &mut log);
+    let p = projection_pass(&p, &schemas, &mut log);
+
+    // Re-derive to validate the rewrite and feed the partitioning pass;
+    // any surprise here means a planner bug — degrade to naive rather
+    // than corrupt results.
+    let new_schemas = match p.schemas() {
+        Ok(s) => s,
+        Err(e) => return fallback(plan, log, format!("rewrite invalidated plan ({e}); naive")),
+    };
+    for (&s_new, old_types) in p.sinks.iter().zip(&naive_sink_types) {
+        if !new_schemas[s_new].type_equals(old_types) {
+            return fallback(plan, log, "rewrite changed a sink type; naive execution".into());
+        }
+    }
+    let mut p = p;
+    if world > 1 {
+        partitioning_pass(&mut p, &new_schemas, &mut log);
+    }
+    Optimized { plan: p, log, fell_back: false }
+}
+
+/// Which set operator a pushdown rewrote (they share the rule shape).
+#[derive(Clone, Copy)]
+enum SetKind {
+    Union,
+    Intersect,
+    Difference,
+}
+
+impl SetKind {
+    fn op(self, pin: Option<(usize, usize)>) -> LogicalOp {
+        match self {
+            SetKind::Union => LogicalOp::Union { pin, elide_left: false, elide_right: false },
+            SetKind::Intersect => {
+                LogicalOp::Intersect { pin, elide_left: false, elide_right: false }
+            }
+            SetKind::Difference => {
+                LogicalOp::Difference { pin, elide_left: false, elide_right: false }
+            }
+        }
+    }
+}
+
+/// One applicable rewrite, extracted with owned data so the plan can
+/// be mutated after the match ends.
+enum Action {
+    Fuse { inner: Expr, x: usize },
+    PastProject { columns: Vec<usize>, x: usize },
+    PastWithColumn { name: String, expr: Expr, x: usize },
+    IntoJoin { cfg: JoinConfig, pin: (usize, usize), l: usize, r: usize, left: bool, al: usize },
+    IntoSetOp { kind: SetKind, pin: (usize, usize), a: usize, b: usize },
+}
+
+/// Append a node (and its schema) to the plan, returning its id.
+fn push_node(
+    p: &mut LogicalPlan,
+    schemas: &mut Vec<Arc<Schema>>,
+    op: LogicalOp,
+    inputs: Vec<usize>,
+    schema: Arc<Schema>,
+) -> usize {
+    p.nodes.push(LogicalNode { op, inputs });
+    schemas.push(schema);
+    p.nodes.len() - 1
+}
+
+/// Fixed-point filter fusion + predicate pushdown. Mutates `p` in
+/// place; node ids stay stable (rewrites replace the filter node with
+/// a copy of the operator it sank through, and the bypassed original
+/// goes dead).
+fn predicate_pass(
+    p: &mut LogicalPlan,
+    schemas: &mut Vec<Arc<Schema>>,
+    world: usize,
+    log: &mut Vec<String>,
+) {
+    let cap = p.nodes.len() * 4 + 16;
+    let mut applied = 0usize;
+    'fixpoint: while applied < cap {
+        let reach = p.reachable();
+        let parents = p.parent_counts();
+        // Nodes frozen as pin targets: a pin records "the row count
+        // this operator's input had before pushdown", so the node it
+        // names must keep existing (and keep that row count). No rule
+        // may bypass one.
+        let mut pinned = BTreeSet::new();
+        for node in &p.nodes {
+            match &node.op {
+                LogicalOp::Join { pin: Some((a, b)), .. }
+                | LogicalOp::Union { pin: Some((a, b)), .. }
+                | LogicalOp::Intersect { pin: Some((a, b)), .. }
+                | LogicalOp::Difference { pin: Some((a, b)), .. } => {
+                    pinned.insert(*a);
+                    pinned.insert(*b);
+                }
+                _ => {}
+            }
+        }
+        for f in 0..p.nodes.len() {
+            if !reach[f] {
+                continue;
+            }
+            let LogicalOp::Filter { pred } = &p.nodes[f].op else { continue };
+            let pred = pred.clone();
+            let j = p.nodes[f].inputs[0];
+            // Rewriting through `j` re-points `f` below it; only legal
+            // when `f` is `j`'s sole consumer (otherwise the operator
+            // would run twice, or other consumers would see filtered
+            // data), and never when `j` is a pin target (bypassing it
+            // would dangle the pin or change the pinned row count).
+            if parents[j] != 1 || pinned.contains(&j) {
+                continue;
+            }
+            let action = match &p.nodes[j].op {
+                LogicalOp::Filter { pred: inner } => {
+                    Some(Action::Fuse { inner: inner.clone(), x: p.nodes[j].inputs[0] })
+                }
+                LogicalOp::Project { columns } => Some(Action::PastProject {
+                    columns: columns.clone(),
+                    x: p.nodes[j].inputs[0],
+                }),
+                LogicalOp::WithColumn { name, expr } => {
+                    let new_idx = schemas[j].num_fields() - 1;
+                    if pred.columns_referenced().contains(&new_idx) {
+                        None
+                    } else {
+                        Some(Action::PastWithColumn {
+                            name: name.clone(),
+                            expr: expr.clone(),
+                            x: p.nodes[j].inputs[0],
+                        })
+                    }
+                }
+                LogicalOp::Join { cfg, pin, .. } if world == 1 => {
+                    let (l, r) = (p.nodes[j].inputs[0], p.nodes[j].inputs[1]);
+                    let al = schemas[l].num_fields();
+                    let refs = pred.columns_referenced();
+                    let left_ok = refs.iter().all(|&c| c < al)
+                        && matches!(cfg.join_type, JoinType::Inner | JoinType::Left);
+                    let right_ok = refs.iter().all(|&c| c >= al)
+                        && matches!(cfg.join_type, JoinType::Inner | JoinType::Right);
+                    if left_ok || right_ok {
+                        Some(Action::IntoJoin {
+                            cfg: *cfg,
+                            pin: pin.unwrap_or((l, r)),
+                            l,
+                            r,
+                            left: left_ok,
+                            al,
+                        })
+                    } else {
+                        None
+                    }
+                }
+                LogicalOp::Union { pin, .. } if world == 1 => Some(Action::IntoSetOp {
+                    kind: SetKind::Union,
+                    pin: pin.unwrap_or((p.nodes[j].inputs[0], p.nodes[j].inputs[1])),
+                    a: p.nodes[j].inputs[0],
+                    b: p.nodes[j].inputs[1],
+                }),
+                LogicalOp::Intersect { pin, .. } if world == 1 => Some(Action::IntoSetOp {
+                    kind: SetKind::Intersect,
+                    pin: pin.unwrap_or((p.nodes[j].inputs[0], p.nodes[j].inputs[1])),
+                    a: p.nodes[j].inputs[0],
+                    b: p.nodes[j].inputs[1],
+                }),
+                LogicalOp::Difference { pin, .. } if world == 1 => Some(Action::IntoSetOp {
+                    kind: SetKind::Difference,
+                    pin: pin.unwrap_or((p.nodes[j].inputs[0], p.nodes[j].inputs[1])),
+                    a: p.nodes[j].inputs[0],
+                    b: p.nodes[j].inputs[1],
+                }),
+                _ => None,
+            };
+            let Some(action) = action else { continue };
+            match action {
+                Action::Fuse { inner, x } => {
+                    // Inner predicate first: row passes iff both pass,
+                    // and AND's null collapse matches two filters.
+                    p.nodes[f].op = LogicalOp::Filter { pred: inner.and(pred) };
+                    p.nodes[f].inputs = vec![x];
+                    log.push(format!("filter fusion: #{j} AND-merged into #{f}"));
+                }
+                Action::PastProject { columns, x } => {
+                    let remapped = pred.map_columns(&|c| columns[c]);
+                    let sx = schemas[x].clone();
+                    let nf =
+                        push_node(p, schemas, LogicalOp::Filter { pred: remapped }, vec![x], sx);
+                    p.nodes[f].op = LogicalOp::Project { columns };
+                    p.nodes[f].inputs = vec![nf];
+                    log.push(format!("predicate pushdown: filter #{f} below project #{j}"));
+                }
+                Action::PastWithColumn { name, expr, x } => {
+                    let sx = schemas[x].clone();
+                    let nf = push_node(p, schemas, LogicalOp::Filter { pred }, vec![x], sx);
+                    p.nodes[f].op = LogicalOp::WithColumn { name, expr };
+                    p.nodes[f].inputs = vec![nf];
+                    log.push(format!("predicate pushdown: filter #{f} below with_column #{j}"));
+                }
+                Action::IntoJoin { cfg, pin, l, r, left, al } => {
+                    let (inputs, side) = if left {
+                        let sl = schemas[l].clone();
+                        let nf = push_node(p, schemas, LogicalOp::Filter { pred }, vec![l], sl);
+                        (vec![nf, r], "left")
+                    } else {
+                        let q = pred.map_columns(&|c| c - al);
+                        let sr = schemas[r].clone();
+                        let nf = push_node(p, schemas, LogicalOp::Filter { pred: q }, vec![r], sr);
+                        (vec![l, nf], "right")
+                    };
+                    p.nodes[f].op = LogicalOp::Join {
+                        cfg,
+                        pin: Some(pin),
+                        elide_left: false,
+                        elide_right: false,
+                    };
+                    p.nodes[f].inputs = inputs;
+                    log.push(format!(
+                        "predicate pushdown: filter #{f} into {side} side of join #{j} \
+                         (orientation pinned to #{}/#{})",
+                        pin.0, pin.1
+                    ));
+                }
+                Action::IntoSetOp { kind, pin, a, b } => {
+                    let sa = schemas[a].clone();
+                    let q = pred.clone();
+                    let fa = push_node(p, schemas, LogicalOp::Filter { pred: q }, vec![a], sa);
+                    let sb = schemas[b].clone();
+                    let fb = push_node(p, schemas, LogicalOp::Filter { pred }, vec![b], sb);
+                    p.nodes[f].op = kind.op(Some(pin));
+                    p.nodes[f].inputs = vec![fa, fb];
+                    log.push(format!(
+                        "predicate pushdown: filter #{f} into both sides of {} #{j}",
+                        p.nodes[f].op.name()
+                    ));
+                }
+            }
+            applied += 1;
+            continue 'fixpoint;
+        }
+        break; // full sweep with no rule fired: fixed point
+    }
+}
+
+/// Aggregates to keep for a group-by whose output columns `needed` are
+/// consumed downstream (output 1+k is agg k). Never empty — group-by
+/// rejects zero aggregates, so an all-unused list keeps agg 0.
+fn kept_aggs(naggs: usize, needed: &BTreeSet<usize>) -> Vec<usize> {
+    let kept: Vec<usize> = (0..naggs).filter(|k| needed.contains(&(1 + k))).collect();
+    if kept.is_empty() {
+        vec![0]
+    } else {
+        kept
+    }
+}
+
+/// Position of original column `v` in the sorted emitted list.
+fn pos_in(list: &[usize], v: usize) -> usize {
+    list.binary_search(&v).expect("projection pass: required column not emitted")
+}
+
+/// Projection pushdown: compute the columns each node's consumers
+/// need, then rebuild the plan so every node emits exactly those (in
+/// ascending original order). Unreachable nodes and computed columns
+/// nobody reads vanish. Row counts and row order are untouched, so the
+/// rewrite is bit-identity-safe; only intermediate schemas shrink.
+fn projection_pass(
+    p: &LogicalPlan,
+    schemas: &[Arc<Schema>],
+    log: &mut Vec<String>,
+) -> LogicalPlan {
+    let order = p.topo_order();
+
+    // -- reverse pass: required output columns per node ---------------
+    let mut needed: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); p.nodes.len()];
+    for &s in &p.sinks {
+        needed[s].extend(0..schemas[s].num_fields());
+    }
+    for &i in order.iter().rev() {
+        if needed[i].is_empty() {
+            needed[i].insert(0); // degenerate consumer; keep one column
+        }
+        let req: Vec<usize> = needed[i].iter().copied().collect();
+        let node = &p.nodes[i];
+        match &node.op {
+            LogicalOp::Source { .. } => {}
+            LogicalOp::Filter { pred } => {
+                let inp = node.inputs[0];
+                needed[inp].extend(req.iter().copied());
+                needed[inp].extend(pred.columns_referenced());
+            }
+            LogicalOp::Project { columns } => {
+                let inp = node.inputs[0];
+                needed[inp].extend(req.iter().map(|&j| columns[j]));
+            }
+            LogicalOp::WithColumn { expr, .. } => {
+                let new_idx = schemas[i].num_fields() - 1;
+                let inp = node.inputs[0];
+                needed[inp].extend(req.iter().copied().filter(|&c| c != new_idx));
+                if req.contains(&new_idx) {
+                    needed[inp].extend(expr.columns_referenced());
+                }
+            }
+            LogicalOp::Sort { col } => {
+                let inp = node.inputs[0];
+                needed[inp].extend(req.iter().copied());
+                needed[inp].insert(*col);
+            }
+            LogicalOp::Join { cfg, .. } => {
+                let (l, r) = (node.inputs[0], node.inputs[1]);
+                let al = schemas[l].num_fields();
+                needed[l].extend(req.iter().copied().filter(|&c| c < al));
+                needed[l].insert(cfg.left_col);
+                needed[r].extend(req.iter().copied().filter(|&c| c >= al).map(|c| c - al));
+                needed[r].insert(cfg.right_col);
+            }
+            LogicalOp::Union { .. }
+            | LogicalOp::Intersect { .. }
+            | LogicalOp::Difference { .. } => {
+                // Row-identity semantics: dedup reads every column.
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                needed[a].extend(0..schemas[a].num_fields());
+                needed[b].extend(0..schemas[b].num_fields());
+            }
+            LogicalOp::GroupBy { key, aggs, .. } => {
+                let inp = node.inputs[0];
+                needed[inp].insert(*key);
+                for k in kept_aggs(aggs.len(), &needed[i]) {
+                    needed[inp].insert(aggs[k].col);
+                }
+            }
+        }
+    }
+
+    // -- forward pass: rebuild with pruned schemas --------------------
+    let mut out = LogicalPlan::default();
+    let mut node_map: HashMap<usize, usize> = HashMap::new();
+    let mut emit: HashMap<usize, Vec<usize>> = HashMap::new();
+    // Wrap `id` (emitting `natural` original columns, ascending) with a
+    // zero-copy Project when the consumers need a strict subset.
+    let finish = |out: &mut LogicalPlan, id: usize, natural: Vec<usize>, req: &[usize]| {
+        if natural == req {
+            id
+        } else {
+            let columns: Vec<usize> = req.iter().map(|&c| pos_in(&natural, c)).collect();
+            out.nodes.push(LogicalNode {
+                op: LogicalOp::Project { columns },
+                inputs: vec![id],
+            });
+            out.nodes.len() - 1
+        }
+    };
+    let mut pruned_nodes = 0usize;
+    for &i in &order {
+        let req: Vec<usize> = needed[i].iter().copied().collect();
+        if req.len() < schemas[i].num_fields() {
+            pruned_nodes += 1;
+        }
+        let node = &p.nodes[i];
+        let new_id = match &node.op {
+            LogicalOp::Source { name, schema } => {
+                out.nodes.push(LogicalNode {
+                    op: LogicalOp::Source { name: name.clone(), schema: schema.clone() },
+                    inputs: vec![],
+                });
+                let id = out.nodes.len() - 1;
+                finish(&mut out, id, (0..schema.num_fields()).collect(), &req)
+            }
+            LogicalOp::Filter { pred } => {
+                let c = node.inputs[0];
+                let ec = emit[&c].clone();
+                let remapped = pred.map_columns(&|col| pos_in(&ec, col));
+                out.nodes.push(LogicalNode {
+                    op: LogicalOp::Filter { pred: remapped },
+                    inputs: vec![node_map[&c]],
+                });
+                let id = out.nodes.len() - 1;
+                finish(&mut out, id, ec, &req)
+            }
+            LogicalOp::Project { columns } => {
+                let c = node.inputs[0];
+                let ec = &emit[&c];
+                let cols: Vec<usize> = req.iter().map(|&j| pos_in(ec, columns[j])).collect();
+                out.nodes.push(LogicalNode {
+                    op: LogicalOp::Project { columns: cols },
+                    inputs: vec![node_map[&c]],
+                });
+                out.nodes.len() - 1
+            }
+            LogicalOp::WithColumn { name, expr } => {
+                let c = node.inputs[0];
+                let ec = emit[&c].clone();
+                let new_idx = schemas[i].num_fields() - 1;
+                if needed[i].contains(&new_idx) {
+                    let remapped = expr.map_columns(&|col| pos_in(&ec, col));
+                    out.nodes.push(LogicalNode {
+                        op: LogicalOp::WithColumn { name: name.clone(), expr: remapped },
+                        inputs: vec![node_map[&c]],
+                    });
+                    let id = out.nodes.len() - 1;
+                    let mut natural = ec;
+                    natural.push(new_idx);
+                    finish(&mut out, id, natural, &req)
+                } else {
+                    log.push(format!(
+                        "projection pushdown: dropped unused with_column #{i} ('{name}')"
+                    ));
+                    finish(&mut out, node_map[&c], ec, &req)
+                }
+            }
+            LogicalOp::Sort { col } => {
+                let c = node.inputs[0];
+                let ec = emit[&c].clone();
+                out.nodes.push(LogicalNode {
+                    op: LogicalOp::Sort { col: pos_in(&ec, *col) },
+                    inputs: vec![node_map[&c]],
+                });
+                let id = out.nodes.len() - 1;
+                finish(&mut out, id, ec, &req)
+            }
+            LogicalOp::Join { cfg, pin, .. } => {
+                let (l, r) = (node.inputs[0], node.inputs[1]);
+                let al = schemas[l].num_fields();
+                let (el, er) = (emit[&l].clone(), emit[&r].clone());
+                let mut cfg2 = *cfg;
+                cfg2.left_col = pos_in(&el, cfg.left_col);
+                cfg2.right_col = pos_in(&er, cfg.right_col);
+                let pin2 = pin.map(|(a, b)| (node_map[&a], node_map[&b]));
+                out.nodes.push(LogicalNode {
+                    op: LogicalOp::Join {
+                        cfg: cfg2,
+                        pin: pin2,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    inputs: vec![node_map[&l], node_map[&r]],
+                });
+                let id = out.nodes.len() - 1;
+                let mut natural = el;
+                natural.extend(er.iter().map(|&c| c + al));
+                finish(&mut out, id, natural, &req)
+            }
+            LogicalOp::Union { pin, .. }
+            | LogicalOp::Intersect { pin, .. }
+            | LogicalOp::Difference { pin, .. } => {
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                let pin2 = pin.map(|(x, y)| (node_map[&x], node_map[&y]));
+                let kind = match &node.op {
+                    LogicalOp::Union { .. } => SetKind::Union,
+                    LogicalOp::Intersect { .. } => SetKind::Intersect,
+                    _ => SetKind::Difference,
+                };
+                out.nodes.push(LogicalNode {
+                    op: kind.op(pin2),
+                    inputs: vec![node_map[&a], node_map[&b]],
+                });
+                let id = out.nodes.len() - 1;
+                finish(&mut out, id, (0..schemas[i].num_fields()).collect(), &req)
+            }
+            LogicalOp::GroupBy { key, aggs, .. } => {
+                let c = node.inputs[0];
+                let ec = emit[&c].clone();
+                let kept = kept_aggs(aggs.len(), &needed[i]);
+                let new_aggs: Vec<AggSpec> = kept
+                    .iter()
+                    .map(|&k| AggSpec::new(aggs[k].func, pos_in(&ec, aggs[k].col)))
+                    .collect();
+                out.nodes.push(LogicalNode {
+                    op: LogicalOp::GroupBy {
+                        key: pos_in(&ec, *key),
+                        aggs: new_aggs,
+                        elide: false,
+                    },
+                    inputs: vec![node_map[&c]],
+                });
+                let id = out.nodes.len() - 1;
+                let mut natural = vec![0usize];
+                natural.extend(kept.iter().map(|&k| 1 + k));
+                finish(&mut out, id, natural, &req)
+            }
+        };
+        node_map.insert(i, new_id);
+        emit.insert(i, req);
+    }
+    out.sinks = p.sinks.iter().map(|&s| node_map[&s]).collect();
+    if pruned_nodes > 0 {
+        log.push(format!(
+            "projection pushdown: {pruned_nodes} node(s) now carry only consumed columns"
+        ));
+    }
+    let dead = p.nodes.len() - order.len();
+    if dead > 0 {
+        log.push(format!("eliminated {dead} dead node(s)"));
+    }
+    out
+}
+
+/// Forward partitioning analysis + shuffle-elision marking (world > 1).
+fn partitioning_pass(p: &mut LogicalPlan, schemas: &[Arc<Schema>], log: &mut Vec<String>) {
+    let order = p.topo_order();
+    let mut part: Vec<Partitioning> = vec![Partitioning::None; p.nodes.len()];
+    for &i in &order {
+        let inputs = p.nodes[i].inputs.clone();
+        let prop = match &mut p.nodes[i].op {
+            LogicalOp::Source { .. } => Partitioning::None,
+            LogicalOp::Filter { .. } => part[inputs[0]],
+            LogicalOp::Project { columns } => match part[inputs[0]] {
+                Partitioning::Hash(c) => columns
+                    .iter()
+                    .position(|&x| x == c)
+                    .map(Partitioning::Hash)
+                    .unwrap_or(Partitioning::None),
+                Partitioning::Sorted(c) => columns
+                    .iter()
+                    .position(|&x| x == c)
+                    .map(Partitioning::Sorted)
+                    .unwrap_or(Partitioning::None),
+                // Row identity changes unless the projection is exactly
+                // the identity permutation.
+                Partitioning::RowHash => {
+                    let arity = schemas[inputs[0]].num_fields();
+                    if columns.len() == arity && columns.iter().enumerate().all(|(k, &c)| k == c)
+                    {
+                        Partitioning::RowHash
+                    } else {
+                        Partitioning::None
+                    }
+                }
+                Partitioning::None => Partitioning::None,
+            },
+            LogicalOp::WithColumn { .. } => match part[inputs[0]] {
+                // Existing column indices are unchanged; appending a
+                // column breaks whole-row identity.
+                Partitioning::Hash(c) => Partitioning::Hash(c),
+                Partitioning::Sorted(c) => Partitioning::Sorted(c),
+                _ => Partitioning::None,
+            },
+            LogicalOp::Sort { col } => Partitioning::Sorted(*col),
+            LogicalOp::Join { cfg, elide_left, elide_right, .. } => {
+                *elide_left = part[inputs[0]] == Partitioning::Hash(cfg.left_col);
+                *elide_right = part[inputs[1]] == Partitioning::Hash(cfg.right_col);
+                if *elide_left {
+                    log.push(format!("shuffle elision: join #{i} left input already {}",
+                        part[inputs[0]]));
+                }
+                if *elide_right {
+                    log.push(format!("shuffle elision: join #{i} right input already {}",
+                        part[inputs[1]]));
+                }
+                let al = schemas[inputs[0]].num_fields();
+                match cfg.join_type {
+                    JoinType::Inner | JoinType::Left => Partitioning::Hash(cfg.left_col),
+                    JoinType::Right => Partitioning::Hash(al + cfg.right_col),
+                    JoinType::FullOuter => Partitioning::None,
+                }
+            }
+            LogicalOp::Union { elide_left, elide_right, .. }
+            | LogicalOp::Intersect { elide_left, elide_right, .. }
+            | LogicalOp::Difference { elide_left, elide_right, .. } => {
+                *elide_left = part[inputs[0]] == Partitioning::RowHash;
+                *elide_right = part[inputs[1]] == Partitioning::RowHash;
+                if *elide_left || *elide_right {
+                    log.push(format!(
+                        "shuffle elision: set op #{i} input(s) already row-hash partitioned"
+                    ));
+                }
+                Partitioning::RowHash
+            }
+            LogicalOp::GroupBy { key, elide, .. } => {
+                *elide = part[inputs[0]] == Partitioning::Hash(*key);
+                if *elide {
+                    log.push(format!(
+                        "shuffle elision: group_by #{i} input already hash-partitioned on key"
+                    ));
+                }
+                Partitioning::Hash(0)
+            }
+        };
+        part[i] = prop;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::expr::Expr;
+    use crate::table::{DataType, Field};
+
+    fn src(n: usize) -> LogicalOp {
+        let mut fields = vec![Field::new("k", DataType::Int64)];
+        for i in 1..n {
+            fields.push(Field::new(format!("v{i}"), DataType::Float64));
+        }
+        LogicalOp::Source { name: "t".into(), schema: Arc::new(Schema::new(fields)) }
+    }
+
+    fn node(op: LogicalOp, inputs: Vec<usize>) -> LogicalNode {
+        LogicalNode { op, inputs }
+    }
+
+    #[test]
+    fn fusion_merges_adjacent_filters() {
+        let p = LogicalPlan {
+            nodes: vec![
+                node(src(3), vec![]),
+                node(LogicalOp::Filter { pred: Expr::col(1).gt(Expr::lit_f64(0.1)) }, vec![0]),
+                node(LogicalOp::Filter { pred: Expr::col(2).lt(Expr::lit_f64(0.9)) }, vec![1]),
+            ],
+            sinks: vec![2],
+        };
+        let opt = optimize(&p, 1);
+        assert!(!opt.fell_back);
+        assert!(opt.log.iter().any(|l| l.contains("filter fusion")));
+        // one filter reachable in the final plan
+        let reach = opt.plan.reachable();
+        let filters = opt
+            .plan
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| reach[*i] && matches!(n.op, LogicalOp::Filter { .. }))
+            .count();
+        assert_eq!(filters, 1);
+    }
+
+    #[test]
+    fn pushdown_into_join_pins_orientation() {
+        let p = LogicalPlan {
+            nodes: vec![
+                node(src(3), vec![]),
+                node(src(3), vec![]),
+                node(
+                    LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    vec![0, 1],
+                ),
+                node(LogicalOp::Filter { pred: Expr::col(1).gt(Expr::lit_f64(0.5)) }, vec![2]),
+            ],
+            sinks: vec![3],
+        };
+        let opt = optimize(&p, 1);
+        assert!(!opt.fell_back);
+        assert!(opt.log.iter().any(|l| l.contains("into left side of join")));
+        // the reachable join carries a pin, and a filter sits on its left input
+        let reach = opt.plan.reachable();
+        let join = opt
+            .plan
+            .nodes
+            .iter()
+            .enumerate()
+            .find(|(i, n)| reach[*i] && matches!(n.op, LogicalOp::Join { .. }))
+            .expect("join survives");
+        let LogicalOp::Join { pin, .. } = &join.1.op else { unreachable!() };
+        assert!(pin.is_some());
+        let left_in = join.1.inputs[0];
+        assert!(matches!(opt.plan.nodes[left_in].op, LogicalOp::Filter { .. }));
+        // at world > 1 the same pushdown stays off
+        let opt3 = optimize(&p, 3);
+        assert!(!opt3.log.iter().any(|l| l.contains("into left side")));
+    }
+
+    #[test]
+    fn projection_prunes_join_payload() {
+        // join two 4-col sources, keep only c1 of the left afterwards
+        let p = LogicalPlan {
+            nodes: vec![
+                node(src(4), vec![]),
+                node(src(4), vec![]),
+                node(
+                    LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    vec![0, 1],
+                ),
+                node(LogicalOp::Project { columns: vec![1] }, vec![2]),
+            ],
+            sinks: vec![3],
+        };
+        let opt = optimize(&p, 1);
+        assert!(!opt.fell_back);
+        let schemas = opt.plan.schemas().unwrap();
+        let reach = opt.plan.reachable();
+        let (ji, jn) = opt
+            .plan
+            .nodes
+            .iter()
+            .enumerate()
+            .find(|(i, n)| reach[*i] && matches!(n.op, LogicalOp::Join { .. }))
+            .expect("join survives");
+        // left carries key+c1, right carries only the key
+        assert_eq!(schemas[jn.inputs[0]].num_fields(), 2);
+        assert_eq!(schemas[jn.inputs[1]].num_fields(), 1);
+        assert_eq!(schemas[ji].num_fields(), 3);
+        // sink schema unchanged
+        let s = opt.plan.sinks[0];
+        assert_eq!(schemas[s].num_fields(), 1);
+        assert_eq!(schemas[s].field(0).data_type, DataType::Float64);
+    }
+
+    #[test]
+    fn unused_with_column_is_dropped() {
+        let p = LogicalPlan {
+            nodes: vec![
+                node(src(2), vec![]),
+                node(
+                    LogicalOp::WithColumn {
+                        name: "d".into(),
+                        expr: Expr::col(1).mul(Expr::lit_f64(2.0)),
+                    },
+                    vec![0],
+                ),
+                node(LogicalOp::Project { columns: vec![0] }, vec![1]),
+            ],
+            sinks: vec![2],
+        };
+        let opt = optimize(&p, 1);
+        assert!(!opt.fell_back);
+        assert!(opt.log.iter().any(|l| l.contains("dropped unused with_column")));
+        let reach = opt.plan.reachable();
+        assert!(!opt
+            .plan
+            .nodes
+            .iter()
+            .enumerate()
+            .any(|(i, n)| reach[i] && matches!(n.op, LogicalOp::WithColumn { .. })));
+    }
+
+    #[test]
+    fn elision_marks_partitioned_pipeline() {
+        // join establishes hash(c0); group_by on c0 elides its shuffle
+        let p = LogicalPlan {
+            nodes: vec![
+                node(src(2), vec![]),
+                node(src(2), vec![]),
+                node(
+                    LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    vec![0, 1],
+                ),
+                node(
+                    LogicalOp::GroupBy {
+                        key: 0,
+                        aggs: vec![AggSpec::new(crate::ops::aggregate::AggFn::Sum, 1)],
+                        elide: false,
+                    },
+                    vec![2],
+                ),
+            ],
+            sinks: vec![3],
+        };
+        let opt = optimize(&p, 3);
+        assert!(!opt.fell_back);
+        let reach = opt.plan.reachable();
+        let gb = opt
+            .plan
+            .nodes
+            .iter()
+            .enumerate()
+            .find(|(i, n)| reach[*i] && matches!(n.op, LogicalOp::GroupBy { .. }))
+            .unwrap();
+        let LogicalOp::GroupBy { elide, .. } = &gb.1.op else { unreachable!() };
+        assert!(*elide, "group-by shuffle should be elided: {}", opt.plan.explain());
+        // world 1 never marks elisions
+        let opt1 = optimize(&p, 1);
+        let found = opt1.plan.nodes.iter().any(
+            |n| matches!(&n.op, LogicalOp::GroupBy { elide: true, .. }),
+        );
+        assert!(!found);
+    }
+
+    #[test]
+    fn invalid_plan_falls_back() {
+        let p = LogicalPlan {
+            nodes: vec![
+                node(src(2), vec![]),
+                node(LogicalOp::Filter { pred: Expr::col(99).is_null() }, vec![0]),
+            ],
+            sinks: vec![1],
+        };
+        let opt = optimize(&p, 1);
+        assert!(opt.fell_back);
+        assert_eq!(opt.plan.nodes.len(), p.nodes.len());
+    }
+}

@@ -1,0 +1,389 @@
+//! Property tests for the query planner: for randomized dataflow
+//! graphs over `paper_table` inputs, the optimized plan's output is
+//! **bit-identical** to naive node-by-node execution at parallelism
+//! 1/2/7 and world 1/3 — including pipelines above the radix
+//! threshold (where pushdown must replay pinned build-side/fan-out
+//! decisions) and an already-partitioned pipeline where shuffle
+//! elision provably fires (asserted via the executor's stats).
+
+use rylon::coordinator::run_workers;
+use rylon::dataflow::Graph;
+use rylon::io::generator::{paper_table, SplitMix64};
+use rylon::net::CommConfig;
+use rylon::ops::aggregate::{AggFn, AggSpec};
+use rylon::ops::expr::Expr;
+use rylon::ops::join::{JoinConfig, JoinType};
+use rylon::plan::ExecStats;
+use rylon::table::{DataType, Table};
+
+/// One random comparison atom over a column of the given type.
+fn atom(rng: &mut SplitMix64, types: &[DataType]) -> Expr {
+    let c = rng.next_below(types.len() as u64) as usize;
+    let col = Expr::col(c);
+    match types[c] {
+        DataType::Int64 => match rng.next_below(3) {
+            0 => col.modulo(Expr::lit_i64(2 + rng.next_below(5) as i64)).eq(Expr::lit_i64(0)),
+            1 => col.gt(Expr::lit_i64(rng.next_below(200) as i64)),
+            _ => col.is_null().not(),
+        },
+        DataType::Float64 => match rng.next_below(3) {
+            0 => col.lt(Expr::lit_f64(rng.next_f64())),
+            1 => col.ge(Expr::lit_f64(rng.next_f64() * 0.5)),
+            _ => col.add(Expr::lit_f64(0.25)).le(Expr::lit_f64(1.0)),
+        },
+        DataType::Bool => col.eq(Expr::lit_bool(rng.next_below(2) == 0)),
+        DataType::Utf8 => col.ge(Expr::lit_str("m")),
+    }
+}
+
+fn rand_pred(rng: &mut SplitMix64, types: &[DataType]) -> Expr {
+    let mut e = atom(rng, types);
+    for _ in 0..rng.next_below(2) {
+        let other = atom(rng, types);
+        e = if rng.next_below(2) == 0 { e.and(other) } else { e.or(other) };
+    }
+    e
+}
+
+/// Deterministically build a random (but always valid) graph over
+/// sources "a" and "b", tracking per-node output types.
+fn build_random_graph(seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let paper_types = vec![
+        DataType::Int64,
+        DataType::Float64,
+        DataType::Float64,
+        DataType::Float64,
+    ];
+    let mut g = Graph::new();
+    let a = g.source("a");
+    let b = g.source("b");
+    let mut nodes = vec![(a, paper_types.clone()), (b, paper_types)];
+    let ops = 3 + rng.next_below(5) as usize;
+    for _ in 0..ops {
+        let pick = rng.next_below(nodes.len() as u64) as usize;
+        let (nid, types) = nodes[pick].clone();
+        match rng.next_below(8) {
+            0 => {
+                let pred = rand_pred(&mut rng, &types);
+                nodes.push((g.filter(nid, pred), types));
+            }
+            1 => {
+                // random non-empty projection, possibly reordering
+                let keep = 1 + rng.next_below(types.len() as u64) as usize;
+                let mut cols = Vec::with_capacity(keep);
+                for _ in 0..keep {
+                    cols.push(rng.next_below(types.len() as u64) as usize);
+                }
+                let new_types: Vec<DataType> = cols.iter().map(|&c| types[c]).collect();
+                nodes.push((g.project(nid, cols), new_types));
+            }
+            2 => {
+                // numeric derived column (always f64)
+                let numeric: Vec<usize> = types
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| matches!(t, DataType::Int64 | DataType::Float64))
+                    .map(|(i, _)| i)
+                    .collect();
+                if numeric.is_empty() {
+                    continue;
+                }
+                let c = numeric[rng.next_below(numeric.len() as u64) as usize];
+                let expr = Expr::col(c).add(Expr::lit_f64(0.5));
+                let mut new_types = types.clone();
+                new_types.push(DataType::Float64);
+                nodes.push((g.with_column(nid, "d", expr), new_types));
+            }
+            3 => {
+                let col = rng.next_below(types.len() as u64) as usize;
+                nodes.push((g.sort(nid, col), types));
+            }
+            4 => {
+                // join on int64 keys of two candidates
+                let pick2 = rng.next_below(nodes.len() as u64) as usize;
+                let (nid2, types2) = nodes[pick2].clone();
+                let k1 = types.iter().position(|t| *t == DataType::Int64);
+                let k2 = types2.iter().position(|t| *t == DataType::Int64);
+                let (Some(k1), Some(k2)) = (k1, k2) else { continue };
+                let jt = match rng.next_below(3) {
+                    0 => JoinType::Inner,
+                    1 => JoinType::Left,
+                    _ => JoinType::Right,
+                };
+                let cfg = JoinConfig::new(jt, k1, k2);
+                let mut new_types = types.clone();
+                new_types.extend(types2.iter().copied());
+                nodes.push((g.join(nid, nid2, cfg), new_types));
+            }
+            5 => {
+                // set op over type-equal candidates
+                let pick2 = rng.next_below(nodes.len() as u64) as usize;
+                let (nid2, types2) = nodes[pick2].clone();
+                if types != types2 {
+                    continue;
+                }
+                let out = match rng.next_below(3) {
+                    0 => g.union(nid, nid2),
+                    1 => g.intersect(nid, nid2),
+                    _ => g.difference(nid, nid2),
+                };
+                nodes.push((out, types));
+            }
+            6 => {
+                let numeric: Vec<usize> = types
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| matches!(t, DataType::Int64 | DataType::Float64))
+                    .map(|(i, _)| i)
+                    .collect();
+                if numeric.is_empty() {
+                    continue;
+                }
+                let key = rng.next_below(types.len() as u64) as usize;
+                if types[key] == DataType::Utf8 {
+                    continue;
+                }
+                let vcol = numeric[rng.next_below(numeric.len() as u64) as usize];
+                let func = match rng.next_below(4) {
+                    0 => AggFn::Count,
+                    1 => AggFn::Sum,
+                    2 => AggFn::Min,
+                    _ => AggFn::Mean,
+                };
+                let new_types = vec![types[key], DataType::Float64];
+                nodes.push((g.group_by(nid, key, vec![AggSpec::new(func, vcol)]), new_types));
+            }
+            _ => {
+                // stacked filters: exercises fusion
+                let p1 = rand_pred(&mut rng, &types);
+                let p2 = rand_pred(&mut rng, &types);
+                let f1 = g.filter(nid, p1);
+                nodes.push((g.filter(f1, p2), types));
+            }
+        }
+    }
+    // Sink the newest node plus one random earlier node (multi-sink +
+    // dead-node coverage).
+    g.sink(nodes.last().unwrap().0);
+    let extra = rng.next_below(nodes.len() as u64) as usize;
+    g.sink(nodes[extra].0);
+    g
+}
+
+fn sources(rows: usize, seed: u64) -> [(&'static str, Table); 2] {
+    [
+        ("a", paper_table(rows, 0.6, seed)),
+        ("b", paper_table(rows, 0.6, seed ^ 0xBEEF)),
+    ]
+}
+
+#[test]
+fn optimized_equals_naive_randomized_world1() {
+    for case in 0..12u64 {
+        let g = build_random_graph(0x9A10 + case);
+        let srcs = sources(400, 0x11 + case);
+        let mut base: Option<Vec<Table>> = None;
+        for threads in [1usize, 2, 7] {
+            let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(threads);
+            let naive = g.execute_naive_with(&mut ctx, &srcs).unwrap();
+            let opt = g.execute_with(&mut ctx, &srcs).unwrap();
+            assert_eq!(naive.len(), opt.len());
+            for (k, (n, o)) in naive.iter().zip(&opt).enumerate() {
+                assert!(
+                    o.data_equals(n),
+                    "case {case} threads {threads} sink {k}:\n{}",
+                    g.explain_optimized(1, &srcs).unwrap()
+                );
+            }
+            // and identical across thread counts
+            if let Some(b) = &base {
+                for (x, y) in b.iter().zip(&opt) {
+                    assert!(x.data_equals(y), "case {case} thread-variance");
+                }
+            } else {
+                base = Some(opt);
+            }
+        }
+    }
+}
+
+#[test]
+fn optimized_equals_naive_randomized_world3() {
+    let world = 3;
+    for case in 0..6u64 {
+        let seed = 0x3A10 + case;
+        let run = |optimized: bool| -> Vec<Vec<Table>> {
+            run_workers(world, &CommConfig::default(), move |ctx| {
+                let g = build_random_graph(seed);
+                let srcs = sources(200, 0x77 + seed * 10 + ctx.rank() as u64);
+                for threads in [1usize, 2] {
+                    ctx.set_parallelism(threads);
+                    // outputs must not depend on threads either way
+                    let r1 = if optimized {
+                        g.execute_with(ctx, &srcs).unwrap()
+                    } else {
+                        g.execute_naive_with(ctx, &srcs).unwrap()
+                    };
+                    if threads == 2 {
+                        return r1;
+                    }
+                }
+                unreachable!()
+            })
+        };
+        let naive = run(false);
+        let opt = run(true);
+        for (rank, (n, o)) in naive.iter().zip(&opt).enumerate() {
+            assert_eq!(n.len(), o.len());
+            for (k, (nt, ot)) in n.iter().zip(o).enumerate() {
+                assert!(ot.data_equals(nt), "case {case} rank {rank} sink {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pushdown_above_radix_threshold_replays_pinned_decisions() {
+    // Inputs big enough that the naive set ops / hash join run the
+    // 64-way radix path (12k + 6k > 16Ki rows) while the filtered
+    // inputs would not; asymmetric sizes so the join's default build
+    // side would flip after filtering. The pinned fan-out and
+    // orientation must reproduce the naive order anyway.
+    let srcs = [
+        ("a", paper_table(12_000, 0.6, 0xAA)),
+        ("b", paper_table(6_000, 0.6, 0xBB)),
+    ];
+    // union → filter (sinks below both sides, pinned fan-out)
+    let mut g1 = Graph::new();
+    let a = g1.source("a");
+    let b = g1.source("b");
+    let u = g1.union(a, b);
+    let f = g1.filter(u, Expr::col(1).lt(Expr::lit_f64(0.2)));
+    g1.sink(f);
+    // join (|l| > |r|) → filter on left cols that shrinks l below |r|
+    // (pinned orientation), then a projection
+    let mut g2 = Graph::new();
+    let a2 = g2.source("a");
+    let b2 = g2.source("b");
+    let p = g2.project(b2, vec![0, 1]); // smaller, narrower right side
+    let j = g2.join(a2, p, JoinConfig::inner(0, 0));
+    let f2 = g2.filter(j, Expr::col(1).lt(Expr::lit_f64(0.1)));
+    let pr = g2.project(f2, vec![0, 1, 5]);
+    g2.sink(pr);
+    for (name, g) in [("union", g1), ("join", g2)] {
+        for threads in [1usize, 7] {
+            let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(threads);
+            let naive = g.execute_naive_with(&mut ctx, &srcs).unwrap();
+            let opt = g.execute_with(&mut ctx, &srcs).unwrap();
+            assert!(
+                opt[0].data_equals(&naive[0]),
+                "{name} threads {threads}:\n{}",
+                g.explain_optimized(1, &srcs).unwrap()
+            );
+        }
+    }
+}
+
+#[test]
+fn shuffle_elision_fires_on_partitioned_pipeline() {
+    // join establishes hash(c0) at world 3; the downstream group-by on
+    // the same key must skip its partial shuffle (the second-stage
+    // AllToAll), and a second join on the key must skip its left-side
+    // shuffle — both proven via ShuffleStats-derived ExecStats, with
+    // per-rank outputs bit-identical to naive execution.
+    let world = 3;
+    let build = || {
+        let mut g = Graph::new();
+        let a = g.source("a");
+        let b = g.source("b");
+        let c = g.source("c");
+        let j1 = g.join(a, b, JoinConfig::inner(0, 0));
+        let gb = g.group_by(j1, 0, vec![AggSpec::new(AggFn::Sum, 1)]);
+        let j2 = g.join(j1, c, JoinConfig::inner(0, 0));
+        g.sink(gb);
+        g.sink(j2);
+        g
+    };
+    let run = |optimized: bool| -> Vec<(Vec<Table>, ExecStats)> {
+        run_workers(world, &CommConfig::default(), move |ctx| {
+            ctx.set_optimize(optimized);
+            let srcs = [
+                ("a", paper_table(200, 0.5, 61 + ctx.rank() as u64)),
+                ("b", paper_table(200, 0.5, 71 + ctx.rank() as u64)),
+                ("c", paper_table(200, 0.5, 81 + ctx.rank() as u64)),
+            ];
+            build().execute_with_stats(ctx, &srcs).unwrap()
+        })
+    };
+    let naive = run(false);
+    let opt = run(true);
+    for (rank, ((nt, ns), (ot, os))) in naive.iter().zip(&opt).enumerate() {
+        for (k, (a, b)) in nt.iter().zip(ot).enumerate() {
+            assert!(b.data_equals(a), "rank {rank} sink {k}");
+        }
+        assert_eq!(ns.shuffles_elided, 0, "naive path never elides");
+        // group-by partial shuffle + second join's left shuffle
+        assert!(
+            os.shuffles_elided >= 2,
+            "rank {rank}: expected ≥2 elided shuffles, got {os:?}"
+        );
+        assert!(os.shuffles < ns.shuffles, "elision must reduce real shuffles");
+    }
+}
+
+#[test]
+fn string_predicates_push_through_projections() {
+    use rylon::table::Array;
+    let t = Table::from_arrays(vec![
+        (
+            "s",
+            Array::Utf8(rylon::table::column::Utf8Array::from_options(&[
+                Some("apple"),
+                Some("pear"),
+                None,
+                Some("plum"),
+                Some("apple"),
+                Some("fig"),
+            ])),
+        ),
+        ("k", Array::from_i64(vec![1, 2, 3, 4, 5, 6])),
+        ("v", Array::from_f64(vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6])),
+    ])
+    .unwrap();
+    let mut g = Graph::new();
+    let src = g.source("t");
+    let p = g.project(src, vec![1, 0]); // reorder: k, s
+    let f = g.filter(p, Expr::col(1).ge(Expr::lit_str("pe")).and(Expr::col(1).is_null().not()));
+    g.sink(f);
+    let srcs = [("t", t)];
+    let mut ctx = rylon::ctx::CylonContext::init_local();
+    let naive = g.execute_naive_with(&mut ctx, &srcs).unwrap();
+    let opt = g.execute_with(&mut ctx, &srcs).unwrap();
+    assert!(opt[0].data_equals(&naive[0]));
+    assert_eq!(opt[0].num_rows(), 2); // pear, plum
+    let plan = g.explain_optimized(1, &srcs).unwrap();
+    assert!(plan.contains("predicate pushdown"), "{plan}");
+}
+
+#[test]
+fn invalid_graphs_error_on_both_paths() {
+    // out-of-range predicate column: optimizer must fall back and the
+    // error must surface exactly as it does naively
+    let mut g = Graph::new();
+    let s = g.source("t");
+    let f = g.filter(s, Expr::col(99).is_null());
+    g.sink(f);
+    let srcs = [("t", paper_table(10, 1.0, 1))];
+    let mut ctx = rylon::ctx::CylonContext::init_local();
+    assert!(g.execute_naive_with(&mut ctx, &srcs).is_err());
+    assert!(g.execute_with(&mut ctx, &srcs).is_err());
+    // a dead ill-typed node also errors on both paths
+    let mut g2 = Graph::new();
+    let s2 = g2.source("t");
+    let _dead = g2.filter(s2, Expr::col(0).and(Expr::col(1)));
+    let ok = g2.project(s2, vec![0]);
+    g2.sink(ok);
+    assert!(g2.execute_naive_with(&mut ctx, &srcs).is_err());
+    assert!(g2.execute_with(&mut ctx, &srcs).is_err());
+}
