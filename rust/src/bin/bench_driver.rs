@@ -7,7 +7,7 @@
 //! bench_driver fig9   [--op join|union]   engine comparison (Fig. 9 a/b)
 //! bench_driver table2                     Table II (join times + speedups)
 //! bench_driver fig10                      binding overhead (Fig. 10)
-//! bench_driver local  [--op join|groupby|sort|partition|shuffle|pipeline] thread sweep
+//! bench_driver local  [--op join|groupby|sort|partition|shuffle|pipeline|wire] thread sweep
 //! bench_driver all                        everything above
 //! ```
 //!
@@ -32,7 +32,12 @@
 //! join→filter→project→group_by dataflow graph with the planner off
 //! (`pipeline_naive`) vs on (`pipeline_opt`), at world 1 (predicate +
 //! projection pushdown) and world 3 (plus shuffle elision) — outputs
-//! are bit-identical, so the wall-time delta is pure plan quality.
+//! are bit-identical, so the wall-time delta is pure plan quality. Its
+//! `wire` op sweeps the zero-copy wire path: in-place parallel
+//! serialize (`wire_ser`) and header-indexed parallel decode
+//! (`wire_de`) at world 1, plus the concat-on-decode shuffle
+//! (`wire_shuffle`) at world 1 and 3 — bytes and tables are identical
+//! at every thread count, so the deltas are pure wire throughput.
 //!
 //! Every run also appends to `<out-dir>/BENCH_results.json` — one
 //! record per (target, op, rows, world, threads) with wall seconds and
@@ -582,8 +587,11 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
         "partition" => vec!["partition"],
         "shuffle" => vec!["shuffle"],
         "pipeline" => vec!["pipeline"],
+        "wire" => vec!["wire"],
         // Implicit default ("join" from parse_opts) or explicit "all".
-        "all" | "join" => vec!["join", "groupby", "sort", "partition", "shuffle", "pipeline"],
+        "all" | "join" => {
+            vec!["join", "groupby", "sort", "partition", "shuffle", "pipeline", "wire"]
+        }
         other => return Err(format!("unknown local op '{other}'")),
     };
     let mut report = Report::new(
@@ -596,6 +604,11 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
             if op == "pipeline" {
                 bench_pipeline(opts, threads, &mut report, records)?;
                 eprintln!("[local/pipeline] threads={threads} done");
+                continue;
+            }
+            if op == "wire" {
+                bench_wire(opts, threads, &mut report, records)?;
+                eprintln!("[local/wire] threads={threads} done");
                 continue;
             }
             let (wall, part, comm, world) = bench_local_op(opts, op, threads)?;
@@ -723,6 +736,80 @@ fn bench_pipeline(
     }
     emit("pipeline_naive", world, dist_walls[0], None);
     emit("pipeline_opt", world, dist_walls[1], Some(dist_walls[0]));
+    Ok(())
+}
+
+/// The zero-copy wire path sweep: in-place parallel serialize and
+/// header-indexed parallel decode timed for real at world 1, plus the
+/// concat-on-decode shuffle at world 1 and 3. Wire bytes and decoded
+/// tables are identical at every thread count, so the sweep measures
+/// pure wire throughput.
+fn bench_wire(
+    opts: &Opts,
+    threads: usize,
+    report: &mut Report,
+    records: &mut Vec<BenchRecord>,
+) -> CliResult<()> {
+    use rylon::net::serialize::{deserialize_table_par, serialize_table_par};
+    let n = opts.total_rows;
+    let runs = opts.runs.max(1);
+    let mut emit = |label: &str, world: usize, wall: f64, part: f64, comm: f64| {
+        report.add_row(vec![
+            format!("{label}_w{world}"),
+            threads.to_string(),
+            fmt_s(wall),
+            "-".into(),
+        ]);
+        records.push(BenchRecord {
+            target: "local".into(),
+            op: label.to_string(),
+            rows: n,
+            world,
+            threads,
+            wall_secs: wall,
+            partition_secs: part,
+            comm_secs: comm,
+        });
+    };
+
+    // ---- serialize / deserialize, world 1 -------------------------
+    let t = paper_table(n, 0.9, 0xA11E);
+    let bytes = serialize_table_par(&t, threads); // warm + reference buffer
+    let ser = rylon::metrics::measure(runs, 1, || {
+        let t0 = Instant::now();
+        std::hint::black_box(serialize_table_par(&t, threads).len());
+        t0.elapsed().as_secs_f64()
+    });
+    emit("wire_ser", 1, ser.median_secs, 0.0, 0.0);
+    let de = rylon::metrics::measure(runs, 1, || {
+        let t0 = Instant::now();
+        std::hint::black_box(deserialize_table_par(&bytes, threads).expect("decode").num_rows());
+        t0.elapsed().as_secs_f64()
+    });
+    emit("wire_de", 1, de.median_secs, 0.0, 0.0);
+
+    // ---- concat-on-decode shuffle, world 1 and 3 ------------------
+    for world in [1usize, 3] {
+        let mut samples: Vec<(f64, f64, f64)> = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                let t = worker_partition(n, world, ctx.rank(), 0.9, 0x77E1);
+                let t0 = Instant::now();
+                let (out, stats) = rylon::dist::shuffle(ctx, &t, 0).expect("shuffle");
+                std::hint::black_box(out.num_rows());
+                (t0.elapsed().as_secs_f64(), stats)
+            });
+            samples.push((
+                outs.iter().map(|(w, _)| *w).fold(0.0f64, f64::max),
+                outs.iter().map(|(_, s)| s.partition_secs).fold(0.0f64, f64::max),
+                outs.iter().map(|(_, s)| s.comm_secs).fold(0.0f64, f64::max),
+            ));
+        }
+        samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let (wall, part, comm) = samples[samples.len() / 2];
+        emit("wire_shuffle", world, wall, part, comm);
+    }
     Ok(())
 }
 

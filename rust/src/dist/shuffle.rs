@@ -123,7 +123,10 @@ fn shuffle_with(
     let parts = partition_by_ids_par(t, &ids, world, threads)?;
     stats.partition_secs = t0.elapsed().as_secs_f64();
 
-    // Comm superstep: AllToAll the parts, concat what we received.
+    // Comm superstep: AllToAll the parts on the concat-on-decode path —
+    // incoming wire buffers decode straight into one pre-sized output
+    // table, and the rank's own partition loops back unserialized
+    // (see `crate::net::Communicator::shuffle_tables`).
     let t1 = Instant::now();
     let comm = ctx.communicator();
     let bytes_before = comm.comm_bytes();

@@ -37,7 +37,7 @@
 use super::OpStats;
 use crate::ctx::CylonContext;
 use crate::error::{Error, Result};
-use crate::net::serialize::{deserialize_table, serialize_table};
+use crate::net::serialize::{deserialize_table_par, serialize_table};
 use crate::ops::parallel::{concat_chunks, map_morsels};
 use crate::ops::partition::partition_by_ids_par;
 use crate::ops::project::project;
@@ -96,7 +96,7 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     let t2 = Instant::now();
     let mut gathered: Vec<Table> = Vec::with_capacity(blobs.len());
     for b in &blobs {
-        gathered.push(deserialize_table(b)?);
+        gathered.push(deserialize_table_par(b, threads)?);
     }
     let refs: Vec<&Table> = gathered.iter().collect();
     // Same splitters on every rank: sort output is a pure function of
@@ -131,7 +131,8 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     let parts = partition_by_ids_par(t, &ids, world, threads)?;
     partition_secs += t2.elapsed().as_secs_f64();
 
-    // 4. Shuffle ranges into place and sort locally.
+    // 4. Shuffle ranges into place (concat-on-decode: incoming parts
+    //    decode straight into one table) and sort locally.
     let t3 = Instant::now();
     let comm = ctx.communicator();
     let merged = comm.shuffle_tables(parts)?;

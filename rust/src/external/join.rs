@@ -41,6 +41,8 @@ fn spill_partitions(
 }
 
 fn load_all(path: &PathBuf, schema_of: &Table) -> Result<Table> {
+    // Partition batches decode column-parallel under the process-wide
+    // thread budget (the external join carries no explicit budget).
     let mut r = SpillReader::open(path)?;
     let batches = r.read_all()?;
     if batches.is_empty() {

@@ -125,10 +125,11 @@ pub fn external_sort_streaming_par(
         return Ok(0);
     }
 
-    // Phase 2: k-way merge of run cursors.
+    // Phase 2: k-way merge of run cursors. Batch decode rides the same
+    // thread budget as the run sorts (column-parallel wire decode).
     let mut cursors = run_paths
         .iter()
-        .map(|p| RunCursor::new(SpillReader::open(p)?, col))
+        .map(|p| RunCursor::new(SpillReader::open(p)?.with_parallelism(threads), col))
         .collect::<Result<Vec<_>>>()?;
     let mut out = TableBuilder::with_capacity(input.schema().clone(), batch_rows);
     let mut total = 0usize;

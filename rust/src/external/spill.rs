@@ -2,7 +2,7 @@
 //! on disk. The unit all out-of-core operators stream through.
 
 use crate::error::{Error, Result};
-use crate::net::serialize::{deserialize_table, serialize_table_par};
+use crate::net::serialize::{deserialize_table_par, serialize_table_par};
 use crate::ops::parallel::parallelism;
 use crate::table::Table;
 use std::fs::File;
@@ -60,11 +60,17 @@ impl SpillWriter {
 
 /// Streaming reader of table batches. The wire buffer is reused across
 /// batches, so a long merge allocates once per high-water batch size
-/// instead of once per batch.
+/// instead of once per batch. Batches decode column-parallel on the
+/// reader's thread budget ([`SpillReader::with_parallelism`] — callers
+/// holding a [`crate::ctx::CylonContext`] thread it through here, like
+/// the shuffle wire path; unset, the process knob applies at call
+/// time). Decoded tables are bit-identical at every budget.
 pub struct SpillReader {
     input: BufReader<File>,
     path: PathBuf,
     buf: Vec<u8>,
+    /// Decode thread budget; 0 = process-wide knob at call time.
+    threads: usize,
 }
 
 impl SpillReader {
@@ -72,7 +78,20 @@ impl SpillReader {
         let path = path.as_ref().to_path_buf();
         let file = File::open(&path)
             .map_err(|e| Error::io(format!("{}: {e}", path.display())))?;
-        Ok(SpillReader { input: BufReader::new(file), path, buf: Vec::new() })
+        Ok(SpillReader { input: BufReader::new(file), path, buf: Vec::new(), threads: 0 })
+    }
+
+    /// Set the decode thread budget (builder form; speed only — the
+    /// decoded batches are identical at every value).
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.set_parallelism(threads);
+        self
+    }
+
+    /// Set the decode thread budget in place (`0` restores the default:
+    /// follow the process-wide knob at call time).
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.threads = threads;
     }
 
     /// Next batch, or `None` at end of file.
@@ -89,7 +108,11 @@ impl SpillReader {
         self.input
             .read_exact(&mut self.buf)
             .map_err(|e| Error::io(format!("{}: truncated batch: {e}", self.path.display())))?;
-        deserialize_table(&self.buf).map(Some)
+        let threads = match self.threads {
+            0 => parallelism(),
+            n => n,
+        };
+        deserialize_table_par(&self.buf, threads).map(Some)
     }
 
     /// Drain all batches (tests / small files).
@@ -157,6 +180,30 @@ mod tests {
         assert_eq!(batches.len(), 2);
         assert!(batches[0].data_equals(&a));
         assert!(batches[1].data_equals(&b));
+    }
+
+    #[test]
+    fn reader_thread_budget_is_bit_identical() {
+        let mut dir = SpillDir::new("par").unwrap();
+        let p = dir.next_path();
+        let mut w = SpillWriter::create(&p).unwrap();
+        // Above PAR_MIN_ROWS so the column-parallel decode actually runs.
+        let t = random_table(crate::ops::parallel::PAR_MIN_ROWS + 11, 0x5B11);
+        w.write_par(&t, 2).unwrap();
+        let path = w.finish().unwrap();
+        let serial = SpillReader::open(&path)
+            .unwrap()
+            .with_parallelism(1)
+            .next_batch()
+            .unwrap()
+            .unwrap();
+        assert!(serial.data_equals(&t));
+        for threads in [2usize, 7] {
+            let mut r = SpillReader::open(&path).unwrap();
+            r.set_parallelism(threads);
+            let got = r.next_batch().unwrap().unwrap();
+            assert!(got.data_equals(&serial), "threads={threads}");
+        }
     }
 
     #[test]

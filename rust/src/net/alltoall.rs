@@ -6,10 +6,12 @@
 //! tag, so consecutive supersteps never cross-match (BSP discipline).
 
 use super::model::NetworkModel;
-use super::serialize::{deserialize_table, serialize_table_par};
+use super::serialize::{
+    concat_decode_parts, deserialize_table_par, serialize_table_par, WirePart,
+};
 use super::{CommConfig, Transport};
 use crate::error::{Error, Result};
-use crate::table::{take::concat_tables, Table};
+use crate::table::Table;
 
 /// Collective op codes folded into tags (low byte).
 const OP_ALLTOALL: u64 = 1;
@@ -92,6 +94,26 @@ impl Communicator {
         (self.generation << 8) | op
     }
 
+    /// Shared send half of the table collectives: serialize every
+    /// remote partition on the communicator's thread budget and keep
+    /// the rank's own partition unserialized (the loopback fast path).
+    /// Returns the wire buffers (self slot empty) and the own table.
+    fn encode_parts(&self, parts: Vec<Table>) -> (Vec<Vec<u8>>, Option<Table>) {
+        let rank = self.rank();
+        let threads = self.wire_parallelism();
+        let mut wire: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
+        let mut own: Option<Table> = None;
+        for (d, p) in parts.into_iter().enumerate() {
+            if d == rank {
+                own = Some(p); // loopback: never encoded
+                wire.push(Vec::new());
+            } else {
+                wire.push(serialize_table_par(&p, threads));
+            }
+        }
+        (wire, own)
+    }
+
     /// AllToAll of raw byte buffers: `parts[d]` goes to rank `d`; returns
     /// what every rank sent to us (index = source rank). The self part
     /// is moved, not copied ("zero copy" within a process, §III).
@@ -124,18 +146,20 @@ impl Communicator {
 
     /// AllToAll of table partitions: `parts[d]` is the partition routed
     /// to rank `d`; returns the partitions every rank routed to us.
+    ///
+    /// The rank's own partition takes a **loopback fast path**: it is
+    /// moved through unserialized (no serialize→deserialize round trip)
+    /// and — like every self-delivery in [`Communicator::all_to_all_bytes`]
+    /// — bypasses the cost model, so `comm_bytes`/`comm_seconds` count
+    /// remote traffic only. Accounting policies that want the self
+    /// partition's would-be wire size can compute it without
+    /// materializing the bytes via
+    /// [`crate::net::serialize::table_wire_size`]. Remote partitions
+    /// serialize and decode on the communicator's thread budget.
     pub fn all_to_all_tables(&mut self, parts: Vec<Table>) -> Result<Vec<Table>> {
         let rank = self.rank();
-        let mut wire: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
-        let mut own: Option<Table> = None;
-        for (d, p) in parts.into_iter().enumerate() {
-            if d == rank {
-                own = Some(p); // keep the local partition unserialized
-                wire.push(Vec::new());
-            } else {
-                wire.push(serialize_table_par(&p, self.wire_parallelism()));
-            }
-        }
+        let threads = self.wire_parallelism();
+        let (wire, mut own) = self.encode_parts(parts);
         let buffers = self.all_to_all_bytes(wire)?;
         buffers
             .into_iter()
@@ -144,18 +168,50 @@ impl Communicator {
                 if src == rank {
                     Ok(own.take().expect("own partition present"))
                 } else {
-                    deserialize_table(&b)
+                    deserialize_table_par(&b, threads)
                 }
             })
             .collect()
     }
 
-    /// Shuffle = AllToAll + concat: every rank ends with the concatenation
-    /// of what all ranks routed to it.
+    /// Shuffle = AllToAll + concat, on the **concat-on-decode** path:
+    /// every rank ends with the concatenation, in source-rank order, of
+    /// what all ranks routed to it. Instead of materializing a `Table`
+    /// per incoming part and copying again in `concat_tables`, the
+    /// incoming headers' row/byte extents pre-size one output table and
+    /// all parts decode directly into it
+    /// ([`crate::net::serialize::concat_decode_parts`]). The rank's own
+    /// partition rides its loopback fast path (never encoded), and at
+    /// world 1 the shuffle is the identity — the lone part is returned
+    /// as-is, with accounting untouched (zero bytes, like every
+    /// self-delivery).
     pub fn shuffle_tables(&mut self, parts: Vec<Table>) -> Result<Table> {
-        let received = self.all_to_all_tables(parts)?;
-        let refs: Vec<&Table> = received.iter().collect();
-        concat_tables(&refs)
+        let (rank, world) = (self.rank(), self.world());
+        if parts.len() != world {
+            return Err(Error::comm(format!(
+                "shuffle needs {world} parts, got {}",
+                parts.len()
+            )));
+        }
+        if world == 1 {
+            return Ok(parts.into_iter().next().expect("one part"));
+        }
+        let threads = self.wire_parallelism();
+        let (wire, own) = self.encode_parts(parts);
+        let buffers = self.all_to_all_bytes(wire)?;
+        let own = own.expect("own partition present");
+        let srcs: Vec<WirePart<'_>> = buffers
+            .iter()
+            .enumerate()
+            .map(|(src, b)| {
+                if src == rank {
+                    WirePart::Table(&own)
+                } else {
+                    WirePart::Bytes(b.as_slice())
+                }
+            })
+            .collect();
+        concat_decode_parts(&srcs, threads)
     }
 
     /// Gather byte blobs at `root` (None elsewhere).
@@ -329,6 +385,49 @@ mod tests {
                 assert_eq!(hash_i64(keys.value(i)) % 4, rank as u32);
             }
         }
+    }
+
+    #[test]
+    fn shuffle_concat_on_decode_matches_decode_then_concat() {
+        use crate::table::take::concat_tables;
+        // The same partitions through both receive paths: the fused
+        // concat-on-decode shuffle and the naive AllToAll + concat.
+        let world = 3;
+        let fused = run_world(world, move |mut c| {
+            let t = paper_table(150, 1.0, 31 + c.rank() as u64);
+            let parts = hash_partition(&t, 0, world).unwrap();
+            c.shuffle_tables(parts).unwrap()
+        });
+        let naive = run_world(world, move |mut c| {
+            let t = paper_table(150, 1.0, 31 + c.rank() as u64);
+            let parts = hash_partition(&t, 0, world).unwrap();
+            let received = c.all_to_all_tables(parts).unwrap();
+            let refs: Vec<&Table> = received.iter().collect();
+            concat_tables(&refs).unwrap()
+        });
+        for (f, n) in fused.iter().zip(&naive) {
+            assert!(f.data_equals(n));
+            assert_eq!(f.schema(), n.schema());
+        }
+    }
+
+    #[test]
+    fn shuffle_world_one_is_identity_with_zero_bytes() {
+        let out = run_world(1, |mut c| {
+            let t = paper_table(50, 1.0, 9);
+            let parts = hash_partition(&t, 0, 1).unwrap();
+            let got = c.shuffle_tables(parts).unwrap();
+            (t.data_equals(&got), c.comm_bytes())
+        });
+        assert_eq!(out, vec![(true, 0)]);
+    }
+
+    #[test]
+    fn shuffle_rejects_wrong_part_count() {
+        let out = run_world(2, |mut c| {
+            c.shuffle_tables(vec![paper_table(5, 1.0, 1)]).is_err()
+        });
+        assert!(out.into_iter().all(|e| e));
     }
 
     #[test]

@@ -13,6 +13,53 @@
 //!   message so wall-clock *shapes* match cluster behaviour;
 //! * [`Communicator`] — MPI-style collectives (AllToAll, AllGather,
 //!   Gather, Bcast, Barrier, AllReduce) over any transport.
+//!
+//! # Wire format (version 2)
+//!
+//! Tables cross the wire in the versioned columnar layout of
+//! [`serialize`] (all little-endian):
+//!
+//! ```text
+//! magic:u32 ("RYLN")  version:u32  ncols:u32  nrows:u64
+//! extents index: block_len:u64 × ncols     ← byte length of each column block
+//! per column block:
+//!   name_len:u32 name_bytes  dtype:u8  has_validity:u8
+//!   [validity words: u64 × ceil(nrows/64)]          if has_validity
+//!   Int64/Float64: values (8·nrows B) | Bool: values (nrows B, 0/1)
+//!   Utf8: offsets (4·(nrows+1) B) + data_len:u64 + data
+//! ```
+//!
+//! The **extents index** is what makes the wire path parallel end to
+//! end: the serializer precomputes every block's exact length and
+//! writes blocks in place into disjoint regions of one pre-sized
+//! buffer, the deserializer scans the index and decodes blocks
+//! concurrently, and the shuffle's concat-on-decode sums the incoming
+//! headers' extents to decode all parts straight into one output table
+//! ([`serialize::concat_decode_parts`]). Buffers with a mismatching
+//! magic or version are rejected with a clear error — version-1
+//! buffers (no version field, no extents index) cannot be read by this
+//! layer.
+//!
+//! Serial and parallel are interchangeable at every stage: wire bytes
+//! are byte-identical and decoded tables bit-identical at every thread
+//! count (pinned in `tests/prop_wire.rs`).
+//!
+//! ```
+//! use rylon::net::serialize::{deserialize_table_par, serialize_table_par, table_wire_size};
+//! use rylon::table::{Array, Table};
+//!
+//! let t = Table::from_arrays(vec![
+//!     ("k", Array::from_i64_opts(vec![Some(1), None, Some(3)])),
+//!     ("s", Array::from_strs(&["a", "", "xyz"])),
+//! ])
+//! .unwrap();
+//! let bytes = serialize_table_par(&t, 1);
+//! assert_eq!(bytes.len(), table_wire_size(&t)); // exact pre-sizing
+//! assert_eq!(serialize_table_par(&t, 4), bytes); // byte-identical wire
+//! let back = deserialize_table_par(&bytes, 4).unwrap();
+//! assert!(back.data_equals(&t)); // bit-identical table
+//! assert_eq!(back.schema(), t.schema());
+//! ```
 
 pub mod alltoall;
 pub mod channel;

@@ -1,10 +1,11 @@
 //! Table ⇄ bytes wire format for the shuffle.
 //!
-//! Layout (all little-endian):
+//! Layout (version [`WIRE_VERSION`], all little-endian):
 //!
 //! ```text
-//! magic:u32  ncols:u32  nrows:u64
-//! per column:
+//! magic:u32  version:u32  ncols:u32  nrows:u64
+//! extents index: block_len:u64 × ncols      (byte length of each column block)
+//! per column block:
 //!   name_len:u32 name_bytes
 //!   dtype:u8  has_validity:u8
 //!   [validity words: u64 × ceil(nrows/64)]          if has_validity
@@ -17,24 +18,52 @@
 //! column buffers are memcpy'd, which is what makes shuffle cost linear
 //! in bytes (the β term of the network model).
 //!
-//! Serialization is **column-parallel**: every column block's exact
-//! wire size is computable up front (`column_wire_size` — plain
-//! arithmetic over row counts and offset tails), so the output buffer
-//! is allocated once at its final size and, above the small-input
-//! threshold, column blocks are encoded concurrently on the morsel
-//! thread pool and concatenated in schema order — byte-identical to
-//! the serial encoding at every thread count.
+//! Both halves of the wire path are column-parallel and **in place**:
+//!
+//! * [`serialize_table_par`] computes every column block's exact wire
+//!   size up front ([`column_wire_size`] — plain arithmetic over row
+//!   counts and offset tails), allocates the output once at its final
+//!   size, and encodes each block directly into its disjoint
+//!   `split_at_mut` region via
+//!   [`crate::ops::parallel::for_each_slice_mut`] — no per-column
+//!   scratch buffer, byte-identical output at every thread count.
+//! * [`deserialize_table_par`] scans the header's extents index to
+//!   locate every block, then decodes columns concurrently on
+//!   [`crate::ops::parallel::map_tasks`] — bit-identical tables at
+//!   every thread count.
+//! * [`concat_decode_parts`] is the shuffle's concat-on-decode: given
+//!   the rank's own (still in-memory) partition and the remote wire
+//!   buffers, it sums row/byte extents from the headers and decodes all
+//!   parts directly into one output table's exactly pre-sized buffers —
+//!   bit-identical to decode-each-then-[`concat_tables`], without the
+//!   per-part intermediate tables.
+//!
+//! [`concat_tables`]: crate::table::take::concat_tables
 
 use crate::error::{Error, Result};
-use crate::ops::parallel::{map_tasks, parallelism, PAR_MIN_ROWS};
+use crate::ops::parallel::{for_each_slice_mut, map_tasks, parallelism, PAR_MIN_ROWS};
 use crate::table::{
     bitmap::Bitmap,
-    column::{Array, BoolArray, Float64Array, Int64Array, Utf8Array},
+    column::{Array, BoolArray, Float64Array, Int64Array, PrimitiveArray, Utf8Array},
     DataType, Field, Schema, Table,
 };
 use std::sync::Arc;
 
 const MAGIC: u32 = 0x52_59_4c_4e; // "RYLN"
+
+/// Wire format version. Version 2 added the explicit version field and
+/// the per-column extents index (what makes header-indexed parallel
+/// decode and concat-on-decode possible); version-1 buffers (PRs 1–4)
+/// had neither and are rejected with a clear error.
+pub const WIRE_VERSION: u32 = 2;
+
+/// Fixed header bytes before the extents index.
+const HEADER_FIXED: usize = 4 + 4 + 4 + 8;
+
+#[inline]
+fn header_size(ncols: usize) -> usize {
+    HEADER_FIXED + ncols * 8
+}
 
 fn dtype_code(dt: DataType) -> u8 {
     match dt {
@@ -53,27 +82,6 @@ fn dtype_from(code: u8) -> Result<DataType> {
         3 => DataType::Bool,
         c => return Err(Error::comm(format!("bad dtype code {c}"))),
     })
-}
-
-/// Bulk little-endian copy of a u64-sized slice (the wire is LE; on LE
-/// hosts this is one memcpy instead of a per-element loop — §Perf).
-#[inline]
-fn put_words<T: Copy>(buf: &mut Vec<u8>, vals: &[T]) {
-    debug_assert_eq!(std::mem::size_of::<T>(), 8);
-    #[cfg(target_endian = "little")]
-    // SAFETY: T is a plain 8-byte scalar (i64/u64/f64-bits); reading its
-    // bytes is defined, and the slice bounds are exact.
-    unsafe {
-        buf.extend_from_slice(std::slice::from_raw_parts(
-            vals.as_ptr() as *const u8,
-            vals.len() * 8,
-        ));
-    }
-    #[cfg(target_endian = "big")]
-    for v in vals {
-        let raw: u64 = unsafe { std::mem::transmute_copy(v) };
-        buf.extend_from_slice(&raw.to_le_bytes());
-    }
 }
 
 /// Bulk read of `n` u64-sized values from LE bytes.
@@ -95,14 +103,98 @@ fn get_words<T: Copy + Default>(bytes: &[u8], n: usize) -> Vec<T> {
     out
 }
 
+/// Append `n` u64-sized values decoded from LE bytes onto `out` — the
+/// concat-on-decode analog of [`get_words`] (decodes into a shared
+/// pre-sized vector instead of a per-part scratch one).
 #[inline]
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
+fn append_words_le<T: Copy + Default>(out: &mut Vec<T>, bytes: &[u8], n: usize) {
+    debug_assert_eq!(std::mem::size_of::<T>(), 8);
+    debug_assert!(bytes.len() >= n * 8);
+    let old = out.len();
+    out.resize(old + n, T::default());
+    #[cfg(target_endian = "little")]
+    // SAFETY: the freshly resized tail has exactly n*8 writable bytes.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out[old..].as_mut_ptr() as *mut u8, n * 8);
+    }
+    #[cfg(target_endian = "big")]
+    for (i, c) in bytes.chunks_exact(8).take(n).enumerate() {
+        let v = u64::from_le_bytes(c.try_into().unwrap());
+        out[old + i] = unsafe { std::mem::transmute_copy(&v) };
+    }
 }
 
-#[inline]
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
+/// Cursor writing into an exactly pre-sized `&mut [u8]` region — the
+/// in-place half of the zero-copy wire path (no growth, no scratch).
+struct SliceWriter<'a> {
+    buf: &'a mut [u8],
+    pos: usize,
+}
+
+impl<'a> SliceWriter<'a> {
+    fn new(buf: &'a mut [u8]) -> Self {
+        SliceWriter { buf, pos: 0 }
+    }
+
+    #[inline]
+    fn put_u8(&mut self, v: u8) {
+        self.buf[self.pos] = v;
+        self.pos += 1;
+    }
+
+    #[inline]
+    fn put_bytes(&mut self, b: &[u8]) {
+        self.buf[self.pos..self.pos + b.len()].copy_from_slice(b);
+        self.pos += b.len();
+    }
+
+    #[inline]
+    fn put_u32(&mut self, v: u32) {
+        self.put_bytes(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn put_u64(&mut self, v: u64) {
+        self.put_bytes(&v.to_le_bytes());
+    }
+
+    /// Bulk little-endian write of a u64-sized slice (the wire is LE;
+    /// on LE hosts this is one memcpy instead of a per-element loop).
+    #[inline]
+    fn put_words<T: Copy>(&mut self, vals: &[T]) {
+        debug_assert_eq!(std::mem::size_of::<T>(), 8);
+        let n = vals.len() * 8;
+        let dst = &mut self.buf[self.pos..self.pos + n];
+        #[cfg(target_endian = "little")]
+        // SAFETY: T is a plain 8-byte scalar (i64/u64/f64-bits); reading
+        // its bytes is defined, and dst has exactly n writable bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(vals.as_ptr() as *const u8, dst.as_mut_ptr(), n);
+        }
+        #[cfg(target_endian = "big")]
+        for (c, v) in dst.chunks_exact_mut(8).zip(vals) {
+            let raw: u64 = unsafe { std::mem::transmute_copy(v) };
+            c.copy_from_slice(&raw.to_le_bytes());
+        }
+        self.pos += n;
+    }
+
+    /// Bulk little-endian write of a u32 slice (Utf8 offsets).
+    #[inline]
+    fn put_u32s(&mut self, vals: &[u32]) {
+        let n = vals.len() * 4;
+        let dst = &mut self.buf[self.pos..self.pos + n];
+        #[cfg(target_endian = "little")]
+        // SAFETY: u32 slice viewed as bytes, exact bounds.
+        unsafe {
+            std::ptr::copy_nonoverlapping(vals.as_ptr() as *const u8, dst.as_mut_ptr(), n);
+        }
+        #[cfg(target_endian = "big")]
+        for (c, v) in dst.chunks_exact_mut(4).zip(vals) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+        self.pos += n;
+    }
 }
 
 struct Reader<'a> {
@@ -161,7 +253,7 @@ impl<'a> Reader<'a> {
 /// Exact wire size of one column block (name header + dtype/validity
 /// flags + validity words + payload). This is what lets the serializer
 /// pre-size its output buffer to the final byte count and hand each
-/// column an exactly-sized scratch buffer on the parallel path.
+/// column an exactly-sized disjoint region on the parallel path.
 fn column_wire_size(name: &str, col: &Array, nrows: usize) -> usize {
     let mut sz = 4 + name.len() + 1 + 1;
     if col.validity().is_some() {
@@ -175,40 +267,44 @@ fn column_wire_size(name: &str, col: &Array, nrows: usize) -> usize {
     sz
 }
 
-/// Encode one column block (the per-column unit of the wire format).
-fn write_column(buf: &mut Vec<u8>, f: &Field, col: &Array, nrows: usize) {
-    put_u32(buf, f.name.len() as u32);
-    buf.extend_from_slice(f.name.as_bytes());
-    buf.push(dtype_code(f.data_type));
+/// Exact serialized size of a whole table, **without materializing the
+/// bytes** — plain arithmetic over row counts and offset tails. The
+/// loopback fast path uses this when accounting needs the wire size of
+/// a partition that never actually hits the wire.
+pub fn table_wire_size(t: &Table) -> usize {
+    let nrows = t.num_rows();
+    header_size(t.num_columns())
+        + t.schema()
+            .fields()
+            .iter()
+            .zip(t.columns())
+            .map(|(f, c)| column_wire_size(&f.name, c, nrows))
+            .sum::<usize>()
+}
+
+/// Encode one column block in place into its exactly-sized region.
+fn write_column_into(w: &mut SliceWriter<'_>, f: &Field, col: &Array, nrows: usize) {
+    w.put_u32(f.name.len() as u32);
+    w.put_bytes(f.name.as_bytes());
+    w.put_u8(dtype_code(f.data_type));
     let validity = col.validity();
-    buf.push(validity.is_some() as u8);
+    w.put_u8(validity.is_some() as u8);
     if let Some(b) = validity {
-        put_words(buf, b.words());
+        w.put_words(b.words());
     }
     match col {
-        Array::Int64(a) => put_words(buf, a.values()),
-        Array::Float64(a) => put_words(buf, a.values()),
+        Array::Int64(a) => w.put_words(a.values()),
+        Array::Float64(a) => w.put_words(a.values()),
         Array::Bool(a) => {
             for v in a.values() {
-                buf.push(*v as u8);
+                w.put_u8(*v as u8);
             }
         }
         Array::Utf8(a) => {
-            #[cfg(target_endian = "little")]
-            // SAFETY: u32 slice viewed as bytes, exact bounds.
-            unsafe {
-                buf.extend_from_slice(std::slice::from_raw_parts(
-                    a.offsets.as_ptr() as *const u8,
-                    (nrows + 1) * 4,
-                ));
-            }
-            #[cfg(target_endian = "big")]
-            for i in 0..=nrows {
-                put_u32(buf, a.offsets[i]);
-            }
+            w.put_u32s(&a.offsets[..=nrows]);
             let dlen = a.offsets[nrows] as usize;
-            put_u64(buf, dlen as u64);
-            buf.extend_from_slice(&a.data[..dlen]);
+            w.put_u64(dlen as u64);
+            w.put_bytes(&a.data[..dlen]);
         }
     }
 }
@@ -218,10 +314,12 @@ pub fn serialize_table(t: &Table) -> Vec<u8> {
     serialize_table_par(t, parallelism())
 }
 
-/// [`serialize_table`] with an explicit thread budget: column blocks
-/// encode concurrently above the small-input threshold, into a buffer
-/// pre-sized from the exact per-column byte lengths. Output bytes are
-/// identical at every `threads` value.
+/// [`serialize_table`] with an explicit thread budget: the header
+/// (magic, version, schema counts, per-column extents index) is written
+/// once, then every column block encodes **in place** into its disjoint
+/// region of the exactly pre-sized output — concurrently above the
+/// small-input threshold, with no per-column scratch buffer. Output
+/// bytes are identical at every `threads` value.
 pub fn serialize_table_par(t: &Table, threads: usize) -> Vec<u8> {
     let nrows = t.num_rows();
     let fields = t.schema().fields();
@@ -231,88 +329,464 @@ pub fn serialize_table_par(t: &Table, threads: usize) -> Vec<u8> {
         .zip(cols)
         .map(|(f, c)| column_wire_size(&f.name, c, nrows))
         .collect();
-    let total = 16 + sizes.iter().sum::<usize>();
-    let mut buf = Vec::with_capacity(total);
-    put_u32(&mut buf, MAGIC);
-    put_u32(&mut buf, cols.len() as u32);
-    put_u64(&mut buf, nrows as u64);
-    if threads <= 1 || cols.len() <= 1 || nrows < PAR_MIN_ROWS {
-        for (f, c) in fields.iter().zip(cols) {
-            write_column(&mut buf, f, c.as_ref(), nrows);
-        }
-    } else {
-        let blocks = map_tasks(cols.len(), threads, |c| {
-            let mut b = Vec::with_capacity(sizes[c]);
-            write_column(&mut b, &fields[c], cols[c].as_ref(), nrows);
-            b
-        });
-        for b in blocks {
-            buf.extend_from_slice(&b);
-        }
+    let header = header_size(cols.len());
+    let total = header + sizes.iter().sum::<usize>();
+    // `vec![0u8; n]` lowers to `alloc_zeroed`: large buffers come back
+    // as pre-zeroed OS pages (no memset pass), and every byte below is
+    // then written exactly once in place — no `MaybeUninit` needed.
+    let mut buf = vec![0u8; total];
+    let (head, body) = buf.split_at_mut(header);
+    let mut w = SliceWriter::new(head);
+    w.put_u32(MAGIC);
+    w.put_u32(WIRE_VERSION);
+    w.put_u32(cols.len() as u32);
+    w.put_u64(nrows as u64);
+    for &s in &sizes {
+        w.put_u64(s as u64);
     }
-    debug_assert_eq!(buf.len(), total, "column_wire_size must be exact");
+    debug_assert_eq!(w.pos, header);
+    let threads = if nrows < PAR_MIN_ROWS { 1 } else { threads };
+    for_each_slice_mut(body, &sizes, threads, |c, region| {
+        let mut w = SliceWriter::new(region);
+        write_column_into(&mut w, &fields[c], cols[c].as_ref(), nrows);
+        debug_assert_eq!(w.pos, region.len(), "column_wire_size must be exact");
+    });
     buf
 }
 
-/// Deserialize a table from bytes.
-pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
+/// Parsed wire header: row count plus each column block's byte range
+/// (from the extents index) — everything the parallel decoder needs to
+/// hand each column task its own sub-slice.
+struct WireHeader {
+    nrows: usize,
+    /// `(start, len)` of every column block within the buffer.
+    blocks: Vec<(usize, usize)>,
+}
+
+fn parse_header(buf: &[u8]) -> Result<WireHeader> {
     let mut r = Reader { buf, pos: 0 };
     if r.u32()? != MAGIC {
         return Err(Error::comm("bad magic in table message"));
     }
+    let version = r.u32()?;
+    if version != WIRE_VERSION {
+        return Err(Error::comm(format!(
+            "unsupported wire format version {version} (this reader speaks {WIRE_VERSION}; \
+             re-serialize with a matching writer)"
+        )));
+    }
     let ncols = r.u32()? as usize;
     let nrows = r.u64()? as usize;
+    r.guard_alloc(ncols, 8)?;
+    let mut blocks = Vec::with_capacity(ncols);
+    let mut start = r.pos + ncols * 8;
+    for _ in 0..ncols {
+        let len = r.u64()? as usize;
+        let end = start
+            .checked_add(len)
+            .ok_or_else(|| Error::comm("column extent overflows"))?;
+        if end > buf.len() {
+            return Err(Error::comm(format!(
+                "truncated message: column block [{start}, {end}) beyond {} bytes",
+                buf.len()
+            )));
+        }
+        blocks.push((start, len));
+        start = end;
+    }
+    Ok(WireHeader { nrows, blocks })
+}
+
+/// One column block parsed to borrowed payload views (no
+/// materialization yet): the shared front half of [`decode_column_block`]
+/// and the concat-on-decode assembler.
+struct WireColBlock<'a> {
+    field: Field,
+    has_validity: bool,
+    /// Raw LE validity words (`ceil(nrows/64) * 8` bytes; empty when
+    /// `!has_validity`).
+    validity_bytes: &'a [u8],
+    payload: WirePayload<'a>,
+}
+
+enum WirePayload<'a> {
+    /// Int64/Float64: `8·nrows` raw LE bytes.
+    Words(&'a [u8]),
+    /// Bool: `nrows` bytes, 0/1.
+    Bools(&'a [u8]),
+    /// Utf8: raw LE offsets (`4·(nrows+1)` bytes, validated monotone
+    /// and in-bounds) + string data (validated UTF-8).
+    Utf8 { offsets: &'a [u8], data: &'a [u8] },
+}
+
+#[inline]
+fn offset_at(offsets: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(offsets[i * 4..i * 4 + 4].try_into().unwrap())
+}
+
+fn parse_column_block(block: &[u8], nrows: usize) -> Result<WireColBlock<'_>> {
+    let mut r = Reader { buf: block, pos: 0 };
+    let name_len = r.u32()? as usize;
+    let name = std::str::from_utf8(r.bytes(name_len)?)
+        .map_err(|e| Error::comm(format!("bad column name: {e}")))?
+        .to_string();
+    let dt = dtype_from(r.u8()?)?;
+    let has_validity = r.u8()? == 1;
+    let validity_bytes = if has_validity {
+        r.guard_alloc(nrows.div_ceil(64), 8)?;
+        r.bytes(nrows.div_ceil(64) * 8)?
+    } else {
+        &block[0..0]
+    };
+    let payload = match dt {
+        DataType::Int64 | DataType::Float64 => {
+            r.guard_alloc(nrows, 8)?;
+            WirePayload::Words(r.bytes(nrows * 8)?)
+        }
+        DataType::Bool => WirePayload::Bools(r.bytes(nrows)?),
+        DataType::Utf8 => {
+            let n1 = nrows
+                .checked_add(1)
+                .ok_or_else(|| Error::comm("row count overflows"))?;
+            r.guard_alloc(n1, 4)?;
+            let offsets = r.bytes(n1 * 4)?;
+            let dlen = r.u64()? as usize;
+            let data = r.bytes(dlen)?;
+            // Validate offsets are monotone and in-bounds, and data is
+            // utf8 — a corrupted message must not panic later.
+            let mut prev = offset_at(offsets, 0);
+            for i in 1..=nrows {
+                let o = offset_at(offsets, i);
+                if o < prev || o as usize > data.len() {
+                    return Err(Error::comm("corrupt utf8 offsets"));
+                }
+                prev = o;
+            }
+            std::str::from_utf8(data)
+                .map_err(|e| Error::comm(format!("non-utf8 string data: {e}")))?;
+            WirePayload::Utf8 { offsets, data }
+        }
+    };
+    Ok(WireColBlock { field: Field::new(name, dt), has_validity, validity_bytes, payload })
+}
+
+/// Valid (set) bits among the first `nrows` of a raw LE validity block,
+/// with the dead tail masked — null counts straight off the wire,
+/// without materializing a [`Bitmap`].
+fn popcount_valid(bytes: &[u8], nrows: usize) -> usize {
+    let mut total = 0usize;
+    for (k, chunk) in bytes.chunks_exact(8).enumerate() {
+        let mut w = u64::from_le_bytes(chunk.try_into().unwrap());
+        let width = nrows.saturating_sub(k * 64).min(64);
+        if width < 64 {
+            w &= (1u64 << width) - 1;
+        }
+        total += w.count_ones() as usize;
+    }
+    total
+}
+
+/// Materialize one column block as a standalone array.
+fn decode_column_block(block: &[u8], nrows: usize) -> Result<(Field, Array)> {
+    let col = parse_column_block(block, nrows)?;
+    let validity = col.has_validity.then(|| {
+        let words = nrows.div_ceil(64);
+        Bitmap::from_words(get_words(col.validity_bytes, words), nrows)
+    });
+    let array = match &col.payload {
+        WirePayload::Words(b) => match col.field.data_type {
+            DataType::Int64 => Array::Int64(Int64Array { values: get_words(b, nrows), validity }),
+            DataType::Float64 => {
+                Array::Float64(Float64Array { values: get_words(b, nrows), validity })
+            }
+            _ => unreachable!("Words payload is Int64/Float64"),
+        },
+        WirePayload::Bools(b) => {
+            let values = b.iter().map(|&x| x != 0).collect();
+            Array::Bool(BoolArray { values, validity })
+        }
+        WirePayload::Utf8 { offsets, data } => {
+            let mut offs = Vec::with_capacity(nrows + 1);
+            for i in 0..=nrows {
+                offs.push(offset_at(offsets, i));
+            }
+            Array::Utf8(Utf8Array { offsets: offs, data: data.to_vec(), validity })
+        }
+    };
+    Ok((col.field, array))
+}
+
+/// Deserialize a table from bytes (serial; see [`deserialize_table_par`]).
+pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
+    deserialize_table_par(buf, 1)
+}
+
+/// [`deserialize_table`] with an explicit thread budget: one header
+/// scan locates every column block via the extents index, then blocks
+/// decode concurrently on the morsel thread pool. The resulting table
+/// is bit-identical at every `threads` value (each column is a pure
+/// function of its own block bytes).
+pub fn deserialize_table_par(buf: &[u8], threads: usize) -> Result<Table> {
+    let h = parse_header(buf)?;
+    let ncols = h.blocks.len();
+    let threads = if h.nrows < PAR_MIN_ROWS { 1 } else { threads };
+    let decoded = map_tasks(ncols, threads, |c| {
+        let (start, len) = h.blocks[c];
+        decode_column_block(&buf[start..start + len], h.nrows)
+    });
     let mut fields = Vec::with_capacity(ncols);
     let mut columns: Vec<Arc<Array>> = Vec::with_capacity(ncols);
-    for _ in 0..ncols {
-        let name_len = r.u32()? as usize;
-        let name = String::from_utf8(r.bytes(name_len)?.to_vec())
-            .map_err(|e| Error::comm(format!("bad column name: {e}")))?;
-        let dt = dtype_from(r.u8()?)?;
-        let has_validity = r.u8()? == 1;
-        let validity = if has_validity {
-            let words = nrows.div_ceil(64);
-            let v: Vec<u64> = get_words(r.bytes(words * 8)?, words);
-            Some(Bitmap::from_words(v, nrows))
-        } else {
-            None
-        };
-        let array = match dt {
-            DataType::Int64 => {
-                let values: Vec<i64> = get_words(r.bytes(nrows * 8)?, nrows);
-                Array::Int64(Int64Array { values, validity })
-            }
-            DataType::Float64 => {
-                let values: Vec<f64> = get_words(r.bytes(nrows * 8)?, nrows);
-                Array::Float64(Float64Array { values, validity })
-            }
-            DataType::Bool => {
-                let raw = r.bytes(nrows)?;
-                let values = raw.iter().map(|&b| b != 0).collect();
-                Array::Bool(BoolArray { values, validity })
-            }
-            DataType::Utf8 => {
-                r.guard_alloc(nrows + 1, 4)?;
-                let mut offsets = Vec::with_capacity(nrows + 1);
-                for _ in 0..=nrows {
-                    offsets.push(r.u32()?);
+    for d in decoded {
+        let (f, a) = d?;
+        fields.push(f);
+        columns.push(Arc::new(a));
+    }
+    Table::try_new(Arc::new(Schema::new(fields)), columns)
+}
+
+/// One source of a concat-on-decode: either a table that never left
+/// this process (the rank's own loopback partition) or a wire buffer
+/// received from a remote rank.
+pub enum WirePart<'a> {
+    Table(&'a Table),
+    Bytes(&'a [u8]),
+}
+
+/// Per-part state after one header scan.
+enum PartMeta<'a> {
+    Table(&'a Table),
+    Wire { buf: &'a [u8], nrows: usize, blocks: Vec<(usize, usize)> },
+}
+
+impl PartMeta<'_> {
+    fn ncols(&self) -> usize {
+        match self {
+            PartMeta::Table(t) => t.num_columns(),
+            PartMeta::Wire { blocks, .. } => blocks.len(),
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        match self {
+            PartMeta::Table(t) => t.num_rows(),
+            PartMeta::Wire { nrows, .. } => *nrows,
+        }
+    }
+}
+
+/// One part's view of a single column during assembly.
+enum PartCol<'a> {
+    Table(&'a Array),
+    Wire(WireColBlock<'a>),
+}
+
+impl PartCol<'_> {
+    fn data_type(&self) -> DataType {
+        match self {
+            PartCol::Table(a) => a.data_type(),
+            PartCol::Wire(w) => w.field.data_type,
+        }
+    }
+
+    fn null_count(&self, nrows: usize) -> usize {
+        match self {
+            PartCol::Table(a) => a.null_count(),
+            PartCol::Wire(w) => {
+                if w.has_validity {
+                    nrows - popcount_valid(w.validity_bytes, nrows)
+                } else {
+                    0
                 }
-                let dlen = r.u64()? as usize;
-                let data = r.bytes(dlen)?.to_vec();
-                // Validate offsets are monotone and in-bounds, and data is
-                // utf8 — a corrupted message must not panic later.
-                for w in offsets.windows(2) {
-                    if w[1] < w[0] || w[1] as usize > data.len() {
-                        return Err(Error::comm("corrupt utf8 offsets"));
+            }
+        }
+    }
+}
+
+/// Assemble output column `c` across all parts, in part order, directly
+/// into pre-sized buffers. Bit-identical to decoding each part and
+/// concatenating: values/offsets/data bytes are copied verbatim, and
+/// the output validity bitmap exists exactly when some part carries a
+/// null (the [`crate::table::take::concat_arrays`] rule).
+fn assemble_column(metas: &[PartMeta<'_>], c: usize, total_rows: usize) -> Result<(Field, Array)> {
+    let mut views: Vec<(usize, PartCol<'_>)> = Vec::with_capacity(metas.len());
+    for m in metas {
+        views.push(match m {
+            PartMeta::Table(t) => (t.num_rows(), PartCol::Table(t.column(c).as_ref())),
+            PartMeta::Wire { buf, nrows, blocks } => {
+                let (start, len) = blocks[c];
+                (*nrows, PartCol::Wire(parse_column_block(&buf[start..start + len], *nrows)?))
+            }
+        });
+    }
+    let dt = views[0].1.data_type();
+    if views.iter().any(|(_, v)| v.data_type() != dt) {
+        return Err(Error::schema("concat of schema-incompatible tables"));
+    }
+    // Names come from the first part, as in `concat_tables`.
+    let field = match (&metas[0], &views[0].1) {
+        (PartMeta::Table(t), _) => t.schema().field(c).clone(),
+        (_, PartCol::Wire(w)) => w.field.clone(),
+        _ => unreachable!("first view matches first meta"),
+    };
+
+    // Validity: present iff any part actually carries a null; bits are
+    // spliced word-wise (all-valid parts bulk-set their range).
+    let any_null = views.iter().any(|(rows, v)| v.null_count(*rows) > 0);
+    let validity = if any_null {
+        let mut bm = Bitmap::new_null(total_rows);
+        let mut at = 0;
+        for (rows, v) in &views {
+            match v {
+                PartCol::Table(a) => match a.validity() {
+                    Some(b) => bm.splice_words(at, b.words(), *rows),
+                    None => bm.set_range_valid(at, *rows),
+                },
+                PartCol::Wire(w) => {
+                    if w.has_validity {
+                        bm.splice_le_bytes(at, w.validity_bytes, *rows);
+                    } else {
+                        bm.set_range_valid(at, *rows);
                     }
                 }
-                std::str::from_utf8(&data)
-                    .map_err(|e| Error::comm(format!("non-utf8 string data: {e}")))?;
-                Array::Utf8(Utf8Array { offsets, data, validity })
             }
-        };
-        fields.push(Field::new(name, dt));
-        columns.push(Arc::new(array));
+            at += rows;
+        }
+        Some(bm)
+    } else {
+        None
+    };
+
+    macro_rules! assemble_prim {
+        ($T:ty, $variant:ident, $getter:ident) => {{
+            let mut values: Vec<$T> = Vec::with_capacity(total_rows);
+            for (rows, v) in &views {
+                match v {
+                    PartCol::Table(a) => values.extend_from_slice(a.$getter().unwrap().values()),
+                    PartCol::Wire(w) => {
+                        let WirePayload::Words(b) = &w.payload else {
+                            unreachable!("dtype checked above")
+                        };
+                        append_words_le(&mut values, b, *rows);
+                    }
+                }
+            }
+            Array::$variant(PrimitiveArray { values, validity })
+        }};
+    }
+
+    let array = match dt {
+        DataType::Int64 => assemble_prim!(i64, Int64, as_i64),
+        DataType::Float64 => assemble_prim!(f64, Float64, as_f64),
+        DataType::Bool => {
+            let mut values: Vec<bool> = Vec::with_capacity(total_rows);
+            for (rows, v) in &views {
+                match v {
+                    PartCol::Table(a) => values.extend_from_slice(a.as_bool().unwrap().values()),
+                    PartCol::Wire(w) => {
+                        let WirePayload::Bools(b) = &w.payload else {
+                            unreachable!("dtype checked above")
+                        };
+                        values.extend(b[..*rows].iter().map(|&x| x != 0));
+                    }
+                }
+            }
+            Array::Bool(BoolArray { values, validity })
+        }
+        DataType::Utf8 => {
+            // Total string bytes straight from the offset tails: the
+            // output data buffer is allocated once at its exact size.
+            let mut total_data = 0usize;
+            for (rows, v) in &views {
+                if *rows == 0 {
+                    continue;
+                }
+                total_data += match v {
+                    PartCol::Table(a) => {
+                        let u = a.as_utf8().unwrap();
+                        (u.offsets[*rows] - u.offsets[0]) as usize
+                    }
+                    PartCol::Wire(w) => {
+                        let WirePayload::Utf8 { offsets, .. } = &w.payload else {
+                            unreachable!("dtype checked above")
+                        };
+                        (offset_at(offsets, *rows) - offset_at(offsets, 0)) as usize
+                    }
+                };
+            }
+            let mut offs: Vec<u32> = Vec::with_capacity(total_rows + 1);
+            offs.push(0);
+            let mut data: Vec<u8> = Vec::with_capacity(total_data);
+            for (rows, v) in &views {
+                if *rows == 0 {
+                    continue;
+                }
+                let base = data.len() as u32;
+                match v {
+                    PartCol::Table(a) => {
+                        let u = a.as_utf8().unwrap();
+                        let (o0, on) = (u.offsets[0], u.offsets[*rows]);
+                        data.extend_from_slice(&u.data[o0 as usize..on as usize]);
+                        for i in 1..=*rows {
+                            offs.push(base + (u.offsets[i] - o0));
+                        }
+                    }
+                    PartCol::Wire(w) => {
+                        let WirePayload::Utf8 { offsets, data: d } = &w.payload else {
+                            unreachable!("dtype checked above")
+                        };
+                        let (o0, on) = (offset_at(offsets, 0), offset_at(offsets, *rows));
+                        data.extend_from_slice(&d[o0 as usize..on as usize]);
+                        for i in 1..=*rows {
+                            offs.push(base + (offset_at(offsets, i) - o0));
+                        }
+                    }
+                }
+            }
+            Array::Utf8(Utf8Array { offsets: offs, data, validity })
+        }
+    };
+    Ok((field, array))
+}
+
+/// Concat-on-decode: decode every part **directly into one output
+/// table's pre-sized buffers**, in part order — the shuffle's receive
+/// half without the per-part intermediate `Table`s and the extra
+/// `concat_tables` copy. One header scan per wire part computes the
+/// total row/byte extents; columns then assemble concurrently on up to
+/// `threads` threads (each output column is a pure function of the
+/// parts, so the result is bit-identical at every thread count — and
+/// bit-identical to deserializing each part and concatenating).
+///
+/// Schema rules match [`crate::table::take::concat_tables`]: parts must
+/// agree on column count and types (names may differ; the first part's
+/// names win), and zero parts is an error.
+pub fn concat_decode_parts(parts: &[WirePart<'_>], threads: usize) -> Result<Table> {
+    if parts.is_empty() {
+        return Err(Error::invalid("concat of zero parts"));
+    }
+    let metas = parts
+        .iter()
+        .map(|p| match p {
+            WirePart::Table(t) => Ok(PartMeta::Table(t)),
+            WirePart::Bytes(b) => {
+                let h = parse_header(b)?;
+                Ok(PartMeta::Wire { buf: b, nrows: h.nrows, blocks: h.blocks })
+            }
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let ncols = metas[0].ncols();
+    if metas.iter().any(|m| m.ncols() != ncols) {
+        return Err(Error::schema("concat of schema-incompatible tables"));
+    }
+    let total_rows: usize = metas.iter().map(|m| m.nrows()).sum();
+    let threads = if total_rows < PAR_MIN_ROWS { 1 } else { threads };
+    let assembled = map_tasks(ncols, threads, |c| assemble_column(&metas, c, total_rows));
+    let mut fields = Vec::with_capacity(ncols);
+    let mut columns: Vec<Arc<Array>> = Vec::with_capacity(ncols);
+    for a in assembled {
+        let (f, arr) = a?;
+        fields.push(f);
+        columns.push(Arc::new(arr));
     }
     Table::try_new(Arc::new(Schema::new(fields)), columns)
 }
@@ -367,6 +841,18 @@ mod tests {
         let mut ok = serialize_table(&paper_table(4, 1.0, 1));
         ok[0] ^= 0xff; // break magic
         assert!(deserialize_table(&ok).is_err());
+    }
+
+    #[test]
+    fn rejects_stale_version_with_clear_error() {
+        let mut bytes = serialize_table(&paper_table(4, 1.0, 1));
+        // The version field sits right after the magic.
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let err = deserialize_table(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version 1"), "unhelpful error: {msg}");
+        bytes[4..8].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        assert!(deserialize_table(&bytes).is_err());
     }
 
     #[test]
@@ -427,23 +913,89 @@ mod tests {
     #[test]
     fn parallel_serialize_is_byte_identical_and_exactly_sized() {
         use crate::io::generator::random_table;
-        // Cross the PAR_MIN_ROWS threshold so the column-parallel path
-        // actually runs; mixed types + nulls + NaN cover every branch.
+        // Cross the PAR_MIN_ROWS threshold so the in-place parallel
+        // path actually runs; mixed types + nulls + NaN cover every
+        // branch.
         let t = random_table(crate::ops::parallel::PAR_MIN_ROWS + 37, 0xE11);
         let serial = serialize_table_par(&t, 1);
         for threads in [2usize, 7] {
             assert_eq!(serialize_table_par(&t, threads), serial, "threads={threads}");
         }
         // The exact-size pass matches the bytes actually written.
-        let expected: usize = 16
-            + t.schema()
-                .fields()
-                .iter()
-                .zip(t.columns())
-                .map(|(f, c)| column_wire_size(&f.name, c, t.num_rows()))
-                .sum::<usize>();
-        assert_eq!(serial.len(), expected);
+        assert_eq!(serial.len(), table_wire_size(&t));
         assert!(t.data_equals(&deserialize_table(&serial).unwrap()));
+    }
+
+    #[test]
+    fn parallel_deserialize_is_bit_identical() {
+        use crate::io::generator::random_table;
+        let t = random_table(crate::ops::parallel::PAR_MIN_ROWS + 19, 0xDE5);
+        let bytes = serialize_table(&t);
+        let serial = deserialize_table_par(&bytes, 1).unwrap();
+        assert!(serial.data_equals(&t));
+        for threads in [2usize, 7] {
+            let par = deserialize_table_par(&bytes, threads).unwrap();
+            assert!(par.data_equals(&serial), "threads={threads}");
+            assert_eq!(par.schema(), serial.schema(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn wire_size_matches_serialized_len() {
+        use crate::io::generator::random_table;
+        for rows in [0usize, 1, 63, 64, 65, 300] {
+            let t = random_table(rows, 0x51CE + rows as u64);
+            assert_eq!(table_wire_size(&t), serialize_table(&t).len(), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn concat_decode_equals_decode_then_concat() {
+        use crate::io::generator::random_table;
+        use crate::table::take::concat_tables;
+        let parts: Vec<Table> =
+            (0..4usize).map(|i| random_table(40 + i * 13, 0xC0 + i as u64)).collect();
+        let wires: Vec<Vec<u8>> = parts.iter().map(serialize_table).collect();
+        // Oracle: decode each wire part, then concat (part 1 stays a
+        // loopback table, as in the shuffle).
+        let decoded: Vec<Table> = wires.iter().map(|b| deserialize_table(b).unwrap()).collect();
+        let mut oracle_in: Vec<&Table> = decoded.iter().collect();
+        oracle_in[1] = &parts[1];
+        let want = concat_tables(&oracle_in).unwrap();
+        let srcs: Vec<WirePart<'_>> = wires
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                if i == 1 {
+                    WirePart::Table(&parts[1])
+                } else {
+                    WirePart::Bytes(b.as_slice())
+                }
+            })
+            .collect();
+        for threads in [1usize, 2, 7] {
+            let got = concat_decode_parts(&srcs, threads).unwrap();
+            assert!(got.data_equals(&want), "threads={threads}");
+            assert_eq!(got.schema(), want.schema(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn concat_decode_rejects_bad_inputs() {
+        let a = paper_table(10, 1.0, 1);
+        let narrow = Table::from_arrays(vec![("x", Array::from_i64(vec![1]))]).unwrap();
+        assert!(concat_decode_parts(&[], 1).is_err());
+        assert!(concat_decode_parts(
+            &[WirePart::Table(&a), WirePart::Table(&narrow)],
+            1
+        )
+        .is_err());
+        let wire = serialize_table(&a);
+        assert!(concat_decode_parts(
+            &[WirePart::Bytes(&wire[..wire.len() / 2]), WirePart::Table(&a)],
+            1
+        )
+        .is_err());
     }
 
     #[test]

@@ -146,6 +146,84 @@ where
     let _: Vec<()> = map_morsels(len, threads, f);
 }
 
+/// Deterministic mutable-slice fan-out: split one pre-sized buffer into
+/// the consecutive disjoint regions described by `extents` (region `i`
+/// is `extents[i]` bytes, `split_at_mut` disjointness) and run
+/// `f(region_index, region)` once per region on up to `threads` scoped
+/// threads, pulled off the same atomic task counter as [`map_tasks`].
+///
+/// This is the write half of the zero-copy wire path: the serializer
+/// precomputes every column block's exact byte length, then each task
+/// encodes its column **in place** into its region — no per-task
+/// scratch buffer, no second copy.
+///
+/// # Contract
+///
+/// * `extents` must tile `buf` exactly (`sum(extents) == buf.len()`);
+///   anything else is a caller bug and **panics** before any task runs.
+/// * Each region is owned exclusively by its task, so which thread runs
+///   which region is unobservable: for a pure `f`, the buffer contents
+///   afterwards are **bit-identical at every thread count**.
+/// * `threads <= 1` (or a single region) runs inline with zero spawns.
+pub fn for_each_slice_mut<F>(buf: &mut [u8], extents: &[usize], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [u8]) + Sync,
+{
+    let total: usize = extents.iter().sum();
+    assert_eq!(
+        total,
+        buf.len(),
+        "for_each_slice_mut: extents cover {total} bytes, buffer has {}",
+        buf.len()
+    );
+    let n = extents.len();
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        let mut rest = buf;
+        for (i, &e) in extents.iter().enumerate() {
+            let (region, tail) = rest.split_at_mut(e);
+            f(i, region);
+            rest = tail;
+        }
+        return;
+    }
+    // Pre-split the buffer into disjoint regions, then let workers pull
+    // region indices off a shared counter (the morsel work-stealing
+    // discipline). Each slot's mutex is locked exactly once — it exists
+    // only to hand the `&mut` region across threads safely.
+    let mut slots: Vec<std::sync::Mutex<Option<&mut [u8]>>> = Vec::with_capacity(n);
+    {
+        let mut rest = buf;
+        for &e in extents {
+            let (region, tail) = rest.split_at_mut(e);
+            slots.push(std::sync::Mutex::new(Some(region)));
+            rest = tail;
+        }
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let (next, slots, f) = (&next, &slots, &f);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            handles.push(s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let region = slots[i]
+                    .lock()
+                    .expect("slice slot poisoned")
+                    .take()
+                    .expect("each region is taken exactly once");
+                f(i, region);
+            }));
+        }
+        for h in handles {
+            h.join().expect("slice worker panicked");
+        }
+    });
+}
+
 /// Reassemble per-morsel chunks into one flat vector of `len` elements.
 pub fn concat_chunks<T: Copy>(chunks: Vec<Vec<T>>, len: usize) -> Vec<T> {
     let mut out = Vec::with_capacity(len);
@@ -252,6 +330,59 @@ mod tests {
             sum.fetch_add(s, Ordering::Relaxed);
         });
         assert_eq!(sum.into_inner(), (0..len as u64).sum::<u64>());
+    }
+
+    /// Fill region `i` with a pattern derived from the region index and
+    /// in-region position — any misrouted or overlapping write changes
+    /// the bytes.
+    fn fill_regions(buf: &mut [u8], extents: &[usize], threads: usize) {
+        for_each_slice_mut(buf, extents, threads, |i, region| {
+            for (k, b) in region.iter_mut().enumerate() {
+                *b = (i as u8).wrapping_mul(31).wrapping_add(k as u8);
+            }
+        });
+    }
+
+    #[test]
+    fn slice_fanout_bit_identical_across_thread_counts() {
+        // Mixed extents including empty regions and a word-boundary mix.
+        let extents = [0usize, 7, 64, 1, 0, 129, 3];
+        let len: usize = extents.iter().sum();
+        let mut serial = vec![0u8; len];
+        fill_regions(&mut serial, &extents, 1);
+        // Regions tile the buffer: every byte was written by its region.
+        assert_eq!(serial[0], 1u8.wrapping_mul(31)); // region 1, k = 0
+        for threads in [2usize, 7, 64] {
+            let mut par = vec![0xAAu8; len];
+            fill_regions(&mut par, &extents, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn slice_fanout_empty_and_single_region() {
+        let mut empty: Vec<u8> = Vec::new();
+        for_each_slice_mut(&mut empty, &[], 4, |_, _| panic!("no regions"));
+        let mut one = vec![0u8; 5];
+        for_each_slice_mut(&mut one, &[5], 4, |i, r| {
+            assert_eq!(i, 0);
+            r.fill(9);
+        });
+        assert_eq!(one, vec![9; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "extents cover")]
+    fn slice_fanout_rejects_short_extents() {
+        let mut buf = vec![0u8; 10];
+        for_each_slice_mut(&mut buf, &[3, 3], 2, |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "extents cover")]
+    fn slice_fanout_rejects_long_extents() {
+        let mut buf = vec![0u8; 10];
+        for_each_slice_mut(&mut buf, &[8, 8], 2, |_, _| {});
     }
 
     #[test]

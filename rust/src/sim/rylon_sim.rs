@@ -8,7 +8,7 @@
 use super::{fmax, SimResult};
 use crate::error::Result;
 use crate::net::model::NetworkModel;
-use crate::net::serialize::{deserialize_table, serialize_table};
+use crate::net::serialize::{concat_decode_parts, serialize_table, WirePart};
 use crate::net::NetworkProfile;
 use crate::ops::join::{join, JoinConfig};
 use crate::ops::partition::{partition_by_ids, partition_ids_by_key, partition_ids_by_row};
@@ -76,8 +76,13 @@ fn shuffle_side(
     Ok(ShuffledSide { part_secs, ser_secs, wire, own })
 }
 
-/// Deliver one shuffled side: per worker, deserialize + concat received
-/// parts. Returns per-worker (recv table, deser seconds, recv bytes).
+/// Deliver one shuffled side: per worker, decode + concat the received
+/// parts on the runtime's **concat-on-decode** path
+/// ([`concat_decode_parts`] — wire buffers decode straight into one
+/// pre-sized table, the worker's own partition rides through as a
+/// loopback table part). Serial (threads = 1) because the simulator
+/// times each worker's share sequentially on the BSP virtual clock.
+/// Returns per-worker (recv table, deser seconds, recv bytes).
 fn deliver(side: ShuffledSide) -> Result<(Vec<Table>, Vec<f64>, Vec<u64>)> {
     let world = side.own.len();
     let mut tables = Vec::with_capacity(world);
@@ -85,19 +90,18 @@ fn deliver(side: ShuffledSide) -> Result<(Vec<Table>, Vec<f64>, Vec<u64>)> {
     let mut bytes = Vec::with_capacity(world);
     for w in 0..world {
         let t0 = Instant::now();
-        let mut received: Vec<Table> = Vec::with_capacity(world);
         let mut b = 0u64;
+        let mut srcs: Vec<WirePart<'_>> = Vec::with_capacity(world);
         for src in 0..world {
             if src == w {
-                received.push(side.own[w].clone());
+                srcs.push(WirePart::Table(&side.own[w]));
             } else {
                 let buf = side.wire[src][w].as_ref().expect("remote part");
                 b += buf.len() as u64;
-                received.push(deserialize_table(buf)?);
+                srcs.push(WirePart::Bytes(buf));
             }
         }
-        let refs: Vec<&Table> = received.iter().collect();
-        let t = concat_tables(&refs)?;
+        let t = concat_decode_parts(&srcs, 1)?;
         des_secs.push(t0.elapsed().as_secs_f64());
         tables.push(t);
         bytes.push(b);

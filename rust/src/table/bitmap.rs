@@ -174,6 +174,69 @@ impl Bitmap {
         }
     }
 
+    /// Bulk-set bits `[at, at + len)` to valid. Word-wise (one OR per
+    /// touched word) — the concat-on-decode fast path for parts that
+    /// carry no validity bitmap (every row valid).
+    pub fn set_range_valid(&mut self, at: usize, len: usize) {
+        let end = at + len;
+        debug_assert!(end <= self.len);
+        let mut lo = at;
+        while lo < end {
+            let w = lo / 64;
+            let hi = ((w + 1) * 64).min(end);
+            let width = hi - lo;
+            let mask = if width == 64 { u64::MAX } else { ((1u64 << width) - 1) << (lo % 64) };
+            self.bits[w] |= mask;
+            lo = hi;
+        }
+    }
+
+    /// OR `len` bits out of `words` into this bitmap starting at bit
+    /// `at` (bit `k` of `words` lands at `at + k`). Source bits at
+    /// `len` and above are masked off, and missing tail words read as
+    /// zero, so a wire-format validity block splices in exactly as
+    /// [`Bitmap::from_words`] would decode it. Because it ORs, the
+    /// target range must still be all-zero (as in a fresh
+    /// [`Bitmap::new_null`]) — the concat-on-decode assembler writes
+    /// each part's disjoint range exactly once.
+    pub fn splice_words(&mut self, at: usize, words: &[u64], len: usize) {
+        debug_assert!(at + len <= self.len);
+        self.splice_with(at, len, |k| words.get(k).copied().unwrap_or(0));
+    }
+
+    /// [`Bitmap::splice_words`] reading source words straight out of a
+    /// little-endian byte buffer (a wire-format validity block) —
+    /// allocation-free on the concat-on-decode hot path.
+    pub fn splice_le_bytes(&mut self, at: usize, bytes: &[u8], len: usize) {
+        debug_assert!(at + len <= self.len);
+        self.splice_with(at, len, |k| {
+            bytes
+                .get(k * 8..k * 8 + 8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .unwrap_or(0)
+        });
+    }
+
+    /// Shared splice core: OR `len` bits into `[at, at + len)`, pulling
+    /// source word `k` (bits `64k..64k+64`) from `word_at`.
+    fn splice_with(&mut self, at: usize, len: usize, word_at: impl Fn(usize) -> u64) {
+        let mut done = 0;
+        while done < len {
+            let width = (len - done).min(64);
+            let mut bits = word_at(done / 64);
+            if width < 64 {
+                bits &= (1u64 << width) - 1;
+            }
+            let dst = at + done;
+            let (w, off) = (dst / 64, dst % 64);
+            self.bits[w] |= bits << off;
+            if off != 0 && off + width > 64 {
+                self.bits[w + 1] |= bits >> (64 - off);
+            }
+            done += width;
+        }
+    }
+
     /// Rebuild from raw words + length (used by the wire format).
     pub fn from_words(bits: Vec<u64>, len: usize) -> Self {
         let mut bits = bits;
@@ -384,6 +447,69 @@ mod tests {
             kinds,
             vec![WordKind::Valid, WordKind::Null, WordKind::Valid, WordKind::Mixed]
         );
+    }
+
+    #[test]
+    fn set_range_valid_matches_per_bit_set() {
+        for (at, len) in [(0usize, 0usize), (0, 64), (3, 10), (60, 8), (64, 64), (5, 130), (127, 1)] {
+            let mut bulk = Bitmap::new_null(200);
+            bulk.set_range_valid(at, len);
+            let mut per_bit = Bitmap::new_null(200);
+            for i in at..at + len {
+                per_bit.set(i, true);
+            }
+            assert_eq!(bulk, per_bit, "at={at} len={len}");
+        }
+    }
+
+    #[test]
+    fn splice_words_matches_from_words_at_any_offset() {
+        // A 150-bit source pattern spliced to every tricky destination
+        // offset must agree with per-bit copying of the decoded bitmap.
+        let pattern: Vec<bool> = (0..150).map(|i| i % 3 != 0 && i != 64).collect();
+        let src = Bitmap::from_bools(&pattern);
+        for at in [0usize, 1, 37, 63, 64, 65, 100] {
+            let mut spliced = Bitmap::new_null(at + 150 + 9);
+            spliced.splice_words(at, src.words(), 150);
+            let mut per_bit = Bitmap::new_null(at + 150 + 9);
+            for (i, &v) in pattern.iter().enumerate() {
+                if v {
+                    per_bit.set(at + i, true);
+                }
+            }
+            assert_eq!(spliced, per_bit, "at={at}");
+        }
+    }
+
+    #[test]
+    fn splice_le_bytes_matches_splice_words() {
+        let pattern: Vec<bool> = (0..150).map(|i| i % 5 != 1).collect();
+        let src = Bitmap::from_bools(&pattern);
+        let bytes: Vec<u8> = src.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+        for at in [0usize, 37, 64, 65] {
+            let mut from_words = Bitmap::new_null(at + 150 + 5);
+            from_words.splice_words(at, src.words(), 150);
+            let mut from_bytes = Bitmap::new_null(at + 150 + 5);
+            from_bytes.splice_le_bytes(at, &bytes, 150);
+            assert_eq!(from_bytes, from_words, "at={at}");
+        }
+        // Short byte buffers read as zero words, like splice_words.
+        let mut short = Bitmap::new_null(130);
+        short.splice_le_bytes(0, &u64::MAX.to_le_bytes(), 130);
+        assert_eq!(short.count_valid(), 64);
+    }
+
+    #[test]
+    fn splice_words_masks_dirty_tail_and_short_input() {
+        // Dirty bits beyond len must not leak into the destination.
+        let mut b = Bitmap::new_null(100);
+        b.splice_words(10, &[u64::MAX, u64::MAX], 70);
+        assert_eq!(b.count_valid(), 70);
+        assert!(!b.get(9) && b.get(10) && b.get(79) && !b.get(80));
+        // Fewer source words than the bit count: missing words are zero.
+        let mut c = Bitmap::new_null(200);
+        c.splice_words(0, &[u64::MAX], 130);
+        assert_eq!(c.count_valid(), 64);
     }
 
     #[test]
