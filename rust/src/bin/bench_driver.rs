@@ -215,6 +215,7 @@ fn sim_record(target: &str, op: &str, rows: usize, world: usize, sim: &SimResult
         wall_secs: sim.virtual_secs,
         partition_secs: sim.phase_secs("partition"),
         comm_secs: sim.phase_secs("comm"),
+        ..BenchRecord::default()
     }
 }
 
@@ -629,6 +630,7 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
                 wall_secs: wall,
                 partition_secs: part,
                 comm_secs: comm,
+                ..BenchRecord::default()
             });
             eprintln!("[local/{op}] threads={threads} done");
         }
@@ -664,7 +666,12 @@ fn bench_pipeline(
 ) -> CliResult<()> {
     let n = opts.total_rows;
     let runs = opts.runs.max(1);
-    let mut emit = |label: &str, world: usize, wall: f64, naive_wall: Option<f64>| {
+    let mut emit = |label: &str,
+                    world: usize,
+                    wall: f64,
+                    naive_wall: Option<f64>,
+                    peak_rows: usize,
+                    spill_bytes: u64| {
         let speedup = naive_wall.map(|b| format!("{:.2}x", b / wall)).unwrap_or("1.00x".into());
         report.add_row(vec![
             format!("{label}_w{world}"),
@@ -681,6 +688,8 @@ fn bench_pipeline(
             wall_secs: wall,
             partition_secs: 0.0,
             comm_secs: 0.0,
+            peak_rows,
+            spill_bytes,
         });
     };
 
@@ -701,8 +710,38 @@ fn bench_pipeline(
         });
         walls[slot] = m.median_secs;
     }
-    emit("pipeline_naive", 1, walls[0], None);
-    emit("pipeline_opt", 1, walls[1], Some(walls[0]));
+    emit("pipeline_naive", 1, walls[0], None, 0, 0);
+    emit("pipeline_opt", 1, walls[1], Some(walls[0]), 0, 0);
+
+    // ---- world 1: streaming memory profile ------------------------
+    // Same pipeline shape ending in a sort, so a budgeted run always
+    // has a spillable breaker regardless of the radix threshold. One
+    // record for the unbounded fused run (its peak high-water mark)
+    // and one for a deliberately tiny budget (its spill volume) —
+    // outputs are bit-identical, only residency differs.
+    {
+        let g = pipeline_stream_graph();
+        let mut profile = [(0.0f64, 0usize, 0u64); 2];
+        for (slot, budget) in [(0usize, None), (1usize, Some(1u64))] {
+            let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(threads);
+            ctx.set_memory_budget(budget);
+            let mut peak = 0usize;
+            let mut spilled = 0u64;
+            let m = rylon::metrics::measure(runs, 1, || {
+                let t0 = Instant::now();
+                let (out, stats) = g.execute_with_stats(&mut ctx, &srcs).expect("stream");
+                std::hint::black_box(out[0].num_rows());
+                peak = stats.peak_rows;
+                spilled = stats.spill_bytes;
+                t0.elapsed().as_secs_f64()
+            });
+            profile[slot] = (m.median_secs, peak, spilled);
+        }
+        let (wall, peak, _) = profile[0];
+        emit("pipeline_stream", 1, wall, None, peak, 0);
+        let (wall, peak, spilled) = profile[1];
+        emit("pipeline_stream", 1, wall, None, peak, spilled);
+    }
 
     // ---- world 3: with vs without shuffle elision + pruning -------
     let world = 3;
@@ -734,9 +773,25 @@ fn bench_pipeline(
         samples.sort_by(|x, y| x.total_cmp(y));
         dist_walls[slot] = samples[samples.len() / 2];
     }
-    emit("pipeline_naive", world, dist_walls[0], None);
-    emit("pipeline_opt", world, dist_walls[1], Some(dist_walls[0]));
+    emit("pipeline_naive", world, dist_walls[0], None, 0, 0);
+    emit("pipeline_opt", world, dist_walls[1], Some(dist_walls[0]), 0, 0);
     Ok(())
+}
+
+/// [`pipeline_graph`] with a sort tail instead of the group-by: the
+/// sort is a breaker with a bit-identical external (spilling)
+/// implementation, so the `pipeline_stream` memory profile always has
+/// something to spill under a tiny budget, at any input size.
+fn pipeline_stream_graph() -> Graph {
+    let mut g = Graph::new();
+    let a = g.source("a");
+    let b = g.source("b");
+    let j = g.join(a, b, JoinConfig::inner(0, 0));
+    let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.5)));
+    let p = g.project(f, vec![0, 1]);
+    let s = g.sort(p, 0);
+    g.sink(s);
+    g
 }
 
 /// The zero-copy wire path sweep: in-place parallel serialize and
@@ -769,6 +824,7 @@ fn bench_wire(
             wall_secs: wall,
             partition_secs: part,
             comm_secs: comm,
+            ..BenchRecord::default()
         });
     };
 

@@ -26,6 +26,13 @@ pub struct CylonContext {
     /// only speed. SPMD caveat: all ranks of one graph execution must
     /// agree, or collective sequences diverge.
     optimize: bool,
+    /// Per-query memory budget (bytes) for the plan executor's pipeline
+    /// breakers; `None` = unbounded. When a breaker's materialized
+    /// state would exceed it, the executor spills through the
+    /// [`crate::external`] operators instead of holding everything in
+    /// memory. Results never change — the spill paths are bit-identical
+    /// — only peak memory.
+    memory_budget: Option<u64>,
 }
 
 /// Per-worker thread budget: co-located in-process workers split the
@@ -44,6 +51,7 @@ impl CylonContext {
             runtime: None,
             parallelism: shared_parallelism(1),
             optimize: true,
+            memory_budget: None,
         };
         ctx.comm.set_parallelism(ctx.parallelism);
         ctx
@@ -59,7 +67,13 @@ impl CylonContext {
                 let parallelism = shared_parallelism(world);
                 let mut comm = Communicator::new(Box::new(t), config);
                 comm.set_parallelism(parallelism);
-                CylonContext { comm, runtime: None, parallelism, optimize: true }
+                CylonContext {
+                    comm,
+                    runtime: None,
+                    parallelism,
+                    optimize: true,
+                    memory_budget: None,
+                }
             })
             .collect()
     }
@@ -76,6 +90,7 @@ impl CylonContext {
             runtime: None,
             parallelism: shared_parallelism(1),
             optimize: true,
+            memory_budget: None,
         };
         ctx.comm.set_parallelism(ctx.parallelism);
         ctx
@@ -120,6 +135,27 @@ impl CylonContext {
     /// Whether dataflow graphs run through the planner here.
     pub fn optimize_enabled(&self) -> bool {
         self.optimize
+    }
+
+    /// Set the per-query memory budget (bytes) for plan execution on
+    /// this context; `None` (the default) means unbounded. Breakers
+    /// whose materialized state would exceed the budget spill through
+    /// the [`crate::external`] operators — bit-identical results,
+    /// bounded peak memory. Spill activity is reported in
+    /// [`crate::plan::ExecStats`].
+    pub fn set_memory_budget(&mut self, bytes: Option<u64>) {
+        self.memory_budget = bytes;
+    }
+
+    /// Builder-style [`Self::set_memory_budget`].
+    pub fn with_memory_budget(mut self, bytes: u64) -> Self {
+        self.memory_budget = Some(bytes);
+        self
+    }
+
+    /// The per-query memory budget, if one is set.
+    pub fn memory_budget(&self) -> Option<u64> {
+        self.memory_budget
     }
 
     /// Attach a shared AOT kernel runtime (hash-partition on the PJRT
@@ -181,6 +217,18 @@ mod tests {
         ctx.set_parallelism(0); // clamped to 1
         assert_eq!(ctx.parallelism(), 1);
         ctx.finalize().unwrap();
+    }
+
+    #[test]
+    fn memory_budget_knob_defaults_unbounded_and_toggles() {
+        let mut ctx = CylonContext::init_local();
+        assert_eq!(ctx.memory_budget(), None);
+        ctx.set_memory_budget(Some(1 << 20));
+        assert_eq!(ctx.memory_budget(), Some(1 << 20));
+        ctx.set_memory_budget(None);
+        assert_eq!(ctx.memory_budget(), None);
+        let ctx2 = CylonContext::init_local().with_memory_budget(4096);
+        assert_eq!(ctx2.memory_budget(), Some(4096));
     }
 
     #[test]

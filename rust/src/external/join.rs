@@ -7,10 +7,14 @@
 //! external and in-memory joins route identically.
 
 use super::spill::{SpillDir, SpillReader, SpillWriter};
-use crate::error::Result;
-use crate::ops::join::{join, JoinConfig, JoinType};
-use crate::ops::partition::{partition_by_ids, partition_ids_by_key};
-use crate::table::{take::concat_tables, take::slice, Table};
+use crate::error::{Error, Result};
+use crate::ops::hash::{hash_column, radix_ids};
+use crate::ops::join::{
+    join, join_par_pinned, join_partition_tables, materialize, outer_flags, JoinAlgorithm,
+    JoinConfig, JoinType,
+};
+use crate::ops::partition::{partition_by_ids, partition_ids_by_key, partition_indices};
+use crate::table::{take::concat_tables, take::slice, take::take_table_par, Table};
 use std::path::PathBuf;
 
 /// Hash-partition `input` on `col` into `p` spill files, streaming in
@@ -82,6 +86,142 @@ pub fn external_join_streaming(
         }
     }
     Ok(total)
+}
+
+/// Spill each partition's rows (ascending row order, `batch_rows`
+/// chunks) to its own file, accumulating bytes written into `spilled`.
+fn spill_rows_in_order(
+    dir: &mut SpillDir,
+    input: &Table,
+    parts: &[Vec<usize>],
+    batch_rows: usize,
+    threads: usize,
+    spilled: &mut u64,
+) -> Result<Vec<PathBuf>> {
+    let mut paths = Vec::with_capacity(parts.len());
+    for rows in parts {
+        let mut w = SpillWriter::create(dir.next_path())?;
+        let mut s = 0;
+        while s < rows.len() {
+            let e = (s + batch_rows).min(rows.len());
+            w.write_par(&take_table_par(input, &rows[s..e], threads), threads)?;
+            s = e;
+        }
+        *spilled += w.bytes();
+        paths.push(w.finish()?);
+    }
+    Ok(paths)
+}
+
+/// Grace hash join that is **bit-identical to the in-memory
+/// [`join_par_pinned`]** with the same `build_left` / `partitions`
+/// pins — the spill substitute the executor reaches for when a join's
+/// inputs blow the query's memory budget.
+///
+/// Identity argument, piece by piece:
+/// * routing replays the in-memory radix split exactly — full-column
+///   key hashes through [`radix_ids`] (multiply-shift
+///   [`crate::ops::hash::hash_to_partition`], **not** the modulo
+///   routing of [`external_join_streaming`]'s partitioner);
+/// * partition files hold each partition's rows in ascending input
+///   order, so reloading one yields the same relative order the
+///   in-memory kernel probes in;
+/// * each partition pair runs the in-memory per-partition kernel
+///   ([`join_partition_tables`]): same bucket count, same insertion
+///   and probe orders, hashes recomputed on the chunk (hashes are
+///   cell-wise, so they equal the full-column values);
+/// * matches are emitted pair by pair in partition order
+///   (= partition-major), and unmatched build rows are **deferred**
+///   until every pair has run, then gathered partition-major ascending
+///   — the in-memory canonical assembly.
+///
+/// Only one partition pair is in memory at a time; everything else
+/// lives in the spill files. Returns the joined table plus the bytes
+/// spilled. Sort-algorithm joins and single-partition pins have no
+/// radix state to spill and fall back to the in-memory join
+/// (0 bytes spilled).
+pub fn external_join_canonical(
+    left: &Table,
+    right: &Table,
+    cfg: &JoinConfig,
+    threads: usize,
+    build_left: bool,
+    partitions: usize,
+    batch_rows: usize,
+) -> Result<(Table, u64)> {
+    if cfg.left_col >= left.num_columns() || cfg.right_col >= right.num_columns() {
+        return Err(Error::invalid("join column out of range"));
+    }
+    let lk = left.column(cfg.left_col).as_ref();
+    let rk = right.column(cfg.right_col).as_ref();
+    if lk.data_type() != rk.data_type() {
+        return Err(Error::schema(format!(
+            "join key types differ: {:?} vs {:?}",
+            lk.data_type(),
+            rk.data_type()
+        )));
+    }
+    let p = partitions;
+    if cfg.algorithm == JoinAlgorithm::Sort || p <= 1 {
+        return Ok((join_par_pinned(left, right, cfg, threads, build_left, p.max(1))?, 0));
+    }
+    let batch_rows = batch_rows.max(1);
+    let (build_t, build_col, probe_t, probe_col) = if build_left {
+        (left, cfg.left_col, right, cfg.right_col)
+    } else {
+        (right, cfg.right_col, left, cfg.left_col)
+    };
+    let (probe_outer, build_outer) = outer_flags(cfg.join_type, build_left);
+
+    // Route with the in-memory join's radix split, then spill each
+    // partition's rows to disk in input order.
+    let bh = hash_column(build_t.column(build_col).as_ref(), threads);
+    let ph = hash_column(probe_t.column(probe_col).as_ref(), threads);
+    let bparts = partition_indices(&radix_ids(&bh, p, threads), p);
+    let pparts = partition_indices(&radix_ids(&ph, p, threads), p);
+    drop((bh, ph));
+    let mut dir = SpillDir::new("xjoinc")?;
+    let mut spilled = 0u64;
+    let bpaths = spill_rows_in_order(&mut dir, build_t, &bparts, batch_rows, threads, &mut spilled)?;
+    let ppaths = spill_rows_in_order(&mut dir, probe_t, &pparts, batch_rows, threads, &mut spilled)?;
+
+    // One partition pair in memory at a time; matches partition-major.
+    let mut outs: Vec<Table> = Vec::new();
+    let mut unmatched_global: Vec<usize> = Vec::new();
+    for pid in 0..p {
+        let bchunk = load_all(&bpaths[pid], build_t)?;
+        let pchunk = load_all(&ppaths[pid], probe_t)?;
+        let (bi, pi, unmatched) =
+            join_partition_tables(&bchunk, build_col, &pchunk, probe_col, threads, probe_outer)?;
+        if build_outer {
+            unmatched_global.extend(unmatched.iter().map(|&slot| bparts[pid][slot]));
+        }
+        if !bi.is_empty() {
+            let pair = if build_left {
+                materialize(&bchunk, &pchunk, &bi, &pi, threads)?
+            } else {
+                materialize(&pchunk, &bchunk, &pi, &bi, threads)?
+            };
+            outs.push(pair);
+        }
+    }
+    // Deferred outer tail: unmatched build rows, partition-major
+    // ascending, gathered from the original build side.
+    if build_outer && !unmatched_global.is_empty() {
+        let some: Vec<Option<usize>> = unmatched_global.iter().map(|&i| Some(i)).collect();
+        let none: Vec<Option<usize>> = vec![None; some.len()];
+        let tail = if build_left {
+            materialize(left, right, &some, &none, threads)?
+        } else {
+            materialize(left, right, &none, &some, threads)?
+        };
+        outs.push(tail);
+    }
+    if outs.is_empty() {
+        return Ok((materialize(left, right, &[], &[], threads)?, spilled));
+    }
+    let refs: Vec<&Table> = outs.iter().collect();
+    Ok((concat_tables(&refs)?, spilled))
 }
 
 /// Materializing convenience wrapper.
@@ -166,6 +306,74 @@ mod tests {
         .unwrap();
         assert!(batches >= 5, "expected many partitions, got {batches}");
         assert_eq!(total, join(&l, &r, &JoinConfig::inner(0, 0)).unwrap().num_rows());
+    }
+
+    #[test]
+    fn canonical_external_join_is_bit_identical_to_pinned_in_memory() {
+        use crate::ops::join::radix_fanout;
+        let l = paper_table(1_500, 0.6, 61);
+        let r = paper_table(900, 0.6, 62);
+        for jt in [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter] {
+            let cfg = JoinConfig::new(jt, 0, 0);
+            for build_left in [true, false] {
+                // Force the radix regime the big in-memory join uses.
+                for p in [8usize, 64] {
+                    let want = join_par_pinned(&l, &r, &cfg, 2, build_left, p).unwrap();
+                    for batch_rows in [100, 4_000] {
+                        let (got, spilled) = external_join_canonical(
+                            &l, &r, &cfg, 2, build_left, p, batch_rows,
+                        )
+                        .unwrap();
+                        assert!(spilled > 0, "{jt:?} p={p} should hit disk");
+                        assert!(
+                            got.data_equals(&want),
+                            "{jt:?} build_left={build_left} p={p} batch={batch_rows}"
+                        );
+                    }
+                }
+            }
+        }
+        // Pinned fan-out of the natural in-memory decision as well.
+        let p = radix_fanout(l.num_rows() + r.num_rows());
+        let cfg = JoinConfig::full_outer(0, 0);
+        let want = join_par_pinned(&l, &r, &cfg, 3, true, p).unwrap();
+        let (got, _) = external_join_canonical(&l, &r, &cfg, 3, true, p, 256).unwrap();
+        assert!(got.data_equals(&want));
+    }
+
+    #[test]
+    fn canonical_external_join_handles_nulls_strings_and_empties() {
+        // random_table has null keys; join on the utf8 column too.
+        let l = random_table(700, 71);
+        let r = random_table(500, 72);
+        for col in [0usize, 2] {
+            let cfg = JoinConfig::new(JoinType::FullOuter, col, col);
+            let want = join_par_pinned(&l, &r, &cfg, 2, true, 16).unwrap();
+            let (got, _) = external_join_canonical(&l, &r, &cfg, 2, true, 16, 128).unwrap();
+            assert!(got.data_equals(&want), "col {col}");
+        }
+        let e = paper_table(0, 1.0, 1);
+        let cfg = JoinConfig::left(0, 0);
+        let want = join_par_pinned(&e, &r, &cfg, 1, true, 4).unwrap();
+        let (got, _) = external_join_canonical(&e, &r, &cfg, 1, true, 4, 32).unwrap();
+        assert!(got.data_equals(&want));
+        assert_eq!(got.num_rows(), 0);
+    }
+
+    #[test]
+    fn canonical_external_join_falls_back_in_memory_when_radix_free() {
+        let l = paper_table(200, 0.9, 81);
+        let r = paper_table(200, 0.9, 82);
+        // Single partition: nothing to spill.
+        let cfg = JoinConfig::inner(0, 0);
+        let (got, spilled) = external_join_canonical(&l, &r, &cfg, 2, true, 1, 64).unwrap();
+        assert_eq!(spilled, 0);
+        assert!(got.data_equals(&join_par_pinned(&l, &r, &cfg, 2, true, 1).unwrap()));
+        // Sort joins have no data-dependent radix state either.
+        let cfg = JoinConfig::inner(0, 0).with_algorithm(JoinAlgorithm::Sort);
+        let (got, spilled) = external_join_canonical(&l, &r, &cfg, 2, true, 8, 64).unwrap();
+        assert_eq!(spilled, 0);
+        assert!(got.data_equals(&join(&l, &r, &cfg).unwrap()));
     }
 
     #[test]

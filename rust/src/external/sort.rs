@@ -98,6 +98,21 @@ pub fn external_sort_streaming_par(
     col: usize,
     batch_rows: usize,
     threads: usize,
+    emit: impl FnMut(Table) -> Result<()>,
+) -> Result<usize> {
+    let mut spilled = 0u64;
+    external_sort_streaming_core(input, col, batch_rows, threads, &mut spilled, emit)
+}
+
+/// The streaming core, also reporting bytes spilled to run files (the
+/// executor's budget accounting). Identical output to
+/// [`external_sort_streaming_par`].
+fn external_sort_streaming_core(
+    input: &Table,
+    col: usize,
+    batch_rows: usize,
+    threads: usize,
+    spilled: &mut u64,
     mut emit: impl FnMut(Table) -> Result<()>,
 ) -> Result<usize> {
     let batch_rows = batch_rows.max(1);
@@ -118,6 +133,7 @@ pub fn external_sort_streaming_par(
             w.write_par(&slice(&sorted, s, e)?, threads)?;
             s = e;
         }
+        *spilled += w.bytes();
         run_paths.push(w.finish()?);
         start = end;
     }
@@ -188,16 +204,29 @@ pub fn external_sort_par(
     batch_rows: usize,
     threads: usize,
 ) -> Result<Table> {
+    Ok(external_sort_par_stats(input, col, batch_rows, threads)?.0)
+}
+
+/// [`external_sort_par`] also reporting the bytes spilled to run files.
+/// The table is bit-identical to [`external_sort_par`] (same core); the
+/// byte count feeds the executor's memory-budget accounting.
+pub fn external_sort_par_stats(
+    input: &Table,
+    col: usize,
+    batch_rows: usize,
+    threads: usize,
+) -> Result<(Table, u64)> {
     let mut parts = Vec::new();
-    external_sort_streaming_par(input, col, batch_rows, threads, |b| {
+    let mut spilled = 0u64;
+    external_sort_streaming_core(input, col, batch_rows, threads, &mut spilled, |b| {
         parts.push(b);
         Ok(())
     })?;
     if parts.is_empty() {
-        return Ok(Table::empty(input.schema().clone()));
+        return Ok((Table::empty(input.schema().clone()), spilled));
     }
     let refs: Vec<&Table> = parts.iter().collect();
-    crate::table::take::concat_tables(&refs)
+    Ok((crate::table::take::concat_tables(&refs)?, spilled))
 }
 
 #[cfg(test)]
@@ -278,6 +307,16 @@ mod tests {
         let t = paper_table(0, 1.0, 1);
         let got = external_sort(&t, 0, 16).unwrap();
         assert_eq!(got.num_rows(), 0);
+    }
+
+    #[test]
+    fn stats_variant_reports_spill_bytes_bit_identically() {
+        let t = paper_table(3_000, 1.0, 17);
+        let want = external_sort(&t, 0, 250).unwrap();
+        let (got, spilled) = external_sort_par_stats(&t, 0, 250, 2).unwrap();
+        assert!(got.data_equals(&want));
+        // Every run hits disk, so the accounting sees all of them.
+        assert!(spilled > 0);
     }
 
     #[test]

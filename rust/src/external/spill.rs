@@ -15,6 +15,7 @@ pub struct SpillWriter {
     out: BufWriter<File>,
     batches: usize,
     rows: usize,
+    bytes: u64,
 }
 
 impl SpillWriter {
@@ -22,7 +23,7 @@ impl SpillWriter {
         let path = path.as_ref().to_path_buf();
         let file = File::create(&path)
             .map_err(|e| Error::io(format!("{}: {e}", path.display())))?;
-        Ok(SpillWriter { path, out: BufWriter::new(file), batches: 0, rows: 0 })
+        Ok(SpillWriter { path, out: BufWriter::new(file), batches: 0, rows: 0, bytes: 0 })
     }
 
     /// Append one batch (process-default serializer parallelism).
@@ -40,6 +41,7 @@ impl SpillWriter {
         self.out.write_all(&bytes)?;
         self.batches += 1;
         self.rows += t.num_rows();
+        self.bytes += 8 + bytes.len() as u64;
         Ok(())
     }
 
@@ -49,6 +51,12 @@ impl SpillWriter {
 
     pub fn batches(&self) -> usize {
         self.batches
+    }
+
+    /// Bytes written so far (length prefixes included) — the unit the
+    /// executor's spill accounting reports.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
     }
 
     /// Flush and return the path for reading.
@@ -174,7 +182,9 @@ mod tests {
         w.write(&b).unwrap();
         assert_eq!(w.rows(), 157);
         assert_eq!(w.batches(), 2);
+        let written = w.bytes();
         let path = w.finish().unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len());
         let mut r = SpillReader::open(path).unwrap();
         let batches = r.read_all().unwrap();
         assert_eq!(batches.len(), 2);

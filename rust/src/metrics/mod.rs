@@ -141,6 +141,12 @@ pub struct BenchRecord {
     pub partition_secs: f64,
     /// Seconds in the comm phase (shuffle split), else 0.
     pub comm_secs: f64,
+    /// Peak rows materialized at once during the run (the streaming
+    /// executor's high-water mark; 0 where the op doesn't track it).
+    pub peak_rows: usize,
+    /// Bytes spilled to disk by memory-budgeted operators (0 for
+    /// fully in-memory runs).
+    pub spill_bytes: u64,
 }
 
 fn json_escape(s: &str) -> String {
@@ -151,7 +157,8 @@ impl BenchRecord {
     fn to_json(&self) -> String {
         format!(
             "{{\"target\":\"{}\",\"op\":\"{}\",\"rows\":{},\"world\":{},\"threads\":{},\
-             \"wall_secs\":{:.6},\"partition_secs\":{:.6},\"comm_secs\":{:.6}}}",
+             \"wall_secs\":{:.6},\"partition_secs\":{:.6},\"comm_secs\":{:.6},\
+             \"peak_rows\":{},\"spill_bytes\":{}}}",
             json_escape(&self.target),
             json_escape(&self.op),
             self.rows,
@@ -159,7 +166,9 @@ impl BenchRecord {
             self.threads,
             self.wall_secs,
             self.partition_secs,
-            self.comm_secs
+            self.comm_secs,
+            self.peak_rows,
+            self.spill_bytes
         )
     }
 }
@@ -254,6 +263,8 @@ mod tests {
             wall_secs: 0.25,
             partition_secs: 0.0,
             comm_secs: 0.0,
+            peak_rows: 123,
+            spill_bytes: 456,
         };
         let doc = bench_records_to_json(&[rec]);
         assert!(doc.contains("\"schema_version\": 1"));
@@ -262,6 +273,8 @@ mod tests {
         assert!(doc.contains("\"rows\":1000000"));
         assert!(doc.contains("\"threads\":4"));
         assert!(doc.contains("\"wall_secs\":0.250000"));
+        assert!(doc.contains("\"peak_rows\":123"));
+        assert!(doc.contains("\"spill_bytes\":456"));
         // Empty set still yields a valid document.
         assert!(bench_records_to_json(&[]).contains("\"results\": []"));
     }
@@ -277,6 +290,8 @@ mod tests {
             wall_secs: 0.1,
             partition_secs: 0.0,
             comm_secs: 0.0,
+            peak_rows: 0,
+            spill_bytes: 0,
         };
         let path = std::env::temp_dir().join(format!(
             "rylon_bench_append_{}_{:?}.json",

@@ -9,7 +9,9 @@
 //! endpoint holds one stream per peer. Frames are
 //! `[src:u32][tag:u64][len:u64][payload]`. A reader thread per peer
 //! feeds a shared inbox; `recv` matches `(src, tag)` with the same
-//! parking discipline as the channel transport.
+//! parking discipline as the channel transport. Frame lengths are
+//! capped at [`MAX_FRAME_BYTES`] on both sides of the wire — a corrupt
+//! or hostile header can not drive an unbounded allocation.
 
 use super::Transport;
 use crate::error::{Error, Result};
@@ -19,10 +21,20 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
+/// Hard cap on one frame's payload. The `len` field arrives from the
+/// peer **before** any allocation happens; without a cap, a corrupt or
+/// hostile header (`len = u64::MAX`) makes `read_loop` attempt an
+/// arbitrary-size allocation and abort the process. 1 GiB is far above
+/// any frame the wire format produces (shuffles split per-rank) while
+/// small enough that a bad header fails fast instead of OOMing.
+pub const MAX_FRAME_BYTES: u64 = 1 << 30;
+
 struct Frame {
     src: usize,
     tag: u64,
-    payload: Vec<u8>,
+    /// `Err` = the reader rejected this frame (oversized length
+    /// header) — surfaced to whichever `recv` matches it.
+    payload: Result<Vec<u8>>,
 }
 
 /// One rank's TCP endpoint.
@@ -34,7 +46,7 @@ pub struct TcpTransport {
     inbox: Receiver<Frame>,
     /// Loopback for self-sends (no socket round-trip).
     self_tx: Sender<Frame>,
-    parked: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
+    parked: HashMap<(usize, u64), VecDeque<Result<Vec<u8>>>>,
     pub recv_timeout: Duration,
 }
 
@@ -114,6 +126,17 @@ impl TcpFabric {
     }
 }
 
+/// Symmetric with `read_loop`'s header check: a frame a receiver would
+/// refuse is refused at the source, before hitting the wire.
+fn check_frame_len(len: u64, dst: usize) -> Result<()> {
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::comm(format!(
+            "tcp frame to {dst} is {len} bytes (cap {MAX_FRAME_BYTES})"
+        )));
+    }
+    Ok(())
+}
+
 /// Reader thread: frames from one peer into the shared inbox.
 fn read_loop(mut stream: TcpStream, src: usize, tx: Sender<Frame>) {
     loop {
@@ -122,12 +145,23 @@ fn read_loop(mut stream: TcpStream, src: usize, tx: Sender<Frame>) {
             return; // peer closed
         }
         let tag = u64::from_le_bytes(header[0..8].try_into().unwrap());
-        let len = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
-        let mut payload = vec![0u8; len];
+        let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        if len > MAX_FRAME_BYTES {
+            // Never allocate on an untrusted length. Park a poisoned
+            // frame so the matching `recv` reports the cause, then drop
+            // the stream — after refusing the payload there is no way
+            // to resynchronize on the next frame boundary.
+            let err = Error::comm(format!(
+                "tcp frame from {src} claims {len} bytes (cap {MAX_FRAME_BYTES})"
+            ));
+            let _ = tx.send(Frame { src, tag, payload: Err(err) });
+            return;
+        }
+        let mut payload = vec![0u8; len as usize];
         if stream.read_exact(&mut payload).is_err() {
             return;
         }
-        if tx.send(Frame { src, tag, payload }).is_err() {
+        if tx.send(Frame { src, tag, payload: Ok(payload) }).is_err() {
             return; // endpoint dropped
         }
     }
@@ -146,9 +180,10 @@ impl Transport for TcpTransport {
         if dst >= self.world {
             return Err(Error::comm(format!("send to rank {dst} of {}", self.world)));
         }
+        check_frame_len(payload.len() as u64, dst)?;
         if dst == self.rank {
             self.self_tx
-                .send(Frame { src: self.rank, tag, payload })
+                .send(Frame { src: self.rank, tag, payload: Ok(payload) })
                 .map_err(|_| Error::comm("self inbox closed"))?;
             return Ok(());
         }
@@ -165,7 +200,7 @@ impl Transport for TcpTransport {
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
         if let Some(q) = self.parked.get_mut(&(src, tag)) {
             if let Some(p) = q.pop_front() {
-                return Ok(p);
+                return p;
             }
         }
         let deadline = std::time::Instant::now() + self.recv_timeout;
@@ -183,7 +218,7 @@ impl Transport for TcpTransport {
                 .recv_timeout(remaining)
                 .map_err(|e| Error::comm(format!("tcp rank {}: recv: {e}", self.rank)))?;
             if frame.src == src && frame.tag == tag {
-                return Ok(frame.payload);
+                return frame.payload;
             }
             self.parked
                 .entry((frame.src, frame.tag))
@@ -253,6 +288,50 @@ mod tests {
                 assert_eq!(msg, &vec![src as u8, me as u8]);
             }
         }
+    }
+
+    #[test]
+    fn oversized_frame_header_is_rejected_without_allocating() {
+        // Hostile peer: a valid header whose length field claims more
+        // than MAX_FRAME_BYTES. The reader must park a poisoned frame
+        // and hang up — never allocate the claimed buffer.
+        let port = ports(1);
+        let listener = std::net::TcpListener::bind(("127.0.0.1", port)).unwrap();
+        let mut attacker = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let (victim, _) = listener.accept().unwrap();
+        let (tx, rx) = channel::<Frame>();
+        let h = std::thread::spawn(move || read_loop(victim, 1, tx));
+        attacker.write_all(&42u64.to_le_bytes()).unwrap(); // tag
+        attacker.write_all(&u64::MAX.to_le_bytes()).unwrap(); // absurd len
+        let frame = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!((frame.src, frame.tag), (1, 42));
+        let err = frame.payload.unwrap_err().to_string();
+        assert!(err.contains("cap"), "unexpected error: {err}");
+        // Reader hung up: no resync is possible mid-stream.
+        h.join().unwrap();
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+    }
+
+    #[test]
+    fn poisoned_frame_surfaces_as_recv_error() {
+        let mut eps = TcpFabric::new(1, ports(1)).unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // A good frame parked behind the poisoned one must survive.
+        e0.self_tx
+            .send(Frame { src: 0, tag: 9, payload: Err(Error::comm("oversized frame")) })
+            .unwrap();
+        e0.send(0, 3, vec![7]).unwrap();
+        assert!(e0.recv(0, 9).is_err());
+        assert_eq!(e0.recv(0, 3).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn oversized_send_is_refused_at_the_source() {
+        // Length check runs on the count, not the contents, so the
+        // boundary is testable without a >1 GiB allocation.
+        assert!(check_frame_len(MAX_FRAME_BYTES, 1).is_ok());
+        let err = check_frame_len(MAX_FRAME_BYTES + 1, 1).unwrap_err().to_string();
+        assert!(err.contains("cap"), "unexpected error: {err}");
     }
 
     #[test]

@@ -235,6 +235,72 @@ macro_rules! compare {
     }};
 }
 
+/// A string comparison operand borrowed straight from its storage —
+/// the filter hot path's alternative to materializing `Value::Str`
+/// (one owned `String` per row for a column, one clone per row for a
+/// literal).
+enum StrOperand<'t> {
+    Col(&'t crate::table::Utf8Array),
+    Lit(&'t str),
+}
+
+impl<'t> StrOperand<'t> {
+    #[inline]
+    fn value(&self, row: usize) -> &'t str {
+        match self {
+            StrOperand::Col(a) => a.value(row),
+            StrOperand::Lit(s) => s,
+        }
+    }
+
+    #[inline]
+    fn is_valid(&self, row: usize) -> bool {
+        match self {
+            StrOperand::Col(a) => a.is_valid(row),
+            StrOperand::Lit(_) => true,
+        }
+    }
+}
+
+/// `Some` only when `e` evaluates to Utf8 rows borrowable without
+/// copies: an in-range Utf8 column reference or a string literal.
+/// Everything else (other types, out-of-range columns, compound
+/// expressions) returns `None` so the generic path surfaces exactly
+/// the errors and values it always has.
+fn str_operand<'t>(e: &'t Expr, t: &'t Table) -> Option<StrOperand<'t>> {
+    match e {
+        Expr::Col(i) if *i < t.num_columns() => match t.column(*i).as_ref() {
+            Array::Utf8(a) => Some(StrOperand::Col(a)),
+            _ => None,
+        },
+        Expr::LitStr(s) => Some(StrOperand::Lit(s)),
+        _ => None,
+    }
+}
+
+/// Borrowed Utf8 comparison: bit-identical to evaluating both sides to
+/// `Value::Str` and comparing (null cells compare as `""` then get
+/// masked by validity — same as the materialized path), minus the
+/// per-row allocations. Yields `None` when either side is not a
+/// borrowable string operand.
+macro_rules! str_compare {
+    ($a:expr, $b:expr, $t:expr, $op:tt) => {{
+        match (str_operand($a, $t), str_operand($b, $t)) {
+            (Some(l), Some(r)) => {
+                let n = $t.num_rows();
+                let mut v = Vec::with_capacity(n);
+                let mut m = Vec::with_capacity(n);
+                for row in 0..n {
+                    v.push(l.value(row) $op r.value(row));
+                    m.push(l.is_valid(row) && r.is_valid(row));
+                }
+                Some(Value::Bool(v, m))
+            }
+            _ => None,
+        }
+    }};
+}
+
 impl Expr {
     // -- constructors ---------------------------------------------------
     pub fn col(i: usize) -> Expr {
@@ -329,12 +395,30 @@ impl Expr {
             Expr::Mul(a, b) => arith!(a.eval(t)?, b.eval(t)?, *, "mul"),
             Expr::Div(a, b) => arith!(a.eval(t)?, b.eval(t)?, /, "div"),
             Expr::Mod(a, b) => arith!(a.eval(t)?, b.eval(t)?, %, "mod"),
-            Expr::Eq(a, b) => compare!(a.eval(t)?, b.eval(t)?, ==),
-            Expr::Ne(a, b) => compare!(a.eval(t)?, b.eval(t)?, !=),
-            Expr::Lt(a, b) => compare!(a.eval(t)?, b.eval(t)?, <),
-            Expr::Le(a, b) => compare!(a.eval(t)?, b.eval(t)?, <=),
-            Expr::Gt(a, b) => compare!(a.eval(t)?, b.eval(t)?, >),
-            Expr::Ge(a, b) => compare!(a.eval(t)?, b.eval(t)?, >=),
+            Expr::Eq(a, b) => match str_compare!(a, b, t, ==) {
+                Some(v) => Ok(v),
+                None => compare!(a.eval(t)?, b.eval(t)?, ==),
+            },
+            Expr::Ne(a, b) => match str_compare!(a, b, t, !=) {
+                Some(v) => Ok(v),
+                None => compare!(a.eval(t)?, b.eval(t)?, !=),
+            },
+            Expr::Lt(a, b) => match str_compare!(a, b, t, <) {
+                Some(v) => Ok(v),
+                None => compare!(a.eval(t)?, b.eval(t)?, <),
+            },
+            Expr::Le(a, b) => match str_compare!(a, b, t, <=) {
+                Some(v) => Ok(v),
+                None => compare!(a.eval(t)?, b.eval(t)?, <=),
+            },
+            Expr::Gt(a, b) => match str_compare!(a, b, t, >) {
+                Some(v) => Ok(v),
+                None => compare!(a.eval(t)?, b.eval(t)?, >),
+            },
+            Expr::Ge(a, b) => match str_compare!(a, b, t, >=) {
+                Some(v) => Ok(v),
+                None => compare!(a.eval(t)?, b.eval(t)?, >=),
+            },
             Expr::And(a, b) => {
                 let (x, y) = (a.eval(t)?, b.eval(t)?);
                 match (&x, &y) {
@@ -686,6 +770,40 @@ mod tests {
         let out = filter(&st(), &Expr::col(0).is_null()).unwrap();
         assert_eq!(out.num_rows(), 1);
         assert_eq!(out.column(1).as_i64().unwrap().value(0), 3);
+    }
+
+    #[test]
+    fn utf8_col_col_compare_borrows() {
+        // Both operands ride the borrowed fast path; null on either
+        // side masks the row exactly like the materialized path did.
+        let t = Table::from_arrays(vec![
+            (
+                "a",
+                Array::Utf8(crate::table::column::Utf8Array::from_options(&[
+                    Some("x"),
+                    Some("b"),
+                    None,
+                    Some("d"),
+                ])),
+            ),
+            (
+                "b",
+                Array::Utf8(crate::table::column::Utf8Array::from_options(&[
+                    Some("x"),
+                    Some("c"),
+                    Some("e"),
+                    None,
+                ])),
+            ),
+        ])
+        .unwrap();
+        let out = filter(&t, &Expr::col(0).eq(Expr::col(1))).unwrap();
+        assert_eq!(out.num_rows(), 1); // only ("x","x"); null rows -> false
+        let out = filter(&t, &Expr::col(0).lt(Expr::col(1))).unwrap();
+        assert_eq!(out.num_rows(), 1); // "b" < "c"
+        // literal-literal comparison is constant over all rows
+        let out = filter(&t, &Expr::lit_str("a").lt(Expr::lit_str("b"))).unwrap();
+        assert_eq!(out.num_rows(), 4);
     }
 
     #[test]

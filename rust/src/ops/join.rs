@@ -167,8 +167,10 @@ pub fn join_par_pinned(
 }
 
 /// Build the output table from matched index pairs (None = outer null);
-/// one gather task per output column.
-fn materialize(
+/// one gather task per output column. `pub(crate)` so the external
+/// (spilling) join can assemble per-partition outputs with the exact
+/// gather the in-memory join uses.
+pub(crate) fn materialize(
     left: &Table,
     right: &Table,
     li: &[Option<usize>],
@@ -272,6 +274,76 @@ fn join_partition<K: KeyCol>(
     PartJoin { bi, pi, unmatched_build }
 }
 
+/// Which sides emit outer rows, given the join semantics and which
+/// side builds: `(probe_outer, build_outer)`. Factored out so the
+/// external (spilling) join replays the in-memory decision exactly.
+pub(crate) fn outer_flags(join_type: JoinType, left_builds: bool) -> (bool, bool) {
+    let probe_outer = match (join_type, left_builds) {
+        (JoinType::Inner, _) => false,
+        (JoinType::FullOuter, _) => true,
+        (JoinType::Left, true) => false,  // left is build side
+        (JoinType::Left, false) => true,  // left is probe side
+        (JoinType::Right, true) => true,  // right is probe side
+        (JoinType::Right, false) => false,
+    };
+    let build_outer = match (join_type, left_builds) {
+        (JoinType::Inner, _) => false,
+        (JoinType::FullOuter, _) => true,
+        (JoinType::Left, true) => true,
+        (JoinType::Left, false) => false,
+        (JoinType::Right, true) => false,
+        (JoinType::Right, false) => true,
+    };
+    (probe_outer, build_outer)
+}
+
+/// Join one radix partition whose sides are already isolated as whole
+/// tables (local row ids `0..n`). Runs the exact per-partition kernel
+/// of the in-memory hash join — same bucket count, same ascending
+/// insertion order, same most-recent-first probe walk — over hashes
+/// recomputed columnarly on the chunk (hashes are cell-wise, so chunk
+/// hashes equal the full-column hashes of the same rows). Returns
+/// `(build_idx, probe_idx, unmatched_build_local_rows)`; used by
+/// `external::join` to process one spilled partition pair at a time
+/// while staying bit-identical to the in-memory join.
+pub(crate) fn join_partition_tables(
+    build: &Table,
+    build_col: usize,
+    probe: &Table,
+    probe_col: usize,
+    threads: usize,
+    probe_outer: bool,
+) -> Result<(Vec<Option<usize>>, Vec<Option<usize>>, Vec<usize>)> {
+    let bk = build.column(build_col).as_ref();
+    let pk = probe.column(probe_col).as_ref();
+    let bh = hash_column(bk, threads);
+    let ph = hash_column(pk, threads);
+    let build_rows: Vec<usize> = (0..build.num_rows()).collect();
+    let probe_rows: Vec<usize> = (0..probe.num_rows()).collect();
+    let part = match (bk, pk) {
+        (Array::Int64(x), Array::Int64(y)) => {
+            join_partition(I64Key(x), I64Key(y), &bh, &ph, &build_rows, &probe_rows, probe_outer)
+        }
+        (Array::Float64(x), Array::Float64(y)) => {
+            join_partition(F64Key(x), F64Key(y), &bh, &ph, &build_rows, &probe_rows, probe_outer)
+        }
+        (Array::Utf8(x), Array::Utf8(y)) => {
+            join_partition(StrKey(x), StrKey(y), &bh, &ph, &build_rows, &probe_rows, probe_outer)
+        }
+        (Array::Bool(x), Array::Bool(y)) => {
+            join_partition(BoolKey(x), BoolKey(y), &bh, &ph, &build_rows, &probe_rows, probe_outer)
+        }
+        _ => {
+            return Err(Error::schema(format!(
+                "join key types differ: {:?} vs {:?}",
+                bk.data_type(),
+                pk.data_type()
+            )))
+        }
+    };
+    Ok((part.bi, part.pi, part.unmatched_build))
+}
+
 /// The radix fan-out the hash join (and the radix set operators) use
 /// for `rows` total input rows: single-partition below
 /// [`RADIX_MIN_ROWS`], [`RADIX_PARTITIONS`] above. Pure function of the
@@ -334,22 +406,7 @@ fn hash_join_indices_with(
     let bh = hash_column(bk, threads);
     let ph = hash_column(pk, threads);
 
-    let probe_outer = match (cfg.join_type, left_builds) {
-        (JoinType::Inner, _) => false,
-        (JoinType::FullOuter, _) => true,
-        (JoinType::Left, true) => false,  // left is build side
-        (JoinType::Left, false) => true,  // left is probe side
-        (JoinType::Right, true) => true,  // right is probe side
-        (JoinType::Right, false) => false,
-    };
-    let build_outer = match (cfg.join_type, left_builds) {
-        (JoinType::Inner, _) => false,
-        (JoinType::FullOuter, _) => true,
-        (JoinType::Left, true) => true,
-        (JoinType::Left, false) => false,
-        (JoinType::Right, true) => false,
-        (JoinType::Right, false) => true,
-    };
+    let (probe_outer, build_outer) = outer_flags(cfg.join_type, left_builds);
 
     let (build_parts, probe_parts) = if p == 1 {
         (vec![(0..nb).collect::<Vec<usize>>()], vec![(0..np).collect::<Vec<usize>>()])

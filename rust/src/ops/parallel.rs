@@ -146,6 +146,19 @@ where
     let _: Vec<()> = map_morsels(len, threads, f);
 }
 
+/// Fallible [`map_morsels`]: every morsel still runs (the work-stealing
+/// loop has no cross-task channel to cancel through), then the result
+/// is the per-morsel values in morsel order, or the **first error in
+/// morsel order** — not completion order — so which morsel's error
+/// surfaces is deterministic at every thread count.
+pub fn try_map_morsels<T, F>(len: usize, threads: usize, f: F) -> crate::error::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> crate::error::Result<T> + Sync,
+{
+    map_morsels(len, threads, f).into_iter().collect()
+}
+
 /// Deterministic mutable-slice fan-out: split one pre-sized buffer into
 /// the consecutive disjoint regions described by `extents` (region `i`
 /// is `extents[i]` bytes, `split_at_mut` disjointness) and run
@@ -290,6 +303,29 @@ mod tests {
     fn map_tasks_empty_and_single() {
         assert_eq!(map_tasks(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(map_tasks(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn try_map_morsels_surfaces_first_error_in_morsel_order() {
+        let len = MORSEL_ROWS * 3;
+        for threads in [1, 2, 7] {
+            let ok = try_map_morsels(len, threads, |r| Ok(r.end - r.start)).unwrap();
+            assert_eq!(ok.iter().sum::<usize>(), len, "threads={threads}");
+            // morsels 1 and 2 both fail; morsel order (not completion
+            // order) decides which error wins
+            let err = try_map_morsels(len, threads, |r| {
+                if r.start >= MORSEL_ROWS {
+                    Err(crate::error::Error::invalid(format!("morsel at {}", r.start)))
+                } else {
+                    Ok(0usize)
+                }
+            })
+            .unwrap_err();
+            assert!(
+                err.to_string().contains(&format!("morsel at {MORSEL_ROWS}")),
+                "threads={threads}: {err}"
+            );
+        }
     }
 
     #[test]

@@ -1,25 +1,55 @@
-//! Physical executor for [`LogicalPlan`]s — replaces the old inline
-//! match in `Graph::execute_with`.
+//! Physical executor for [`LogicalPlan`]s — streaming morsel pipelines
+//! with a per-query memory budget.
 //!
-//! Node results are held as `Arc<Table>` so diamond fan-out shares one
-//! materialization, and **last-use tracking** drops each intermediate
-//! the moment its final consumer has run — peak memory follows the
-//! plan's frontier, not its total size. Row counts survive the drop
-//! (the planner's pins need them, see [`LogicalOp::Join`]).
+//! The executor no longer materializes an `Arc<Table>` for every node.
+//! [`super::rules::segment_pipelines`] splits the plan into streaming
+//! chains (filter → project / with_column runs with one consumer) and
+//! **pipeline breakers** (sources, sorts, joins, set operators,
+//! group-bys, fan-out points, sinks). A chain is fused into its
+//! breaker's input scan: one morsel-parallel pass over the base table
+//! applies every chained operator per 64Ki-row morsel
+//! ([`crate::ops::parallel::MORSEL_ROWS`]) and concatenates the
+//! surviving rows in morsel order — bit-identical to materializing each
+//! node, because the chained operators are row-wise and
+//! order-preserving, and morsel boundaries derive only from the input.
 //!
-//! Operator dispatch is world-aware, exactly like the naive executor
+//! Breakers still materialize, with `Arc<Table>` sharing for diamond
+//! fan-out and **last-use tracking** dropping each intermediate the
+//! moment its final consumer has run. Row counts survive for streamed
+//! and dropped nodes alike (the planner's pins need them, see
+//! [`LogicalOp::Join`]).
+//!
+//! **Memory budget** ([`crate::ctx::CylonContext::set_memory_budget`]):
+//! the executor tracks live + transient bytes; when a world-1 sort or
+//! hash-join breaker would run while `live + inputs` exceeds the
+//! budget, it routes through the bit-identical external operators
+//! ([`crate::external::sort::external_sort_par_stats`],
+//! [`crate::external::join::external_join_canonical`]) instead of
+//! OOMing. Spill activity and the peak high-water mark are reported in
+//! [`ExecStats`]. Results never change — only where the intermediate
+//! state lives.
+//!
+//! Operator dispatch stays world-aware, exactly like the naive executor
 //! always was: world 1 runs the local operators (honoring pins via
 //! [`crate::ops::join::join_par_pinned`] and the `*_radix` set
 //! operators), world > 1 runs the distributed operators through their
 //! "already partitioned" entry points so planner-proved shuffle
 //! elisions actually skip the AllToAll. Per-operator
 //! [`crate::dist::OpStats`] aggregate into the returned [`ExecStats`].
+//! The budget applies at world 1 only (the distributed operators have
+//! no external substitutes); fusion applies at every world size —
+//! segmentation is a pure function of the plan, so SPMD ranks agree.
 
 use super::logical::{LogicalOp, LogicalPlan};
+use super::rules::segment_pipelines;
 use crate::ctx::CylonContext;
 use crate::dist::OpStats;
 use crate::error::{Error, Result};
+use crate::external::join::external_join_canonical;
+use crate::external::sort::external_sort_par_stats;
 use crate::ops::join::{join_par_pinned, radix_fanout, JoinAlgorithm};
+use crate::ops::parallel::{try_map_morsels, MORSEL_ROWS};
+use crate::table::take::{concat_tables, slice};
 use crate::table::Table;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -28,7 +58,11 @@ use std::sync::Arc;
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ExecStats {
     /// Plan nodes evaluated (the optimized executor skips dead nodes).
+    /// Streamed nodes count when their fused chain runs.
     pub nodes_executed: usize,
+    /// Subset of `nodes_executed` that ran fused inside a streaming
+    /// pipeline — their output tables never materialized whole.
+    pub nodes_streamed: usize,
     /// AllToAll supersteps this worker ran.
     pub shuffles: usize,
     /// AllToAll supersteps skipped by planner shuffle elision.
@@ -37,6 +71,16 @@ pub struct ExecStats {
     pub comm_bytes: u64,
     /// Intermediate results dropped early by last-use tracking.
     pub intermediates_dropped: usize,
+    /// High-water mark of rows held in materialized node results
+    /// (fused chain outputs feeding a breaker included).
+    pub peak_rows: usize,
+    /// High-water mark of logical column bytes for the same state.
+    pub peak_bytes: u64,
+    /// Breaker evaluations that spilled through [`crate::external`]
+    /// because the memory budget was exceeded.
+    pub spills: usize,
+    /// Bytes written to spill files by those breakers.
+    pub spill_bytes: u64,
 }
 
 impl ExecStats {
@@ -47,15 +91,69 @@ impl ExecStats {
     }
 }
 
+/// Apply one streaming operator to a (possibly partial) table.
+fn apply_streaming(plan: &LogicalPlan, id: usize, t: &Table) -> Result<Table> {
+    match &plan.nodes[id].op {
+        LogicalOp::Filter { pred } => crate::ops::expr::filter(t, pred),
+        LogicalOp::Project { columns } => crate::ops::project::project(t, columns),
+        LogicalOp::WithColumn { name, expr } => crate::ops::expr::with_column(t, name, expr),
+        _ => Err(Error::internal("non-streaming op in pipeline chain")),
+    }
+}
+
+/// Run a fused streaming chain (`chain` in base→consumer order) over
+/// `base` in one morsel-parallel pass: every chained operator is
+/// row-wise and order-preserving, so applying the whole chain per
+/// morsel and concatenating in morsel order is bit-identical to
+/// materializing each node — at every thread count, since morsel
+/// boundaries derive only from `base`. Also returns each chain node's
+/// total output row count (pins need them even though the tables never
+/// materialize); errors surface in morsel order, so the first failing
+/// row range decides, deterministically.
+fn run_chain(
+    plan: &LogicalPlan,
+    chain: &[usize],
+    base: &Table,
+    threads: usize,
+) -> Result<(Table, Vec<usize>)> {
+    let run = |range: std::ops::Range<usize>| -> Result<(Table, Vec<usize>)> {
+        let mut t = slice(base, range.start, range.end)?;
+        let mut counts = Vec::with_capacity(chain.len());
+        for &id in chain {
+            t = apply_streaming(plan, id, &t)?;
+            counts.push(t.num_rows());
+        }
+        Ok((t, counts))
+    };
+    if base.num_rows() == 0 {
+        // No morsels — run once on the empty base so schema transforms
+        // (and their validation errors) still happen.
+        return run(0..0);
+    }
+    let morsels = try_map_morsels(base.num_rows(), threads, &run)?;
+    let mut chunks = Vec::with_capacity(morsels.len());
+    let mut counts = vec![0usize; chain.len()];
+    for (t, c) in morsels {
+        for (acc, v) in counts.iter_mut().zip(&c) {
+            *acc += v;
+        }
+        chunks.push(t);
+    }
+    let refs: Vec<&Table> = chunks.iter().collect();
+    Ok((concat_tables(&refs)?, counts))
+}
+
 /// Execute `plan` on `ctx`, binding `sources` by name; returns the
 /// sink tables in declaration order plus execution stats.
 ///
 /// `include_dead` selects the naive discipline: every node evaluates
 /// in index order (plans straight from lowering are index-topological),
 /// so even unreachable nodes run and surface their errors — exactly
-/// the historical `Graph::execute_with` behavior. Optimized plans pass
-/// `false`: only nodes reachable from the sinks run, in
-/// [`LogicalPlan::topo_order`].
+/// the historical `Graph::execute_with` behavior; streaming fusion is
+/// off, keeping the naive oracle strictly node-by-node. Optimized
+/// plans pass `false`: only nodes reachable from the sinks run, in
+/// [`LogicalPlan::topo_order`], with streaming chains fused into their
+/// breakers.
 pub fn execute_plan(
     plan: &LogicalPlan,
     ctx: &mut CylonContext,
@@ -71,11 +169,30 @@ pub fn execute_plan(
     } else {
         plan.topo_order()
     };
-    // Position of each node's last consumer in `order`; sinks never die.
+    let streamed: Vec<bool> = if include_dead {
+        vec![false; plan.nodes.len()]
+    } else {
+        segment_pipelines(plan)
+    };
+    // A streamed input's rows come from the first materialized node
+    // below it — the base its fused chain scans.
+    let base_of = |mut d: usize| -> usize {
+        while streamed[d] {
+            d = plan.nodes[d].inputs[0];
+        }
+        d
+    };
+    // Position of each materialized node's last consuming breaker in
+    // `order` (streamed consumers charge their base to the breaker that
+    // pulls the chain); sinks never die.
     let mut last_use: Vec<usize> = vec![0; plan.nodes.len()];
     for (pos, &i) in order.iter().enumerate() {
+        if streamed[i] {
+            continue;
+        }
         for &d in &plan.nodes[i].inputs {
-            last_use[d] = last_use[d].max(pos);
+            let b = base_of(d);
+            last_use[b] = last_use[b].max(pos);
         }
     }
     for &s in &plan.sinks {
@@ -84,20 +201,68 @@ pub fn execute_plan(
 
     let world = ctx.world();
     let threads = ctx.parallelism();
+    let budget = ctx.memory_budget();
     let mut results: Vec<Option<Arc<Table>>> = vec![None; plan.nodes.len()];
     let mut row_counts: Vec<usize> = vec![0; plan.nodes.len()];
+    let mut node_bytes: Vec<u64> = vec![0; plan.nodes.len()];
     let mut stats = ExecStats::default();
+    // Live = materialized node results currently held; transient = this
+    // breaker's fused-chain outputs (alive only while it runs).
+    let mut live_rows = 0usize;
+    let mut live_bytes = 0u64;
 
     for (pos, &i) in order.iter().enumerate() {
+        if streamed[i] {
+            continue; // fused into its consumer's input scan
+        }
         let node = &plan.nodes[i];
-        let arg = |k: usize| -> Result<Arc<Table>> {
-            results[node.inputs[k]]
+        // Materialize inputs, pulling any streamed chain hanging below.
+        let mut inputs: Vec<Arc<Table>> = Vec::with_capacity(node.inputs.len());
+        let mut transient_rows = 0usize;
+        let mut transient_bytes = 0u64;
+        for &d in &node.inputs {
+            if !streamed[d] {
+                inputs.push(
+                    results[d]
+                        .clone()
+                        .ok_or_else(|| Error::internal("plan dependency not computed"))?,
+                );
+                continue;
+            }
+            let mut chain = Vec::new();
+            let mut cur = d;
+            while streamed[cur] {
+                chain.push(cur);
+                cur = plan.nodes[cur].inputs[0];
+            }
+            chain.reverse();
+            let base = results[cur]
                 .clone()
-                .ok_or_else(|| Error::internal("plan dependency not computed"))
-        };
+                .ok_or_else(|| Error::internal("plan dependency not computed"))?;
+            let (out, counts) = run_chain(plan, &chain, &base, threads)?;
+            for (&id, &c) in chain.iter().zip(&counts) {
+                row_counts[id] = c;
+            }
+            stats.nodes_executed += chain.len();
+            stats.nodes_streamed += chain.len();
+            transient_rows += out.num_rows();
+            transient_bytes += out.byte_size() as u64;
+            inputs.push(Arc::new(out));
+        }
+        stats.peak_rows = stats.peak_rows.max(live_rows + transient_rows);
+        stats.peak_bytes = stats.peak_bytes.max(live_bytes + transient_bytes);
+        // Budget check for world-1 spillable breakers: a breaker's
+        // scratch (hashes, partition indices, output) is proportional
+        // to its inputs, so the inputs are charged on top of the live
+        // set even when they are already part of it. Deterministic —
+        // byte sizes and the live set are pure functions of the plan
+        // and data, never of thread count.
+        let input_bytes: u64 = inputs.iter().map(|t| t.byte_size() as u64).sum();
+        let over_budget = world == 1
+            && budget.map_or(false, |b| live_bytes + transient_bytes + input_bytes > b);
         // Pre-pushdown row counts driving a pinned operator's
         // orientation and radix fan-out (world 1; ancestors of this
-        // node, so always already executed).
+        // node, so always already executed or just streamed above).
         let pinned = |pin: &Option<(usize, usize)>| -> Option<(usize, usize)> {
             pin.map(|(a, b)| (row_counts[a], row_counts[b]))
         };
@@ -106,67 +271,98 @@ pub fn execute_plan(
                 .get(name.as_str())
                 .map(|t| (*t).clone())
                 .ok_or_else(|| Error::invalid(format!("unbound source '{name}'")))?,
-            LogicalOp::Filter { pred } => crate::ops::expr::filter(&arg(0)?, pred)?,
-            LogicalOp::Project { columns } => crate::ops::project::project(&arg(0)?, columns)?,
+            LogicalOp::Filter { pred } => crate::ops::expr::filter(&inputs[0], pred)?,
+            LogicalOp::Project { columns } => crate::ops::project::project(&inputs[0], columns)?,
             LogicalOp::WithColumn { name, expr } => {
-                crate::ops::expr::with_column(&arg(0)?, name, expr)?
+                crate::ops::expr::with_column(&inputs[0], name, expr)?
             }
             LogicalOp::Sort { col } => {
-                let t = arg(0)?;
+                let t = &inputs[0];
                 if world > 1 {
-                    let (out, s) = crate::dist::dist_sort(ctx, &t, *col)?;
+                    let (out, s) = crate::dist::dist_sort(ctx, t, *col)?;
                     stats.absorb(&s);
                     out
+                } else if over_budget {
+                    // External merge sort is bit-identical to sort_par
+                    // (stable runs + earliest-run-wins merge).
+                    let (out, spilled) = external_sort_par_stats(t, *col, MORSEL_ROWS, threads)?;
+                    stats.spills += 1;
+                    stats.spill_bytes += spilled;
+                    out
                 } else {
-                    crate::ops::sort::sort_par(&t, *col, threads)?
+                    crate::ops::sort::sort_par(t, *col, threads)?
                 }
             }
             LogicalOp::Join { cfg, pin, elide_left, elide_right } => {
-                let (l, r) = (arg(0)?, arg(1)?);
+                let (l, r) = (&inputs[0], &inputs[1]);
                 if world > 1 {
                     let (out, s) = crate::dist::dist_join_partitioned(
                         ctx,
-                        &l,
-                        &r,
+                        l,
+                        r,
                         cfg,
                         *elide_left,
                         *elide_right,
                     )?;
                     stats.absorb(&s);
                     out
+                } else if over_budget && cfg.algorithm == JoinAlgorithm::Hash {
+                    // Grace hash join, bit-identical to the in-memory
+                    // join under the same (possibly pinned) decisions.
+                    let (build_left, partitions) = match pinned(pin) {
+                        Some((nl, nr)) => (nl <= nr, radix_fanout(nl + nr)),
+                        None => (
+                            l.num_rows() <= r.num_rows(),
+                            radix_fanout(l.num_rows() + r.num_rows()),
+                        ),
+                    };
+                    let (out, spilled) = external_join_canonical(
+                        l,
+                        r,
+                        cfg,
+                        threads,
+                        build_left,
+                        partitions,
+                        MORSEL_ROWS,
+                    )?;
+                    if spilled > 0 {
+                        stats.spills += 1;
+                        stats.spill_bytes += spilled;
+                    }
+                    out
                 } else if let (Some((nl, nr)), JoinAlgorithm::Hash) =
                     (pinned(pin), cfg.algorithm)
                 {
-                    join_par_pinned(&l, &r, cfg, threads, nl <= nr, radix_fanout(nl + nr))?
+                    join_par_pinned(l, r, cfg, threads, nl <= nr, radix_fanout(nl + nr))?
                 } else {
-                    crate::ops::join::join_par(&l, &r, cfg, threads)?
+                    crate::ops::join::join_par(l, r, cfg, threads)?
                 }
             }
             LogicalOp::Union { pin, elide_left, elide_right } => {
-                let (l, r) = (arg(0)?, arg(1)?);
+                let (l, r) = (&inputs[0], &inputs[1]);
                 if world > 1 {
                     let (out, s) = crate::dist::dist_union_partitioned(
                         ctx,
-                        &l,
-                        &r,
+                        l,
+                        r,
                         *elide_left,
                         *elide_right,
                     )?;
                     stats.absorb(&s);
                     out
                 } else if let Some((nl, nr)) = pinned(pin) {
-                    crate::ops::union::union_radix(&l, &r, threads, radix_fanout(nl + nr))?
+                    crate::ops::union::union_radix(l, r, threads, radix_fanout(nl + nr))?
                 } else {
-                    crate::ops::union::union_par(&l, &r, threads)?
+                    crate::ops::union::union_par(l, r, threads)?
                 }
             }
             LogicalOp::Intersect { pin, elide_left, elide_right } => {
-                let (l, r) = (arg(0)?, arg(1)?);
+                let (l, r) = (&inputs[0], &inputs[1]);
                 if world > 1 {
                     let (out, s) = crate::dist::dist_intersect_partitioned(
                         ctx,
-                        &l,
-                        &r,
+                        l,
+                        r,
                         *elide_left,
                         *elide_right,
                     )?;
@@ -174,23 +370,23 @@ pub fn execute_plan(
                     out
                 } else if let Some((nl, nr)) = pinned(pin) {
                     crate::ops::intersect::intersect_radix(
-                        &l,
-                        &r,
+                        l,
+                        r,
                         threads,
                         nl <= nr,
                         radix_fanout(nl + nr),
                     )?
                 } else {
-                    crate::ops::intersect::intersect_par(&l, &r, threads)?
+                    crate::ops::intersect::intersect_par(l, r, threads)?
                 }
             }
             LogicalOp::Difference { pin, elide_left, elide_right } => {
-                let (l, r) = (arg(0)?, arg(1)?);
+                let (l, r) = (&inputs[0], &inputs[1]);
                 if world > 1 {
                     let (out, s) = crate::dist::dist_difference_partitioned(
                         ctx,
-                        &l,
-                        &r,
+                        l,
+                        r,
                         *elide_left,
                         *elide_right,
                     )?;
@@ -198,35 +394,50 @@ pub fn execute_plan(
                     out
                 } else if let Some((nl, nr)) = pinned(pin) {
                     crate::ops::difference::difference_radix(
-                        &l,
-                        &r,
+                        l,
+                        r,
                         threads,
                         radix_fanout(nl + nr),
                     )?
                 } else {
-                    crate::ops::difference::difference_par(&l, &r, threads)?
+                    crate::ops::difference::difference_par(l, r, threads)?
                 }
             }
             LogicalOp::GroupBy { key, aggs, elide } => {
-                let t = arg(0)?;
+                let t = &inputs[0];
                 if world > 1 {
                     let (out, s) =
-                        crate::dist::dist_group_by_partitioned(ctx, &t, *key, aggs, *elide)?;
+                        crate::dist::dist_group_by_partitioned(ctx, t, *key, aggs, *elide)?;
                     stats.absorb(&s);
                     out
                 } else {
-                    crate::ops::aggregate::group_by_par(&t, *key, aggs, threads)?
+                    // Group-by is a breaker even when fed by a fused
+                    // chain: its float partial-merge order depends on
+                    // its own input's morsel boundaries, so it runs on
+                    // the materialized chain output.
+                    crate::ops::aggregate::group_by_par(t, *key, aggs, threads)?
                 }
             }
         };
+        drop(inputs); // transient chain outputs die with the breaker
         row_counts[i] = value.num_rows();
+        node_bytes[i] = value.byte_size() as u64;
+        live_rows += value.num_rows();
+        live_bytes += node_bytes[i];
         results[i] = Some(Arc::new(value));
         stats.nodes_executed += 1;
-        // Last-use drop: inputs whose final consumer just ran release
-        // their table now (move semantics — no clone survives).
-        for &d in &plan.nodes[i].inputs {
-            if last_use[d] == pos && results[d].is_some() {
-                results[d] = None;
+        stats.peak_rows = stats.peak_rows.max(live_rows);
+        stats.peak_bytes = stats.peak_bytes.max(live_bytes);
+        // Last-use drop: bases whose final consuming breaker just ran
+        // release their table now (move semantics — no clone survives).
+        let mut bases: Vec<usize> = node.inputs.iter().map(|&d| base_of(d)).collect();
+        bases.sort_unstable();
+        bases.dedup();
+        for b in bases {
+            if last_use[b] == pos && results[b].is_some() {
+                results[b] = None;
+                live_rows -= row_counts[b];
+                live_bytes -= node_bytes[b];
                 stats.intermediates_dropped += 1;
             }
         }
@@ -299,8 +510,28 @@ mod tests {
         let want = crate::ops::project::project(&f, &[0, 1, 5]).unwrap();
         assert!(outs[0].data_equals(&want));
         assert_eq!(stats.nodes_executed, 5);
+        // naive discipline: nothing streams
+        assert_eq!(stats.nodes_streamed, 0);
         // join result and filter result died at their last use
         assert!(stats.intermediates_dropped >= 2);
+        // peak accounting saw the materialized frontier
+        assert!(stats.peak_rows > 0 && stats.peak_bytes > 0);
+    }
+
+    #[test]
+    fn streaming_chain_fuses_and_matches_naive() {
+        let a = crate::io::generator::paper_table(500, 0.8, 31);
+        let b = crate::io::generator::paper_table(400, 0.8, 32);
+        let srcs = [("a", a), ("b", b)];
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let plan = pipeline_plan();
+        let (naive, _) = execute_plan(&plan, &mut ctx, &srcs, true).unwrap();
+        let (fused, stats) = execute_plan(&plan, &mut ctx, &srcs, false).unwrap();
+        assert!(fused[0].data_equals(&naive[0]));
+        // filter + (non-sink) nothing else: the project is the sink, so
+        // exactly the filter streams into it.
+        assert_eq!(stats.nodes_streamed, 1);
+        assert_eq!(stats.nodes_executed, 5);
     }
 
     #[test]
@@ -341,6 +572,47 @@ mod tests {
         let (outs, _) = execute_plan(&plan, &mut ctx, &[("t", t.clone())], true).unwrap();
         let want = crate::ops::union::distinct(&t).unwrap();
         assert_eq!(outs[0].num_rows(), want.num_rows());
+        // Fused mode: both filters stream into the union's two input
+        // scans off the shared source — still one materialization of
+        // the source, same rows.
+        let (fused, stats) = execute_plan(&plan, &mut ctx, &[("t", t.clone())], false).unwrap();
+        assert!(fused[0].data_equals(&outs[0]));
+        assert_eq!(stats.nodes_streamed, 2);
+    }
+
+    #[test]
+    fn budget_spills_sort_and_join_breakers_bit_identically() {
+        // Large enough that the join crosses RADIX_MIN_ROWS, so the
+        // spilling Grace join actually partitions.
+        let n = crate::ops::join::RADIX_MIN_ROWS;
+        let a = crate::io::generator::paper_table(n, 0.8, 41);
+        let b = crate::io::generator::paper_table(n / 2, 0.8, 42);
+        let plan = LogicalPlan {
+            nodes: vec![
+                LogicalNode { op: paper_src("a"), inputs: vec![] },
+                LogicalNode { op: paper_src("b"), inputs: vec![] },
+                LogicalNode {
+                    op: LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: None,
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    inputs: vec![0, 1],
+                },
+                LogicalNode { op: LogicalOp::Sort { col: 1 }, inputs: vec![2] },
+            ],
+            sinks: vec![3],
+        };
+        let srcs = [("a", a), ("b", b)];
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let (want, no_spill) = execute_plan(&plan, &mut ctx, &srcs, false).unwrap();
+        assert_eq!(no_spill.spills, 0);
+        ctx.set_memory_budget(Some(1)); // everything is over budget
+        let (got, stats) = execute_plan(&plan, &mut ctx, &srcs, false).unwrap();
+        assert!(got[0].data_equals(&want[0]));
+        assert_eq!(stats.spills, 2, "join and sort both spilled: {stats:?}");
+        assert!(stats.spill_bytes > 0);
     }
 
     #[test]
@@ -378,5 +650,39 @@ mod tests {
         let (outs, _) = execute_plan(&plan, &mut ctx, &[("a", a), ("b", b)], true).unwrap();
         let want: &Schema = &schemas[plan.sinks[0]];
         assert!(outs[0].schema().type_equals(want));
+    }
+
+    #[test]
+    fn streamed_row_counts_feed_pins() {
+        // filter (streamed) feeding a pinned join whose pin references
+        // the streamed node: counts must be recorded by the fused pass.
+        let plan = LogicalPlan {
+            nodes: vec![
+                LogicalNode { op: paper_src("a"), inputs: vec![] },
+                LogicalNode { op: paper_src("b"), inputs: vec![] },
+                LogicalNode {
+                    op: LogicalOp::Filter { pred: Expr::col(1).lt(Expr::lit_f64(2.0)) },
+                    inputs: vec![0],
+                },
+                LogicalNode {
+                    op: LogicalOp::Join {
+                        cfg: JoinConfig::inner(0, 0),
+                        pin: Some((2, 1)),
+                        elide_left: false,
+                        elide_right: false,
+                    },
+                    inputs: vec![2, 1],
+                },
+            ],
+            sinks: vec![3],
+        };
+        let a = crate::io::generator::paper_table(300, 0.9, 51);
+        let b = crate::io::generator::paper_table(200, 0.9, 52);
+        let srcs = [("a", a), ("b", b)];
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        let (naive, _) = execute_plan(&plan, &mut ctx, &srcs, true).unwrap();
+        let (fused, stats) = execute_plan(&plan, &mut ctx, &srcs, false).unwrap();
+        assert!(fused[0].data_equals(&naive[0]));
+        assert_eq!(stats.nodes_streamed, 1);
     }
 }

@@ -58,6 +58,63 @@
 //! assert!(plan3.contains("[elide shuffle]"));
 //! ```
 //!
+//! # Streaming pipelines and the memory budget
+//!
+//! Optimized plans execute as **morsel-streamed pipelines** rather than
+//! node-by-node. [`rules::segment_pipelines`] marks every node that is
+//! row-wise, unary, and order-preserving (`filter`, `project`,
+//! `with_column`) with exactly one consumer and no sink slot as
+//! *streaming*; runs of streaming nodes fuse into their consumer's
+//! input scan — one pass over 64Ki-row morsels
+//! ([`crate::ops::parallel::MORSEL_ROWS`]) applies the whole chain per
+//! morsel, so chain intermediates never materialize. Everything else is
+//! a **pipeline breaker**: sources, sorts, joins (both sides), set
+//! operators, group-bys, any fan-out point, and the sinks. Because the
+//! chained operators commute with concatenation and morsel boundaries
+//! derive only from the input, fused output is bit-identical to the
+//! naive executor at every thread count and world size — segmentation
+//! is a pure function of the plan, so SPMD ranks always agree.
+//!
+//! A per-query **memory budget**
+//! ([`crate::ctx::CylonContext::set_memory_budget`]) bounds what the
+//! breakers may hold: the executor tracks live materialized bytes, and
+//! a world-1 sort or hash join that would run over budget routes
+//! through the bit-identical spilling operators in [`crate::external`]
+//! instead. [`ExecStats`] reports the peak high-water mark
+//! (`peak_rows` / `peak_bytes`), fused-node count (`nodes_streamed`),
+//! and spill activity (`spills` / `spill_bytes`):
+//!
+//! ```
+//! use rylon::ctx::CylonContext;
+//! use rylon::dataflow::Graph;
+//! use rylon::io::generator::paper_table;
+//! use rylon::ops::expr::Expr;
+//! use rylon::ops::join::JoinConfig;
+//!
+//! let mut g = Graph::new();
+//! let a = g.source("a");
+//! let b = g.source("b");
+//! let j = g.join(a, b, JoinConfig::inner(0, 0));
+//! let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.5)));
+//! let p = g.project(f, vec![0, 1]);
+//! let s = g.sort(p, 0);
+//! g.sink(s);
+//! let sources = [("a", paper_table(500, 0.9, 1)), ("b", paper_table(300, 0.9, 2))];
+//!
+//! let mut unbounded = CylonContext::init_local();
+//! let (want, stats) = g.execute_with_stats(&mut unbounded, &sources).unwrap();
+//! assert!(stats.nodes_streamed >= 2); // filter + project fused into the sort's scan
+//! assert_eq!(stats.spills, 0);
+//! assert!(stats.peak_bytes > 0);
+//!
+//! // A budget too small for the sort forces it through the external
+//! // merge sort — same bits, bounded memory.
+//! let mut tight = CylonContext::init_local().with_memory_budget(1);
+//! let (got, stats) = g.execute_with_stats(&mut tight, &sources).unwrap();
+//! assert!(got[0].data_equals(&want[0]));
+//! assert!(stats.spills >= 1 && stats.spill_bytes > 0);
+//! ```
+//!
 //! The executor is reachable standalone via [`exec::execute_plan`];
 //! [`Partitioning`] is shared with [`crate::dist::ShuffleStats`], which
 //! records the distribution each shuffle establishes.
@@ -68,4 +125,4 @@ pub mod rules;
 
 pub use exec::{execute_plan, ExecStats};
 pub use logical::{LogicalNode, LogicalOp, LogicalPlan, Partitioning};
-pub use rules::{optimize, Optimized};
+pub use rules::{optimize, segment_pipelines, Optimized};

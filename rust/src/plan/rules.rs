@@ -103,6 +103,44 @@ pub fn optimize(plan: &LogicalPlan, world: usize) -> Optimized {
     Optimized { plan: p, log, fell_back: false }
 }
 
+/// Pipeline segmentation: `streamed[i]` marks nodes the executor never
+/// materializes — their rows flow morsel-by-morsel into the next
+/// pipeline breaker's input scan.
+///
+/// A node streams when all three hold:
+/// * its operator is **row-wise, unary, and order-preserving**
+///   (`filter` / `project` / `with_column`): for such an op,
+///   `op(concat(m₁, m₂)) == concat(op(m₁), op(m₂))` cell for cell, so
+///   fusing it into a per-morsel pass is bit-identical to materializing
+///   it whole. Everything else — sources, sorts, joins, set operators,
+///   group-bys — is a **pipeline breaker**: its output depends on its
+///   whole input (or, for group-by, on its own input's morsel
+///   boundaries), so it materializes.
+/// * it has exactly **one consumer**: with two, streaming would either
+///   re-run the chain per consumer (fine for bits, wrong for the
+///   evaluate-once diamond contract) or require materializing anyway.
+/// * it is **not a sink** — sinks are returned whole by definition.
+///
+/// The segmentation is a pure function of the plan (never of thread
+/// count, world size, or data), so SPMD ranks agree on it and morsel
+/// boundaries stay derived from the input alone.
+pub fn segment_pipelines(plan: &LogicalPlan) -> Vec<bool> {
+    let parents = plan.parent_counts();
+    plan.nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            matches!(
+                n.op,
+                LogicalOp::Filter { .. }
+                    | LogicalOp::Project { .. }
+                    | LogicalOp::WithColumn { .. }
+            ) && parents[i] == 1
+                && !plan.sinks.contains(&i)
+        })
+        .collect()
+}
+
 /// Which set operator a pushdown rewrote (they share the rule shape).
 #[derive(Clone, Copy)]
 enum SetKind {

@@ -367,6 +367,116 @@ fn string_predicates_push_through_projections() {
 }
 
 #[test]
+fn streaming_pipelines_fuse_and_match_naive() {
+    // Chain-heavy pipeline: join → filter → with_column → project →
+    // sort. The optimized executor fuses the whole middle run into the
+    // sort's input scan; output must stay bit-identical to naive
+    // node-by-node execution at every thread count and world size.
+    let build = || {
+        let mut g = Graph::new();
+        let a = g.source("a");
+        let b = g.source("b");
+        let j = g.join(a, b, JoinConfig::inner(0, 0));
+        let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.6)));
+        let w = g.with_column(f, "d", Expr::col(2).add(Expr::lit_f64(1.0)));
+        let p = g.project(w, vec![0, 1, 8]);
+        let s = g.sort(p, 1);
+        g.sink(s);
+        g
+    };
+    let g = build();
+    let srcs = sources(3_000, 0x51);
+    let mut base: Option<Vec<Table>> = None;
+    for threads in [1usize, 2, 7] {
+        let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(threads);
+        let naive = g.execute_naive_with(&mut ctx, &srcs).unwrap();
+        let (opt, stats) = g.execute_with_stats(&mut ctx, &srcs).unwrap();
+        assert!(opt[0].data_equals(&naive[0]), "threads {threads}");
+        assert!(
+            stats.nodes_streamed >= 3,
+            "filter/with_column/project all fuse, threads {threads}: {stats:?}"
+        );
+        assert!(stats.peak_rows > 0 && stats.peak_bytes > 0, "threads {threads}");
+        if let Some(bs) = &base {
+            assert!(bs[0].data_equals(&opt[0]), "thread-variance at {threads}");
+        } else {
+            base = Some(opt);
+        }
+    }
+    // World 3: morsel boundaries derive only from each rank's input, so
+    // fusion stays rank-deterministic and bit-identical to naive.
+    let world = 3;
+    let run = |optimized: bool| -> Vec<(Vec<Table>, ExecStats)> {
+        run_workers(world, &CommConfig::default(), move |ctx| {
+            ctx.set_optimize(optimized);
+            let srcs = sources(600, 0x51 + ctx.rank() as u64);
+            build().execute_with_stats(ctx, &srcs).unwrap()
+        })
+    };
+    let naive = run(false);
+    let opt = run(true);
+    for (rank, ((nt, _), (ot, os))) in naive.iter().zip(&opt).enumerate() {
+        assert!(ot[0].data_equals(&nt[0]), "rank {rank}");
+        assert!(os.nodes_streamed >= 3, "rank {rank}: {os:?}");
+    }
+}
+
+#[test]
+fn memory_budget_forces_spill_and_stays_bit_identical() {
+    // Inputs above the radix threshold (12k + 9k > 16Ki) so the
+    // budgeted hash join takes the spilling Grace path, with a sort
+    // breaker downstream that must spill too. A 64 KiB budget is far
+    // below the ~700 KiB working set, so both breakers go external —
+    // and the output must not change by a bit.
+    let mut g = Graph::new();
+    let a = g.source("a");
+    let b = g.source("b");
+    let j = g.join(a, b, JoinConfig::inner(0, 0));
+    let s = g.sort(j, 1);
+    g.sink(s);
+    let srcs = [
+        ("a", paper_table(12_000, 0.6, 0xC1)),
+        ("b", paper_table(9_000, 0.6, 0xC2)),
+    ];
+    let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(2);
+    let (want, no_spill) = g.execute_with_stats(&mut ctx, &srcs).unwrap();
+    assert_eq!(no_spill.spills, 0);
+    assert_eq!(no_spill.spill_bytes, 0);
+    for threads in [1usize, 2, 7] {
+        let mut ctx = rylon::ctx::CylonContext::init_local()
+            .with_parallelism(threads)
+            .with_memory_budget(64 * 1024);
+        let (got, stats) = g.execute_with_stats(&mut ctx, &srcs).unwrap();
+        assert!(got[0].data_equals(&want[0]), "threads {threads}");
+        assert!(stats.spills >= 2, "join and sort both spill, threads {threads}: {stats:?}");
+        assert!(stats.spill_bytes > 0, "threads {threads}");
+    }
+}
+
+#[test]
+fn diamond_with_breaker_and_streaming_consumers_matches_naive() {
+    // The filter fans out to two consumers — a sort (pipeline breaker)
+    // and an identity projection that streams into the union's input
+    // scan. The fan-out node itself must materialize exactly once
+    // (multi-consumer nodes never stream), while the projection fuses.
+    let mut g = Graph::new();
+    let t = g.source("t");
+    let f = g.filter(t, Expr::col(0).modulo(Expr::lit_i64(3)).eq(Expr::lit_i64(0)));
+    let srt = g.sort(f, 1);
+    let p = g.project(f, vec![0, 1, 2, 3]);
+    let u = g.union(srt, p);
+    g.sink(u);
+    let srcs = [("t", paper_table(2_000, 0.7, 0xD7))];
+    for threads in [1usize, 2, 7] {
+        let mut ctx = rylon::ctx::CylonContext::init_local().with_parallelism(threads);
+        let naive = g.execute_naive_with(&mut ctx, &srcs).unwrap();
+        let (opt, stats) = g.execute_with_stats(&mut ctx, &srcs).unwrap();
+        assert!(opt[0].data_equals(&naive[0]), "threads {threads}");
+        assert!(stats.nodes_streamed >= 1, "projection fuses, threads {threads}: {stats:?}");
+    }
+}
+
+#[test]
 fn invalid_graphs_error_on_both_paths() {
     // out-of-range predicate column: optimizer must fall back and the
     // error must surface exactly as it does naively
