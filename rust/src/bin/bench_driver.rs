@@ -7,7 +7,7 @@
 //! bench_driver fig9   [--op join|union]   engine comparison (Fig. 9 a/b)
 //! bench_driver table2                     Table II (join times + speedups)
 //! bench_driver fig10                      binding overhead (Fig. 10)
-//! bench_driver local  [--op join|groupby|sort|partition|shuffle|pipeline|wire] thread sweep
+//! bench_driver local  [--op join|groupby|sort|partition|shuffle|shuffle_faulty|pipeline|wire] thread sweep
 //! bench_driver all                        everything above
 //! ```
 //!
@@ -37,7 +37,11 @@
 //! serialize (`wire_ser`) and header-indexed parallel decode
 //! (`wire_de`) at world 1, plus the concat-on-decode shuffle
 //! (`wire_shuffle`) at world 1 and 3 — bytes and tables are identical
-//! at every thread count, so the deltas are pure wire throughput.
+//! at every thread count, so the deltas are pure wire throughput. Its
+//! `shuffle_faulty` op runs the world-3 shuffle under a seeded
+//! drop-every-original-frame fault schedule with the reliable (ack +
+//! retransmit) transport, so the record's `frames_retried` is nonzero
+//! by construction — the CI schema smoke checks exactly that.
 //!
 //! Every run also appends to `<out-dir>/BENCH_results.json` — one
 //! record per (target, op, rows, world, threads) with wall seconds and
@@ -587,11 +591,21 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
         "sort" => vec!["sort"],
         "partition" => vec!["partition"],
         "shuffle" => vec!["shuffle"],
+        "shuffle_faulty" => vec!["shuffle_faulty"],
         "pipeline" => vec!["pipeline"],
         "wire" => vec!["wire"],
         // Implicit default ("join" from parse_opts) or explicit "all".
         "all" | "join" => {
-            vec!["join", "groupby", "sort", "partition", "shuffle", "pipeline", "wire"]
+            vec![
+                "join",
+                "groupby",
+                "sort",
+                "partition",
+                "shuffle",
+                "shuffle_faulty",
+                "pipeline",
+                "wire",
+            ]
         }
         other => return Err(format!("unknown local op '{other}'")),
     };
@@ -610,6 +624,11 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
             if op == "wire" {
                 bench_wire(opts, threads, &mut report, records)?;
                 eprintln!("[local/wire] threads={threads} done");
+                continue;
+            }
+            if op == "shuffle_faulty" {
+                bench_shuffle_faulty(opts, threads, &mut report, records)?;
+                eprintln!("[local/shuffle_faulty] threads={threads} done");
                 continue;
             }
             let (wall, part, comm, world) = bench_local_op(opts, op, threads)?;
@@ -690,6 +709,7 @@ fn bench_pipeline(
             comm_secs: 0.0,
             peak_rows,
             spill_bytes,
+            ..BenchRecord::default()
         });
     };
 
@@ -866,6 +886,80 @@ fn bench_wire(
         let (wall, part, comm) = samples[samples.len() / 2];
         emit("wire_shuffle", world, wall, part, comm);
     }
+    Ok(())
+}
+
+/// The fault-injected world-3 shuffle: a seeded schedule drops every
+/// original transmission (drop permille 1000, streak cap 1 — the
+/// forced-delivery bound makes each retransmit go through), and the
+/// reliable ack/retransmit transport recovers. The shuffled output is
+/// bit-identical to the fault-free run; the wall-clock delta is the
+/// price of the retry protocol, and `frames_retried` is nonzero by
+/// construction — the CI schema smoke asserts exactly that.
+fn bench_shuffle_faulty(
+    opts: &Opts,
+    threads: usize,
+    report: &mut Report,
+    records: &mut Vec<BenchRecord>,
+) -> CliResult<()> {
+    use rylon::net::{FaultPlan, RetryConfig};
+    let n = opts.total_rows;
+    let runs = opts.runs.max(1);
+    let world = 3;
+    let cfg = CommConfig::default()
+        .with_faults(FaultPlan::new(0xFA17).with_drops(1000).with_max_consecutive_faults(1))
+        .with_reliability(true)
+        .with_retry(RetryConfig::aggressive());
+    // (wall, partition, comm, [retried, corrupt, acks_timed_out,
+    // peer_failures]) per run; times are the BSP straggler max, health
+    // counters the cluster sum. Median run chosen by wall.
+    let mut samples: Vec<(f64, f64, f64, [u64; 4])> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let outs = run_workers(world, &cfg, move |ctx| {
+            ctx.set_parallelism(threads);
+            let t = worker_partition(n, world, ctx.rank(), 0.9, 0xFA17);
+            let t0 = Instant::now();
+            let (out, stats) = rylon::dist::shuffle(ctx, &t, 0).expect("faulty shuffle");
+            std::hint::black_box(out.num_rows());
+            (t0.elapsed().as_secs_f64(), stats)
+        });
+        let mut health = [0u64; 4];
+        for (_, s) in &outs {
+            health[0] += s.frames_retried;
+            health[1] += s.frames_corrupt;
+            health[2] += s.acks_timed_out;
+            health[3] += s.peer_failures;
+        }
+        samples.push((
+            outs.iter().map(|(w, _)| *w).fold(0.0f64, f64::max),
+            outs.iter().map(|(_, s)| s.partition_secs).fold(0.0f64, f64::max),
+            outs.iter().map(|(_, s)| s.comm_secs).fold(0.0f64, f64::max),
+            health,
+        ));
+    }
+    samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let (wall, part, comm, health) = samples[samples.len() / 2];
+    report.add_row(vec![
+        format!("shuffle_faulty_w{world}"),
+        threads.to_string(),
+        fmt_s(wall),
+        "-".into(),
+    ]);
+    records.push(BenchRecord {
+        target: "local".into(),
+        op: "shuffle_faulty".into(),
+        rows: n,
+        world,
+        threads,
+        wall_secs: wall,
+        partition_secs: part,
+        comm_secs: comm,
+        frames_retried: health[0],
+        frames_corrupt: health[1],
+        acks_timed_out: health[2],
+        peer_failures: health[3],
+        ..BenchRecord::default()
+    });
     Ok(())
 }
 

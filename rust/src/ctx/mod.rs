@@ -2,7 +2,7 @@
 //! (rank, world size, communicator, optional AOT kernel runtime).
 
 use crate::error::Result;
-use crate::net::{ChannelFabric, CommConfig, Communicator};
+use crate::net::{wrap_transport, ChannelFabric, CommConfig, Communicator};
 use crate::runtime::KernelRuntime;
 use std::sync::Arc;
 
@@ -59,13 +59,16 @@ impl CylonContext {
 
     /// Connected contexts for `world` in-process workers
     /// (the `CylonContext::InitDistributed(mpi_config)` analog).
+    /// The configured fault-injection and reliability layers are
+    /// stacked onto every endpoint ([`wrap_transport`]).
     pub fn init_distributed(world: usize, config: &CommConfig) -> Vec<Self> {
-        ChannelFabric::with_failures(world, config.failures.clone())
+        ChannelFabric::new(world)
             .into_iter()
             .map(|mut t| {
                 t.recv_timeout = config.recv_timeout;
                 let parallelism = shared_parallelism(world);
-                let mut comm = Communicator::new(Box::new(t), config);
+                let mut comm =
+                    Communicator::new(wrap_transport(Box::new(t), config), config);
                 comm.set_parallelism(parallelism);
                 CylonContext {
                     comm,

@@ -92,6 +92,15 @@ pub struct OpStats {
     /// AllToAll supersteps skipped because the planner proved the
     /// input already partitioned (see [`crate::plan`]).
     pub shuffles_elided: usize,
+    /// Data frames retransmitted during this operator's shuffles
+    /// (reliable transports only — likewise the next three).
+    pub frames_retried: u64,
+    /// Frames that failed their CRC32c check and were discarded.
+    pub frames_corrupt: u64,
+    /// Retransmits triggered specifically by an expired ack backoff.
+    pub acks_timed_out: u64,
+    /// Peers declared dead during this operator.
+    pub peer_failures: u64,
 }
 
 impl OpStats {
@@ -113,6 +122,13 @@ impl OpStats {
             // so counts are identical across workers — max, not sum.
             agg.shuffles = agg.shuffles.max(s.shuffles);
             agg.shuffles_elided = agg.shuffles_elided.max(s.shuffles_elided);
+            // Link-health counters are per-worker observations of a
+            // wall-clock-paced retry loop — NOT SPMD-identical — so the
+            // cluster total is the sum.
+            agg.frames_retried += s.frames_retried;
+            agg.frames_corrupt += s.frames_corrupt;
+            agg.acks_timed_out += s.acks_timed_out;
+            agg.peer_failures += s.peer_failures;
         }
         agg
     }
@@ -124,6 +140,10 @@ impl OpStats {
         self.comm_secs += s.comm_secs;
         self.comm_bytes += s.comm_bytes;
         self.used_kernel |= s.used_kernel;
+        self.frames_retried += s.frames_retried;
+        self.frames_corrupt += s.frames_corrupt;
+        self.acks_timed_out += s.acks_timed_out;
+        self.peer_failures += s.peer_failures;
         if s.elided {
             self.shuffles_elided += 1;
         } else {
@@ -179,6 +199,10 @@ mod tests {
             used_kernel: false,
             shuffles: 2,
             shuffles_elided: 0,
+            frames_retried: 3,
+            frames_corrupt: 1,
+            acks_timed_out: 2,
+            peer_failures: 0,
         };
         let b = OpStats {
             partition_secs: 0.25,
@@ -190,6 +214,10 @@ mod tests {
             used_kernel: true,
             shuffles: 2,
             shuffles_elided: 1,
+            frames_retried: 4,
+            frames_corrupt: 0,
+            acks_timed_out: 1,
+            peer_failures: 1,
         };
         let m = OpStats::bsp_max(&[a, b]);
         assert_eq!(m.partition_secs, 1.0);
@@ -202,6 +230,11 @@ mod tests {
         // SPMD-identical counts take the max, never the sum
         assert_eq!(m.shuffles, 2);
         assert_eq!(m.shuffles_elided, 1);
+        // link-health counters are per-worker and wall-clock-paced: sum
+        assert_eq!(m.frames_retried, 7);
+        assert_eq!(m.frames_corrupt, 1);
+        assert_eq!(m.acks_timed_out, 3);
+        assert_eq!(m.peer_failures, 1);
     }
 
     #[test]
@@ -219,6 +252,8 @@ mod tests {
             comm_bytes: 42,
             rows_in: 10,
             rows_out: 12,
+            frames_retried: 2,
+            frames_corrupt: 1,
             ..ShuffleStats::default()
         };
         op.absorb(&s);
@@ -227,6 +262,8 @@ mod tests {
         assert_eq!(op.comm_secs, 0.5);
         assert_eq!(op.comm_bytes, 84);
         assert!(op.used_kernel);
+        assert_eq!(op.frames_retried, 4);
+        assert_eq!(op.frames_corrupt, 2);
         assert_eq!(op.shuffles, 2);
         // rows are the operator's job, not absorb's
         assert_eq!(op.rows_in, 0);

@@ -56,6 +56,15 @@ pub struct ShuffleStats {
     /// This is what the planner's partitioning pass propagates to
     /// decide downstream elisions.
     pub established: Partitioning,
+    /// Data frames retransmitted during this shuffle (reliable
+    /// transports only; zero otherwise — likewise the next three).
+    pub frames_retried: u64,
+    /// Frames that failed their CRC32c check and were discarded.
+    pub frames_corrupt: u64,
+    /// Retransmits triggered specifically by an expired ack backoff.
+    pub acks_timed_out: u64,
+    /// Peers declared dead during this shuffle.
+    pub peer_failures: u64,
 }
 
 impl ShuffleStats {
@@ -130,8 +139,14 @@ fn shuffle_with(
     let t1 = Instant::now();
     let comm = ctx.communicator();
     let bytes_before = comm.comm_bytes();
+    let health_before = comm.link_health();
     let out = comm.shuffle_tables(parts)?;
     stats.comm_bytes = comm.comm_bytes() - bytes_before;
+    let health = comm.link_health().since(&health_before);
+    stats.frames_retried = health.frames_retried;
+    stats.frames_corrupt = health.frames_corrupt;
+    stats.acks_timed_out = health.acks_timed_out;
+    stats.peer_failures = health.peer_failures;
     stats.comm_secs = t1.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
     Ok((out, stats))

@@ -5,6 +5,93 @@ use std::fmt;
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+/// Whether a communication failure is transient or terminal.
+///
+/// Retryable failures (a dropped or corrupted frame, an ack that has
+/// not arrived yet) are what the reliable transport layer masks by
+/// retransmitting — they only surface when no reliability layer is
+/// installed. Fatal failures (peer dead, retry budget exhausted,
+/// receive deadline passed, protocol violation) terminate the BSP job
+/// on every rank that observes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommErrorKind {
+    /// Transient: a retry may succeed.
+    Retryable,
+    /// Terminal: the superstep cannot complete.
+    Fatal,
+}
+
+/// Structured communication failure: what went wrong plus where — the
+/// reporting rank, the peer involved, and the message tag in flight,
+/// when known. Carrying the location is what lets a dead peer surface
+/// as one clear, attributable error on every rank instead of a bare
+/// timeout string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommFailure {
+    pub kind: CommErrorKind,
+    /// Rank reporting the failure.
+    pub rank: Option<usize>,
+    /// Peer the failure concerns.
+    pub peer: Option<usize>,
+    /// Message tag in flight, if the failure is tied to one.
+    pub tag: Option<u64>,
+    pub msg: String,
+}
+
+impl CommFailure {
+    pub fn fatal(msg: impl Into<String>) -> Self {
+        CommFailure {
+            kind: CommErrorKind::Fatal,
+            rank: None,
+            peer: None,
+            tag: None,
+            msg: msg.into(),
+        }
+    }
+
+    pub fn retryable(msg: impl Into<String>) -> Self {
+        CommFailure { kind: CommErrorKind::Retryable, ..CommFailure::fatal(msg) }
+    }
+
+    pub fn at_rank(mut self, rank: usize) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+
+    pub fn with_peer(mut self, peer: usize) -> Self {
+        self.peer = Some(peer);
+        self
+    }
+
+    pub fn with_tag(mut self, tag: u64) -> Self {
+        self.tag = Some(tag);
+        self
+    }
+}
+
+impl fmt::Display for CommFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut ctx: Vec<String> = Vec::new();
+        if let Some(r) = self.rank {
+            ctx.push(format!("rank {r}"));
+        }
+        if let Some(p) = self.peer {
+            ctx.push(format!("peer {p}"));
+        }
+        if let Some(t) = self.tag {
+            ctx.push(format!("tag {t}"));
+        }
+        if !ctx.is_empty() {
+            write!(f, " [{}]", ctx.join(", "))?;
+        }
+        if self.kind == CommErrorKind::Retryable {
+            write!(f, " (retryable)")?;
+        }
+        Ok(())
+    }
+}
+
 /// Error kinds mirroring `cylon::Code`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Error {
@@ -14,8 +101,9 @@ pub enum Error {
     Invalid(String),
     /// I/O failure (CSV parse, file system, ...).
     Io(String),
-    /// Communication layer failure (peer gone, deserialize, ...).
-    Comm(String),
+    /// Communication layer failure — see [`CommFailure`] for the
+    /// retryable/fatal split and the rank/peer/tag attribution.
+    Comm(CommFailure),
     /// AOT runtime failure (artifact missing, PJRT error, ...).
     Runtime(String),
     /// Simulated resource exhaustion (used by baselines / failure injection).
@@ -34,8 +122,18 @@ impl Error {
     pub fn io(msg: impl Into<String>) -> Self {
         Error::Io(msg.into())
     }
+    /// Generic (fatal, unattributed) comm error. Prefer
+    /// [`Error::comm_failure`] where the rank/peer/tag is known.
     pub fn comm(msg: impl Into<String>) -> Self {
-        Error::Comm(msg.into())
+        Error::Comm(CommFailure::fatal(msg))
+    }
+    /// Transient comm error a retry may resolve.
+    pub fn comm_retryable(msg: impl Into<String>) -> Self {
+        Error::Comm(CommFailure::retryable(msg))
+    }
+    /// Comm error with full structure attached.
+    pub fn comm_failure(f: CommFailure) -> Self {
+        Error::Comm(f)
     }
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
@@ -45,6 +143,19 @@ impl Error {
     }
     pub fn internal(msg: impl Into<String>) -> Self {
         Error::Internal(msg.into())
+    }
+
+    /// Whether this is a transient comm failure worth retrying.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Comm(f) if f.kind == CommErrorKind::Retryable)
+    }
+
+    /// The peer a comm failure concerns, if it names one.
+    pub fn comm_peer(&self) -> Option<usize> {
+        match self {
+            Error::Comm(f) => f.peer,
+            _ => None,
+        }
     }
 }
 
@@ -86,5 +197,30 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn comm_failure_carries_location_and_kind() {
+        let e = Error::comm_failure(
+            CommFailure::fatal("peer stopped acking").at_rank(0).with_peer(2).with_tag(0x104),
+        );
+        assert!(!e.is_retryable());
+        assert_eq!(e.comm_peer(), Some(2));
+        let s = e.to_string();
+        assert!(s.contains("comm error"), "{s}");
+        assert!(s.contains("rank 0"), "{s}");
+        assert!(s.contains("peer 2"), "{s}");
+        assert!(s.contains("tag 260"), "{s}");
+    }
+
+    #[test]
+    fn retryable_vs_fatal_taxonomy() {
+        assert!(Error::comm_retryable("frame dropped").is_retryable());
+        assert!(!Error::comm("plain").is_retryable());
+        assert!(Error::comm_retryable("x").to_string().contains("(retryable)"));
+        assert!(!Error::comm("x").to_string().contains("(retryable)"));
+        // Non-comm errors are never retryable and name no peer.
+        assert!(!Error::invalid("y").is_retryable());
+        assert_eq!(Error::invalid("y").comm_peer(), None);
     }
 }

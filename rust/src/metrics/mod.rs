@@ -147,6 +147,16 @@ pub struct BenchRecord {
     /// Bytes spilled to disk by memory-budgeted operators (0 for
     /// fully in-memory runs).
     pub spill_bytes: u64,
+    /// Data frames retransmitted by the reliable transport, summed
+    /// across workers (0 on plain transports — likewise the next
+    /// three; see [`crate::net::LinkHealth`]).
+    pub frames_retried: u64,
+    /// Frames that failed their CRC32c check and were discarded.
+    pub frames_corrupt: u64,
+    /// Retransmits triggered specifically by an expired ack backoff.
+    pub acks_timed_out: u64,
+    /// Peers declared dead during the run.
+    pub peer_failures: u64,
 }
 
 fn json_escape(s: &str) -> String {
@@ -158,7 +168,8 @@ impl BenchRecord {
         format!(
             "{{\"target\":\"{}\",\"op\":\"{}\",\"rows\":{},\"world\":{},\"threads\":{},\
              \"wall_secs\":{:.6},\"partition_secs\":{:.6},\"comm_secs\":{:.6},\
-             \"peak_rows\":{},\"spill_bytes\":{}}}",
+             \"peak_rows\":{},\"spill_bytes\":{},\"frames_retried\":{},\
+             \"frames_corrupt\":{},\"acks_timed_out\":{},\"peer_failures\":{}}}",
             json_escape(&self.target),
             json_escape(&self.op),
             self.rows,
@@ -168,7 +179,11 @@ impl BenchRecord {
             self.partition_secs,
             self.comm_secs,
             self.peak_rows,
-            self.spill_bytes
+            self.spill_bytes,
+            self.frames_retried,
+            self.frames_corrupt,
+            self.acks_timed_out,
+            self.peer_failures
         )
     }
 }
@@ -265,6 +280,10 @@ mod tests {
             comm_secs: 0.0,
             peak_rows: 123,
             spill_bytes: 456,
+            frames_retried: 7,
+            frames_corrupt: 1,
+            acks_timed_out: 2,
+            peer_failures: 0,
         };
         let doc = bench_records_to_json(&[rec]);
         assert!(doc.contains("\"schema_version\": 1"));
@@ -275,6 +294,10 @@ mod tests {
         assert!(doc.contains("\"wall_secs\":0.250000"));
         assert!(doc.contains("\"peak_rows\":123"));
         assert!(doc.contains("\"spill_bytes\":456"));
+        assert!(doc.contains("\"frames_retried\":7"));
+        assert!(doc.contains("\"frames_corrupt\":1"));
+        assert!(doc.contains("\"acks_timed_out\":2"));
+        assert!(doc.contains("\"peer_failures\":0"));
         // Empty set still yields a valid document.
         assert!(bench_records_to_json(&[]).contains("\"results\": []"));
     }
@@ -292,6 +315,10 @@ mod tests {
             comm_secs: 0.0,
             peak_rows: 0,
             spill_bytes: 0,
+            frames_retried: 0,
+            frames_corrupt: 0,
+            acks_timed_out: 0,
+            peer_failures: 0,
         };
         let path = std::env::temp_dir().join(format!(
             "rylon_bench_append_{}_{:?}.json",

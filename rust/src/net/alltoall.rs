@@ -9,7 +9,7 @@ use super::model::NetworkModel;
 use super::serialize::{
     concat_decode_parts, deserialize_table_par, serialize_table_par, WirePart,
 };
-use super::{CommConfig, Transport};
+use super::{CommConfig, LinkHealth, Transport};
 use crate::error::{Error, Result};
 use crate::table::Table;
 
@@ -89,6 +89,13 @@ impl Communicator {
         self.model.reset();
     }
 
+    /// Reliability counters from the transport stack (zeros when no
+    /// reliability layer is installed). Counters are cumulative; diff
+    /// with [`LinkHealth::since`] to attribute them to one op.
+    pub fn link_health(&self) -> LinkHealth {
+        self.transport.health()
+    }
+
     fn next_tag(&mut self, op: u64) -> u64 {
         self.generation += 1;
         (self.generation << 8) | op
@@ -141,6 +148,10 @@ impl Communicator {
             self.model.charge(received.len());
             results[src] = Some(received);
         }
+        // Don't leave the superstep with frames still in flight: under a
+        // reliable transport this retransmits until everything we sent
+        // is acked (a no-op otherwise).
+        self.transport.flush()?;
         Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect())
     }
 
@@ -231,6 +242,7 @@ impl Communicator {
             Ok(Some(out.into_iter().map(|o| o.unwrap()).collect()))
         } else {
             self.transport.send(root, tag, data)?;
+            self.transport.flush()?;
             Ok(None)
         }
     }
@@ -249,6 +261,7 @@ impl Communicator {
             self.model.charge(b.len());
             out[src] = Some(b);
         }
+        self.transport.flush()?;
         Ok(out.into_iter().map(|o| o.unwrap()).collect())
     }
 
@@ -263,6 +276,7 @@ impl Communicator {
                     self.transport.send(dst, tag, data.clone())?;
                 }
             }
+            self.transport.flush()?;
             Ok(data)
         } else {
             let b = self.transport.recv(root, tag)?;
@@ -284,7 +298,7 @@ impl Communicator {
             self.model.charge(0);
             step <<= 1;
         }
-        Ok(())
+        self.transport.flush()
     }
 
     /// AllReduce-sum of a u64 (row counts, metric aggregation).

@@ -4,12 +4,14 @@
 //! Messages are tagged `(src, tag)`; out-of-order arrivals (different
 //! senders interleave on one receiver queue) are parked in a reorder
 //! buffer until asked for — the discipline MPI's matching rules provide.
+//!
+//! Fault injection lives in [`super::FaultyTransport`], which wraps this
+//! (or any) transport; this layer models only a perfect in-process link.
 
-use super::model::FailurePlan;
 use super::Transport;
-use crate::error::{Error, Result};
+use crate::error::{CommFailure, Error, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
 struct Msg {
@@ -29,8 +31,6 @@ pub struct ChannelTransport {
     /// Receive timeout — a dropped message surfaces as a Comm error
     /// instead of a hang.
     pub recv_timeout: Duration,
-    failures: Option<FailurePlan>,
-    received: u64,
 }
 
 /// Factory for a connected set of transports.
@@ -39,11 +39,6 @@ pub struct ChannelFabric;
 impl ChannelFabric {
     /// Create `world` fully-connected endpoints.
     pub fn new(world: usize) -> Vec<ChannelTransport> {
-        Self::with_failures(world, None)
-    }
-
-    /// As `new`, with a failure plan installed on every endpoint.
-    pub fn with_failures(world: usize, failures: Option<FailurePlan>) -> Vec<ChannelTransport> {
         assert!(world > 0);
         let mut senders = Vec::with_capacity(world);
         let mut receivers = Vec::with_capacity(world);
@@ -62,29 +57,8 @@ impl ChannelFabric {
                 receiver,
                 parked: HashMap::new(),
                 recv_timeout: Duration::from_secs(30),
-                failures: failures.clone(),
-                received: 0,
             })
             .collect()
-    }
-}
-
-impl ChannelTransport {
-    /// Apply the failure plan to an arriving message.
-    /// Returns None if the message is dropped.
-    fn filter(&mut self, mut m: Msg) -> Option<Msg> {
-        self.received += 1;
-        if let Some(plan) = &self.failures {
-            if plan.drop_nth == Some(self.received) {
-                return None;
-            }
-            if plan.corrupt_nth == Some(self.received) {
-                if let Some(b) = m.payload.first_mut() {
-                    *b ^= 0xff;
-                }
-            }
-        }
-        Some(m)
     }
 }
 
@@ -101,9 +75,14 @@ impl Transport for ChannelTransport {
         if dst >= self.world {
             return Err(Error::comm(format!("send to rank {dst} of {}", self.world)));
         }
-        self.senders[dst]
-            .send(Msg { src: self.rank, tag, payload })
-            .map_err(|_| Error::comm(format!("rank {dst} is gone")))
+        self.senders[dst].send(Msg { src: self.rank, tag, payload }).map_err(|_| {
+            Error::comm_failure(
+                CommFailure::fatal(format!("rank {dst} is gone (endpoint dropped)"))
+                    .at_rank(self.rank)
+                    .with_peer(dst)
+                    .with_tag(tag),
+            )
+        })
     }
 
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
@@ -117,24 +96,44 @@ impl Transport for ChannelTransport {
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
                 .ok_or_else(|| {
-                    Error::comm(format!(
-                        "rank {}: timeout waiting for (src={src}, tag={tag})",
-                        self.rank
-                    ))
+                    Error::comm_failure(
+                        CommFailure::fatal(format!(
+                            "timeout after {:?} waiting for a message",
+                            self.recv_timeout
+                        ))
+                        .at_rank(self.rank)
+                        .with_peer(src)
+                        .with_tag(tag),
+                    )
                 })?;
-            let msg = self
-                .receiver
-                .recv_timeout(remaining)
-                .map_err(|e| Error::comm(format!("rank {}: recv failed: {e}", self.rank)))?;
-            if let Some(msg) = self.filter(msg) {
-                if msg.src == src && msg.tag == tag {
-                    return Ok(msg.payload);
-                }
-                self.parked
-                    .entry((msg.src, msg.tag))
-                    .or_default()
-                    .push_back(msg.payload);
+            let msg = self.receiver.recv_timeout(remaining).map_err(|e| {
+                Error::comm_failure(
+                    CommFailure::fatal(format!("recv failed: {e}"))
+                        .at_rank(self.rank)
+                        .with_peer(src)
+                        .with_tag(tag),
+                )
+            })?;
+            if msg.src == src && msg.tag == tag {
+                return Ok(msg.payload);
             }
+            self.parked.entry((msg.src, msg.tag)).or_default().push_back(msg.payload);
+        }
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
+        // Serve reorder-buffer stragglers first (parked by a tag-matched
+        // `recv` that skipped past them).
+        if let Some((&(src, tag), _)) = self.parked.iter().find(|(_, q)| !q.is_empty()) {
+            let payload = self.parked.get_mut(&(src, tag)).unwrap().pop_front().unwrap();
+            return Ok(Some((src, tag, payload)));
+        }
+        match self.receiver.recv_timeout(timeout) {
+            Ok(m) => Ok(Some((m.src, m.tag, m.payload))),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::comm_failure(
+                CommFailure::fatal("all channel endpoints dropped").at_rank(self.rank),
+            )),
         }
     }
 }
@@ -190,27 +189,39 @@ mod tests {
         let mut t0 = t.remove(0);
         t0.recv_timeout = Duration::from_millis(50);
         let err = t0.recv(1, 0).unwrap_err();
-        assert!(matches!(err, Error::Comm(_)));
+        match err {
+            Error::Comm(f) => {
+                assert_eq!(f.rank, Some(0));
+                assert_eq!(f.peer, Some(1));
+                assert_eq!(f.tag, Some(0));
+            }
+            other => panic!("expected comm error, got {other:?}"),
+        }
     }
 
     #[test]
-    fn dropped_message_times_out() {
-        let plan = FailurePlan::drop_message(1);
-        let mut t = ChannelFabric::with_failures(2, Some(plan));
+    fn recv_any_returns_next_frame_or_none() {
+        let mut t = ChannelFabric::new(2);
         let mut t1 = t.pop().unwrap();
         let mut t0 = t.pop().unwrap();
-        t0.recv_timeout = Duration::from_millis(50);
-        t1.send(0, 1, vec![1]).unwrap();
-        assert!(t0.recv(1, 1).is_err());
+        assert_eq!(t0.recv_any(Duration::from_millis(10)).unwrap(), None);
+        t1.send(0, 5, vec![5]).unwrap();
+        t1.send(0, 6, vec![6]).unwrap();
+        assert_eq!(t0.recv_any(Duration::from_millis(100)).unwrap(), Some((1, 5, vec![5])));
+        // A tag-matched recv parks nothing here; next frame comes straight
+        // from the queue.
+        assert_eq!(t0.recv_any(Duration::from_millis(100)).unwrap(), Some((1, 6, vec![6])));
     }
 
     #[test]
-    fn corrupted_message_delivered_mangled() {
-        let plan = FailurePlan::corrupt_message(1);
-        let mut t = ChannelFabric::with_failures(2, Some(plan));
+    fn recv_any_serves_parked_frames_first() {
+        let mut t = ChannelFabric::new(2);
         let mut t1 = t.pop().unwrap();
         let mut t0 = t.pop().unwrap();
-        t1.send(0, 1, vec![0xAA, 0xBB]).unwrap();
-        assert_eq!(t0.recv(1, 1).unwrap(), vec![0x55, 0xBB]);
+        t1.send(0, 5, vec![5]).unwrap();
+        t1.send(0, 6, vec![6]).unwrap();
+        // recv(tag 6) parks the tag-5 frame in the reorder buffer.
+        assert_eq!(t0.recv(1, 6).unwrap(), vec![6]);
+        assert_eq!(t0.recv_any(Duration::from_millis(100)).unwrap(), Some((1, 5, vec![5])));
     }
 }

@@ -1,0 +1,412 @@
+//! Deterministic fault injection — a [`Transport`] wrapper that
+//! perturbs traffic from a seeded schedule.
+//!
+//! The schedule is a **pure function of `(seed, src, dst, tag, seq)`**
+//! (`seq` = how many frames this endpoint has already sent on that
+//! `(dst, tag)` link): no wall clock, no global state, so the exact
+//! same faults replay from the same seed no matter how threads
+//! interleave or how long retries take. Five fault kinds:
+//!
+//! * **drop** — the frame silently never reaches the wire;
+//! * **corrupt** — one payload byte is flipped before sending;
+//! * **delay** — the frame is held and flushed on the endpoint's next
+//!   transport call, arriving out of order behind later frames;
+//! * **disconnect** — a designated rank halts after its n-th transport
+//!   operation: every later call on it fails fatally and it goes
+//!   silent for its peers;
+//! * **slow peer** — a designated rank sleeps before every send
+//!   (stragglers; exercises duplicate/retransmit paths above it).
+//!
+//! Drops and corruptions are bounded by a **forced-delivery guard**
+//! ([`FaultPlan::max_consecutive_faults`]): after that many
+//! consecutively faulted sends on one link the next send goes through
+//! clean, so a retransmitting layer above (see [`super::reliable`])
+//! provably converges under any retryable-only schedule.
+
+use super::Transport;
+use crate::error::{CommFailure, Error, Result};
+use crate::io::generator::SplitMix64;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Duration;
+
+/// One scheduled decision for one frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Deliver untouched.
+    None,
+    /// Never send.
+    Drop,
+    /// Flip the first payload byte.
+    Corrupt,
+    /// Hold until the endpoint's next transport call.
+    Delay,
+}
+
+/// Seeded fault schedule. Probabilities are per-frame in permille;
+/// decisions come from [`FaultPlan::decide`], a pure function of the
+/// frame's coordinates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-frame drop probability, 0..=1000.
+    pub drop_permille: u16,
+    /// Per-frame corruption probability, 0..=1000.
+    pub corrupt_permille: u16,
+    /// Per-frame delay (reorder) probability, 0..=1000.
+    pub delay_permille: u16,
+    /// Forced-delivery guard: after this many consecutively
+    /// dropped/corrupted sends on one `(dst, tag)` link, the next send
+    /// is delivered clean. `u64::MAX` disables the guard (a link can
+    /// then be starved forever — only meaningful without a reliability
+    /// layer above).
+    pub max_consecutive_faults: u64,
+    /// `(rank, after_ops)`: that rank halts fatally once it has
+    /// performed `after_ops` transport operations.
+    pub disconnect: Option<(usize, u64)>,
+    /// `(rank, millis)`: that rank sleeps before every send.
+    pub slow: Option<(usize, u64)>,
+}
+
+impl FaultPlan {
+    /// A plan with no faults enabled; compose with the `with_*`
+    /// builders. The forced-delivery guard defaults to 2.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            drop_permille: 0,
+            corrupt_permille: 0,
+            delay_permille: 0,
+            max_consecutive_faults: 2,
+            disconnect: None,
+            slow: None,
+        }
+    }
+
+    pub fn with_drops(mut self, permille: u16) -> Self {
+        self.drop_permille = permille;
+        self
+    }
+
+    pub fn with_corruption(mut self, permille: u16) -> Self {
+        self.corrupt_permille = permille;
+        self
+    }
+
+    pub fn with_delays(mut self, permille: u16) -> Self {
+        self.delay_permille = permille;
+        self
+    }
+
+    pub fn with_max_consecutive_faults(mut self, n: u64) -> Self {
+        self.max_consecutive_faults = n;
+        self
+    }
+
+    pub fn with_disconnect(mut self, rank: usize, after_ops: u64) -> Self {
+        self.disconnect = Some((rank, after_ops));
+        self
+    }
+
+    pub fn with_slow_peer(mut self, rank: usize, millis: u64) -> Self {
+        self.slow = Some((rank, millis));
+        self
+    }
+
+    /// Drop every frame forever (guard disabled) — the bare "message
+    /// lost" scenario for transports without a reliability layer.
+    pub fn drop_all(seed: u64) -> Self {
+        FaultPlan::new(seed).with_drops(1000).with_max_consecutive_faults(u64::MAX)
+    }
+
+    /// Corrupt every frame forever (guard disabled).
+    pub fn corrupt_all(seed: u64) -> Self {
+        FaultPlan::new(seed).with_corruption(1000).with_max_consecutive_faults(u64::MAX)
+    }
+
+    /// The scheduled decision for the `seq`-th frame sent on
+    /// `(src, dst, tag)` — a pure function of its arguments (and the
+    /// seed), so schedules replay identically.
+    pub fn decide(&self, src: usize, dst: usize, tag: u64, seq: u64) -> Fault {
+        let total =
+            self.drop_permille as u64 + self.corrupt_permille as u64 + self.delay_permille as u64;
+        if total == 0 {
+            return Fault::None;
+        }
+        let key = self
+            .seed
+            .wrapping_add((src as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((dst as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            .wrapping_add(tag.wrapping_mul(0x1656_67B1_9E37_79F9))
+            .wrapping_add(seq.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        let roll = SplitMix64::new(key).next_u64() % 1000;
+        if roll < self.drop_permille as u64 {
+            Fault::Drop
+        } else if roll < self.drop_permille as u64 + self.corrupt_permille as u64 {
+            Fault::Corrupt
+        } else if roll < total {
+            Fault::Delay
+        } else {
+            Fault::None
+        }
+    }
+}
+
+/// [`Transport`] wrapper applying a [`FaultPlan`] to outgoing traffic.
+/// Wraps any transport (channel or TCP); receive paths pass through
+/// untouched (faults are injected at the sender, where the schedule's
+/// per-link frame counter lives).
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    /// Frames sent per `(dst, tag)` — the `seq` fed to the schedule.
+    sent: BTreeMap<(usize, u64), u64>,
+    /// Consecutive dropped/corrupted sends per `(dst, tag)`.
+    streak: BTreeMap<(usize, u64), u64>,
+    /// Frames held by a Delay fault, flushed on the next call.
+    held: VecDeque<(usize, u64, Vec<u8>)>,
+    /// Transport operations performed (drives the disconnect schedule).
+    ops: u64,
+    /// Latched once the disconnect point is reached.
+    down: bool,
+    /// Injected-fault accounting, for tests and schedule audits.
+    pub injected_drops: u64,
+    pub injected_corruptions: u64,
+    pub injected_delays: u64,
+}
+
+impl FaultyTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        FaultyTransport {
+            inner,
+            plan,
+            sent: BTreeMap::new(),
+            streak: BTreeMap::new(),
+            held: VecDeque::new(),
+            ops: 0,
+            down: false,
+            injected_drops: 0,
+            injected_corruptions: 0,
+            injected_delays: 0,
+        }
+    }
+
+    /// Count one transport op; fail fatally past the disconnect point.
+    fn tick(&mut self) -> Result<()> {
+        self.ops += 1;
+        if let Some((rank, after)) = self.plan.disconnect {
+            if rank == self.inner.rank() && self.ops > after {
+                self.down = true;
+            }
+        }
+        if self.down {
+            let rank = self.inner.rank();
+            return Err(Error::comm_failure(
+                CommFailure::fatal(format!("rank {rank} disconnected (injected fault)"))
+                    .at_rank(rank),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Release every delayed frame (they now arrive behind any frame
+    /// sent since they were held — the reorder the Delay fault models).
+    fn flush_held(&mut self) -> Result<()> {
+        while let Some((dst, tag, payload)) = self.held.pop_front() {
+            self.inner.send(dst, tag, payload)?;
+        }
+        Ok(())
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, mut payload: Vec<u8>) -> Result<()> {
+        self.tick()?;
+        self.flush_held()?;
+        if let Some((rank, millis)) = self.plan.slow {
+            if rank == self.inner.rank() {
+                std::thread::sleep(Duration::from_millis(millis));
+            }
+        }
+        let key = (dst, tag);
+        let seq = {
+            let c = self.sent.entry(key).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        let mut fault = self.plan.decide(self.inner.rank(), dst, tag, seq);
+        // An empty payload has no byte to flip.
+        if fault == Fault::Corrupt && payload.is_empty() {
+            fault = Fault::None;
+        }
+        let streak = self.streak.entry(key).or_insert(0);
+        if matches!(fault, Fault::Drop | Fault::Corrupt)
+            && *streak >= self.plan.max_consecutive_faults
+        {
+            fault = Fault::None; // forced delivery: faults cannot starve a link
+        }
+        match fault {
+            Fault::Drop => {
+                *streak += 1;
+                self.injected_drops += 1;
+                Ok(())
+            }
+            Fault::Corrupt => {
+                *streak += 1;
+                self.injected_corruptions += 1;
+                payload[0] ^= 0x5A;
+                self.inner.send(dst, tag, payload)
+            }
+            Fault::Delay => {
+                *streak = 0;
+                self.injected_delays += 1;
+                self.held.push_back((dst, tag, payload));
+                Ok(())
+            }
+            Fault::None => {
+                *streak = 0;
+                self.inner.send(dst, tag, payload)
+            }
+        }
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        self.tick()?;
+        self.flush_held()?;
+        self.inner.recv(src, tag)
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
+        self.tick()?;
+        self.flush_held()?;
+        self.inner.recv_any(timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::ChannelFabric;
+
+    fn pair() -> (Box<dyn Transport>, Box<dyn Transport>) {
+        let mut f = ChannelFabric::new(2);
+        let t1 = f.pop().unwrap();
+        let t0 = f.pop().unwrap();
+        (Box::new(t0), Box::new(t1))
+    }
+
+    #[test]
+    fn schedule_is_pure_and_seed_sensitive() {
+        let plan = FaultPlan::new(42).with_drops(300).with_corruption(200).with_delays(100);
+        let grid: Vec<Fault> = (0..4)
+            .flat_map(|src| {
+                (0..4).flat_map(move |dst| {
+                    (0..16).map(move |seq| plan.decide(src, dst, 0x104, seq))
+                })
+            })
+            .collect();
+        let replay: Vec<Fault> = (0..4)
+            .flat_map(|src| {
+                (0..4).flat_map(move |dst| {
+                    (0..16).map(move |seq| plan.decide(src, dst, 0x104, seq))
+                })
+            })
+            .collect();
+        assert_eq!(grid, replay);
+        assert!(grid.iter().any(|f| *f != Fault::None), "600‰ over 256 frames");
+        assert!(grid.iter().any(|f| *f == Fault::None));
+        let other = FaultPlan::new(43).with_drops(300).with_corruption(200).with_delays(100);
+        let other_grid: Vec<Fault> = (0..4)
+            .flat_map(|src| {
+                (0..4).flat_map(move |dst| {
+                    (0..16).map(move |seq| other.decide(src, dst, 0x104, seq))
+                })
+            })
+            .collect();
+        assert_ne!(grid, other_grid, "different seeds must yield different schedules");
+    }
+
+    #[test]
+    fn forced_delivery_bounds_fault_streaks() {
+        // drop_permille 1000 + guard 1: every other frame delivered.
+        let plan = FaultPlan::new(1).with_drops(1000).with_max_consecutive_faults(1);
+        let (t0, t1) = pair();
+        let mut f1 = FaultyTransport::new(t1, plan);
+        let mut rx = t0;
+        for i in 0..6u8 {
+            f1.send(0, 9, vec![i]).unwrap();
+        }
+        assert_eq!(f1.injected_drops, 3);
+        // Every delivered frame arrives; receiver sees 1, 3, 5.
+        for want in [1u8, 3, 5] {
+            assert_eq!(rx.recv(1, 9).unwrap(), vec![want]);
+        }
+    }
+
+    #[test]
+    fn dropped_frames_time_out_without_reliability() {
+        let mut f = ChannelFabric::new(2);
+        let t1 = f.pop().unwrap();
+        let mut t0 = f.pop().unwrap();
+        t0.recv_timeout = Duration::from_millis(50);
+        let mut sender = FaultyTransport::new(Box::new(t1), FaultPlan::drop_all(7));
+        sender.send(0, 1, vec![1]).unwrap();
+        assert_eq!(sender.injected_drops, 1);
+        let err = t0.recv(1, 1).unwrap_err();
+        assert!(matches!(err, Error::Comm(_)), "{err}");
+    }
+
+    #[test]
+    fn corruption_flips_one_byte() {
+        let (mut rx, t1) = pair();
+        let mut sender = FaultyTransport::new(t1, FaultPlan::corrupt_all(3));
+        sender.send(0, 1, vec![0xAA, 0xBB]).unwrap();
+        assert_eq!(sender.injected_corruptions, 1);
+        assert_eq!(rx.recv(1, 1).unwrap(), vec![0xAA ^ 0x5A, 0xBB]);
+        // Empty payloads pass through unharmed (nothing to flip).
+        sender.send(0, 2, vec![]).unwrap();
+        assert_eq!(rx.recv(1, 2).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn delayed_frames_reorder_behind_later_sends() {
+        let plan = FaultPlan::new(0).with_delays(1000);
+        let (mut rx, t1) = pair();
+        let mut sender = FaultyTransport::new(t1, plan);
+        sender.send(0, 1, vec![1]).unwrap(); // held
+        sender.send(0, 2, vec![2]).unwrap(); // flushes [1], then holds [2]
+        assert_eq!(sender.injected_delays, 2);
+        assert_eq!(rx.recv(1, 1).unwrap(), vec![1]);
+        // Force the last held frame out via a recv-side op.
+        assert!(sender.recv_any(Duration::from_millis(1)).unwrap().is_none());
+        assert_eq!(rx.recv(1, 2).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn disconnect_halts_the_rank_with_a_structured_error() {
+        let plan = FaultPlan::new(0).with_disconnect(1, 2);
+        let (_rx, t1) = pair();
+        let mut sender = FaultyTransport::new(t1, plan);
+        sender.send(0, 1, vec![1]).unwrap();
+        sender.send(0, 1, vec![2]).unwrap();
+        let err = sender.send(0, 1, vec![3]).unwrap_err();
+        match &err {
+            Error::Comm(f) => {
+                assert_eq!(f.kind, crate::error::CommErrorKind::Fatal);
+                assert_eq!(f.rank, Some(1));
+                assert!(f.msg.contains("disconnected"), "{err}");
+            }
+            other => panic!("expected comm error, got {other:?}"),
+        }
+        // Receives fail too — the rank is down, not just its sends.
+        assert!(sender.recv_any(Duration::ZERO).is_err());
+    }
+}

@@ -1,4 +1,4 @@
-//! Network cost model + deterministic failure injection.
+//! Network cost model.
 //!
 //! The testbed substitution for the paper's 40 Gbps Infiniband / TCP
 //! fabric (§IV-A): every message is charged `α + bytes·β` — α the
@@ -6,7 +6,7 @@
 //! *applied* (the receiving thread actually waits, making wall-clock
 //! benchmarks exhibit cluster-like comm behaviour) or merely *accounted*
 //! (virtual time for the BSP scaling simulator, which can sweep to 160
-//! workers on a laptop).
+//! workers on a laptop). Failure injection lives in [`super::fault`].
 
 use std::time::Duration;
 
@@ -44,26 +44,6 @@ impl NetworkProfile {
             NetworkProfile::Tcp10G => "tcp-10g",
             NetworkProfile::Tcp1G => "tcp-1g",
         }
-    }
-}
-
-/// Deterministic failure plan for tests: message `n` (global arrival
-/// order per endpoint) from `src` is dropped/corrupted.
-#[derive(Debug, Clone)]
-pub struct FailurePlan {
-    /// Drop the k-th received message (per receiving endpoint).
-    pub drop_nth: Option<u64>,
-    /// Flip a byte in the k-th received message.
-    pub corrupt_nth: Option<u64>,
-}
-
-impl FailurePlan {
-    pub fn drop_message(n: u64) -> Self {
-        FailurePlan { drop_nth: Some(n), corrupt_nth: None }
-    }
-
-    pub fn corrupt_message(n: u64) -> Self {
-        FailurePlan { drop_nth: None, corrupt_nth: Some(n) }
     }
 }
 

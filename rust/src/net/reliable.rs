@@ -1,0 +1,687 @@
+//! Reliable delivery over an unreliable transport: CRC32c frame
+//! checksums, per-link sequence numbers, and ack/retransmit with
+//! capped exponential backoff.
+//!
+//! [`ReliableTransport`] wraps any [`Transport`] (typically a
+//! [`super::FaultyTransport`] in tests, a raw channel or TCP fabric in
+//! production) and guarantees that the byte stream delivered on every
+//! `(src, tag)` link is **exactly the byte stream sent** — in order,
+//! deduplicated, integrity-checked — as long as the underlying faults
+//! are transient. Permanent faults (peer gone, retries exhausted past
+//! [`RetryConfig::death_timeout`]) surface as **fatal** structured
+//! [`CommFailure`]s naming the peer, never as a silent hang.
+//!
+//! ## Frame layout (reliability rev)
+//!
+//! Data frames travel under the caller's tag; control frames under the
+//! reserved [`CTRL_TAG`]. Every frame ends in a CRC32c over all
+//! preceding bytes; a frame that fails its checksum is dropped on the
+//! floor (none of its fields can be trusted — not even the seq, so no
+//! nack is sent; recovery rides the sender's retransmit backoff).
+//!
+//! ```text
+//! data:  [0x01][seq: u64 LE][payload ...][crc32c: u32 LE]
+//! ack:   [0x02][tag: u64 LE][seq: u64 LE][crc32c: u32 LE]   cumulative: all ≤ seq received
+//! nack:  [0x03][tag: u64 LE][seq: u64 LE][crc32c: u32 LE]   gap: retransmit seq now
+//! ```
+//!
+//! ## Ack/retry state machine
+//!
+//! Sender, per `(dst, tag)`: frames get consecutive seqs starting at 0
+//! and stay in the unacked window after a successful inner send. A
+//! cumulative ACK(s) prunes every pending ≤ s; a NACK(s) forces an
+//! immediate retransmit of s. Otherwise a pending is retransmitted when
+//! its backoff expires — `ack_base · 2^attempts`, capped at `ack_cap` —
+//! and a peer that stays silent for `death_timeout` after a frame's
+//! first send is declared dead (fatal, counted in
+//! [`LinkHealth::peer_failures`]).
+//!
+//! Receiver, per `(src, tag)`: delivers seqs in order. The expected seq
+//! is delivered (plus any parked successors) and acked cumulatively; a
+//! duplicate (seq below expected — its ack was lost) is dropped and
+//! re-acked; an early frame (seq above expected) is parked and the gap
+//! nacked. Wall-clock timing paces only *when* retries happen: the seq
+//! discipline makes *what* is delivered identical run to run.
+//!
+//! Self-sends (`dst == rank`) bypass the protocol entirely — there is
+//! no wire to be unreliable on.
+
+use super::{LinkHealth, Transport};
+use crate::error::{CommFailure, Error, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Reserved tag for ACK/NACK control frames. Distinct from the TCP
+/// layer's disconnect sentinel (`u64::MAX`); user tags must stay below
+/// both.
+pub const CTRL_TAG: u64 = u64::MAX - 1;
+
+const KIND_DATA: u8 = 0x01;
+const KIND_ACK: u8 = 0x02;
+const KIND_NACK: u8 = 0x03;
+
+/// Smallest valid frame: kind + seq + crc (an empty-payload data frame).
+const MIN_FRAME: usize = 1 + 8 + 4;
+/// Exact size of a control frame: kind + tag + seq + crc.
+const CTRL_FRAME: usize = 1 + 8 + 8 + 4;
+
+// ---------------------------------------------------------------------
+// CRC32c (Castagnoli), slicing-by-8. Table built at compile time.
+// ---------------------------------------------------------------------
+
+const CRC_POLY: u32 = 0x82F6_3B78; // reflected Castagnoli polynomial
+
+const fn make_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ CRC_POLY } else { c >> 1 };
+            k += 1;
+        }
+        t[0][i] = c;
+        i += 1;
+    }
+    let mut j = 1;
+    while j < 8 {
+        let mut i = 0;
+        while i < 256 {
+            t[j][i] = (t[j - 1][i] >> 8) ^ t[0][(t[j - 1][i] & 0xFF) as usize];
+            i += 1;
+        }
+        j += 1;
+    }
+    t
+}
+
+static CRC_TABLES: [[u32; 256]; 8] = make_tables();
+
+/// CRC32c of `data` (the iSCSI/SSE4.2 checksum), 8 bytes per step.
+pub fn crc32c(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    let mut chunks = data.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        crc = CRC_TABLES[7][(lo & 0xFF) as usize]
+            ^ CRC_TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ CRC_TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ CRC_TABLES[4][(lo >> 24) as usize]
+            ^ CRC_TABLES[3][(hi & 0xFF) as usize]
+            ^ CRC_TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ CRC_TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ CRC_TABLES[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = CRC_TABLES[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------
+// Retry policy
+// ---------------------------------------------------------------------
+
+/// Retransmit/backoff policy for [`ReliableTransport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryConfig {
+    /// First retransmit after this long without an ack.
+    pub ack_base: Duration,
+    /// Backoff ceiling: retransmit intervals never exceed this.
+    pub ack_cap: Duration,
+    /// Granularity of blocking waits inside `recv`/`flush` — how often
+    /// the retransmit pump runs while waiting for traffic.
+    pub poll: Duration,
+    /// A frame unacked this long after its *first* send marks the peer
+    /// dead. Deliberately generous: a slow peer busy computing must not
+    /// be declared failed (attempt counts would misfire there).
+    pub death_timeout: Duration,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            ack_base: Duration::from_millis(50),
+            ack_cap: Duration::from_millis(1600),
+            poll: Duration::from_millis(5),
+            death_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+impl RetryConfig {
+    /// Tight timings for tests and benches where peers are threads in
+    /// this process and real silence means a dead peer within a second.
+    pub fn aggressive() -> Self {
+        RetryConfig {
+            ack_base: Duration::from_millis(15),
+            ack_cap: Duration::from_millis(120),
+            poll: Duration::from_millis(2),
+            death_timeout: Duration::from_secs(1),
+        }
+    }
+}
+
+/// One unacked data frame in the sender window.
+struct Pending {
+    /// The full encoded frame, resent verbatim.
+    frame: Vec<u8>,
+    first_sent: Instant,
+    next_retry: Instant,
+    attempts: u32,
+    /// Set when a NACK scheduled this retransmit (so it is not counted
+    /// as an ack timeout by the pump).
+    nacked: bool,
+}
+
+// ---------------------------------------------------------------------
+// The transport
+// ---------------------------------------------------------------------
+
+/// Reliability layer: see the module docs for the protocol.
+pub struct ReliableTransport {
+    inner: Box<dyn Transport>,
+    cfg: RetryConfig,
+    /// Blocking-receive deadline (from `CommConfig::recv_timeout`).
+    recv_timeout: Duration,
+    /// Next seq to assign per outgoing `(dst, tag)` link.
+    next_seq: BTreeMap<(usize, u64), u64>,
+    /// Next seq to deliver per incoming `(src, tag)` link.
+    expected: BTreeMap<(usize, u64), u64>,
+    /// Early frames (seq above expected), keyed by seq for in-order drain.
+    parked: BTreeMap<(usize, u64), BTreeMap<u64, Vec<u8>>>,
+    /// In-order payloads delivered but not yet claimed by a `recv`.
+    ready: BTreeMap<(usize, u64), VecDeque<Vec<u8>>>,
+    /// Sender windows: unacked frames per `(dst, tag)`.
+    unacked: BTreeMap<(usize, u64), BTreeMap<u64, Pending>>,
+    /// Peers declared failed; all further traffic to/from them is fatal.
+    dead: Vec<bool>,
+    health: LinkHealth,
+}
+
+impl ReliableTransport {
+    pub fn new(inner: Box<dyn Transport>, cfg: RetryConfig, recv_timeout: Duration) -> Self {
+        let world = inner.world();
+        ReliableTransport {
+            inner,
+            cfg,
+            recv_timeout,
+            next_seq: BTreeMap::new(),
+            expected: BTreeMap::new(),
+            parked: BTreeMap::new(),
+            ready: BTreeMap::new(),
+            unacked: BTreeMap::new(),
+            dead: vec![false; world],
+            health: LinkHealth::default(),
+        }
+    }
+
+    fn mark_dead(&mut self, peer: usize) {
+        if !self.dead[peer] {
+            self.dead[peer] = true;
+            self.health.peer_failures += 1;
+        }
+    }
+
+    fn dead_peer_error(&self, peer: usize, tag: Option<u64>) -> Error {
+        let mut f = CommFailure::fatal(format!(
+            "peer {peer} failed (no ack within {:?} or link down)",
+            self.cfg.death_timeout
+        ))
+        .at_rank(self.inner.rank())
+        .with_peer(peer);
+        if let Some(t) = tag {
+            f = f.with_tag(t);
+        }
+        Error::comm_failure(f)
+    }
+
+    fn encode_data(seq: u64, payload: &[u8]) -> Vec<u8> {
+        let mut f = Vec::with_capacity(MIN_FRAME + payload.len());
+        f.push(KIND_DATA);
+        f.extend_from_slice(&seq.to_le_bytes());
+        f.extend_from_slice(payload);
+        let crc = crc32c(&f);
+        f.extend_from_slice(&crc.to_le_bytes());
+        f
+    }
+
+    /// Send an ACK/NACK. Failure to send control traffic marks the peer
+    /// dead but is not an error for the caller — data-path retries will
+    /// surface it.
+    fn send_ctrl(&mut self, dst: usize, kind: u8, tag: u64, seq: u64) {
+        let mut f = Vec::with_capacity(CTRL_FRAME);
+        f.push(kind);
+        f.extend_from_slice(&tag.to_le_bytes());
+        f.extend_from_slice(&seq.to_le_bytes());
+        let crc = crc32c(&f);
+        f.extend_from_slice(&crc.to_le_bytes());
+        if self.inner.send(dst, CTRL_TAG, f).is_err() {
+            self.mark_dead(dst);
+        }
+    }
+
+    /// Route one raw frame from the inner transport.
+    fn dispatch(&mut self, src: usize, tag: u64, frame: Vec<u8>) {
+        if frame.len() < MIN_FRAME {
+            self.health.frames_corrupt += 1;
+            return;
+        }
+        let (body, trailer) = frame.split_at(frame.len() - 4);
+        let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+        if crc32c(body) != stored {
+            // Nothing in a corrupt frame can be trusted, not even the
+            // seq — drop it and let the sender's backoff recover.
+            self.health.frames_corrupt += 1;
+            return;
+        }
+        if tag == CTRL_TAG {
+            if frame.len() != CTRL_FRAME {
+                self.health.frames_corrupt += 1;
+                return;
+            }
+            let ctag = u64::from_le_bytes(body[1..9].try_into().unwrap());
+            let seq = u64::from_le_bytes(body[9..17].try_into().unwrap());
+            match body[0] {
+                KIND_ACK => {
+                    // Cumulative: everything ≤ seq is delivered.
+                    if let Some(win) = self.unacked.get_mut(&(src, ctag)) {
+                        let acked: Vec<u64> = win.range(..=seq).map(|(&s, _)| s).collect();
+                        for s in acked {
+                            win.remove(&s);
+                        }
+                    }
+                }
+                KIND_NACK => {
+                    // The receiver is missing exactly `seq`; resend it
+                    // now (later seqs are parked on its side).
+                    if let Some(win) = self.unacked.get_mut(&(src, ctag)) {
+                        let implied: Vec<u64> = win.range(..seq).map(|(&s, _)| s).collect();
+                        for s in implied {
+                            win.remove(&s);
+                        }
+                        if let Some(p) = win.get_mut(&seq) {
+                            p.next_retry = Instant::now();
+                            p.nacked = true;
+                        }
+                    }
+                }
+                _ => self.health.frames_corrupt += 1,
+            }
+            return;
+        }
+        if body[0] != KIND_DATA {
+            self.health.frames_corrupt += 1;
+            return;
+        }
+        let seq = u64::from_le_bytes(body[1..9].try_into().unwrap());
+        let exp = *self.expected.get(&(src, tag)).unwrap_or(&0);
+        if seq == exp {
+            let mut delivered = vec![body[9..].to_vec()];
+            let mut next = exp + 1;
+            if let Some(park) = self.parked.get_mut(&(src, tag)) {
+                while let Some(p) = park.remove(&next) {
+                    delivered.push(p);
+                    next += 1;
+                }
+            }
+            self.ready.entry((src, tag)).or_default().extend(delivered);
+            self.expected.insert((src, tag), next);
+            self.send_ctrl(src, KIND_ACK, tag, next - 1);
+        } else if seq < exp {
+            // Duplicate — our ack was lost; re-ack so the sender stops.
+            self.send_ctrl(src, KIND_ACK, tag, exp - 1);
+        } else {
+            // Gap — park the early frame, ask for the missing one.
+            self.parked
+                .entry((src, tag))
+                .or_default()
+                .entry(seq)
+                .or_insert_with(|| body[9..].to_vec());
+            self.send_ctrl(src, KIND_NACK, tag, exp);
+        }
+    }
+
+    /// Retransmit every due pending frame; declare peers dead when a
+    /// frame has gone unacked for `death_timeout`.
+    fn pump_retransmits(&mut self) {
+        let now = Instant::now();
+        let mut to_send: Vec<(usize, u64, Vec<u8>)> = Vec::new();
+        let mut newly_dead: Vec<usize> = Vec::new();
+        for (&(dst, tag), win) in self.unacked.iter_mut() {
+            if self.dead[dst] {
+                continue;
+            }
+            for p in win.values_mut() {
+                if p.next_retry > now {
+                    continue;
+                }
+                if now.duration_since(p.first_sent) >= self.cfg.death_timeout {
+                    newly_dead.push(dst);
+                    break;
+                }
+                if p.nacked {
+                    p.nacked = false;
+                } else {
+                    self.health.acks_timed_out += 1;
+                }
+                p.attempts += 1;
+                let backoff =
+                    (self.cfg.ack_base * (1u32 << p.attempts.min(16))).min(self.cfg.ack_cap);
+                p.next_retry = now + backoff;
+                to_send.push((dst, tag, p.frame.clone()));
+            }
+        }
+        for dst in newly_dead {
+            self.mark_dead(dst);
+        }
+        for (dst, tag, frame) in to_send {
+            if self.dead[dst] {
+                continue;
+            }
+            self.health.frames_retried += 1;
+            if self.inner.send(dst, tag, frame).is_err() {
+                self.mark_dead(dst);
+            }
+        }
+    }
+
+    /// Drive the protocol for up to `budget`: drain arrived frames, run
+    /// the retransmit pump, then block briefly for more traffic.
+    fn service(&mut self, budget: Duration) -> Result<()> {
+        let deadline = Instant::now() + budget;
+        loop {
+            loop {
+                match self.inner.recv_any(Duration::ZERO) {
+                    Ok(Some((src, tag, frame))) => self.dispatch(src, tag, frame),
+                    Ok(None) => break,
+                    Err(e) => {
+                        match e.comm_peer() {
+                            Some(p) => self.mark_dead(p),
+                            None => return Err(e),
+                        }
+                        break;
+                    }
+                }
+            }
+            self.pump_retransmits();
+            let now = Instant::now();
+            let remaining = match deadline.checked_duration_since(now) {
+                Some(r) if !r.is_zero() => r,
+                _ => return Ok(()),
+            };
+            match self.inner.recv_any(remaining.min(self.cfg.poll)) {
+                Ok(Some((src, tag, frame))) => self.dispatch(src, tag, frame),
+                Ok(None) => {}
+                Err(e) => match e.comm_peer() {
+                    Some(p) => self.mark_dead(p),
+                    None => return Err(e),
+                },
+            }
+        }
+    }
+
+    fn pop_any_ready(&mut self) -> Option<(usize, u64, Vec<u8>)> {
+        let key = self
+            .ready
+            .iter()
+            .find(|(_, q)| !q.is_empty())
+            .map(|(&k, _)| k)?;
+        let payload = self.ready.get_mut(&key).unwrap().pop_front().unwrap();
+        Some((key.0, key.1, payload))
+    }
+}
+
+impl Transport for ReliableTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
+        if tag >= CTRL_TAG {
+            return Err(Error::invalid(format!("tag {tag} is reserved for the reliability layer")));
+        }
+        if dst == self.inner.rank() {
+            // No wire, no protocol: deliver straight to our own queue.
+            self.ready.entry((dst, tag)).or_default().push_back(payload);
+            return Ok(());
+        }
+        if self.dead[dst] {
+            return Err(self.dead_peer_error(dst, Some(tag)));
+        }
+        let seq = {
+            let c = self.next_seq.entry((dst, tag)).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        let frame = Self::encode_data(seq, &payload);
+        let now = Instant::now();
+        if let Err(e) = self.inner.send(dst, tag, frame.clone()) {
+            self.mark_dead(dst);
+            return Err(e);
+        }
+        self.unacked.entry((dst, tag)).or_default().insert(
+            seq,
+            Pending {
+                frame,
+                first_sent: now,
+                next_retry: now + self.cfg.ack_base,
+                attempts: 0,
+                nacked: false,
+            },
+        );
+        Ok(())
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        let deadline = Instant::now() + self.recv_timeout;
+        loop {
+            // Ready data beats a dead peer: frames that arrived before
+            // the peer failed are still valid.
+            if let Some(q) = self.ready.get_mut(&(src, tag)) {
+                if let Some(p) = q.pop_front() {
+                    return Ok(p);
+                }
+            }
+            if self.dead[src] {
+                return Err(self.dead_peer_error(src, Some(tag)));
+            }
+            let now = Instant::now();
+            let remaining = match deadline.checked_duration_since(now) {
+                Some(r) if !r.is_zero() => r,
+                _ => {
+                    return Err(Error::comm_failure(
+                        CommFailure::fatal(format!(
+                            "timeout after {:?} waiting for a frame",
+                            self.recv_timeout
+                        ))
+                        .at_rank(self.inner.rank())
+                        .with_peer(src)
+                        .with_tag(tag),
+                    ))
+                }
+            };
+            self.service(remaining.min(self.cfg.poll))?;
+        }
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.service(Duration::ZERO)?;
+            if let Some(hit) = self.pop_any_ready() {
+                return Ok(Some(hit));
+            }
+            let now = Instant::now();
+            let remaining = match deadline.checked_duration_since(now) {
+                Some(r) if !r.is_zero() => r,
+                _ => return Ok(None),
+            };
+            self.service(remaining.min(self.cfg.poll))?;
+        }
+    }
+
+    /// Block until every sent frame is acked — or its peer is declared
+    /// dead, in which case the window is abandoned (if the peer
+    /// completed its job the data arrived; if it did not, *its* failure
+    /// surfaces on the ranks that receive from it). Collectives call
+    /// this before returning so a rank never exits a superstep leaving
+    /// undelivered frames behind.
+    fn flush(&mut self) -> Result<()> {
+        loop {
+            let dead = &self.dead;
+            self.unacked.retain(|&(dst, _), win| !win.is_empty() && !dead[dst]);
+            if self.unacked.is_empty() {
+                return Ok(());
+            }
+            self.service(self.cfg.poll)?;
+        }
+    }
+
+    fn health(&self) -> LinkHealth {
+        self.health
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::CommErrorKind;
+    use crate::net::{ChannelFabric, FaultPlan, FaultyTransport};
+
+    fn reliable_over(
+        t: crate::net::channel::ChannelTransport,
+        plan: FaultPlan,
+        cfg: RetryConfig,
+    ) -> ReliableTransport {
+        ReliableTransport::new(
+            Box::new(FaultyTransport::new(Box::new(t), plan)),
+            cfg,
+            Duration::from_secs(10),
+        )
+    }
+
+    #[test]
+    fn crc32c_known_vectors() {
+        // The canonical iSCSI check value.
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+        // Longer-than-8-byte input exercises the sliced path + remainder.
+        let data: Vec<u8> = (0u8..=255).collect();
+        let whole = crc32c(&data);
+        assert_ne!(whole, crc32c(&data[..255]));
+        // Any single-byte corruption changes the checksum.
+        for i in [0usize, 7, 128, 255] {
+            let mut mangled = data.clone();
+            mangled[i] ^= 0x5A;
+            assert_ne!(crc32c(&mangled), whole, "flip at {i} undetected");
+        }
+    }
+
+    #[test]
+    fn heavy_drop_schedule_delivers_bit_identical_in_order() {
+        // Every first transmission on every link is dropped (1000‰ with
+        // forced delivery after 1): the protocol must mask all of it.
+        let plan = FaultPlan::new(11).with_drops(1000).with_max_consecutive_faults(1);
+        let mut f = ChannelFabric::new(2);
+        let t1 = f.pop().unwrap();
+        let t0 = f.pop().unwrap();
+        let mut r0 = reliable_over(t0, plan.clone(), RetryConfig::aggressive());
+        let mut r1 = reliable_over(t1, plan, RetryConfig::aggressive());
+        let h = std::thread::spawn(move || {
+            for i in 0..20u8 {
+                r1.send(0, 0x104, vec![i, i.wrapping_mul(3)]).unwrap();
+            }
+            r1.flush().unwrap();
+            r1.health()
+        });
+        for i in 0..20u8 {
+            assert_eq!(r0.recv(1, 0x104).unwrap(), vec![i, i.wrapping_mul(3)], "frame {i}");
+        }
+        let sender_health = h.join().unwrap();
+        assert!(sender_health.frames_retried >= 20, "{sender_health:?}");
+    }
+
+    #[test]
+    fn corruption_is_detected_and_masked() {
+        // Every first transmission corrupted; CRC must catch each one
+        // and retransmits must deliver clean bytes.
+        let plan = FaultPlan::new(5).with_corruption(1000).with_max_consecutive_faults(1);
+        let mut f = ChannelFabric::new(2);
+        let t1 = f.pop().unwrap();
+        let t0 = f.pop().unwrap();
+        let mut r0 = reliable_over(t0, plan.clone(), RetryConfig::aggressive());
+        let mut r1 = reliable_over(t1, plan, RetryConfig::aggressive());
+        let h = std::thread::spawn(move || {
+            for i in 0..8u8 {
+                r1.send(0, 3, vec![i; 100]).unwrap();
+            }
+            r1.flush().unwrap();
+        });
+        for i in 0..8u8 {
+            assert_eq!(r0.recv(1, 3).unwrap(), vec![i; 100]);
+        }
+        h.join().unwrap();
+        assert!(r0.health().frames_corrupt > 0, "{:?}", r0.health());
+    }
+
+    #[test]
+    fn silent_peer_surfaces_structured_fatal_error() {
+        let mut f = ChannelFabric::new(2);
+        let _t1 = f.pop().unwrap(); // alive but never services: silent
+        let t0 = f.pop().unwrap();
+        let cfg = RetryConfig {
+            ack_base: Duration::from_millis(5),
+            ack_cap: Duration::from_millis(20),
+            poll: Duration::from_millis(1),
+            death_timeout: Duration::from_millis(80),
+        };
+        let mut r0 = ReliableTransport::new(Box::new(t0), cfg, Duration::from_secs(5));
+        r0.send(1, 7, vec![1, 2, 3]).unwrap();
+        let err = r0.recv(1, 7).unwrap_err();
+        match &err {
+            Error::Comm(fail) => {
+                assert_eq!(fail.kind, CommErrorKind::Fatal);
+                assert_eq!(fail.rank, Some(0));
+                assert_eq!(fail.peer, Some(1));
+                assert_eq!(fail.tag, Some(7));
+            }
+            other => panic!("expected structured comm failure, got {other:?}"),
+        }
+        let h = r0.health();
+        assert!(h.acks_timed_out > 0, "{h:?}");
+        assert_eq!(h.peer_failures, 1, "{h:?}");
+        // Later traffic to the dead peer fails fast, not after timeout.
+        assert!(r0.send(1, 8, vec![0]).is_err());
+    }
+
+    #[test]
+    fn self_send_bypasses_the_protocol() {
+        let mut f = ChannelFabric::new(1);
+        let t0 = f.pop().unwrap();
+        let mut r0 =
+            ReliableTransport::new(Box::new(t0), RetryConfig::aggressive(), Duration::from_secs(1));
+        r0.send(0, 42, vec![9, 9]).unwrap();
+        assert_eq!(r0.recv(0, 42).unwrap(), vec![9, 9]);
+        assert_eq!(r0.health(), LinkHealth::default());
+        r0.flush().unwrap(); // nothing pending
+    }
+
+    #[test]
+    fn reserved_tags_are_rejected() {
+        let mut f = ChannelFabric::new(2);
+        let _t1 = f.pop().unwrap();
+        let t0 = f.pop().unwrap();
+        let mut r0 =
+            ReliableTransport::new(Box::new(t0), RetryConfig::default(), Duration::from_secs(1));
+        assert!(matches!(r0.send(1, CTRL_TAG, vec![]), Err(Error::Invalid(_))));
+        assert!(matches!(r0.send(1, u64::MAX, vec![]), Err(Error::Invalid(_))));
+    }
+}

@@ -5,20 +5,29 @@
 //! UCX").
 //!
 //! Topology: full mesh over localhost. Rank `i` listens on a base port
-//! + i; the fabric constructor performs the connect handshake so every
-//! endpoint holds one stream per peer. Frames are
+//! + i; the fabric constructor performs the connect handshake (with
+//! bounded retry — a dialer can win the race against the peer's bind)
+//! so every endpoint holds one stream per peer. Frames are
 //! `[src:u32][tag:u64][len:u64][payload]`. A reader thread per peer
 //! feeds a shared inbox; `recv` matches `(src, tag)` with the same
 //! parking discipline as the channel transport. Frame lengths are
 //! capped at [`MAX_FRAME_BYTES`] on both sides of the wire — a corrupt
 //! or hostile header can not drive an unbounded allocation.
+//!
+//! When a peer's stream hits EOF or reset, the reader thread delivers a
+//! poisoned "peer disconnected" frame under [`DISCONNECT_TAG`] before
+//! exiting, so every blocked `recv` wakes **immediately** with a fatal
+//! structured error instead of sitting out the full `recv_timeout`.
+//! Dropping a `TcpTransport` shuts its sockets down (FIN), so an
+//! endpoint that dies mid-job propagates as a disconnect to its peers
+//! just like a dead process would.
 
 use super::Transport;
-use crate::error::{Error, Result};
+use crate::error::{CommFailure, Error, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
 /// Hard cap on one frame's payload. The `len` field arrives from the
@@ -28,6 +37,14 @@ use std::time::Duration;
 /// any frame the wire format produces (shuffles split per-rank) while
 /// small enough that a bad header fails fast instead of OOMing.
 pub const MAX_FRAME_BYTES: u64 = 1 << 30;
+
+/// Sentinel tag for reader-thread disconnect notifications. Reserved:
+/// user traffic must stay below the reliability layer's control tag
+/// (`u64::MAX - 1`), which in turn is below this.
+pub const DISCONNECT_TAG: u64 = u64::MAX;
+
+/// Dial attempts before declaring a peer unreachable.
+const CONNECT_ATTEMPTS: u32 = 8;
 
 struct Frame {
     src: usize,
@@ -47,11 +64,39 @@ pub struct TcpTransport {
     /// Loopback for self-sends (no socket round-trip).
     self_tx: Sender<Frame>,
     parked: HashMap<(usize, u64), VecDeque<Result<Vec<u8>>>>,
+    /// Peers whose streams have disconnected.
+    dead: Vec<bool>,
     pub recv_timeout: Duration,
 }
 
 /// Factory establishing the localhost mesh.
 pub struct TcpFabric;
+
+/// Dial `addr` with bounded exponential backoff (5 ms doubling to a
+/// 200 ms cap, [`CONNECT_ATTEMPTS`] tries): endpoints starting
+/// concurrently race the peer's bind, and one refused connection must
+/// not kill the fabric. Exhausting the budget is a fatal error naming
+/// the unreachable peer and address.
+fn connect_with_retry(peer: usize, host: &str, port: u16) -> Result<TcpStream> {
+    let mut delay = Duration::from_millis(5);
+    let mut last_err = String::new();
+    for attempt in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect((host, port)) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = e.to_string(),
+        }
+        if attempt + 1 < CONNECT_ATTEMPTS {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_millis(200));
+        }
+    }
+    Err(Error::comm_failure(
+        CommFailure::fatal(format!(
+            "rank {peer} unreachable at {host}:{port} after {CONNECT_ATTEMPTS} attempts: {last_err}"
+        ))
+        .with_peer(peer),
+    ))
+}
 
 impl TcpFabric {
     /// Connect `world` endpoints on `base_port..base_port+world`.
@@ -72,8 +117,7 @@ impl TcpFabric {
             (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
         for i in 0..world {
             for j in (i + 1)..world {
-                let dial = TcpStream::connect(("127.0.0.1", base_port + j as u16))
-                    .map_err(|e| Error::comm(format!("connect {j}: {e}")))?;
+                let dial = connect_with_retry(j, "127.0.0.1", base_port + j as u16)?;
                 dial.set_nodelay(true).ok();
                 let mut d = dial.try_clone().map_err(|e| Error::comm(e.to_string()))?;
                 d.write_all(&(i as u32).to_le_bytes())
@@ -119,6 +163,7 @@ impl TcpFabric {
                 inbox: rx,
                 self_tx: tx,
                 parked: HashMap::new(),
+                dead: vec![false; world],
                 recv_timeout: Duration::from_secs(30),
             });
         }
@@ -137,12 +182,20 @@ fn check_frame_len(len: u64, dst: usize) -> Result<()> {
     Ok(())
 }
 
-/// Reader thread: frames from one peer into the shared inbox.
+fn disconnect_error(src: usize) -> Error {
+    Error::comm_failure(
+        CommFailure::fatal(format!("peer {src} disconnected")).with_peer(src),
+    )
+}
+
+/// Reader thread: frames from one peer into the shared inbox. Every
+/// exit path first posts a [`DISCONNECT_TAG`] frame so blocked
+/// receivers wake at once instead of burning their full timeout.
 fn read_loop(mut stream: TcpStream, src: usize, tx: Sender<Frame>) {
     loop {
         let mut header = [0u8; 16];
         if stream.read_exact(&mut header).is_err() {
-            return; // peer closed
+            break; // peer closed
         }
         let tag = u64::from_le_bytes(header[0..8].try_into().unwrap());
         let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
@@ -155,16 +208,17 @@ fn read_loop(mut stream: TcpStream, src: usize, tx: Sender<Frame>) {
                 "tcp frame from {src} claims {len} bytes (cap {MAX_FRAME_BYTES})"
             ));
             let _ = tx.send(Frame { src, tag, payload: Err(err) });
-            return;
+            break;
         }
         let mut payload = vec![0u8; len as usize];
         if stream.read_exact(&mut payload).is_err() {
-            return;
+            break;
         }
         if tx.send(Frame { src, tag, payload: Ok(payload) }).is_err() {
-            return; // endpoint dropped
+            return; // our own endpoint is gone; nobody left to notify
         }
     }
+    let _ = tx.send(Frame { src, tag: DISCONNECT_TAG, payload: Err(disconnect_error(src)) });
 }
 
 impl Transport for TcpTransport {
@@ -187,6 +241,10 @@ impl Transport for TcpTransport {
                 .map_err(|_| Error::comm("self inbox closed"))?;
             return Ok(());
         }
+        if self.dead[dst] {
+            return Err(disconnect_error(dst));
+        }
+        let rank = self.rank;
         let stream = self.writers[dst]
             .as_mut()
             .ok_or_else(|| Error::comm(format!("no stream to {dst}")))?;
@@ -194,29 +252,57 @@ impl Transport for TcpTransport {
             .write_all(&tag.to_le_bytes())
             .and_then(|_| stream.write_all(&(payload.len() as u64).to_le_bytes()))
             .and_then(|_| stream.write_all(&payload))
-            .map_err(|e| Error::comm(format!("tcp send to {dst}: {e}")))
+            .map_err(|e| {
+                Error::comm_failure(
+                    CommFailure::fatal(format!("tcp send failed: {e}"))
+                        .at_rank(rank)
+                        .with_peer(dst)
+                        .with_tag(tag),
+                )
+            })
     }
 
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        // Frames that landed before a disconnect are still valid — serve
+        // the reorder buffer before the death verdict.
         if let Some(q) = self.parked.get_mut(&(src, tag)) {
             if let Some(p) = q.pop_front() {
                 return p;
             }
+        }
+        if self.dead[src] && src != self.rank {
+            return Err(disconnect_error(src));
         }
         let deadline = std::time::Instant::now() + self.recv_timeout;
         loop {
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
                 .ok_or_else(|| {
-                    Error::comm(format!(
-                        "tcp rank {}: timeout for (src={src}, tag={tag})",
-                        self.rank
-                    ))
+                    Error::comm_failure(
+                        CommFailure::fatal(format!(
+                            "timeout after {:?} waiting for a frame",
+                            self.recv_timeout
+                        ))
+                        .at_rank(self.rank)
+                        .with_peer(src)
+                        .with_tag(tag),
+                    )
                 })?;
-            let frame = self
-                .inbox
-                .recv_timeout(remaining)
-                .map_err(|e| Error::comm(format!("tcp rank {}: recv: {e}", self.rank)))?;
+            let frame = self.inbox.recv_timeout(remaining).map_err(|e| {
+                Error::comm_failure(
+                    CommFailure::fatal(format!("tcp recv failed: {e}"))
+                        .at_rank(self.rank)
+                        .with_peer(src)
+                        .with_tag(tag),
+                )
+            })?;
+            if frame.tag == DISCONNECT_TAG {
+                self.dead[frame.src] = true;
+                if frame.src == src {
+                    return Err(disconnect_error(src));
+                }
+                continue;
+            }
             if frame.src == src && frame.tag == tag {
                 return frame.payload;
             }
@@ -226,12 +312,46 @@ impl Transport for TcpTransport {
                 .push_back(frame.payload);
         }
     }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
+        if let Some((&(src, tag), _)) = self.parked.iter().find(|(_, q)| !q.is_empty()) {
+            let p = self.parked.get_mut(&(src, tag)).unwrap().pop_front().unwrap();
+            return p.map(|payload| Some((src, tag, payload)));
+        }
+        match self.inbox.recv_timeout(timeout) {
+            Ok(f) if f.tag == DISCONNECT_TAG => {
+                self.dead[f.src] = true;
+                Err(disconnect_error(f.src))
+            }
+            Ok(f) => match f.payload {
+                Ok(payload) => Ok(Some((f.src, f.tag, payload))),
+                Err(e) => Err(e),
+            },
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::comm_failure(
+                CommFailure::fatal("tcp inbox closed").at_rank(self.rank),
+            )),
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    /// Send FIN on every stream so peers' reader threads see EOF once
+    /// in-flight data drains — an endpoint dropped mid-job propagates
+    /// to the mesh like a dead process, instead of its sockets
+    /// lingering in reader-thread clones. Write-half only: closing the
+    /// read half could RST in-flight frames a peer already sent.
+    fn drop(&mut self) {
+        for w in self.writers.iter().flatten() {
+            let _ = w.shutdown(Shutdown::Write);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::{CommConfig, Communicator};
+    use crate::net::{wrap_transport, CommConfig, Communicator, FaultPlan, RetryConfig};
     use std::sync::atomic::{AtomicU16, Ordering};
 
     /// Distinct port ranges per test (tests run in parallel).
@@ -264,6 +384,64 @@ mod tests {
     }
 
     #[test]
+    fn connect_retry_waits_for_a_late_bind() {
+        let port = ports(1);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            let listener = TcpListener::bind(("127.0.0.1", port)).unwrap();
+            listener.accept().map(|_| ()).ok();
+        });
+        // First attempts hit a refused port; the backoff outlives the
+        // 40 ms bind delay.
+        let stream = connect_with_retry(1, "127.0.0.1", port);
+        h.join().unwrap();
+        assert!(stream.is_ok(), "{:?}", stream.err().map(|e| e.to_string()));
+    }
+
+    #[test]
+    fn unreachable_peer_names_itself_in_the_error() {
+        let port = ports(1);
+        // Nothing ever binds `port`: the retry budget must exhaust with
+        // a fatal error naming the peer.
+        let err = connect_with_retry(2, "127.0.0.1", port).unwrap_err();
+        match &err {
+            Error::Comm(f) => {
+                assert_eq!(f.peer, Some(2));
+                assert!(f.msg.contains("unreachable"), "{err}");
+                assert!(f.msg.contains(&format!("{port}")), "{err}");
+            }
+            other => panic!("expected comm failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disconnected_peer_wakes_blocked_recv_immediately() {
+        let mut eps = TcpFabric::new(2, ports(2)).unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.recv_timeout = Duration::from_secs(30);
+        let start = std::time::Instant::now();
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            drop(e1); // rank 1 dies mid-job: FIN reaches rank 0's reader
+        });
+        let err = e0.recv(1, 5).unwrap_err();
+        killer.join().unwrap();
+        // The old behaviour burned the whole 30 s timeout here.
+        assert!(start.elapsed() < Duration::from_secs(10), "recv did not wake on disconnect");
+        match &err {
+            Error::Comm(f) => {
+                assert_eq!(f.peer, Some(1));
+                assert!(f.msg.contains("disconnected"), "{err}");
+            }
+            other => panic!("expected comm failure, got {other:?}"),
+        }
+        // The peer stays dead: later ops fail fast.
+        assert!(e0.send(1, 6, vec![1]).is_err());
+        assert!(e0.recv(1, 6).is_err());
+    }
+
+    #[test]
     fn collectives_run_over_tcp() {
         // The §II-C claim: swap the transport, keep the operators.
         let eps = TcpFabric::new(3, ports(3)).unwrap();
@@ -291,6 +469,38 @@ mod tests {
     }
 
     #[test]
+    fn reliable_collectives_survive_faulty_tcp() {
+        // The full stack over real sockets: seeded drops under the
+        // reliability layer; collectives must come out bit-identical.
+        let eps = TcpFabric::new(3, ports(3)).unwrap();
+        let cfg = CommConfig::default()
+            .with_faults(FaultPlan::new(29).with_drops(400).with_corruption(200))
+            .with_reliability(true)
+            .with_retry(RetryConfig::aggressive())
+            .with_recv_timeout(Duration::from_secs(10));
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|t| {
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mut comm = Communicator::new(wrap_transport(Box::new(t), &cfg), &cfg);
+                    let parts =
+                        (0..3).map(|d| vec![comm.rank() as u8; d + 1]).collect();
+                    let got = comm.all_to_all_bytes(parts).unwrap();
+                    comm.barrier().unwrap();
+                    got
+                })
+            })
+            .collect();
+        for (me, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            for (src, msg) in got.iter().enumerate() {
+                assert_eq!(msg, &vec![src as u8; me + 1], "rank {me} from {src}");
+            }
+        }
+    }
+
+    #[test]
     fn oversized_frame_header_is_rejected_without_allocating() {
         // Hostile peer: a valid header whose length field claims more
         // than MAX_FRAME_BYTES. The reader must park a poisoned frame
@@ -307,9 +517,12 @@ mod tests {
         assert_eq!((frame.src, frame.tag), (1, 42));
         let err = frame.payload.unwrap_err().to_string();
         assert!(err.contains("cap"), "unexpected error: {err}");
-        // Reader hung up: no resync is possible mid-stream.
+        // Reader hung up — and said so: the disconnect sentinel follows
+        // so blocked receivers wake instead of timing out.
         h.join().unwrap();
-        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+        let bye = rx.recv_timeout(Duration::from_millis(100)).unwrap();
+        assert_eq!(bye.tag, DISCONNECT_TAG);
+        assert!(bye.payload.is_err());
     }
 
     #[test]

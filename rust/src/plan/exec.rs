@@ -81,6 +81,16 @@ pub struct ExecStats {
     pub spills: usize,
     /// Bytes written to spill files by those breakers.
     pub spill_bytes: u64,
+    /// Data frames retransmitted by the reliable transport during this
+    /// worker's shuffles (zero on plain transports — likewise the next
+    /// three; see [`crate::net::LinkHealth`]).
+    pub frames_retried: u64,
+    /// Frames that failed their CRC32c check and were discarded.
+    pub frames_corrupt: u64,
+    /// Retransmits triggered specifically by an expired ack backoff.
+    pub acks_timed_out: u64,
+    /// Peers declared dead during this execution.
+    pub peer_failures: u64,
 }
 
 impl ExecStats {
@@ -88,6 +98,10 @@ impl ExecStats {
         self.shuffles += s.shuffles;
         self.shuffles_elided += s.shuffles_elided;
         self.comm_bytes += s.comm_bytes;
+        self.frames_retried += s.frames_retried;
+        self.frames_corrupt += s.frames_corrupt;
+        self.acks_timed_out += s.acks_timed_out;
+        self.peer_failures += s.peer_failures;
     }
 }
 

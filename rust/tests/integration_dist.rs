@@ -6,7 +6,7 @@
 use rylon::coordinator::{run_workers, try_run_workers};
 use rylon::dist::testutil::{gather, row_multiset};
 use rylon::io::generator::{random_table, SplitMix64};
-use rylon::net::{CommConfig, FailurePlan, NetworkProfile};
+use rylon::net::{CommConfig, FaultPlan, NetworkProfile, RetryConfig};
 use rylon::ops::join::{nested_loop_join, JoinAlgorithm, JoinConfig, JoinType};
 use rylon::table::Table;
 use std::sync::Arc;
@@ -122,10 +122,10 @@ fn network_profile_does_not_change_results() {
 
 #[test]
 fn dropped_message_fails_cleanly_not_hangs() {
-    // Drop the first data message each endpoint receives: the shuffle
+    // Drop every data message without the reliable layer: the shuffle
     // must surface a comm error (timeout) on some worker, not deadlock.
     let config = CommConfig::default()
-        .with_failures(FailurePlan::drop_message(1))
+        .with_faults(FaultPlan::drop_all(0xD1))
         .with_recv_timeout(std::time::Duration::from_millis(200));
     let result: rylon::error::Result<Vec<usize>> =
         try_run_workers(2, &config, None, move |ctx| {
@@ -139,8 +139,9 @@ fn dropped_message_fails_cleanly_not_hangs() {
 
 #[test]
 fn corrupted_message_is_detected() {
-    let config =
-        CommConfig::default().with_failures(FailurePlan::corrupt_message(1));
+    let config = CommConfig::default()
+        .with_faults(FaultPlan::corrupt_all(0xC0))
+        .with_recv_timeout(std::time::Duration::from_millis(500));
     let result: rylon::error::Result<Vec<usize>> =
         try_run_workers(2, &config, None, move |ctx| {
             let t = random_table(30, 9 + ctx.rank() as u64);
@@ -149,6 +150,44 @@ fn corrupted_message_is_detected() {
         });
     // The corrupted first byte breaks the wire magic => comm error.
     assert!(result.is_err(), "corrupt message should fail deserialization");
+}
+
+#[test]
+fn reliability_masks_the_same_faults() {
+    // The exact schedules that fail the two tests above are fully
+    // recovered by the reliable (checksum + ack/retransmit) layer, with
+    // output bit-identical to a fault-free run.
+    let want = run_workers(3, &CommConfig::default(), move |ctx| {
+        let t = random_table(30, 5 + ctx.rank() as u64);
+        rylon::dist::shuffle(ctx, &t, 0).unwrap().0
+    });
+    for (label, plan) in [
+        ("drops", FaultPlan::drop_all(0xD1).with_max_consecutive_faults(1)),
+        ("corruption", FaultPlan::corrupt_all(0xC0).with_max_consecutive_faults(1)),
+    ] {
+        let config = CommConfig::default()
+            .with_faults(plan)
+            .with_reliability(true)
+            .with_retry(RetryConfig::aggressive())
+            .with_recv_timeout(std::time::Duration::from_secs(10));
+        let got = run_workers(3, &config, move |ctx| {
+            let t = random_table(30, 5 + ctx.rank() as u64);
+            let (out, stats) = rylon::dist::shuffle(ctx, &t, 0).unwrap();
+            (out, stats)
+        });
+        for (rank, ((g, stats), w)) in got.iter().zip(&want).enumerate() {
+            assert!(g.data_equals(w), "{label}: rank {rank} diverged under faults");
+            if label == "drops" {
+                // every original transmission was dropped => each rank
+                // retransmitted at least one frame before its acks came
+                assert!(stats.frames_retried > 0, "{label}: rank {rank} {stats:?}");
+            } else {
+                // every original frame was corrupted => the receiver
+                // saw and masked at least one bad checksum
+                assert!(stats.frames_corrupt > 0, "{label}: rank {rank} {stats:?}");
+            }
+        }
+    }
 }
 
 #[test]
