@@ -7,7 +7,7 @@
 //! bench_driver fig9   [--op join|union]   engine comparison (Fig. 9 a/b)
 //! bench_driver table2                     Table II (join times + speedups)
 //! bench_driver fig10                      binding overhead (Fig. 10)
-//! bench_driver local  [--op join|groupby|sort|partition|shuffle|shuffle_faulty|pipeline|wire] thread sweep
+//! bench_driver local  [--op join|groupby|sort|partition|shuffle|shuffle_faulty|pipeline|wire|cancel] thread sweep
 //! bench_driver all                        everything above
 //! ```
 //!
@@ -41,7 +41,13 @@
 //! `shuffle_faulty` op runs the world-3 shuffle under a seeded
 //! drop-every-original-frame fault schedule with the reliable (ack +
 //! retransmit) transport, so the record's `frames_retried` is nonzero
-//! by construction — the CI schema smoke checks exactly that.
+//! by construction — the CI schema smoke checks exactly that. Its
+//! `cancel` op probes the query-lifecycle guarantee: workers loop a
+//! shuffle while a watcher cancels every rank's `QueryControl`
+//! mid-flight, and the record's wall time is the straggler's
+//! cancel→return latency at world 1 and 3 (bounded by one morsel /
+//! poll interval — see `rylon::lifecycle`); its `cancels` field is
+//! nonzero by construction.
 //!
 //! Every run also appends to `<out-dir>/BENCH_results.json` — one
 //! record per (target, op, rows, world, threads) with wall seconds and
@@ -594,6 +600,7 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
         "shuffle_faulty" => vec!["shuffle_faulty"],
         "pipeline" => vec!["pipeline"],
         "wire" => vec!["wire"],
+        "cancel" => vec!["cancel"],
         // Implicit default ("join" from parse_opts) or explicit "all".
         "all" | "join" => {
             vec![
@@ -605,6 +612,7 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
                 "shuffle_faulty",
                 "pipeline",
                 "wire",
+                "cancel",
             ]
         }
         other => return Err(format!("unknown local op '{other}'")),
@@ -629,6 +637,11 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
             if op == "shuffle_faulty" {
                 bench_shuffle_faulty(opts, threads, &mut report, records)?;
                 eprintln!("[local/shuffle_faulty] threads={threads} done");
+                continue;
+            }
+            if op == "cancel" {
+                bench_cancel(opts, threads, &mut report, records)?;
+                eprintln!("[local/cancel] threads={threads} done");
                 continue;
             }
             let (wall, part, comm, world) = bench_local_op(opts, op, threads)?;
@@ -960,6 +973,84 @@ fn bench_shuffle_faulty(
         peer_failures: health[3],
         ..BenchRecord::default()
     });
+    Ok(())
+}
+
+/// The cancel-latency probe: every rank loops a distributed shuffle
+/// while a watcher thread cancels all ranks' `QueryControl` tokens
+/// mid-flight; the recorded wall time is the straggler's time from the
+/// cancel call to the structured `Error::Cancelled` return. The
+/// lifecycle contract bounds it by one morsel / poll interval past the
+/// in-flight superstep phase, at world 1 and 3 alike; the record's
+/// `cancels` field counts the latched tokens (one per rank), so the CI
+/// schema smoke can assert it is nonzero.
+fn bench_cancel(
+    opts: &Opts,
+    threads: usize,
+    report: &mut Report,
+    records: &mut Vec<BenchRecord>,
+) -> CliResult<()> {
+    let n = opts.total_rows;
+    let runs = opts.runs.max(1);
+    for world in [1usize, 3] {
+        let mut samples: Vec<f64> = Vec::with_capacity(runs);
+        let mut cancels = 0u64;
+        for _ in 0..runs {
+            // Ranks export their control tokens, then shuffle in a
+            // loop; the watcher collects all `world` tokens, lets the
+            // loops get airborne, and cancels everyone at `t0`.
+            let (tx, rx) = std::sync::mpsc::channel::<rylon::lifecycle::QueryControl>();
+            let watcher = std::thread::spawn(move || {
+                let ctls: Vec<_> = (0..world).map(|_| rx.recv().expect("ctl")).collect();
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                let t0 = Instant::now();
+                for c in &ctls {
+                    c.cancel();
+                }
+                (t0, ctls.iter().map(|c| c.cancels()).sum::<u64>())
+            });
+            let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                tx.send(ctx.control().clone()).expect("export control");
+                let t = worker_partition(n, world, ctx.rank(), 0.9, 0xCA9C);
+                loop {
+                    match rylon::dist::shuffle(ctx, &t, 0) {
+                        Ok(out) => std::hint::black_box(out.0.num_rows()),
+                        Err(e) => {
+                            assert!(e.is_cancellation(), "expected cancellation, got {e}");
+                            return Instant::now();
+                        }
+                    };
+                }
+            });
+            let (t0, count) = watcher.join().expect("watcher thread");
+            cancels = count;
+            // Straggler latency: the slowest rank's cancel→return gap.
+            samples.push(
+                outs.iter()
+                    .map(|ret| ret.saturating_duration_since(t0).as_secs_f64())
+                    .fold(0.0f64, f64::max),
+            );
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let wall = samples[samples.len() / 2];
+        report.add_row(vec![
+            format!("cancel_w{world}"),
+            threads.to_string(),
+            fmt_s(wall),
+            "-".into(),
+        ]);
+        records.push(BenchRecord {
+            target: "local".into(),
+            op: "cancel".into(),
+            rows: n,
+            world,
+            threads,
+            wall_secs: wall,
+            cancels,
+            ..BenchRecord::default()
+        });
+    }
     Ok(())
 }
 

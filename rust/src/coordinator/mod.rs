@@ -58,7 +58,14 @@ where
             let job = job.clone();
             std::thread::Builder::new()
                 .name(format!("rylon-worker-{}", ctx.rank()))
-                .spawn(move || job(&mut ctx))
+                .spawn(move || {
+                    // Install the context's lifecycle token as this
+                    // worker's ambient control, so morsel fan-outs deep
+                    // inside operators observe cancellation without
+                    // threading the token through every signature.
+                    let ctl = ctx.control().clone();
+                    crate::lifecycle::with_control(&ctl, move || job(&mut ctx))
+                })
                 .expect("spawn worker")
         })
         .collect();

@@ -1,7 +1,17 @@
 //! CylonContext analog — one worker's handle to the distributed runtime
 //! (rank, world size, communicator, optional AOT kernel runtime).
+//!
+//! Every context carries a [`QueryControl`] token, installed into its
+//! communicator's transport stack at construction: `cancel()` (or an
+//! armed deadline) aborts the context's running query at the next
+//! morsel / plan-node / superstep / receive-poll boundary with a
+//! structured [`Error::Cancelled`](crate::error::Error::Cancelled) or
+//! [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded).
+//! [`CylonContext::new_query`] mints a fresh token when one context
+//! runs several queries back to back.
 
 use crate::error::Result;
+use crate::lifecycle::QueryControl;
 use crate::net::{wrap_transport, ChannelFabric, CommConfig, Communicator};
 use crate::runtime::KernelRuntime;
 use std::sync::Arc;
@@ -33,6 +43,11 @@ pub struct CylonContext {
     /// memory. Results never change — the spill paths are bit-identical
     /// — only peak memory.
     memory_budget: Option<u64>,
+    /// Query-lifecycle token for the query currently running on this
+    /// context; clones are shared with the transport stack and (via
+    /// the ambient [`crate::lifecycle::with_control`] install) the
+    /// morsel workers.
+    control: QueryControl,
 }
 
 /// Per-worker thread budget: co-located in-process workers split the
@@ -46,13 +61,16 @@ impl CylonContext {
     pub fn init_local() -> Self {
         let mut fabric = ChannelFabric::new(1);
         let comm = Communicator::new(Box::new(fabric.pop().unwrap()), &CommConfig::default());
+        let control = QueryControl::new(comm.rank());
         let mut ctx = CylonContext {
             comm,
             runtime: None,
             parallelism: shared_parallelism(1),
             optimize: true,
             memory_budget: None,
+            control,
         };
+        ctx.comm.set_control(Some(ctx.control.clone()));
         ctx.comm.set_parallelism(ctx.parallelism);
         ctx
     }
@@ -70,12 +88,15 @@ impl CylonContext {
                 let mut comm =
                     Communicator::new(wrap_transport(Box::new(t), config), config);
                 comm.set_parallelism(parallelism);
+                let control = QueryControl::new(comm.rank());
+                comm.set_control(Some(control.clone()));
                 CylonContext {
                     comm,
                     runtime: None,
                     parallelism,
                     optimize: true,
                     memory_budget: None,
+                    control,
                 }
             })
             .collect()
@@ -88,13 +109,16 @@ impl CylonContext {
     /// whose in-process workers split it. Override with
     /// [`Self::with_parallelism`] when co-locating ranks.
     pub fn from_communicator(comm: Communicator) -> Self {
+        let control = QueryControl::new(comm.rank());
         let mut ctx = CylonContext {
             comm,
             runtime: None,
             parallelism: shared_parallelism(1),
             optimize: true,
             memory_budget: None,
+            control,
         };
+        ctx.comm.set_control(Some(ctx.control.clone()));
         ctx.comm.set_parallelism(ctx.parallelism);
         ctx
     }
@@ -185,8 +209,49 @@ impl CylonContext {
         self.runtime.as_ref()
     }
 
-    /// Finalize: synchronize and drop (MPI_Finalize analog).
+    /// The lifecycle token of the query currently running on this
+    /// context. Clone it to a watcher thread and call
+    /// [`QueryControl::cancel`] (or arm a deadline with
+    /// [`QueryControl::set_timeout`]) to abort cooperatively.
+    pub fn control(&self) -> &QueryControl {
+        &self.control
+    }
+
+    /// Mint a fresh lifecycle token for the next query and install it
+    /// into the transport stack, returning a clone for watchers. Use
+    /// between queries on a long-lived context — cancellation latches,
+    /// so a used token never runs anything again.
+    pub fn new_query(&mut self) -> QueryControl {
+        self.control = QueryControl::new(self.comm.rank());
+        self.comm.set_control(Some(self.control.clone()));
+        self.control.clone()
+    }
+
+    /// Cooperative cancellation checkpoint, called at every plan-node
+    /// and superstep boundary. On the *first* failure observed on this
+    /// rank it sends a best-effort cancel notice to all peers (so
+    /// remote ranks abort their supersteps instead of timing out), then
+    /// returns the structured error naming `node` and this rank.
+    pub fn checkpoint(&mut self, node: &str) -> Result<()> {
+        match self.control.check_at(node) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if self.control.begin_notify() {
+                    self.comm.notify_cancel();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Finalize: synchronize and drop (MPI_Finalize analog). On a
+    /// cancelled context the barrier is skipped — peers may already be
+    /// gone, and waiting on them would turn a clean abort into a
+    /// timeout.
     pub fn finalize(mut self) -> Result<()> {
+        if self.control.stop_requested() {
+            return Ok(());
+        }
         self.comm.barrier()
     }
 }
@@ -232,6 +297,31 @@ mod tests {
         assert_eq!(ctx.memory_budget(), None);
         let ctx2 = CylonContext::init_local().with_memory_budget(4096);
         assert_eq!(ctx2.memory_budget(), Some(4096));
+    }
+
+    #[test]
+    fn checkpoint_surfaces_cancel_and_new_query_resets() {
+        let mut ctx = CylonContext::init_local();
+        ctx.checkpoint("scan").unwrap();
+        ctx.control().cancel();
+        let err = ctx.checkpoint("join").unwrap_err();
+        assert!(err.is_cancellation());
+        assert!(err.to_string().contains("join"), "{err}");
+        // Latched: a cancelled context never runs another step...
+        assert!(ctx.checkpoint("sort").is_err());
+        // ...until a fresh token is minted for the next query.
+        ctx.new_query();
+        ctx.checkpoint("scan").unwrap();
+    }
+
+    #[test]
+    fn finalize_skips_barrier_on_cancelled_context() {
+        let ctx = CylonContext::init_local();
+        ctx.control().cancel();
+        // At world 1 the barrier is trivial either way; the assertion
+        // is that finalize succeeds instead of surfacing the latched
+        // cancellation through the transport.
+        ctx.finalize().unwrap();
     }
 
     #[test]

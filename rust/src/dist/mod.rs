@@ -25,6 +25,20 @@
 //! operators in the same order (collective tags are generation-counted,
 //! so a skipped call on one rank surfaces as a timeout, not a hang).
 //!
+//! # Query lifecycle
+//!
+//! Every operator polls its context's [`crate::lifecycle::QueryControl`]
+//! at each superstep boundary (before the partition phase, before each
+//! AllToAll, before the local phase), and the transport stack polls it
+//! inside blocking receives — so a cancel or deadline expiry aborts a
+//! distributed operator within one poll interval with a structured
+//! [`Error::Cancelled`](crate::error::Error::Cancelled) /
+//! [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded)
+//! instead of hanging to the receive timeout. The first failing rank
+//! sends a best-effort cancel notice to its peers (see
+//! [`crate::net::CANCEL_TAG`]), so they abort their own supersteps
+//! promptly too.
+//!
 //! # Intra-worker parallelism and determinism
 //!
 //! Inside each worker, the partition phase and the local operator run

@@ -72,6 +72,10 @@ pub fn dist_join_partitioned(
         shuffle(ctx, right, cfg.right_col)?
     };
     stats.absorb(&rs);
+    // Superstep boundary: the local join phase starts by polling the
+    // lifecycle token (the shuffles above poll around their own
+    // phases; elided shuffles skip those, so this is not redundant).
+    ctx.checkpoint("join:local")?;
     let t0 = Instant::now();
     let out = join_par(&lshuf, &rshuf, cfg, ctx.parallelism())?;
     stats.local_secs = t0.elapsed().as_secs_f64();
@@ -113,6 +117,8 @@ fn dist_setop(
         shuffle_rows(ctx, b)?
     };
     stats.absorb(&bstats);
+    // Superstep boundary before the local phase (see dist_join).
+    ctx.checkpoint(&format!("{what}:local"))?;
     let t0 = Instant::now();
     let out = op(&ashuf, &bshuf, ctx.parallelism())?;
     stats.local_secs = t0.elapsed().as_secs_f64();
@@ -215,6 +221,7 @@ pub fn dist_group_by_partitioned(
     input_partitioned: bool,
 ) -> Result<(Table, OpStats)> {
     let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
+    ctx.checkpoint("group_by:partial")?;
     let t0 = Instant::now();
     let partial = group_by_partial_par(t, key_col, aggs, ctx.parallelism())?;
     let mut local_secs = t0.elapsed().as_secs_f64();
@@ -226,6 +233,7 @@ pub fn dist_group_by_partitioned(
         shuffle(ctx, &partial, 0)?
     };
     stats.absorb(&sstats);
+    ctx.checkpoint("group_by:merge")?;
     let funcs: Vec<AggFn> = aggs.iter().map(|s| s.func).collect();
     let t1 = Instant::now();
     let out = merge_partials_par(&shuffled, &funcs, ctx.parallelism())?;

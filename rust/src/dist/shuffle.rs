@@ -104,6 +104,11 @@ fn shuffle_with(
     let mut stats =
         ShuffleStats { rows_in: t.num_rows(), established, ..ShuffleStats::default() };
 
+    // Lifecycle boundary: poll before the partition phase, so a cancel
+    // or deadline observed between supersteps aborts before any local
+    // work or wire traffic for this shuffle.
+    ctx.checkpoint("shuffle:partition")?;
+
     // Partition phase: ids, then one take per column per part, both
     // morsel-parallel on the worker's thread budget (routing itself is
     // thread-count independent — see `crate::ops::parallel`).
@@ -131,6 +136,9 @@ fn shuffle_with(
     };
     let parts = partition_by_ids_par(t, &ids, world, threads)?;
     stats.partition_secs = t0.elapsed().as_secs_f64();
+
+    // Boundary between the local superstep and the comm superstep.
+    ctx.checkpoint("shuffle:alltoall")?;
 
     // Comm superstep: AllToAll the parts on the concat-on-decode path —
     // incoming wire buffers decode straight into one pre-sized output

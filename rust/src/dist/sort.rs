@@ -64,6 +64,8 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     let world = ctx.world();
     let threads = ctx.parallelism();
     let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
+    // Lifecycle boundary before any local work or wire traffic.
+    ctx.checkpoint("sort:sample")?;
     if world == 1 {
         let t0 = Instant::now();
         let out = sort_par(t, col, threads)?;
@@ -130,6 +132,9 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     };
     let parts = partition_by_ids_par(t, &ids, world, threads)?;
     partition_secs += t2.elapsed().as_secs_f64();
+
+    // Superstep boundary between range partitioning and the AllToAll.
+    ctx.checkpoint("sort:alltoall")?;
 
     // 4. Shuffle ranges into place (concat-on-decode: incoming parts
     //    decode straight into one table) and sort locally.

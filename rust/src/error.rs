@@ -69,6 +69,53 @@ impl CommFailure {
     }
 }
 
+/// Where a query-lifecycle event (cancellation, deadline expiry) was
+/// observed: the reporting rank and the plan node / operator phase that
+/// hit the checkpoint, when known. The same shape serves both
+/// [`Error::Cancelled`] and [`Error::DeadlineExceeded`] — mirroring how
+/// [`CommFailure`] attributes network failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LifecycleDetail {
+    /// Rank reporting the event.
+    pub rank: Option<usize>,
+    /// Plan node or operator phase at the checkpoint that observed it.
+    pub node: Option<String>,
+    pub msg: String,
+}
+
+impl LifecycleDetail {
+    pub fn new(msg: impl Into<String>) -> Self {
+        LifecycleDetail { rank: None, node: None, msg: msg.into() }
+    }
+
+    pub fn at_rank(mut self, rank: usize) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+
+    pub fn at_node(mut self, node: impl Into<String>) -> Self {
+        self.node = Some(node.into());
+        self
+    }
+}
+
+impl fmt::Display for LifecycleDetail {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut ctx: Vec<String> = Vec::new();
+        if let Some(r) = self.rank {
+            ctx.push(format!("rank {r}"));
+        }
+        if let Some(n) = &self.node {
+            ctx.push(format!("node {n}"));
+        }
+        if !ctx.is_empty() {
+            write!(f, " [{}]", ctx.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
 impl fmt::Display for CommFailure {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}", self.msg)?;
@@ -110,6 +157,14 @@ pub enum Error {
     OutOfMemory(String),
     /// Anything else.
     Internal(String),
+    /// The query was cancelled cooperatively (via
+    /// `QueryControl::cancel`, a sibling worker's panic, or a peer's
+    /// cancel notice). Carries where the cancellation was observed.
+    Cancelled(LifecycleDetail),
+    /// The query's deadline passed before it completed. Same shape as
+    /// [`Error::Cancelled`]; the two are distinguished so callers can
+    /// retry a timed-out query but not an explicitly cancelled one.
+    DeadlineExceeded(LifecycleDetail),
 }
 
 impl Error {
@@ -144,10 +199,36 @@ impl Error {
     pub fn internal(msg: impl Into<String>) -> Self {
         Error::Internal(msg.into())
     }
+    /// Unattributed cancellation. Prefer [`Error::cancelled_detail`]
+    /// where the rank/node is known.
+    pub fn cancelled(msg: impl Into<String>) -> Self {
+        Error::Cancelled(LifecycleDetail::new(msg))
+    }
+    /// Cancellation with full attribution attached.
+    pub fn cancelled_detail(d: LifecycleDetail) -> Self {
+        Error::Cancelled(d)
+    }
+    /// Unattributed deadline expiry. Prefer
+    /// [`Error::deadline_detail`] where the rank/node is known.
+    pub fn deadline(msg: impl Into<String>) -> Self {
+        Error::DeadlineExceeded(LifecycleDetail::new(msg))
+    }
+    /// Deadline expiry with full attribution attached.
+    pub fn deadline_detail(d: LifecycleDetail) -> Self {
+        Error::DeadlineExceeded(d)
+    }
 
     /// Whether this is a transient comm failure worth retrying.
     pub fn is_retryable(&self) -> bool {
         matches!(self, Error::Comm(f) if f.kind == CommErrorKind::Retryable)
+    }
+
+    /// Whether this error is a cooperative-lifecycle stop (explicit
+    /// cancel or deadline expiry) rather than a fault: the query was
+    /// told to stop and did, so the result is absent by request, not
+    /// broken.
+    pub fn is_cancellation(&self) -> bool {
+        matches!(self, Error::Cancelled(_) | Error::DeadlineExceeded(_))
     }
 
     /// The peer a comm failure concerns, if it names one.
@@ -169,6 +250,8 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::OutOfMemory(m) => write!(f, "out of memory: {m}"),
             Error::Internal(m) => write!(f, "internal error: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -211,6 +294,30 @@ mod tests {
         assert!(s.contains("rank 0"), "{s}");
         assert!(s.contains("peer 2"), "{s}");
         assert!(s.contains("tag 260"), "{s}");
+    }
+
+    #[test]
+    fn lifecycle_errors_carry_location() {
+        let e = Error::cancelled_detail(
+            LifecycleDetail::new("query cancelled").at_rank(2).at_node("Join"),
+        );
+        assert!(e.is_cancellation());
+        let s = e.to_string();
+        assert!(s.contains("cancelled"), "{s}");
+        assert!(s.contains("rank 2"), "{s}");
+        assert!(s.contains("node Join"), "{s}");
+
+        let d = Error::deadline_detail(LifecycleDetail::new("1ms budget").at_rank(0));
+        assert!(d.is_cancellation());
+        assert!(d.to_string().contains("deadline exceeded"), "{d}");
+        assert!(d.to_string().contains("rank 0"), "{d}");
+
+        // Lifecycle stops are not faults: not retryable, no peer.
+        assert!(!e.is_retryable());
+        assert_eq!(e.comm_peer(), None);
+        // And faults are not lifecycle stops.
+        assert!(!Error::comm("timeout").is_cancellation());
+        assert!(!Error::internal("worker panicked").is_cancellation());
     }
 
     #[test]

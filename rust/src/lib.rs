@@ -44,6 +44,7 @@ pub mod dist;
 pub mod error;
 pub mod external;
 pub mod io;
+pub mod lifecycle;
 pub mod metrics;
 pub mod net;
 pub mod ops;
@@ -60,6 +61,7 @@ pub mod prelude {
         dist_difference, dist_intersect, dist_join, dist_sort, dist_union, shuffle,
     };
     pub use crate::error::{Error, Result};
+    pub use crate::lifecycle::QueryControl;
     pub use crate::net::{CommConfig, NetworkProfile};
     pub use crate::ops::join::{JoinAlgorithm, JoinConfig, JoinType};
     pub use crate::plan::{ExecStats, Partitioning};

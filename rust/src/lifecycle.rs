@@ -1,0 +1,374 @@
+//! Query lifecycle control: cooperative cancellation, deadlines, and
+//! panic containment (DESIGN.md robustness rev).
+//!
+//! A [`QueryControl`] is a cheap-to-clone token created per query by
+//! [`crate::ctx::CylonContext`]. Every execution layer polls it at its
+//! natural quantum — the morsel engine between 64Ki-row morsels, the
+//! plan executor between nodes, the distributed operators between BSP
+//! supersteps, and the transports between bounded receive polls — so
+//! [`QueryControl::cancel`] or a deadline expiry surfaces a structured
+//! [`Error::Cancelled`] / [`Error::DeadlineExceeded`] within one
+//! morsel/poll interval on every rank, never a hang.
+//!
+//! The checks are pure atomic reads: they never alter morsel
+//! boundaries, task claim order, or reduction shape, so a query that
+//! is *not* cancelled takes a bit-identical path to one run without
+//! any token (the standing determinism contract).
+//!
+//! Panic containment rides the same token: when a morsel worker's task
+//! body panics, the payload is captured, siblings are cancelled via
+//! [`QueryControl::note_panic`], and the caller sees one structured
+//! error (or one clean re-panic on the infallible paths) instead of a
+//! process abort.
+//!
+//! ```
+//! use rylon::lifecycle::QueryControl;
+//!
+//! let ctl = QueryControl::new(0);
+//! assert!(ctl.check().is_ok());
+//! ctl.cancel();
+//! let err = ctl.check_at("Join").unwrap_err();
+//! assert!(err.is_cancellation());
+//! assert!(err.to_string().contains("node Join"));
+//! ```
+
+use crate::error::{Error, LifecycleDetail, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Countdown value meaning "no deterministic cancel armed".
+const COUNTDOWN_OFF: u64 = u64::MAX;
+
+#[derive(Debug)]
+struct ControlInner {
+    /// Rank the token was created on (embedded so lifecycle errors are
+    /// attributable without threading the rank everywhere).
+    rank: usize,
+    /// Explicit cancel (or sibling-panic cancel) — latched.
+    cancelled: AtomicBool,
+    /// Set once a deadline expiry has been observed — latched so later
+    /// checks skip the clock read.
+    deadline_hit: AtomicBool,
+    /// Fast-path flag: a deadline exists at all.
+    has_deadline: AtomicBool,
+    /// The monotonic deadline itself (written once per query).
+    deadline: Mutex<Option<Instant>>,
+    /// One best-effort peer notice per rank (swap-guarded).
+    notified: AtomicBool,
+    /// Deterministic test hook: trip `cancel` after this many
+    /// fallible checkpoints. [`COUNTDOWN_OFF`] disables it.
+    countdown: AtomicU64,
+    cancels: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    worker_panics: AtomicU64,
+}
+
+/// Per-query cancellation/deadline token. Clones share one state; see
+/// the [module docs](self) for where it is polled.
+#[derive(Debug, Clone)]
+pub struct QueryControl {
+    inner: Arc<ControlInner>,
+}
+
+impl QueryControl {
+    /// Fresh, un-cancelled token for a query running on `rank`.
+    pub fn new(rank: usize) -> Self {
+        QueryControl {
+            inner: Arc::new(ControlInner {
+                rank,
+                cancelled: AtomicBool::new(false),
+                deadline_hit: AtomicBool::new(false),
+                has_deadline: AtomicBool::new(false),
+                deadline: Mutex::new(None),
+                notified: AtomicBool::new(false),
+                countdown: AtomicU64::new(COUNTDOWN_OFF),
+                cancels: AtomicU64::new(0),
+                deadline_exceeded: AtomicU64::new(0),
+                worker_panics: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Rank this token was created on.
+    pub fn rank(&self) -> usize {
+        self.inner.rank
+    }
+
+    /// Request cooperative cancellation. Idempotent; counted once.
+    pub fn cancel(&self) {
+        if !self.inner.cancelled.swap(true, Ordering::Release) {
+            self.inner.cancels.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether an explicit cancel (or a sibling panic) was requested.
+    /// Does not poll the deadline — use [`QueryControl::stop_requested`]
+    /// in loops that must honor both.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Arm a monotonic deadline; the query fails with
+    /// [`Error::DeadlineExceeded`] at the first checkpoint past it.
+    pub fn set_deadline(&self, at: Instant) {
+        *lock_unpoisoned(&self.inner.deadline) = Some(at);
+        self.inner.has_deadline.store(true, Ordering::Release);
+    }
+
+    /// Convenience: deadline `timeout` from now.
+    pub fn set_timeout(&self, timeout: Duration) {
+        self.set_deadline(Instant::now() + timeout);
+    }
+
+    /// Poll the deadline, latching (and counting) the first observed
+    /// expiry. Cheap when no deadline is armed.
+    fn deadline_expired(&self) -> bool {
+        if self.inner.deadline_hit.load(Ordering::Acquire) {
+            return true;
+        }
+        if !self.inner.has_deadline.load(Ordering::Acquire) {
+            return false;
+        }
+        let at = *lock_unpoisoned(&self.inner.deadline);
+        let expired = at.map_or(false, |at| Instant::now() >= at);
+        if expired && !self.inner.deadline_hit.swap(true, Ordering::Release) {
+            self.inner.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        }
+        expired
+    }
+
+    /// Whether the query should stop (explicit cancel, sibling panic,
+    /// or expired deadline). The bool the morsel workers poll between
+    /// tasks; pure reads, no error construction.
+    pub fn stop_requested(&self) -> bool {
+        self.is_cancelled() || self.deadline_expired()
+    }
+
+    /// Fallible checkpoint: `Ok(())` while the query may proceed, the
+    /// structured lifecycle error once it may not. Explicit cancel
+    /// wins over deadline expiry when both apply.
+    pub fn check(&self) -> Result<()> {
+        self.check_detail(None)
+    }
+
+    /// [`QueryControl::check`] attributing the checkpoint to a plan
+    /// node / operator phase.
+    pub fn check_at(&self, node: &str) -> Result<()> {
+        self.check_detail(Some(node))
+    }
+
+    fn check_detail(&self, node: Option<&str>) -> Result<()> {
+        self.tick_countdown();
+        let detail = |msg: &str| {
+            let mut d = LifecycleDetail::new(msg).at_rank(self.inner.rank);
+            if let Some(n) = node {
+                d = d.at_node(n);
+            }
+            d
+        };
+        if self.is_cancelled() {
+            return Err(Error::cancelled_detail(detail("query cancelled")));
+        }
+        if self.deadline_expired() {
+            return Err(Error::deadline_detail(detail("query deadline passed")));
+        }
+        Ok(())
+    }
+
+    /// Test hook: trip [`QueryControl::cancel`] after `n` more
+    /// fallible checkpoints ([`QueryControl::check`] /
+    /// [`QueryControl::check_at`] calls). Deterministic on
+    /// single-threaded checkpoint streams; used to pin mid-spill
+    /// cancellation cleanup.
+    pub fn cancel_after_checks(&self, n: u64) {
+        self.inner.countdown.store(n, Ordering::Relaxed);
+    }
+
+    fn tick_countdown(&self) {
+        let r = self.inner.countdown.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| if v == COUNTDOWN_OFF || v == 0 { None } else { Some(v - 1) },
+        );
+        if r == Ok(1) {
+            self.cancel();
+        }
+    }
+
+    /// Record a captured worker panic and cancel siblings. The panic
+    /// counter is separate from the cancel counter so stats can tell
+    /// "user cancelled" from "a kernel blew up".
+    pub fn note_panic(&self) {
+        self.inner.worker_panics.fetch_add(1, Ordering::Relaxed);
+        self.inner.cancelled.store(true, Ordering::Release);
+    }
+
+    /// First-caller-wins guard for the one best-effort cancel notice a
+    /// rank sends its peers: returns `true` exactly once.
+    pub fn begin_notify(&self) -> bool {
+        !self.inner.notified.swap(true, Ordering::AcqRel)
+    }
+
+    /// Explicit cancels observed (0 or 1 per token).
+    pub fn cancels(&self) -> u64 {
+        self.inner.cancels.load(Ordering::Relaxed)
+    }
+
+    /// Deadline expiries observed (0 or 1 per token).
+    pub fn deadlines_exceeded(&self) -> u64 {
+        self.inner.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    /// Worker panics captured and contained under this token.
+    pub fn worker_panics(&self) -> u64 {
+        self.inner.worker_panics.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock that survives a poisoned mutex: the protected state (a stored
+/// `Option<Instant>`) is valid regardless of where a holder panicked.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+thread_local! {
+    /// The query control ambient on this thread, installed by
+    /// [`with_control`]. The morsel engine reads it at entry so deep
+    /// operator code gets cancellation without signature changes.
+    static CURRENT: RefCell<Option<QueryControl>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `ctl` installed as this thread's ambient control
+/// (restoring the previous one afterwards, panic-safe). Worker threads
+/// wrap each job in this; everything the job calls — plan execution,
+/// dist supersteps, `try_map_morsels` — picks the token up via
+/// [`current_control`].
+pub fn with_control<T>(ctl: &QueryControl, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<QueryControl>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| *c.borrow_mut() = self.0.take());
+        }
+    }
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(ctl.clone()));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The ambient [`QueryControl`] on this thread, if a query installed
+/// one. `None` means "not under a controlled query" — all checkpoints
+/// degrade to no-ops.
+pub fn current_control() -> Option<QueryControl> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_latches_and_counts_once() {
+        let ctl = QueryControl::new(3);
+        assert!(!ctl.stop_requested());
+        assert!(ctl.check().is_ok());
+        ctl.cancel();
+        ctl.cancel();
+        assert!(ctl.is_cancelled());
+        assert_eq!(ctl.cancels(), 1);
+        let e = ctl.check_at("Shuffle").unwrap_err();
+        assert!(matches!(e, Error::Cancelled(_)), "{e}");
+        let s = e.to_string();
+        assert!(s.contains("rank 3"), "{s}");
+        assert!(s.contains("node Shuffle"), "{s}");
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let ctl = QueryControl::new(0);
+        let other = ctl.clone();
+        other.cancel();
+        assert!(ctl.stop_requested());
+        assert!(ctl.check().is_err());
+    }
+
+    #[test]
+    fn deadline_expiry_is_latched_and_typed() {
+        let ctl = QueryControl::new(1);
+        ctl.set_timeout(Duration::from_secs(3600));
+        assert!(ctl.check().is_ok(), "future deadline must not trip");
+        ctl.set_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(ctl.stop_requested());
+        let e = ctl.check().unwrap_err();
+        assert!(matches!(e, Error::DeadlineExceeded(_)), "{e}");
+        assert!(e.to_string().contains("rank 1"), "{e}");
+        assert_eq!(ctl.deadlines_exceeded(), 1);
+        assert!(ctl.check().is_err(), "expiry stays latched");
+        assert_eq!(ctl.deadlines_exceeded(), 1, "counted once");
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_deadline() {
+        let ctl = QueryControl::new(0);
+        ctl.set_deadline(Instant::now() - Duration::from_millis(1));
+        ctl.cancel();
+        assert!(matches!(ctl.check(), Err(Error::Cancelled(_))));
+    }
+
+    #[test]
+    fn countdown_trips_after_n_checks() {
+        let ctl = QueryControl::new(0);
+        ctl.cancel_after_checks(3);
+        assert!(ctl.check().is_ok());
+        assert!(ctl.check().is_ok());
+        let e = ctl.check().unwrap_err();
+        assert!(matches!(e, Error::Cancelled(_)), "{e}");
+        assert!(ctl.check().is_err(), "stays cancelled");
+    }
+
+    #[test]
+    fn note_panic_cancels_siblings_without_counting_a_cancel() {
+        let ctl = QueryControl::new(0);
+        ctl.note_panic();
+        assert!(ctl.stop_requested());
+        assert_eq!(ctl.worker_panics(), 1);
+        assert_eq!(ctl.cancels(), 0);
+    }
+
+    #[test]
+    fn begin_notify_fires_once() {
+        let ctl = QueryControl::new(0);
+        assert!(ctl.begin_notify());
+        assert!(!ctl.begin_notify());
+        assert!(!ctl.clone().begin_notify());
+    }
+
+    #[test]
+    fn ambient_control_installs_and_restores() {
+        assert!(current_control().is_none());
+        let ctl = QueryControl::new(7);
+        let seen = with_control(&ctl, || {
+            let inner = current_control().expect("ambient installed");
+            assert_eq!(inner.rank(), 7);
+            // Nested install shadows, then restores.
+            let nested = QueryControl::new(9);
+            with_control(&nested, || {
+                assert_eq!(current_control().unwrap().rank(), 9);
+            });
+            current_control().unwrap().rank()
+        });
+        assert_eq!(seen, 7);
+        assert!(current_control().is_none(), "restored after scope");
+    }
+
+    #[test]
+    fn ambient_control_restores_across_panic() {
+        let ctl = QueryControl::new(1);
+        let r = std::panic::catch_unwind(|| {
+            with_control(&ctl, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert!(current_control().is_none(), "panic must not leak the ambient");
+    }
+}

@@ -157,6 +157,15 @@ pub struct BenchRecord {
     pub acks_timed_out: u64,
     /// Peers declared dead during the run.
     pub peer_failures: u64,
+    /// Explicit query cancellations observed during the run (0 on
+    /// fault-free benches — likewise the next two; see
+    /// [`crate::lifecycle::QueryControl`]).
+    pub cancels: u64,
+    /// Query deadline expiries latched during the run.
+    pub deadline_exceeded: u64,
+    /// Morsel/slice worker panics contained by the panic-isolation
+    /// boundary during the run.
+    pub worker_panics: u64,
 }
 
 fn json_escape(s: &str) -> String {
@@ -169,7 +178,8 @@ impl BenchRecord {
             "{{\"target\":\"{}\",\"op\":\"{}\",\"rows\":{},\"world\":{},\"threads\":{},\
              \"wall_secs\":{:.6},\"partition_secs\":{:.6},\"comm_secs\":{:.6},\
              \"peak_rows\":{},\"spill_bytes\":{},\"frames_retried\":{},\
-             \"frames_corrupt\":{},\"acks_timed_out\":{},\"peer_failures\":{}}}",
+             \"frames_corrupt\":{},\"acks_timed_out\":{},\"peer_failures\":{},\
+             \"cancels\":{},\"deadline_exceeded\":{},\"worker_panics\":{}}}",
             json_escape(&self.target),
             json_escape(&self.op),
             self.rows,
@@ -183,7 +193,10 @@ impl BenchRecord {
             self.frames_retried,
             self.frames_corrupt,
             self.acks_timed_out,
-            self.peer_failures
+            self.peer_failures,
+            self.cancels,
+            self.deadline_exceeded,
+            self.worker_panics
         )
     }
 }
@@ -284,6 +297,9 @@ mod tests {
             frames_corrupt: 1,
             acks_timed_out: 2,
             peer_failures: 0,
+            cancels: 1,
+            deadline_exceeded: 0,
+            worker_panics: 3,
         };
         let doc = bench_records_to_json(&[rec]);
         assert!(doc.contains("\"schema_version\": 1"));
@@ -298,6 +314,9 @@ mod tests {
         assert!(doc.contains("\"frames_corrupt\":1"));
         assert!(doc.contains("\"acks_timed_out\":2"));
         assert!(doc.contains("\"peer_failures\":0"));
+        assert!(doc.contains("\"cancels\":1"));
+        assert!(doc.contains("\"deadline_exceeded\":0"));
+        assert!(doc.contains("\"worker_panics\":3"));
         // Empty set still yields a valid document.
         assert!(bench_records_to_json(&[]).contains("\"results\": []"));
     }
@@ -319,6 +338,9 @@ mod tests {
             frames_corrupt: 0,
             acks_timed_out: 0,
             peer_failures: 0,
+            cancels: 0,
+            deadline_exceeded: 0,
+            worker_panics: 0,
         };
         let path = std::env::temp_dir().join(format!(
             "rylon_bench_append_{}_{:?}.json",

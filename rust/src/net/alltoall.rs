@@ -9,8 +9,9 @@ use super::model::NetworkModel;
 use super::serialize::{
     concat_decode_parts, deserialize_table_par, serialize_table_par, WirePart,
 };
-use super::{CommConfig, LinkHealth, Transport};
+use super::{CommConfig, LinkHealth, Transport, CANCEL_TAG};
 use crate::error::{Error, Result};
+use crate::lifecycle::QueryControl;
 use crate::table::Table;
 
 /// Collective op codes folded into tags (low byte).
@@ -94,6 +95,30 @@ impl Communicator {
     /// with [`LinkHealth::since`] to attribute them to one op.
     pub fn link_health(&self) -> LinkHealth {
         self.transport.health()
+    }
+
+    /// Attach (or detach, with `None`) the query-lifecycle token. The
+    /// transport stack polls it inside blocking receives, so a cancel
+    /// or deadline expiry aborts a collective mid-superstep instead of
+    /// hanging until the receive timeout.
+    pub fn set_control(&mut self, ctl: Option<QueryControl>) {
+        self.transport.set_control(ctl);
+    }
+
+    /// Best-effort cancel notice to every peer: an empty
+    /// [`CANCEL_TAG`] frame per rank, errors ignored. Deliberately no
+    /// flush — the local token is already latched by the time this
+    /// runs, and a flush on a cancelled reliable transport would abort
+    /// immediately. Reliable stacks still put the notice on the wire
+    /// once (sends transmit eagerly before being recorded as pending),
+    /// and unreliable stacks deliver it directly.
+    pub fn notify_cancel(&mut self) {
+        let (rank, world) = (self.rank(), self.world());
+        for dst in 0..world {
+            if dst != rank {
+                let _ = self.transport.send(dst, CANCEL_TAG, Vec::new());
+            }
+        }
     }
 
     fn next_tag(&mut self, op: u64) -> u64 {

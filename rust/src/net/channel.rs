@@ -8,11 +8,16 @@
 //! Fault injection lives in [`super::FaultyTransport`], which wraps this
 //! (or any) transport; this layer models only a perfect in-process link.
 
-use super::Transport;
-use crate::error::{CommFailure, Error, Result};
+use super::{Transport, CANCEL_TAG};
+use crate::error::{CommFailure, Error, LifecycleDetail, Result};
+use crate::lifecycle::QueryControl;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
+
+/// How often a blocked receive wakes to poll the attached
+/// [`QueryControl`] — the channel transport's cancel-latency bound.
+const LIFECYCLE_POLL: Duration = Duration::from_millis(10);
 
 struct Msg {
     src: usize,
@@ -31,6 +36,23 @@ pub struct ChannelTransport {
     /// Receive timeout — a dropped message surfaces as a Comm error
     /// instead of a hang.
     pub recv_timeout: Duration,
+    /// Query-lifecycle token: polled inside blocking receives; peer
+    /// [`CANCEL_TAG`] notices latch it.
+    control: Option<QueryControl>,
+}
+
+impl ChannelTransport {
+    /// Latch the local token (if any) on a peer's cancel notice and
+    /// build the structured error the blocked receive surfaces.
+    fn cancelled_by_peer(&self, src: usize) -> Error {
+        if let Some(ctl) = &self.control {
+            ctl.cancel();
+        }
+        Error::cancelled_detail(
+            LifecycleDetail::new(format!("query cancelled by notice from peer {src}"))
+                .at_rank(self.rank),
+        )
+    }
 }
 
 /// Factory for a connected set of transports.
@@ -57,6 +79,7 @@ impl ChannelFabric {
                 receiver,
                 parked: HashMap::new(),
                 recv_timeout: Duration::from_secs(30),
+                control: None,
             })
             .collect()
     }
@@ -93,6 +116,9 @@ impl Transport for ChannelTransport {
         }
         let deadline = std::time::Instant::now() + self.recv_timeout;
         loop {
+            if let Some(ctl) = &self.control {
+                ctl.check()?;
+            }
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
                 .ok_or_else(|| {
@@ -106,14 +132,24 @@ impl Transport for ChannelTransport {
                         .with_tag(tag),
                     )
                 })?;
-            let msg = self.receiver.recv_timeout(remaining).map_err(|e| {
-                Error::comm_failure(
-                    CommFailure::fatal(format!("recv failed: {e}"))
-                        .at_rank(self.rank)
-                        .with_peer(src)
-                        .with_tag(tag),
-                )
-            })?;
+            // Bounded wait so the control token is re-polled at
+            // LIFECYCLE_POLL even while no frame arrives; the overall
+            // deadline above still governs the timeout error.
+            let msg = match self.receiver.recv_timeout(remaining.min(LIFECYCLE_POLL)) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::comm_failure(
+                        CommFailure::fatal("recv failed: all channel endpoints dropped")
+                            .at_rank(self.rank)
+                            .with_peer(src)
+                            .with_tag(tag),
+                    ))
+                }
+            };
+            if msg.tag == CANCEL_TAG {
+                return Err(self.cancelled_by_peer(msg.src));
+            }
             if msg.src == src && msg.tag == tag {
                 return Ok(msg.payload);
             }
@@ -122,19 +158,28 @@ impl Transport for ChannelTransport {
     }
 
     fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
+        if let Some(ctl) = &self.control {
+            ctl.check()?;
+        }
         // Serve reorder-buffer stragglers first (parked by a tag-matched
-        // `recv` that skipped past them).
+        // `recv` that skipped past them). Cancel notices are never
+        // parked, so they cannot hide behind this path.
         if let Some((&(src, tag), _)) = self.parked.iter().find(|(_, q)| !q.is_empty()) {
             let payload = self.parked.get_mut(&(src, tag)).unwrap().pop_front().unwrap();
             return Ok(Some((src, tag, payload)));
         }
         match self.receiver.recv_timeout(timeout) {
+            Ok(m) if m.tag == CANCEL_TAG => Err(self.cancelled_by_peer(m.src)),
             Ok(m) => Ok(Some((m.src, m.tag, m.payload))),
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => Err(Error::comm_failure(
                 CommFailure::fatal("all channel endpoints dropped").at_rank(self.rank),
             )),
         }
+    }
+
+    fn set_control(&mut self, ctl: Option<QueryControl>) {
+        self.control = ctl;
     }
 }
 
@@ -197,6 +242,39 @@ mod tests {
             }
             other => panic!("expected comm error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn local_cancel_wakes_blocked_recv_within_poll_interval() {
+        let mut t = ChannelFabric::new(2);
+        let mut t0 = t.remove(0);
+        let ctl = QueryControl::new(0);
+        t0.set_control(Some(ctl.clone()));
+        let h = std::thread::spawn(move || {
+            let start = std::time::Instant::now();
+            (t0.recv(1, 7), start.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        ctl.cancel();
+        let (r, waited) = h.join().unwrap();
+        assert!(r.unwrap_err().is_cancellation());
+        // Well under the 30s recv_timeout: the poll loop saw the token.
+        assert!(waited < Duration::from_secs(5), "took {waited:?}");
+    }
+
+    #[test]
+    fn peer_cancel_notice_intercepted_in_recv_any() {
+        let mut t = ChannelFabric::new(2);
+        let mut t1 = t.pop().unwrap();
+        let mut t0 = t.pop().unwrap();
+        let ctl = QueryControl::new(0);
+        t0.set_control(Some(ctl.clone()));
+        t1.send(0, CANCEL_TAG, Vec::new()).unwrap();
+        let err = t0.recv_any(Duration::from_millis(200)).unwrap_err();
+        assert!(err.is_cancellation(), "{err}");
+        assert!(ctl.is_cancelled());
+        // Latching sticks: the next receive fails without waiting.
+        assert!(t0.recv(1, 3).unwrap_err().is_cancellation());
     }
 
     #[test]

@@ -289,6 +289,13 @@ impl Transport for FaultyTransport {
         self.flush_held()?;
         self.inner.recv_any(timeout)
     }
+
+    fn set_control(&mut self, ctl: Option<crate::lifecycle::QueryControl>) {
+        // Fault injection has no lifecycle semantics of its own: the
+        // token always belongs to the layer that actually intercepts
+        // cancel notices (reliable / channel / tcp), so forward it.
+        self.inner.set_control(ctl);
+    }
 }
 
 #[cfg(test)]

@@ -107,6 +107,37 @@
 //! ([`LinkHealth`]: frames retried/corrupt, ack timeouts, peer
 //! failures) flow into `ShuffleStats`/`ExecStats`/bench records.
 //!
+//! **4. Query lifecycle** — transports participate in cooperative
+//! cancellation (see [`crate::lifecycle`]). A
+//! [`crate::lifecycle::QueryControl`] attached via
+//! [`Transport::set_control`] is polled inside every blocking receive
+//! at a bounded interval, so a local `cancel()` or deadline expiry
+//! wakes a blocked superstep within one poll (~10 ms) instead of
+//! waiting out `recv_timeout`. Cancelling a distributed query also
+//! sends each peer one best-effort, empty frame on the reserved
+//! [`CANCEL_TAG`] ([`Communicator::notify_cancel`]): a receiver
+//! intercepts it in its receive path, latches its own token, and
+//! surfaces `Error::Cancelled` — remote ranks abort their supersteps
+//! instead of timing out at `death_timeout`. The notice rides the
+//! reliability layer's normal data path when one is installed (seq +
+//! CRC), and is silently droppable otherwise — correctness never
+//! depends on it, only cancel latency.
+//!
+//! ```
+//! use rylon::lifecycle::QueryControl;
+//! use rylon::net::{ChannelFabric, Transport, CANCEL_TAG};
+//!
+//! let mut ends = ChannelFabric::new(2);
+//! let mut r1 = ends.pop().unwrap();
+//! let mut r0 = ends.pop().unwrap();
+//! let ctl = QueryControl::new(0);
+//! r0.set_control(Some(ctl.clone()));
+//! r1.send(0, CANCEL_TAG, Vec::new()).unwrap(); // peer's cancel notice
+//! let err = r0.recv(1, 42).unwrap_err(); // blocked superstep aborts…
+//! assert!(err.is_cancellation());
+//! assert!(ctl.is_cancelled()); // …and the local token is latched
+//! ```
+//!
 //! The whole stack is exercisable in-process:
 //!
 //! ```
@@ -149,7 +180,16 @@ pub use model::{NetworkModel, NetworkProfile};
 pub use reliable::{crc32c, ReliableTransport, RetryConfig};
 
 use crate::error::{Error, Result};
+use crate::lifecycle::QueryControl;
 use std::time::Duration;
+
+/// Reserved tag for best-effort peer cancel notices (see part 4 of the
+/// failure-semantics docs above). Sits just below the reliability
+/// layer's own control tag (`u64::MAX - 1`), so a notice passes the
+/// reliable send path like ordinary data — seq'd and checksummed —
+/// while remaining unmistakable to receivers. User tags must stay
+/// below it.
+pub const CANCEL_TAG: u64 = u64::MAX - 2;
 
 /// Per-communicator reliability counters, exposed through
 /// [`Transport::health`] and surfaced on shuffle/exec/bench stats.
@@ -213,6 +253,14 @@ pub trait Transport: Send {
     /// reliability layer is installed.
     fn health(&self) -> LinkHealth {
         LinkHealth::default()
+    }
+
+    /// Attach (or clear) the query-lifecycle control token. The
+    /// outermost transport layer polls it inside blocking receives and
+    /// intercepts peer [`CANCEL_TAG`] notices; `None` detaches. A
+    /// no-op on transports without lifecycle support.
+    fn set_control(&mut self, ctl: Option<QueryControl>) {
+        let _ = ctl;
     }
 }
 

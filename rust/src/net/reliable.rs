@@ -46,8 +46,9 @@
 //! Self-sends (`dst == rank`) bypass the protocol entirely — there is
 //! no wire to be unreliable on.
 
-use super::{LinkHealth, Transport};
-use crate::error::{CommFailure, Error, Result};
+use super::{LinkHealth, Transport, CANCEL_TAG};
+use crate::error::{CommFailure, Error, LifecycleDetail, Result};
+use crate::lifecycle::QueryControl;
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
@@ -199,6 +200,14 @@ pub struct ReliableTransport {
     /// Peers declared failed; all further traffic to/from them is fatal.
     dead: Vec<bool>,
     health: LinkHealth,
+    /// Query-lifecycle token, polled in every blocking loop. Held by
+    /// this (outermost) layer only — the inner transport never needs
+    /// one, dispatch intercepts peer notices here.
+    control: Option<QueryControl>,
+    /// Peer that sent us a [`CANCEL_TAG`] notice, latched so blocked
+    /// receives surface an attributed lifecycle error even when no
+    /// token is installed.
+    peer_cancel: Option<usize>,
 }
 
 impl ReliableTransport {
@@ -215,6 +224,23 @@ impl ReliableTransport {
             unacked: BTreeMap::new(),
             dead: vec![false; world],
             health: LinkHealth::default(),
+            control: None,
+            peer_cancel: None,
+        }
+    }
+
+    /// Fallible lifecycle checkpoint for the blocking loops: errors on
+    /// a peer cancel notice, a local cancel, or an expired deadline.
+    fn check_lifecycle(&self) -> Result<()> {
+        if let Some(src) = self.peer_cancel {
+            return Err(Error::cancelled_detail(
+                LifecycleDetail::new(format!("query cancelled by notice from peer {src}"))
+                    .at_rank(self.inner.rank()),
+            ));
+        }
+        match &self.control {
+            Some(ctl) => ctl.check(),
+            None => Ok(()),
         }
     }
 
@@ -327,7 +353,17 @@ impl ReliableTransport {
                     next += 1;
                 }
             }
-            self.ready.entry((src, tag)).or_default().extend(delivered);
+            if tag == CANCEL_TAG {
+                // Peer cancel notice: latch the local token instead of
+                // delivering payload — but still ack and advance the
+                // seq window so the sender's retransmit pump stops.
+                if let Some(ctl) = &self.control {
+                    ctl.cancel();
+                }
+                self.peer_cancel.get_or_insert(src);
+            } else {
+                self.ready.entry((src, tag)).or_default().extend(delivered);
+            }
             self.expected.insert((src, tag), next);
             self.send_ctrl(src, KIND_ACK, tag, next - 1);
         } else if seq < exp {
@@ -444,6 +480,9 @@ impl Transport for ReliableTransport {
     }
 
     fn send(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
+        // CANCEL_TAG (CTRL_TAG - 1) deliberately passes this guard: a
+        // peer cancel notice rides the normal seq'd + checksummed data
+        // path; only this layer's own control tags are rejected.
         if tag >= CTRL_TAG {
             return Err(Error::invalid(format!("tag {tag} is reserved for the reliability layer")));
         }
@@ -490,6 +529,7 @@ impl Transport for ReliableTransport {
                     return Ok(p);
                 }
             }
+            self.check_lifecycle()?;
             if self.dead[src] {
                 return Err(self.dead_peer_error(src, Some(tag)));
             }
@@ -519,6 +559,7 @@ impl Transport for ReliableTransport {
             if let Some(hit) = self.pop_any_ready() {
                 return Ok(Some(hit));
             }
+            self.check_lifecycle()?;
             let now = Instant::now();
             let remaining = match deadline.checked_duration_since(now) {
                 Some(r) if !r.is_zero() => r,
@@ -541,12 +582,20 @@ impl Transport for ReliableTransport {
             if self.unacked.is_empty() {
                 return Ok(());
             }
+            self.check_lifecycle()?;
             self.service(self.cfg.poll)?;
         }
     }
 
     fn health(&self) -> LinkHealth {
         self.health
+    }
+
+    fn set_control(&mut self, ctl: Option<QueryControl>) {
+        // Held here, not forwarded: this layer is the outermost poll
+        // loop, and cancel notices must be intercepted after the seq/
+        // CRC discipline (dispatch), not at the raw inner transport.
+        self.control = ctl;
     }
 }
 
@@ -672,6 +721,56 @@ mod tests {
         assert_eq!(r0.recv(0, 42).unwrap(), vec![9, 9]);
         assert_eq!(r0.health(), LinkHealth::default());
         r0.flush().unwrap(); // nothing pending
+    }
+
+    #[test]
+    fn cancel_notice_rides_the_reliable_path_and_aborts_blocked_recv() {
+        // The notice is dropped on first transmission by the fault
+        // schedule; the retransmit machinery must still land it, and
+        // the receiver's blocked recv must abort with a structured
+        // lifecycle error (not a timeout).
+        let plan = FaultPlan::new(21).with_drops(1000).with_max_consecutive_faults(1);
+        let mut f = ChannelFabric::new(2);
+        let t1 = f.pop().unwrap();
+        let t0 = f.pop().unwrap();
+        let mut r0 = reliable_over(t0, plan.clone(), RetryConfig::aggressive());
+        let mut r1 = reliable_over(t1, plan, RetryConfig::aggressive());
+        let ctl = QueryControl::new(0);
+        r0.set_control(Some(ctl.clone()));
+        let h = std::thread::spawn(move || {
+            r1.send(0, CANCEL_TAG, Vec::new()).unwrap();
+            // Service long enough for the retransmit to go out; flush
+            // is deliberately not required for a best-effort notice.
+            let _ = r1.recv_any(Duration::from_millis(300));
+        });
+        let err = r0.recv(1, 0x33).unwrap_err();
+        assert!(err.is_cancellation(), "{err}");
+        assert!(err.to_string().contains("peer 1"), "{err}");
+        assert!(ctl.is_cancelled());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn local_cancel_aborts_blocked_reliable_recv() {
+        let mut f = ChannelFabric::new(2);
+        let _t1 = f.pop().unwrap();
+        let t0 = f.pop().unwrap();
+        let mut r0 = ReliableTransport::new(
+            Box::new(t0),
+            RetryConfig::aggressive(),
+            Duration::from_secs(30),
+        );
+        let ctl = QueryControl::new(0);
+        r0.set_control(Some(ctl.clone()));
+        let h = std::thread::spawn(move || {
+            let start = Instant::now();
+            (r0.recv(1, 5), start.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        ctl.cancel();
+        let (r, waited) = h.join().unwrap();
+        assert!(r.unwrap_err().is_cancellation());
+        assert!(waited < Duration::from_secs(5), "took {waited:?}");
     }
 
     #[test]

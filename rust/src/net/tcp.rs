@@ -18,17 +18,29 @@
 //! poisoned "peer disconnected" frame under [`DISCONNECT_TAG`] before
 //! exiting, so every blocked `recv` wakes **immediately** with a fatal
 //! structured error instead of sitting out the full `recv_timeout`.
-//! Dropping a `TcpTransport` shuts its sockets down (FIN), so an
-//! endpoint that dies mid-job propagates as a disconnect to its peers
-//! just like a dead process would.
+//! Dropping a `TcpTransport` shuts its sockets down in both directions
+//! (FIN to peers, EOF to its own readers) and **joins its reader
+//! threads**, so an endpoint that dies mid-job propagates as a
+//! disconnect to its peers just like a dead process would — and leaves
+//! no threads behind.
+//!
+//! An attached [`QueryControl`] is polled every [`LIFECYCLE_POLL`]
+//! inside blocking receives, and an incoming [`CANCEL_TAG`] frame
+//! latches it — the same cooperative-cancellation discipline as the
+//! channel transport.
 
-use super::Transport;
-use crate::error::{CommFailure, Error, Result};
+use super::{Transport, CANCEL_TAG};
+use crate::error::{CommFailure, Error, LifecycleDetail, Result};
+use crate::lifecycle::QueryControl;
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
+
+/// How often a blocked receive wakes to poll the attached
+/// [`QueryControl`] — the TCP transport's cancel-latency bound.
+const LIFECYCLE_POLL: Duration = Duration::from_millis(10);
 
 /// Hard cap on one frame's payload. The `len` field arrives from the
 /// peer **before** any allocation happens; without a cap, a corrupt or
@@ -67,6 +79,26 @@ pub struct TcpTransport {
     /// Peers whose streams have disconnected.
     dead: Vec<bool>,
     pub recv_timeout: Duration,
+    /// Reader threads, joined on drop (after the sockets are shut
+    /// down, which wakes them out of `read_exact`).
+    readers: Vec<std::thread::JoinHandle<()>>,
+    /// Query-lifecycle token: polled inside blocking receives; peer
+    /// [`CANCEL_TAG`] notices latch it.
+    control: Option<QueryControl>,
+}
+
+impl TcpTransport {
+    /// Latch the local token (if any) on a peer's cancel notice and
+    /// build the structured error the blocked receive surfaces.
+    fn cancelled_by_peer(&self, src: usize) -> Error {
+        if let Some(ctl) = &self.control {
+            ctl.cancel();
+        }
+        Error::cancelled_detail(
+            LifecycleDetail::new(format!("query cancelled by notice from peer {src}"))
+                .at_rank(self.rank),
+        )
+    }
 }
 
 /// Factory establishing the localhost mesh.
@@ -142,15 +174,17 @@ impl TcpFabric {
         for (rank, peer_streams) in streams.into_iter().enumerate() {
             let (tx, rx) = channel::<Frame>();
             let mut writers: Vec<Option<TcpStream>> = Vec::with_capacity(world);
+            let mut readers = Vec::with_capacity(world.saturating_sub(1));
             for (peer, stream) in peer_streams.into_iter().enumerate() {
                 match stream {
                     Some(s) if peer != rank => {
                         let reader = s.try_clone().map_err(|e| Error::comm(e.to_string()))?;
                         let tx = tx.clone();
-                        std::thread::Builder::new()
+                        let handle = std::thread::Builder::new()
                             .name(format!("rylon-tcp-{rank}-from-{peer}"))
                             .spawn(move || read_loop(reader, peer, tx))
                             .map_err(|e| Error::comm(e.to_string()))?;
+                        readers.push(handle);
                         writers.push(Some(s));
                     }
                     _ => writers.push(None),
@@ -165,6 +199,8 @@ impl TcpFabric {
                 parked: HashMap::new(),
                 dead: vec![false; world],
                 recv_timeout: Duration::from_secs(30),
+                readers,
+                control: None,
             });
         }
         Ok(endpoints)
@@ -188,6 +224,18 @@ fn disconnect_error(src: usize) -> Error {
     )
 }
 
+/// Split the fixed 16-byte frame header into `(tag, len)`. Written
+/// without `try_into().unwrap()` so the non-test wire path carries no
+/// panic sites: the copies are between fixed-size buffers and cannot
+/// fail.
+fn split_header(header: &[u8; 16]) -> (u64, u64) {
+    let mut tag = [0u8; 8];
+    let mut len = [0u8; 8];
+    tag.copy_from_slice(&header[..8]);
+    len.copy_from_slice(&header[8..]);
+    (u64::from_le_bytes(tag), u64::from_le_bytes(len))
+}
+
 /// Reader thread: frames from one peer into the shared inbox. Every
 /// exit path first posts a [`DISCONNECT_TAG`] frame so blocked
 /// receivers wake at once instead of burning their full timeout.
@@ -197,8 +245,7 @@ fn read_loop(mut stream: TcpStream, src: usize, tx: Sender<Frame>) {
         if stream.read_exact(&mut header).is_err() {
             break; // peer closed
         }
-        let tag = u64::from_le_bytes(header[0..8].try_into().unwrap());
-        let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let (tag, len) = split_header(&header);
         if len > MAX_FRAME_BYTES {
             // Never allocate on an untrusted length. Park a poisoned
             // frame so the matching `recv` reports the cause, then drop
@@ -275,6 +322,9 @@ impl Transport for TcpTransport {
         }
         let deadline = std::time::Instant::now() + self.recv_timeout;
         loop {
+            if let Some(ctl) = &self.control {
+                ctl.check()?;
+            }
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
                 .ok_or_else(|| {
@@ -288,14 +338,24 @@ impl Transport for TcpTransport {
                         .with_tag(tag),
                     )
                 })?;
-            let frame = self.inbox.recv_timeout(remaining).map_err(|e| {
-                Error::comm_failure(
-                    CommFailure::fatal(format!("tcp recv failed: {e}"))
-                        .at_rank(self.rank)
-                        .with_peer(src)
-                        .with_tag(tag),
-                )
-            })?;
+            // Bounded wait so the control token is re-polled at
+            // LIFECYCLE_POLL even while no frame arrives; the overall
+            // deadline above still governs the timeout error.
+            let frame = match self.inbox.recv_timeout(remaining.min(LIFECYCLE_POLL)) {
+                Ok(f) => f,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(e @ RecvTimeoutError::Disconnected) => {
+                    return Err(Error::comm_failure(
+                        CommFailure::fatal(format!("tcp recv failed: {e}"))
+                            .at_rank(self.rank)
+                            .with_peer(src)
+                            .with_tag(tag),
+                    ))
+                }
+            };
+            if frame.tag == CANCEL_TAG {
+                return Err(self.cancelled_by_peer(frame.src));
+            }
             if frame.tag == DISCONNECT_TAG {
                 self.dead[frame.src] = true;
                 if frame.src == src {
@@ -314,11 +374,22 @@ impl Transport for TcpTransport {
     }
 
     fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
-        if let Some((&(src, tag), _)) = self.parked.iter().find(|(_, q)| !q.is_empty()) {
-            let p = self.parked.get_mut(&(src, tag)).unwrap().pop_front().unwrap();
+        if let Some(ctl) = &self.control {
+            ctl.check()?;
+        }
+        // Serve reorder-buffer stragglers first. Written without the
+        // guarded `unwrap()`s the find-then-index idiom needs: pop
+        // through the same entry the scan found. Cancel notices are
+        // never parked, so they cannot hide behind this path.
+        let found = self
+            .parked
+            .iter_mut()
+            .find_map(|(&k, q)| q.pop_front().map(|p| (k, p)));
+        if let Some(((src, tag), p)) = found {
             return p.map(|payload| Some((src, tag, payload)));
         }
         match self.inbox.recv_timeout(timeout) {
+            Ok(f) if f.tag == CANCEL_TAG => Err(self.cancelled_by_peer(f.src)),
             Ok(f) if f.tag == DISCONNECT_TAG => {
                 self.dead[f.src] = true;
                 Err(disconnect_error(f.src))
@@ -333,17 +404,29 @@ impl Transport for TcpTransport {
             )),
         }
     }
+
+    fn set_control(&mut self, ctl: Option<QueryControl>) {
+        self.control = ctl;
+    }
 }
 
 impl Drop for TcpTransport {
-    /// Send FIN on every stream so peers' reader threads see EOF once
-    /// in-flight data drains — an endpoint dropped mid-job propagates
-    /// to the mesh like a dead process, instead of its sockets
-    /// lingering in reader-thread clones. Write-half only: closing the
-    /// read half could RST in-flight frames a peer already sent.
+    /// Graceful teardown in two phases. First, shut every stream down
+    /// in **both** directions: the write half sends FIN so peers'
+    /// reader threads see EOF once in-flight data drains (an endpoint
+    /// dropped mid-job propagates to the mesh like a dead process),
+    /// and the read half forces this endpoint's *own* reader threads
+    /// out of their blocking `read_exact` (each reader holds a
+    /// `try_clone` of the same socket, so the shutdown reaches it).
+    /// Second, join the readers — woken by phase one, they post their
+    /// disconnect sentinel and exit, so a dropped transport leaks no
+    /// threads.
     fn drop(&mut self) {
         for w in self.writers.iter().flatten() {
-            let _ = w.shutdown(Shutdown::Write);
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -439,6 +522,73 @@ mod tests {
         // The peer stays dead: later ops fail fast.
         assert!(e0.send(1, 6, vec![1]).is_err());
         assert!(e0.recv(1, 6).is_err());
+    }
+
+    #[test]
+    fn local_cancel_wakes_blocked_tcp_recv_within_poll_interval() {
+        let mut eps = TcpFabric::new(2, ports(2)).unwrap();
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let ctl = QueryControl::new(0);
+        e0.set_control(Some(ctl.clone()));
+        let h = std::thread::spawn(move || {
+            let start = std::time::Instant::now();
+            (e0.recv(1, 7), start.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        ctl.cancel();
+        let (r, waited) = h.join().unwrap();
+        assert!(r.unwrap_err().is_cancellation());
+        // Well under the 30s recv_timeout: the poll loop saw the token.
+        assert!(waited < Duration::from_secs(5), "took {waited:?}");
+    }
+
+    #[test]
+    fn peer_cancel_notice_intercepted_over_sockets() {
+        let mut eps = TcpFabric::new(2, ports(2)).unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let ctl = QueryControl::new(0);
+        e0.set_control(Some(ctl.clone()));
+        e1.send(0, CANCEL_TAG, Vec::new()).unwrap();
+        let err = e0.recv(1, 3).unwrap_err();
+        assert!(err.is_cancellation(), "{err}");
+        assert!(ctl.is_cancelled());
+    }
+
+    #[test]
+    fn dropping_endpoints_joins_reader_threads() {
+        /// Count live threads named `rylon-tcp-*` (reader threads),
+        /// ignoring the harness and other tests' worker threads.
+        fn tcp_reader_threads() -> usize {
+            let Ok(tasks) = std::fs::read_dir("/proc/self/task") else { return 0 };
+            tasks
+                .flatten()
+                .filter(|t| {
+                    std::fs::read_to_string(t.path().join("comm"))
+                        .is_ok_and(|name| name.starts_with("rylon-tcp"))
+                })
+                .count()
+        }
+        let before = tcp_reader_threads();
+        let eps = TcpFabric::new(3, ports(3)).unwrap();
+        assert!(
+            tcp_reader_threads() >= before + 6,
+            "fabric should spawn a reader per stream"
+        );
+        drop(eps);
+        // Drop joins this fabric's readers synchronously; other tcp
+        // tests may run concurrently, so allow their readers a window
+        // to retire instead of demanding instant global equality.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut drained = false;
+        while !drained && std::time::Instant::now() < deadline {
+            drained = tcp_reader_threads() <= before;
+            if !drained {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+        assert!(drained, "reader threads leaked past drop");
     }
 
     #[test]

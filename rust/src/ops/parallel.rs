@@ -22,6 +22,25 @@
 //! *what* it returns — the serial/parallel equivalence property tests
 //! in `tests/prop_parallel.rs` pin this at `parallelism ∈ {1, 2, 7}`.
 //!
+//! # Lifecycle: panic isolation and cancellation
+//!
+//! Task bodies run under `catch_unwind`: a panicking task never
+//! unwinds through a worker thread. The first payload (in task order)
+//! is captured, siblings stop claiming tasks, and the caller sees one
+//! clean re-panic on the infallible paths ([`map_tasks`],
+//! [`map_morsels`], [`for_each_slice_mut`]) or a structured
+//! `Error::Internal` on the fallible one ([`try_map_morsels`]). Joins
+//! never `expect` a worker result, so a panicked worker can never
+//! trigger a second panic while the first is unwinding.
+//!
+//! [`try_map_morsels`] additionally honors the ambient
+//! [`crate::lifecycle::QueryControl`] (installed per query by the
+//! worker harness): cancellation or deadline expiry stops the grid at
+//! the next morsel boundary with the structured lifecycle error. The
+//! polls are pure atomic reads and a query that is *not* cancelled
+//! runs the identical morsel schedule, preserving the determinism
+//! contract above.
+//!
 //! # The parallelism knob
 //!
 //! [`parallelism`] resolves the process-wide default thread budget:
@@ -31,7 +50,10 @@
 //! it (divided by the in-process world size) so co-located workers
 //! share the machine instead of oversubscribing it.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::error::{Error, Result};
+use crate::lifecycle::{current_control, QueryControl};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Rows per morsel. Fixed (not derived from the thread count) so that
@@ -75,52 +97,192 @@ pub fn parallelism() -> usize {
     }
 }
 
-/// Run `n` independent tasks on up to `threads` scoped threads and
-/// return their results **in task order**. Tasks are pulled from a
-/// shared atomic counter (morsel-driven work stealing), so skew in
-/// per-task cost balances out. `threads <= 1` (or `n <= 1`) runs
-/// inline with zero thread spawns.
-pub fn map_tasks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+/// How a task (or its worker) failed inside the grid.
+enum TaskFailure {
+    /// The task body returned an error (fallible grids only).
+    Err(Error),
+    /// The task body panicked; the payload message was captured.
+    Panicked(String),
+}
+
+/// What a whole grid run produced.
+enum GridOutcome<T> {
+    /// Every task completed; results in task order.
+    Done(Vec<T>),
+    /// The first failure **in task order** (deterministic: tasks are
+    /// claimed as a monotone prefix, so the minimal failing index is
+    /// always claimed and run before any later task).
+    Failed(usize, TaskFailure),
+    /// The attached [`QueryControl`] stopped the grid early; carries
+    /// the structured lifecycle error.
+    Stopped(Error),
+}
+
+/// Render a captured panic payload (the `&str` / `String` payloads
+/// `panic!` produces; anything else gets a placeholder).
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The shared engine behind every fan-out in this module: run `n`
+/// tasks on up to `threads` scoped threads, pulling task indices off
+/// one atomic counter, with task bodies isolated under
+/// `catch_unwind`. Workers therefore never unwind; joins are plain
+/// and can never double-panic. When `ctl` is given, workers stop
+/// claiming tasks once it requests a stop (pure atomic polls — the
+/// claim schedule of an uncancelled run is untouched).
+fn run_grid<T, F>(
+    n: usize,
+    threads: usize,
+    ctl: Option<&QueryControl>,
+    f: F,
+) -> GridOutcome<T>
 where
     T: Send,
-    F: Fn(usize) -> T + Sync,
+    F: Fn(usize) -> Result<T> + Sync,
 {
+    if let Some(c) = ctl {
+        if let Err(e) = c.check() {
+            return GridOutcome::Stopped(e);
+        }
+    }
     let threads = threads.max(1).min(n);
     if threads <= 1 {
-        return (0..n).map(f).collect();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            if let Some(c) = ctl {
+                if i > 0 {
+                    if let Err(e) = c.check() {
+                        return GridOutcome::Stopped(e);
+                    }
+                }
+            }
+            match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(Ok(v)) => out.push(v),
+                Ok(Err(e)) => return GridOutcome::Failed(i, TaskFailure::Err(e)),
+                Err(p) => {
+                    if let Some(c) = ctl {
+                        c.note_panic();
+                    }
+                    return GridOutcome::Failed(i, TaskFailure::Panicked(panic_msg(p)));
+                }
+            }
+        }
+        return GridOutcome::Done(out);
     }
     let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let mut joined_failure: Option<TaskFailure> = None;
     let collected = std::thread::scope(|s| {
-        let next = &next;
-        let f = &f;
+        let (next, stop, f) = (&next, &stop, &f);
         let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             handles.push(s.spawn(move || {
-                let mut local: Vec<(usize, T)> = Vec::new();
+                let mut local: Vec<(usize, std::result::Result<T, TaskFailure>)> =
+                    Vec::new();
                 loop {
+                    if stop.load(Ordering::Relaxed)
+                        || ctl.is_some_and(|c| c.stop_requested())
+                    {
+                        break;
+                    }
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    local.push((i, f(i)));
+                    match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                        Ok(Ok(v)) => local.push((i, Ok(v))),
+                        Ok(Err(e)) => {
+                            stop.store(true, Ordering::Relaxed);
+                            local.push((i, Err(TaskFailure::Err(e))));
+                        }
+                        Err(p) => {
+                            if let Some(c) = ctl {
+                                c.note_panic();
+                            }
+                            stop.store(true, Ordering::Relaxed);
+                            local.push((i, Err(TaskFailure::Panicked(panic_msg(p)))));
+                        }
+                    }
                 }
                 local
             }));
         }
         let mut parts = Vec::with_capacity(threads);
         for h in handles {
-            parts.push(h.join().expect("morsel worker panicked"));
+            match h.join() {
+                Ok(part) => parts.push(part),
+                // Worker bodies catch every unwind, so this arm is
+                // close to unreachable — but if a worker still died,
+                // record it instead of re-panicking (a panic here
+                // while another panic unwinds would abort the
+                // process).
+                Err(p) => joined_failure = Some(TaskFailure::Panicked(panic_msg(p))),
+            }
         }
         parts
     });
     let mut out: Vec<Option<T>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
+    let mut first: Option<(usize, TaskFailure)> = None;
     for part in collected {
-        for (i, v) in part {
-            out[i] = Some(v);
+        for (i, r) in part {
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(fail) => {
+                    if first.as_ref().map_or(true, |(j, _)| i < *j) {
+                        first = Some((i, fail));
+                    }
+                }
+            }
         }
     }
-    out.into_iter().map(|v| v.expect("every task produced a result")).collect()
+    if let Some((i, fail)) = first {
+        return GridOutcome::Failed(i, fail);
+    }
+    if let Some(fail) = joined_failure {
+        return GridOutcome::Failed(n, fail);
+    }
+    if out.iter().any(|v| v.is_none()) {
+        // Only a control stop leaves gaps: failures are recorded and
+        // handled above, and an uncancelled grid claims every task.
+        let e = ctl
+            .and_then(|c| c.check().err())
+            .unwrap_or_else(|| Error::cancelled("query cancelled mid-grid"));
+        return GridOutcome::Stopped(e);
+    }
+    GridOutcome::Done(out.into_iter().map(|v| v.expect("checked above")).collect())
+}
+
+/// Run `n` independent tasks on up to `threads` scoped threads and
+/// return their results **in task order**. Tasks are pulled from a
+/// shared atomic counter (morsel-driven work stealing), so skew in
+/// per-task cost balances out. `threads <= 1` (or `n <= 1`) runs
+/// inline with zero thread spawns.
+///
+/// A panicking task is contained in its worker and re-raised **once**
+/// on the calling thread with the captured payload message — the
+/// process never aborts from a worker unwind.
+pub fn map_tasks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match run_grid(n, threads, None, |i| Ok(f(i))) {
+        GridOutcome::Done(v) => v,
+        GridOutcome::Failed(i, TaskFailure::Panicked(msg)) => {
+            panic!("morsel worker panicked (task {i}): {msg}")
+        }
+        GridOutcome::Failed(..) | GridOutcome::Stopped(_) => {
+            unreachable!("infallible uncontrolled grid can only finish or panic")
+        }
+    }
 }
 
 /// Split `[0, len)` into [`MORSEL_ROWS`]-sized morsels, map each range
@@ -146,17 +308,39 @@ where
     let _: Vec<()> = map_morsels(len, threads, f);
 }
 
-/// Fallible [`map_morsels`]: every morsel still runs (the work-stealing
-/// loop has no cross-task channel to cancel through), then the result
-/// is the per-morsel values in morsel order, or the **first error in
-/// morsel order** — not completion order — so which morsel's error
-/// surfaces is deterministic at every thread count.
+/// Fallible [`map_morsels`]: the per-morsel values in morsel order, or
+/// the **first error in morsel order** — not completion order. After
+/// the first failure workers stop claiming new morsels, but the
+/// surfaced error is still deterministic at every thread count:
+/// morsels are claimed as a monotone prefix, so the minimal failing
+/// morsel is always claimed (and run to completion) before any later
+/// one.
+///
+/// This is also the morsel engine's cancellation point: when the
+/// calling thread has an ambient [`crate::lifecycle::QueryControl`]
+/// (see [`crate::lifecycle::with_control`]), cancellation, deadline
+/// expiry, or a sibling's captured panic stops the grid at the next
+/// morsel boundary with the structured lifecycle error. A panicking
+/// morsel body surfaces as `Error::Internal` carrying the payload —
+/// the panic never crosses the caller's frame.
 pub fn try_map_morsels<T, F>(len: usize, threads: usize, f: F) -> crate::error::Result<Vec<T>>
 where
     T: Send,
     F: Fn(std::ops::Range<usize>) -> crate::error::Result<T> + Sync,
 {
-    map_morsels(len, threads, f).into_iter().collect()
+    let ctl = current_control();
+    let n = len.div_ceil(MORSEL_ROWS);
+    match run_grid(n, threads, ctl.as_ref(), |m| {
+        let start = m * MORSEL_ROWS;
+        f(start..(start + MORSEL_ROWS).min(len))
+    }) {
+        GridOutcome::Done(v) => Ok(v),
+        GridOutcome::Failed(_, TaskFailure::Err(e)) => Err(e),
+        GridOutcome::Failed(i, TaskFailure::Panicked(msg)) => {
+            Err(Error::internal(format!("morsel worker panicked (morsel {i}): {msg}")))
+        }
+        GridOutcome::Stopped(e) => Err(e),
+    }
 }
 
 /// Deterministic mutable-slice fan-out: split one pre-sized buffer into
@@ -213,28 +397,23 @@ where
             rest = tail;
         }
     }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        let (next, slots, f) = (&next, &slots, &f);
-        let mut handles = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            handles.push(s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= slots.len() {
-                    break;
-                }
-                let region = slots[i]
-                    .lock()
-                    .expect("slice slot poisoned")
-                    .take()
-                    .expect("each region is taken exactly once");
-                f(i, region);
-            }));
+    match run_grid(n, threads, None, |i| {
+        let region = slots[i]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+            .expect("each region is taken exactly once");
+        f(i, region);
+        Ok(())
+    }) {
+        GridOutcome::Done(_) => {}
+        GridOutcome::Failed(i, TaskFailure::Panicked(msg)) => {
+            panic!("slice worker panicked (region {i}): {msg}")
         }
-        for h in handles {
-            h.join().expect("slice worker panicked");
+        GridOutcome::Failed(..) | GridOutcome::Stopped(_) => {
+            unreachable!("infallible uncontrolled grid can only finish or panic")
         }
-    });
+    }
 }
 
 /// Reassemble per-morsel chunks into one flat vector of `len` elements.
@@ -326,6 +505,99 @@ mod tests {
                 "threads={threads}: {err}"
             );
         }
+    }
+
+    #[test]
+    fn panicking_task_is_contained_and_reraised_once() {
+        // The worker catches the unwind; the caller sees exactly one
+        // clean panic carrying the payload — catchable, no abort.
+        for threads in [1, 2, 7] {
+            let r = std::panic::catch_unwind(|| {
+                map_tasks(20, threads, |i| {
+                    if i == 3 {
+                        panic!("bad row in task 3");
+                    }
+                    i
+                })
+            });
+            let p = r.expect_err("task panic must surface");
+            let msg = panic_msg(p);
+            assert!(msg.contains("bad row in task 3"), "threads={threads}: {msg}");
+            assert!(msg.contains("morsel worker panicked"), "threads={threads}: {msg}");
+        }
+    }
+
+    #[test]
+    fn try_map_morsels_converts_panics_to_structured_errors() {
+        let len = MORSEL_ROWS * 4;
+        for threads in [1, 2, 7] {
+            let err = try_map_morsels(len, threads, |r| {
+                if r.start == MORSEL_ROWS * 2 {
+                    panic!("kernel blew up");
+                }
+                Ok(r.len())
+            })
+            .unwrap_err();
+            assert!(
+                matches!(err, crate::error::Error::Internal(_)),
+                "threads={threads}: {err}"
+            );
+            let s = err.to_string();
+            assert!(s.contains("kernel blew up"), "threads={threads}: {s}");
+        }
+    }
+
+    #[test]
+    fn slice_fanout_contains_panics() {
+        for threads in [2, 7] {
+            let r = std::panic::catch_unwind(|| {
+                let mut buf = vec![0u8; 64];
+                let extents = vec![16usize; 4];
+                for_each_slice_mut(&mut buf, &extents, threads, |i, region| {
+                    if i == 2 {
+                        panic!("region 2 died");
+                    }
+                    region.fill(1);
+                });
+            });
+            let msg = panic_msg(r.expect_err("region panic must surface"));
+            assert!(msg.contains("region 2 died"), "threads={threads}: {msg}");
+        }
+    }
+
+    #[test]
+    fn try_map_morsels_honors_ambient_cancellation() {
+        use crate::lifecycle::{with_control, QueryControl};
+        let len = MORSEL_ROWS * 3;
+        for threads in [1, 2, 7] {
+            let ctl = QueryControl::new(5);
+            ctl.cancel();
+            let err = with_control(&ctl, || {
+                try_map_morsels(len, threads, |r| Ok(r.len()))
+            })
+            .unwrap_err();
+            assert!(err.is_cancellation(), "threads={threads}: {err}");
+            assert!(err.to_string().contains("rank 5"), "threads={threads}: {err}");
+            // Without a control (or uncancelled) the same call succeeds
+            // with the identical morsel schedule.
+            let ok = try_map_morsels(len, threads, |r| Ok(r.len())).unwrap();
+            assert_eq!(ok.len(), 3);
+        }
+    }
+
+    #[test]
+    fn try_map_morsels_honors_ambient_deadline() {
+        use crate::lifecycle::{with_control, QueryControl};
+        let ctl = QueryControl::new(0);
+        ctl.set_deadline(std::time::Instant::now() - std::time::Duration::from_millis(1));
+        let err = with_control(&ctl, || {
+            try_map_morsels(MORSEL_ROWS * 2, 2, |r| Ok(r.len()))
+        })
+        .unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::DeadlineExceeded(_)),
+            "{err}"
+        );
     }
 
     #[test]

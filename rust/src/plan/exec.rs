@@ -91,6 +91,15 @@ pub struct ExecStats {
     pub acks_timed_out: u64,
     /// Peers declared dead during this execution.
     pub peer_failures: u64,
+    /// Explicit [`crate::lifecycle::QueryControl::cancel`] calls
+    /// observed on this worker's token during execution (zero on every
+    /// fault-free run — likewise the next two).
+    pub cancels: u64,
+    /// Deadline expiries latched by this worker's token.
+    pub deadline_exceeded: u64,
+    /// Morsel/slice worker panics contained by the panic-isolation
+    /// boundary (see [`crate::ops::parallel`]).
+    pub worker_panics: u64,
 }
 
 impl ExecStats {
@@ -102,6 +111,23 @@ impl ExecStats {
         self.frames_corrupt += s.frames_corrupt;
         self.acks_timed_out += s.acks_timed_out;
         self.peer_failures += s.peer_failures;
+    }
+}
+
+/// Short operator name for lifecycle-error context ("cancelled at
+/// node X") and checkpoint labels.
+fn op_name(op: &LogicalOp) -> &'static str {
+    match op {
+        LogicalOp::Source { .. } => "source",
+        LogicalOp::Filter { .. } => "filter",
+        LogicalOp::Project { .. } => "project",
+        LogicalOp::WithColumn { .. } => "with_column",
+        LogicalOp::Sort { .. } => "sort",
+        LogicalOp::Join { .. } => "join",
+        LogicalOp::Union { .. } => "union",
+        LogicalOp::Intersect { .. } => "intersect",
+        LogicalOp::Difference { .. } => "difference",
+        LogicalOp::GroupBy { .. } => "group_by",
     }
 }
 
@@ -174,6 +200,33 @@ pub fn execute_plan(
     sources: &[(&str, Table)],
     include_dead: bool,
 ) -> Result<(Vec<Table>, ExecStats)> {
+    // Install the context's token as the ambient control for the
+    // duration of the plan, so the morsel fan-outs inside operators
+    // poll it even when the caller is not a coordinator worker (which
+    // installs it around the whole job).
+    let ctl = ctx.control().clone();
+    let r = crate::lifecycle::with_control(&ctl, || {
+        execute_plan_inner(plan, ctx, sources, include_dead)
+    });
+    if r.is_err() {
+        // Whatever killed the query (explicit cancel, deadline, a
+        // contained worker panic that latched the token), tell the
+        // peers once so their supersteps abort instead of timing out.
+        // `begin_notify` makes this a no-op if a checkpoint already
+        // notified.
+        if ctl.stop_requested() && ctl.begin_notify() {
+            ctx.communicator().notify_cancel();
+        }
+    }
+    r
+}
+
+fn execute_plan_inner(
+    plan: &LogicalPlan,
+    ctx: &mut CylonContext,
+    sources: &[(&str, Table)],
+    include_dead: bool,
+) -> Result<(Vec<Table>, ExecStats)> {
     if plan.sinks.is_empty() {
         return Err(Error::invalid("graph has no sinks"));
     }
@@ -216,6 +269,11 @@ pub fn execute_plan(
     let world = ctx.world();
     let threads = ctx.parallelism();
     let budget = ctx.memory_budget();
+    // Lifecycle counter baseline: the token is per-query but long-lived
+    // contexts may run several plans on one token, so report deltas.
+    let ctl = ctx.control().clone();
+    let counters_base =
+        (ctl.cancels(), ctl.deadlines_exceeded(), ctl.worker_panics());
     let mut results: Vec<Option<Arc<Table>>> = vec![None; plan.nodes.len()];
     let mut row_counts: Vec<usize> = vec![0; plan.nodes.len()];
     let mut node_bytes: Vec<u64> = vec![0; plan.nodes.len()];
@@ -230,6 +288,11 @@ pub fn execute_plan(
             continue; // fused into its consumer's input scan
         }
         let node = &plan.nodes[i];
+        // Cooperative cancellation boundary: every plan node starts by
+        // polling the token, so cancel/deadline surface within one node
+        // (and, inside a node, within one morsel — the fan-outs poll
+        // the ambient token too).
+        ctx.checkpoint(op_name(&node.op))?;
         // Materialize inputs, pulling any streamed chain hanging below.
         let mut inputs: Vec<Arc<Table>> = Vec::with_capacity(node.inputs.len());
         let mut transient_rows = 0usize;
@@ -470,6 +533,9 @@ pub fn execute_plan(
                 .ok_or_else(|| Error::internal("sink not computed"))
         })
         .collect::<Result<Vec<Table>>>()?;
+    stats.cancels = ctl.cancels() - counters_base.0;
+    stats.deadline_exceeded = ctl.deadlines_exceeded() - counters_base.1;
+    stats.worker_panics = ctl.worker_panics() - counters_base.2;
     Ok((outs, stats))
 }
 
@@ -652,6 +718,34 @@ mod tests {
             crate::ops::aggregate::group_by(&t, 0, &[AggSpec::new(AggFn::Count, 0)]).unwrap();
         assert_eq!(outs[0].num_rows(), want.num_rows());
         assert_eq!(stats.shuffles, 0);
+    }
+
+    #[test]
+    fn cancelled_context_aborts_plan_with_structured_error() {
+        let a = crate::io::generator::paper_table(100, 0.8, 61);
+        let b = crate::io::generator::paper_table(100, 0.8, 62);
+        let srcs = [("a", a), ("b", b)];
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        ctx.control().cancel();
+        let err = execute_plan(&pipeline_plan(), &mut ctx, &srcs, true).unwrap_err();
+        assert!(err.is_cancellation(), "{err}");
+        assert!(err.to_string().contains("rank 0"), "{err}");
+        // A fresh token runs the same plan to completion, with zeroed
+        // lifecycle counters (the baseline is per-execution).
+        ctx.new_query();
+        let (_, stats) = execute_plan(&pipeline_plan(), &mut ctx, &srcs, true).unwrap();
+        assert_eq!((stats.cancels, stats.deadline_exceeded, stats.worker_panics), (0, 0, 0));
+    }
+
+    #[test]
+    fn expired_deadline_aborts_plan_as_deadline_exceeded() {
+        let a = crate::io::generator::paper_table(100, 0.8, 63);
+        let b = crate::io::generator::paper_table(100, 0.8, 64);
+        let srcs = [("a", a), ("b", b)];
+        let mut ctx = crate::ctx::CylonContext::init_local();
+        ctx.control().set_timeout(std::time::Duration::ZERO);
+        let err = execute_plan(&pipeline_plan(), &mut ctx, &srcs, true).unwrap_err();
+        assert!(matches!(err, Error::DeadlineExceeded(_)), "{err:?}");
     }
 
     #[test]

@@ -115,6 +115,56 @@
 //! assert!(stats.spills >= 1 && stats.spill_bytes > 0);
 //! ```
 //!
+//! # Query lifecycle
+//!
+//! Every plan node executes behind a checkpoint on the context's
+//! [`crate::lifecycle::QueryControl`], and the morsel engine under the
+//! fused pipelines polls the same token ambiently. The guarantees:
+//!
+//! * **Cancellation / deadlines** — `cancel()` or an expired deadline
+//!   aborts the plan at the next node or morsel boundary (one poll
+//!   interval inside blocked receives) with a structured
+//!   [`Error::Cancelled`](crate::error::Error::Cancelled) /
+//!   [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded)
+//!   naming the rank and plan node — never a hang.
+//! * **Panic isolation** — a panicking morsel body is caught in its
+//!   worker, stops the rest of that query's fan-out via the token, and
+//!   resurfaces once as `Error::Internal` with the captured payload;
+//!   sibling queries on their own tokens are untouched.
+//! * **Teardown** — on the error path the first failing rank sends a
+//!   best-effort cancel notice to its peers (see
+//!   [`crate::net::CANCEL_TAG`]), so remote ranks abort their
+//!   supersteps instead of waiting out receive timeouts.
+//! * **Fault-free neutrality** — the checks are pure atomic reads on
+//!   the identical code path, so outputs stay bit-identical to a run
+//!   without any of this machinery. [`ExecStats`] reports the
+//!   `cancels` / `deadline_exceeded` / `worker_panics` deltas observed
+//!   during each execution (all zero on a clean run).
+//!
+//! ```
+//! use rylon::ctx::CylonContext;
+//! use rylon::dataflow::Graph;
+//! use rylon::io::generator::paper_table;
+//! use rylon::ops::join::JoinConfig;
+//!
+//! let mut g = Graph::new();
+//! let a = g.source("a");
+//! let b = g.source("b");
+//! let j = g.join(a, b, JoinConfig::inner(0, 0));
+//! g.sink(j);
+//! let sources = [("a", paper_table(100, 0.9, 1)), ("b", paper_table(100, 0.9, 2))];
+//!
+//! let mut ctx = CylonContext::init_local();
+//! ctx.control().cancel(); // a driver thread would do this mid-flight
+//! let err = g.execute_with(&mut ctx, &sources).unwrap_err();
+//! assert!(err.is_cancellation());
+//! assert!(err.to_string().contains("rank 0"));
+//!
+//! // A fresh token reruns the same plan to completion.
+//! ctx.new_query();
+//! assert!(g.execute_with(&mut ctx, &sources).is_ok());
+//! ```
+//!
 //! The executor is reachable standalone via [`exec::execute_plan`];
 //! [`Partitioning`] is shared with [`crate::dist::ShuffleStats`], which
 //! records the distribution each shuffle establishes.

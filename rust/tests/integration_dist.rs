@@ -201,3 +201,50 @@ fn worker_panic_reported_as_error() {
         });
     assert!(r.is_err());
 }
+
+#[test]
+fn no_leaked_rylon_threads_after_context_drop() {
+    // Every thread this crate spawns carries a "rylon-" name prefix
+    // (workers, tcp readers). After run_workers returns — healthy or
+    // cancelled — the per-worker CylonContext drops must have joined
+    // everything, so the name-filtered count returns to its baseline.
+    fn rylon_threads() -> usize {
+        let Ok(tasks) = std::fs::read_dir("/proc/self/task") else { return 0 };
+        tasks
+            .flatten()
+            .filter(|t| {
+                std::fs::read_to_string(t.path().join("comm"))
+                    .unwrap_or_default()
+                    .starts_with("rylon-")
+            })
+            .count()
+    }
+    let before = rylon_threads();
+    let _ = run_workers(3, &CommConfig::default(), |ctx| {
+        let t = random_table(40, 0x7EAD + ctx.rank() as u64);
+        rylon::dist::shuffle(ctx, &t, 0).unwrap().0.num_rows()
+    });
+    // A cancelled run tears down through the error path.
+    let cancelled: rylon::error::Result<Vec<()>> =
+        try_run_workers(3, &CommConfig::default(), None, |ctx| {
+            ctx.control().cancel();
+            let t = random_table(40, 0x7EAE + ctx.rank() as u64);
+            rylon::dist::shuffle(ctx, &t, 0).map(|_| ())
+        });
+    assert!(cancelled.is_err(), "pre-cancelled run must fail");
+    // Other tests in this binary run concurrently and spawn their own
+    // rylon-worker threads, so poll for the count to settle instead of
+    // asserting a single snapshot.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let now = rylon_threads();
+        if now <= before {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "leaked rylon-* threads: {now} alive, baseline {before}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,343 @@
+//! Lifecycle property suite: the PR-8 acceptance matrix for
+//! cooperative cancellation, deadlines, panic isolation, and teardown.
+//!
+//! * cancelling every rank mid-shuffle / mid-join / mid-sort surfaces
+//!   a structured cancellation on **every rank** at threads 1/2/7 ×
+//!   world 1/3 — never a hang;
+//! * an expired deadline does the same with `DeadlineExceeded`;
+//! * cancelling a **single** rank propagates to its peers over the
+//!   wire ([`rylon::net::CANCEL_TAG`]) instead of timing them out;
+//! * cancellation also aborts the reliable transport's ack/retry loops
+//!   well inside the recv deadline;
+//! * an injected panic in one morsel fails only its own query —
+//!   sibling queries on their own tokens run to completion;
+//! * fault-free runs are bit-identical at every thread count (the
+//!   lifecycle checks are pure reads on the morsel path);
+//! * a budgeted query cancelled mid-spill removes its scratch files.
+
+use rylon::coordinator::run_workers;
+use rylon::dataflow::Graph;
+use rylon::error::Error;
+use rylon::io::generator::{paper_table, random_table};
+use rylon::lifecycle::{with_control, QueryControl};
+use rylon::net::CommConfig;
+use rylon::ops::join::JoinConfig;
+use rylon::ops::parallel::{try_map_morsels, MORSEL_ROWS};
+use rylon::table::Table;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+const THREADS: [usize; 3] = [1, 2, 7];
+
+/// Generous no-hang bound: cancellation must land within one poll
+/// interval (~10ms); anything near this bound means a rank waited for
+/// a recv timeout instead of observing the token.
+const HANG_BOUND: Duration = Duration::from_secs(15);
+
+/// Cancel every rank mid-operator and require a structured
+/// cancellation from every rank, at each (world, threads) cell.
+fn cancel_matrix(op: &'static str) {
+    for world in [1usize, 3] {
+        for threads in THREADS {
+            // Ranks export their tokens; the canceller collects all of
+            // them, lets the op loops get airborne, then cancels.
+            let (tx, rx) = mpsc::channel::<QueryControl>();
+            let canceller = std::thread::spawn(move || {
+                let ctls: Vec<_> = (0..world).map(|_| rx.recv().expect("ctl")).collect();
+                std::thread::sleep(Duration::from_millis(10));
+                for c in &ctls {
+                    c.cancel();
+                }
+            });
+            let start = Instant::now();
+            let errs = run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                tx.send(ctx.control().clone()).expect("export control");
+                let l = random_table(200, 0x11F3 + ctx.rank() as u64);
+                let r = random_table(200, 0x22F3 + ctx.rank() as u64);
+                loop {
+                    let res = match op {
+                        "shuffle" => rylon::dist::shuffle(ctx, &l, 0).map(|_| ()),
+                        "join" => rylon::dist::dist_join(ctx, &l, &r, &JoinConfig::inner(0, 0))
+                            .map(|_| ()),
+                        "sort" => rylon::dist::dist_sort(ctx, &l, 0).map(|_| ()),
+                        other => unreachable!("unknown op {other}"),
+                    };
+                    if let Err(e) = res {
+                        return e;
+                    }
+                }
+            });
+            canceller.join().expect("canceller thread");
+            assert!(
+                start.elapsed() < HANG_BOUND,
+                "{op}: world={world} threads={threads} took {:?} — a rank hung",
+                start.elapsed()
+            );
+            for (rank, e) in errs.iter().enumerate() {
+                assert!(
+                    e.is_cancellation(),
+                    "{op}: world={world} threads={threads} rank={rank}: unstructured {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cancel_mid_shuffle_surfaces_on_every_rank() {
+    cancel_matrix("shuffle");
+}
+
+#[test]
+fn cancel_mid_join_surfaces_on_every_rank() {
+    cancel_matrix("join");
+}
+
+#[test]
+fn cancel_mid_sort_surfaces_on_every_rank() {
+    cancel_matrix("sort");
+}
+
+#[test]
+fn expired_deadline_surfaces_deadline_exceeded_on_every_rank() {
+    for world in [1usize, 3] {
+        for threads in THREADS {
+            let start = Instant::now();
+            let errs = run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                ctx.control().set_timeout(Duration::ZERO);
+                let t = random_table(200, 0x5EAD + ctx.rank() as u64);
+                rylon::dist::dist_sort(ctx, &t, 0).expect_err("expired deadline must abort")
+            });
+            assert!(start.elapsed() < HANG_BOUND, "world={world} threads={threads}");
+            for (rank, e) in errs.iter().enumerate() {
+                assert!(
+                    matches!(e, Error::DeadlineExceeded(_)),
+                    "world={world} threads={threads} rank={rank}: {e}"
+                );
+                assert!(e.is_cancellation(), "rank {rank}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_flight_deadline_aborts_like_a_cancel() {
+    // Each rank arms a deadline that expires while the join loop is in
+    // flight; every rank must surface DeadlineExceeded on its own.
+    let start = Instant::now();
+    let errs = run_workers(3, &CommConfig::default(), |ctx| {
+        ctx.set_parallelism(2);
+        ctx.control().set_timeout(Duration::from_millis(15));
+        let l = random_table(150, 0x0D11 + ctx.rank() as u64);
+        let r = random_table(150, 0x0D21 + ctx.rank() as u64);
+        loop {
+            if let Err(e) = rylon::dist::dist_join(ctx, &l, &r, &JoinConfig::inner(0, 0)) {
+                return e;
+            }
+        }
+    });
+    assert!(start.elapsed() < HANG_BOUND, "took {:?}", start.elapsed());
+    for (rank, e) in errs.iter().enumerate() {
+        assert!(matches!(e, Error::DeadlineExceeded(_)), "rank {rank}: {e}");
+    }
+}
+
+#[test]
+fn single_rank_cancel_notifies_peers_over_the_wire() {
+    // Only rank 0's token is cancelled; ranks 1 and 2 must learn via
+    // the CANCEL_TAG notice — not by waiting out their recv timeout.
+    let world = 3;
+    let (tx, rx) = mpsc::channel::<(usize, QueryControl)>();
+    let canceller = std::thread::spawn(move || {
+        let mut ctls: Vec<(usize, QueryControl)> =
+            (0..world).map(|_| rx.recv().expect("ctl")).collect();
+        ctls.sort_by_key(|(rank, _)| *rank);
+        std::thread::sleep(Duration::from_millis(10));
+        ctls[0].1.cancel();
+    });
+    let start = Instant::now();
+    let errs = run_workers(world, &CommConfig::default(), move |ctx| {
+        tx.send((ctx.rank(), ctx.control().clone())).expect("export control");
+        let t = random_table(200, 0x0CA0 + ctx.rank() as u64);
+        loop {
+            match rylon::dist::shuffle(ctx, &t, 0) {
+                // The driver-loop idiom: a checkpoint between queries
+                // both observes cancellation and (on the first failing
+                // rank) sends the peer notice — `execute_plan` does the
+                // same automatically on its error path.
+                Ok(_) => {
+                    if let Err(e) = ctx.checkpoint("between-queries") {
+                        return e;
+                    }
+                }
+                Err(e) => {
+                    let _ = ctx.checkpoint("abort");
+                    return e;
+                }
+            }
+        }
+    });
+    canceller.join().expect("canceller thread");
+    assert!(start.elapsed() < HANG_BOUND, "took {:?}", start.elapsed());
+    for (rank, e) in errs.iter().enumerate() {
+        assert!(e.is_cancellation(), "rank {rank}: unstructured {e}");
+    }
+    // At least one peer must have learned from the wire notice (its own
+    // token was never cancelled locally before the notice arrived).
+    assert!(
+        errs.iter()
+            .enumerate()
+            .any(|(rank, e)| rank != 0 && e.to_string().contains("notice from peer")),
+        "no peer saw the cancel notice: {errs:?}"
+    );
+}
+
+#[test]
+fn cancel_aborts_reliable_retry_loops_under_faults() {
+    use rylon::net::{FaultPlan, RetryConfig};
+    // Lossy link + reliable transport with a 20s recv deadline: the
+    // cancel must end the run via the poll interval, not the deadline.
+    let world = 3;
+    let config = CommConfig::default()
+        .with_faults(FaultPlan::new(0x1F3).with_drops(700))
+        .with_reliability(true)
+        .with_retry(RetryConfig::aggressive())
+        .with_recv_timeout(Duration::from_secs(20));
+    let (tx, rx) = mpsc::channel::<QueryControl>();
+    let canceller = std::thread::spawn(move || {
+        let ctls: Vec<_> = (0..world).map(|_| rx.recv().expect("ctl")).collect();
+        std::thread::sleep(Duration::from_millis(10));
+        for c in &ctls {
+            c.cancel();
+        }
+    });
+    let start = Instant::now();
+    let errs = run_workers(world, &config, move |ctx| {
+        tx.send(ctx.control().clone()).expect("export control");
+        let t = random_table(150, 0x2E7 + ctx.rank() as u64);
+        loop {
+            if let Err(e) = rylon::dist::shuffle(ctx, &t, 0) {
+                return e;
+            }
+        }
+    });
+    canceller.join().expect("canceller thread");
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "cancel waited on the retry/ack loop: {:?}",
+        start.elapsed()
+    );
+    for (rank, e) in errs.iter().enumerate() {
+        assert!(e.is_cancellation(), "rank {rank}: unstructured {e}");
+    }
+}
+
+#[test]
+fn injected_morsel_panic_fails_only_that_query() {
+    for threads in THREADS {
+        // A sibling query on its own token runs concurrently and must
+        // finish untouched by the other query's panic.
+        let sibling = std::thread::spawn(move || {
+            let ctl = QueryControl::new(0);
+            with_control(&ctl, || {
+                try_map_morsels(4 * MORSEL_ROWS, threads, |r| Ok::<usize, Error>(r.len()))
+            })
+        });
+        let ctl = QueryControl::new(0);
+        let err = with_control(&ctl, || {
+            try_map_morsels(4 * MORSEL_ROWS, threads, |r| {
+                if r.start == 2 * MORSEL_ROWS {
+                    panic!("injected kernel panic");
+                }
+                Ok::<usize, Error>(r.len())
+            })
+        })
+        .expect_err("panicking morsel must fail the query");
+        assert!(matches!(err, Error::Internal(_)), "threads={threads}: {err:?}");
+        assert!(err.to_string().contains("injected kernel panic"), "{err}");
+        assert_eq!(ctl.worker_panics(), 1, "threads={threads}");
+        assert!(ctl.is_cancelled(), "a panic stops the rest of the grid");
+        assert_eq!(ctl.cancels(), 0, "note_panic is not a user cancel");
+        let sib = sibling
+            .join()
+            .expect("sibling thread must exit cleanly")
+            .expect("sibling query must be unaffected");
+        assert_eq!(sib.iter().sum::<usize>(), 4 * MORSEL_ROWS, "threads={threads}");
+    }
+}
+
+#[test]
+fn fault_free_runs_are_bit_identical_across_thread_counts() {
+    // The lifecycle checks on the morsel and superstep paths are pure
+    // atomic reads: with no cancel in flight, outputs must stay
+    // bit-identical at every thread count, world 1 and 3.
+    for world in [1usize, 3] {
+        let run = |threads: usize| -> Vec<Table> {
+            run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                let l = random_table(120, 0xB17 + ctx.rank() as u64);
+                let r = random_table(120, 0xB27 + ctx.rank() as u64);
+                let (j, _) =
+                    rylon::dist::dist_join(ctx, &l, &r, &JoinConfig::inner(0, 0)).unwrap();
+                rylon::dist::dist_sort(ctx, &j, 0).unwrap().0
+            })
+        };
+        let oracle = run(1);
+        for threads in [2usize, 7] {
+            let got = run(threads);
+            for (rank, (g, w)) in got.iter().zip(&oracle).enumerate() {
+                assert!(g.data_equals(w), "world={world} threads={threads} rank={rank} diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn cancelled_budgeted_query_leaves_no_spill_files() {
+    // Spill scratch dirs are named rylon_spill_<tag>_<pid>_<nanos>;
+    // anything from this process left behind after a cancelled budgeted
+    // query is a teardown leak.
+    fn spill_dirs() -> std::collections::BTreeSet<String> {
+        let marker = format!("_{}_", std::process::id());
+        let mut v = std::collections::BTreeSet::new();
+        if let Ok(rd) = std::fs::read_dir(std::env::temp_dir()) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("rylon_spill_") && name.contains(&marker) {
+                    v.insert(name);
+                }
+            }
+        }
+        v
+    }
+    let before = spill_dirs();
+    let mut g = Graph::new();
+    let a = g.source("a");
+    let b = g.source("b");
+    let j = g.join(a, b, JoinConfig::inner(0, 0));
+    let s = g.sort(j, 1);
+    g.sink(s);
+    let n = 2 * MORSEL_ROWS + 123;
+    let srcs = [("a", paper_table(n, 0.8, 0xA1)), ("b", paper_table(n / 2, 0.8, 0xB2))];
+    // Sweep the countdown so cancellation lands at different depths of
+    // the budgeted (spilling) pipeline — node boundaries and morsel
+    // boundaries alike. checks=1 cancels at the very first checkpoint,
+    // so at least one run must error.
+    let mut saw_cancel = false;
+    for checks in [1u64, 5, 25, 125, 625] {
+        let mut ctx = rylon::ctx::CylonContext::init_local();
+        ctx.set_memory_budget(Some(1)); // everything is over budget
+        ctx.control().cancel_after_checks(checks);
+        match g.execute_with(&mut ctx, &srcs) {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(e.is_cancellation(), "checks={checks}: {e}");
+                saw_cancel = true;
+            }
+        }
+    }
+    assert!(saw_cancel, "no countdown landed inside the query");
+    assert_eq!(spill_dirs(), before, "cancelled budgeted queries leaked spill scratch dirs");
+}
