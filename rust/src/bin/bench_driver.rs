@@ -21,6 +21,10 @@
 //!   --threads LIST        local-target parallelism sweep (default 1,2,4,8)
 //!   --quick               tiny sizes for smoke runs
 //!   --no-aot              skip the PJRT kernel runtime
+//!   --trace-out PATH      (local --op pipeline) run one traced
+//!                         world-3 pipeline, print its EXPLAIN ANALYZE
+//!                         report, write Chrome-trace JSON to PATH
+//!                         (load in Perfetto / chrome://tracing)
 //!
 //! Scaling is measured on the BSP virtual clock (`rylon::sim`): worker
 //! compute is executed sequentially and timed for real; AllToAll cost
@@ -94,6 +98,9 @@ struct Opts {
     op_explicit: bool,
     use_aot: bool,
     threads_list: Vec<usize>,
+    /// `--trace-out`: Chrome-trace JSON destination for the traced
+    /// pipeline run (None = tracing stays off).
+    trace_out: Option<String>,
 }
 
 impl Opts {
@@ -163,6 +170,7 @@ fn parse_opts(args: &[String]) -> CliResult<Opts> {
                 }
             }
         },
+        trace_out: flags.get("trace-out").cloned(),
     })
 }
 
@@ -190,7 +198,7 @@ fn save(report: &Report, opts: &Opts, name: &str) {
     std::fs::create_dir_all(&opts.out_dir).ok();
     let path = format!("{}/{name}.tsv", opts.out_dir);
     if let Err(e) = report.save_tsv(&path) {
-        eprintln!("warn: could not save {path}: {e}");
+        rylon::trace::log!(Warn, "could not save {path}: {e}");
     }
 }
 
@@ -201,7 +209,7 @@ fn load_runtime(opts: &Opts) -> Option<Arc<KernelRuntime>> {
     match KernelRuntime::load_default() {
         Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
-            eprintln!("[bench] AOT runtime unavailable ({e}); native hash path");
+            rylon::trace::log!(Warn, "[bench] AOT runtime unavailable ({e}); native hash path");
             None
         }
     }
@@ -296,7 +304,7 @@ fn fig7(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
                 fmt_s(spark.virtual_secs),
             ]);
         }
-        eprintln!("[fig7/{}] W={w} done", opts.op);
+        rylon::trace::log!(Info, "[fig7/{}] W={w} done", opts.op);
     }
     print!("{}", report.render());
     save(&report, opts, &format!("fig7_{}", opts.op));
@@ -368,7 +376,7 @@ fn fig8(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
                 format!("{:.2}", u0 / u.virtual_secs),
             ]);
         }
-        eprintln!("[fig8/{}] W={w} done", opts.op);
+        rylon::trace::log!(Info, "[fig8/{}] W={w} done", opts.op);
     }
     print!("{}", report.render());
     save(&report, opts, &format!("fig8_{}", opts.op));
@@ -429,12 +437,12 @@ fn compare_engines(
                 Some(results[results.len() / 2].virtual_secs)
             }
             Err(e) => {
-                eprintln!("[fig9] dask-like failed at W={w}: {e}");
+                rylon::trace::log!(Warn, "[fig9] dask-like failed at W={w}: {e}");
                 None
             }
         };
         rows.push((w, dask, spark.virtual_secs, hash.virtual_secs, sort.virtual_secs));
-        eprintln!("[fig9/table2] W={w} done");
+        rylon::trace::log!(Info, "[fig9/table2] W={w} done");
     }
     rows
 }
@@ -464,7 +472,7 @@ fn fig9(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
                 fmt_s(spark.virtual_secs),
                 fmt_s(rylon.virtual_secs),
             ]);
-            eprintln!("[fig9/union] W={w} done");
+            rylon::trace::log!(Info, "[fig9/union] W={w} done");
         }
         print!("{}", report.render());
         save(&report, opts, "fig9_union");
@@ -577,7 +585,7 @@ fn fig10(opts: &Opts) -> CliResult<()> {
             fmt_s(ffi_zc.median_secs),
             fmt_s(ffi_copy.median_secs),
         ]);
-        eprintln!("[fig10] rows={n} done");
+        rylon::trace::log!(Info, "[fig10] rows={n} done");
     }
     print!("{}", report.render());
     save(&report, opts, "fig10");
@@ -626,22 +634,22 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
         for &threads in &opts.threads_list {
             if op == "pipeline" {
                 bench_pipeline(opts, threads, &mut report, records)?;
-                eprintln!("[local/pipeline] threads={threads} done");
+                rylon::trace::log!(Info, "[local/pipeline] threads={threads} done");
                 continue;
             }
             if op == "wire" {
                 bench_wire(opts, threads, &mut report, records)?;
-                eprintln!("[local/wire] threads={threads} done");
+                rylon::trace::log!(Info, "[local/wire] threads={threads} done");
                 continue;
             }
             if op == "shuffle_faulty" {
                 bench_shuffle_faulty(opts, threads, &mut report, records)?;
-                eprintln!("[local/shuffle_faulty] threads={threads} done");
+                rylon::trace::log!(Info, "[local/shuffle_faulty] threads={threads} done");
                 continue;
             }
             if op == "cancel" {
                 bench_cancel(opts, threads, &mut report, records)?;
-                eprintln!("[local/cancel] threads={threads} done");
+                rylon::trace::log!(Info, "[local/cancel] threads={threads} done");
                 continue;
             }
             let (wall, part, comm, world) = bench_local_op(opts, op, threads)?;
@@ -664,11 +672,42 @@ fn local(opts: &Opts, records: &mut Vec<BenchRecord>) -> CliResult<()> {
                 comm_secs: comm,
                 ..BenchRecord::default()
             });
-            eprintln!("[local/{op}] threads={threads} done");
+            rylon::trace::log!(Info, "[local/{op}] threads={threads} done");
+        }
+        if op == "pipeline" {
+            if let Some(path) = &opts.trace_out {
+                trace_pipeline(opts, path)?;
+            }
         }
     }
     print!("{}", report.render());
     save(&report, opts, "local");
+    Ok(())
+}
+
+/// The `--trace-out` run: one world-3 pipeline execution with tracing
+/// on. Rank 0 gathers every rank's spans, prints the EXPLAIN ANALYZE
+/// report, and exports the cluster timeline as Chrome-trace JSON (one
+/// pid per rank, one tid per worker thread) to `path`.
+fn trace_pipeline(opts: &Opts, path: &str) -> CliResult<()> {
+    let n = opts.total_rows;
+    let world = 3;
+    let threads = opts.threads_list.last().copied().unwrap_or(1);
+    let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+        ctx.set_parallelism(threads);
+        let srcs = [
+            ("a", worker_partition(n, world, ctx.rank(), 0.9, 0x51FE3)),
+            ("b", worker_partition(n / 2 + 1, world, ctx.rank(), 0.9, 0x51FE4)),
+        ];
+        let g = pipeline_graph();
+        let report = g.explain_analyze(ctx, &srcs).expect("traced pipeline");
+        (ctx.rank() == 0).then(|| (report, ctx.trace().to_chrome_trace()))
+    });
+    let (report, chrome) =
+        outs.into_iter().flatten().next().ok_or("rank 0 produced no trace")?;
+    print!("{report}");
+    std::fs::write(path, chrome).map_err(|e| format!("write {path}: {e}"))?;
+    rylon::trace::log!(Info, "[bench] wrote chrome trace {path}");
     Ok(())
 }
 
@@ -1194,8 +1233,8 @@ fn main() {
     std::fs::create_dir_all(&opts.out_dir).ok();
     let json_path = format!("{}/BENCH_results.json", opts.out_dir);
     match append_bench_json(&json_path, &records) {
-        Ok(()) => eprintln!("[bench] wrote {json_path} (+{} records)", records.len()),
-        Err(e) => eprintln!("warn: could not save {json_path}: {e}"),
+        Ok(()) => rylon::trace::log!(Info, "[bench] wrote {json_path} (+{} records)", records.len()),
+        Err(e) => rylon::trace::log!(Warn, "could not save {json_path}: {e}"),
     }
     if let Err(e) = result {
         eprintln!("error: {e}");

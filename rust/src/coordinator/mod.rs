@@ -62,9 +62,15 @@ where
                     // Install the context's lifecycle token as this
                     // worker's ambient control, so morsel fan-outs deep
                     // inside operators observe cancellation without
-                    // threading the token through every signature.
+                    // threading the token through every signature. The
+                    // trace sink installs the same way: jobs that call
+                    // dist operators directly (no plan executor) still
+                    // record spans when the context has tracing on.
                     let ctl = ctx.control().clone();
-                    crate::lifecycle::with_control(&ctl, move || job(&mut ctx))
+                    let sink = ctx.trace().clone();
+                    crate::lifecycle::with_control(&ctl, move || {
+                        crate::trace::with_sink(&sink, move || job(&mut ctx))
+                    })
                 })
                 .expect("spawn worker")
         })

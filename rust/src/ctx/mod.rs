@@ -14,7 +14,14 @@ use crate::error::Result;
 use crate::lifecycle::QueryControl;
 use crate::net::{wrap_transport, ChannelFabric, CommConfig, Communicator};
 use crate::runtime::KernelRuntime;
+use crate::trace::TraceSink;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Process-wide query-id mint for [`TraceSink`]s. SPMD ranks mint the
+/// same sequence (each rank's contexts run the same program), and the
+/// gathered spans are keyed by rank anyway — the id only labels.
+static NEXT_QUERY_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Worker identity within a context.
 pub type WorkerId = usize;
@@ -48,6 +55,15 @@ pub struct CylonContext {
     /// the ambient [`crate::lifecycle::with_control`] install) the
     /// morsel workers.
     control: QueryControl,
+    /// Whether queries on this context record trace spans. Off by
+    /// default — tracing is observation-only (outputs are
+    /// bit-identical either way), but a recording sink costs memory.
+    tracing: bool,
+    /// Span sink for the query currently running on this context,
+    /// minted next to `control`; installed ambiently by the plan
+    /// executor ([`crate::trace::with_sink`]). Disabled unless
+    /// [`Self::set_tracing`] turned tracing on.
+    trace: TraceSink,
 }
 
 /// Per-worker thread budget: co-located in-process workers split the
@@ -69,6 +85,8 @@ impl CylonContext {
             optimize: true,
             memory_budget: None,
             control,
+            tracing: false,
+            trace: TraceSink::disabled(),
         };
         ctx.comm.set_control(Some(ctx.control.clone()));
         ctx.comm.set_parallelism(ctx.parallelism);
@@ -97,6 +115,8 @@ impl CylonContext {
                     optimize: true,
                     memory_budget: None,
                     control,
+                    tracing: false,
+                    trace: TraceSink::disabled(),
                 }
             })
             .collect()
@@ -117,6 +137,8 @@ impl CylonContext {
             optimize: true,
             memory_budget: None,
             control,
+            tracing: false,
+            trace: TraceSink::disabled(),
         };
         ctx.comm.set_control(Some(ctx.control.clone()));
         ctx.comm.set_parallelism(ctx.parallelism);
@@ -220,11 +242,78 @@ impl CylonContext {
     /// Mint a fresh lifecycle token for the next query and install it
     /// into the transport stack, returning a clone for watchers. Use
     /// between queries on a long-lived context — cancellation latches,
-    /// so a used token never runs anything again.
+    /// so a used token never runs anything again. When tracing is on
+    /// ([`Self::set_tracing`]), a fresh [`TraceSink`] is minted too.
     pub fn new_query(&mut self) -> QueryControl {
         self.control = QueryControl::new(self.comm.rank());
         self.comm.set_control(Some(self.control.clone()));
+        self.trace = if self.tracing {
+            TraceSink::new(NEXT_QUERY_ID.fetch_add(1, Ordering::Relaxed), self.comm.rank())
+        } else {
+            TraceSink::disabled()
+        };
         self.control.clone()
+    }
+
+    /// Enable/disable span tracing for queries on this context
+    /// (default off). Observation-only: outputs are bit-identical with
+    /// tracing on or off at every thread count and world size — a
+    /// recording sink only costs memory for the spans it holds. Takes
+    /// effect immediately (a sink is minted/dropped here) and persists
+    /// across [`Self::new_query`].
+    pub fn set_tracing(&mut self, on: bool) {
+        self.tracing = on;
+        self.trace = if on {
+            TraceSink::new(NEXT_QUERY_ID.fetch_add(1, Ordering::Relaxed), self.comm.rank())
+        } else {
+            TraceSink::disabled()
+        };
+    }
+
+    /// Builder-style [`Self::set_tracing`].
+    pub fn with_tracing(mut self, on: bool) -> Self {
+        self.set_tracing(on);
+        self
+    }
+
+    /// Whether queries on this context record trace spans.
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing
+    }
+
+    /// The span sink for the query currently running on this context
+    /// (disabled unless [`Self::set_tracing`] turned tracing on). On
+    /// rank 0, after [`Self::gather_trace`], it also holds every
+    /// remote rank's spans — [`TraceSink::to_chrome_trace`] exports
+    /// the whole cluster's timeline.
+    pub fn trace(&self) -> &TraceSink {
+        &self.trace
+    }
+
+    /// Gather every rank's spans onto rank 0's sink — the query-end
+    /// trace collection behind EXPLAIN ANALYZE and the Chrome-trace
+    /// export. Best-effort by design: payloads are bounded
+    /// ([`crate::trace::TRACE_WIRE_LIMIT`]), send/receive failures
+    /// drop that rank's spans instead of failing the query, and the
+    /// exchange rides the reserved [`crate::net::TRACE_TAG`] so it
+    /// can never collide with operator collectives. SPMD-collective:
+    /// every rank must call it at the same point (rank 0 receives,
+    /// the rest send). No-op at world 1 or with tracing off.
+    pub fn gather_trace(&mut self) {
+        if !self.trace.enabled() || self.comm.world() == 1 {
+            return;
+        }
+        let payload = self.trace.encode_local();
+        let gathered = self.comm.gather_trace_bytes(&payload);
+        if self.comm.rank() == 0 {
+            // Slot 0 echoes this rank's own payload; its spans are
+            // already in the sink, so only remote slots are decoded.
+            for buf in gathered.into_iter().skip(1).flatten() {
+                if let Some(spans) = crate::trace::decode_spans(&buf) {
+                    self.trace.extend(spans);
+                }
+            }
+        }
     }
 
     /// Cooperative cancellation checkpoint, called at every plan-node
@@ -322,6 +411,24 @@ mod tests {
         // is that finalize succeeds instead of surfacing the latched
         // cancellation through the transport.
         ctx.finalize().unwrap();
+    }
+
+    #[test]
+    fn tracing_knob_mints_and_refreshes_sinks() {
+        let mut ctx = CylonContext::init_local();
+        assert!(!ctx.tracing_enabled());
+        assert!(!ctx.trace().enabled());
+        ctx.set_tracing(true);
+        assert!(ctx.tracing_enabled());
+        assert!(ctx.trace().enabled());
+        let first_id = ctx.trace().query_id();
+        ctx.new_query();
+        assert!(ctx.trace().enabled(), "tracing persists across queries");
+        assert!(ctx.trace().query_id() > first_id, "fresh sink per query");
+        ctx.set_tracing(false);
+        assert!(!ctx.trace().enabled());
+        // gather_trace is a no-op at world 1 / tracing off.
+        ctx.gather_trace();
     }
 
     #[test]

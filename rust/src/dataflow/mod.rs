@@ -277,6 +277,62 @@ impl Graph {
         Ok(execute_plan(&plan, ctx, sources, true)?.0)
     }
 
+    /// EXPLAIN ANALYZE: execute the optimized plan with tracing on,
+    /// gather every rank's spans onto rank 0, and render the plan
+    /// annotated per node with measured rows, wall time, max/min rank
+    /// skew, shuffle bytes, retries, and spills. SPMD-collective at
+    /// world > 1 — every rank must call it; ranks other than 0 get the
+    /// header with a pointer to rank 0's report. The gathered sink
+    /// stays on `ctx` afterwards, so [`CylonContext::trace`] +
+    /// [`crate::trace::TraceSink::to_chrome_trace`] export the same
+    /// run's timeline. Tracing is observation-only: the executed
+    /// outputs are bit-identical to [`Graph::execute_with`].
+    ///
+    /// ```
+    /// use rylon::dataflow::Graph;
+    /// use rylon::ops::join::JoinConfig;
+    /// # use rylon::io::generator::paper_table;
+    /// let mut g = Graph::new();
+    /// let a = g.source("a");
+    /// let b = g.source("b");
+    /// let j = g.join(a, b, JoinConfig::inner(0, 0));
+    /// g.sink(j);
+    /// let mut ctx = rylon::ctx::CylonContext::init_local();
+    /// let report = g
+    ///     .explain_analyze(&mut ctx, &[("a", paper_table(100, 0.9, 1)),
+    ///                                  ("b", paper_table(100, 0.9, 2))])
+    ///     .unwrap();
+    /// assert!(report.contains("== explain analyze"));
+    /// assert!(report.contains("join"));
+    /// ```
+    pub fn explain_analyze(
+        &self,
+        ctx: &mut CylonContext,
+        sources: &[(&str, Table)],
+    ) -> Result<String> {
+        if self.sinks.is_empty() {
+            return Err(Error::invalid("graph has no sinks"));
+        }
+        if !ctx.tracing_enabled() {
+            ctx.set_tracing(true);
+        }
+        let bound: HashMap<&str, &Table> = sources.iter().map(|(n, t)| (*n, t)).collect();
+        let plan = self.lower(&bound)?;
+        let (exec_plan, include_dead) = if ctx.optimize_enabled() {
+            let opt = optimize(&plan, ctx.world());
+            (opt.plan, opt.fell_back)
+        } else {
+            (plan, true)
+        };
+        let r = execute_plan(&exec_plan, ctx, sources, include_dead);
+        // Gather before propagating errors only on success: a failed
+        // query may have ranks stuck mid-superstep, and the gather is
+        // itself a collective.
+        r?;
+        ctx.gather_trace();
+        Ok(crate::trace::render_analysis(&exec_plan, ctx.world(), ctx.trace()))
+    }
+
     /// Render the plan before and after optimization for a
     /// `world`-rank execution (sources provide the bound schemas),
     /// with the applied-rule log and elided shuffles annotated.

@@ -118,10 +118,28 @@ pub struct OpStats {
 }
 
 impl OpStats {
-    /// Aggregate per-worker stats the way a BSP superstep finishes:
-    /// phase times are the **max** across workers (the straggler sets
-    /// the clock), while rows and bytes are summed and `used_kernel`
-    /// is OR-ed.
+    /// Aggregate per-worker stats the way a BSP superstep finishes —
+    /// the **straggler-clock merge**. The name says "max" but the
+    /// semantics are deliberately mixed per field class; they are
+    /// spelled out here (and pinned by the unit tests below) because
+    /// the mix is easy to get backwards — a sum where a max belongs
+    /// inflates a cluster figure by the world size:
+    ///
+    /// * **max** — wall-clock phase times (`partition_secs`,
+    ///   `comm_secs`, `local_secs`): ranks run each phase
+    ///   concurrently, so the cluster takes as long as its slowest
+    ///   rank. Also the **SPMD-identical gauges** (`shuffles`,
+    ///   `shuffles_elided`): every rank runs (or elides) the same
+    ///   collectives, so the values are equal on all ranks and max is
+    ///   just "pick one" with tolerance for a rank that died early.
+    /// * **sum** — additive per-rank observations (`comm_bytes`,
+    ///   `rows_in`, `rows_out`, and the four link-health counters):
+    ///   ranks see disjoint rows, bytes, and retries, so the cluster
+    ///   total is the sum.
+    /// * **or** — `used_kernel`.
+    ///
+    /// For a plain everything-summed total (cluster CPU-seconds, cost
+    /// accounting) use [`OpStats::bsp_sum`] instead.
     pub fn bsp_max(stats: &[OpStats]) -> OpStats {
         let mut agg = OpStats::default();
         for s in stats {
@@ -145,6 +163,51 @@ impl OpStats {
             agg.peer_failures += s.peer_failures;
         }
         agg
+    }
+
+    /// Plain per-rank total: **every** numeric field summed,
+    /// `used_kernel` OR-ed. Phase times become cluster CPU-seconds
+    /// (total work), not wall clock — compare [`OpStats::bsp_max`],
+    /// whose times are the straggler's wall clock. Summing the
+    /// SPMD-identical gauges multiplies them by the world size, which
+    /// is the point here: the result counts collective
+    /// *participations* (rank × superstep), not supersteps.
+    pub fn bsp_sum(stats: &[OpStats]) -> OpStats {
+        let mut agg = OpStats::default();
+        for s in stats {
+            agg.partition_secs += s.partition_secs;
+            agg.comm_secs += s.comm_secs;
+            agg.local_secs += s.local_secs;
+            agg.comm_bytes += s.comm_bytes;
+            agg.rows_in += s.rows_in;
+            agg.rows_out += s.rows_out;
+            agg.used_kernel |= s.used_kernel;
+            agg.shuffles += s.shuffles;
+            agg.shuffles_elided += s.shuffles_elided;
+            agg.frames_retried += s.frames_retried;
+            agg.frames_corrupt += s.frames_corrupt;
+            agg.acks_timed_out += s.acks_timed_out;
+            agg.peer_failures += s.peer_failures;
+        }
+        agg
+    }
+
+    /// Snapshot into the unified counter registry (durations stored as
+    /// integer nanoseconds so merges stay exact).
+    pub fn register(&self, reg: &mut crate::metrics::Registry, prefix: &str) {
+        reg.add_secs(&format!("{prefix}partition_ns"), self.partition_secs);
+        reg.add_secs(&format!("{prefix}comm_ns"), self.comm_secs);
+        reg.add_secs(&format!("{prefix}local_ns"), self.local_secs);
+        reg.add(&format!("{prefix}comm_bytes"), self.comm_bytes);
+        reg.add(&format!("{prefix}rows_in"), self.rows_in as u64);
+        reg.add(&format!("{prefix}rows_out"), self.rows_out as u64);
+        reg.add(&format!("{prefix}used_kernel"), self.used_kernel as u64);
+        reg.add(&format!("{prefix}shuffles"), self.shuffles as u64);
+        reg.add(&format!("{prefix}shuffles_elided"), self.shuffles_elided as u64);
+        reg.add(&format!("{prefix}frames_retried"), self.frames_retried);
+        reg.add(&format!("{prefix}frames_corrupt"), self.frames_corrupt);
+        reg.add(&format!("{prefix}acks_timed_out"), self.acks_timed_out);
+        reg.add(&format!("{prefix}peer_failures"), self.peer_failures);
     }
 
     /// Fold one shuffle's phases into this operator's totals
@@ -254,6 +317,65 @@ mod tests {
     #[test]
     fn bsp_max_of_empty_is_default() {
         assert_eq!(OpStats::bsp_max(&[]), OpStats::default());
+        assert_eq!(OpStats::bsp_sum(&[]), OpStats::default());
+    }
+
+    #[test]
+    fn bsp_sum_totals_every_field_where_bsp_max_mixes() {
+        // The two merges pinned side by side on the same input, field
+        // class by field class — see the bsp_max docs for the why.
+        let a = OpStats {
+            partition_secs: 1.0,
+            comm_secs: 0.5,
+            local_secs: 2.0,
+            comm_bytes: 10,
+            rows_in: 100,
+            rows_out: 40,
+            used_kernel: false,
+            shuffles: 2,
+            shuffles_elided: 1,
+            frames_retried: 3,
+            frames_corrupt: 1,
+            acks_timed_out: 2,
+            peer_failures: 0,
+        };
+        let b = OpStats { partition_secs: 0.25, comm_secs: 3.0, used_kernel: true, ..a };
+        let mx = OpStats::bsp_max(&[a, b]);
+        let sm = OpStats::bsp_sum(&[a, b]);
+        // wall-clock phase times: straggler vs total work
+        assert_eq!((mx.partition_secs, sm.partition_secs), (1.0, 1.25));
+        assert_eq!((mx.comm_secs, sm.comm_secs), (3.0, 3.5));
+        assert_eq!((mx.local_secs, sm.local_secs), (2.0, 4.0));
+        // SPMD-identical gauges: max picks one, sum counts rank×superstep
+        assert_eq!((mx.shuffles, sm.shuffles), (2, 4));
+        assert_eq!((mx.shuffles_elided, sm.shuffles_elided), (1, 2));
+        // additive observations: summed by both merges
+        for m in [&mx, &sm] {
+            assert_eq!(m.comm_bytes, 20);
+            assert_eq!(m.rows_in, 200);
+            assert_eq!(m.rows_out, 80);
+            assert_eq!(m.frames_retried, 6);
+            assert!(m.used_kernel);
+        }
+    }
+
+    #[test]
+    fn opstats_register_snapshots_into_registry() {
+        let s = OpStats {
+            partition_secs: 0.5,
+            comm_bytes: 42,
+            rows_out: 7,
+            shuffles: 2,
+            used_kernel: true,
+            ..OpStats::default()
+        };
+        let mut reg = crate::metrics::Registry::new();
+        s.register(&mut reg, "join.");
+        assert_eq!(reg.get("join.partition_ns"), 500_000_000);
+        assert_eq!(reg.get("join.comm_bytes"), 42);
+        assert_eq!(reg.get("join.rows_out"), 7);
+        assert_eq!(reg.get("join.shuffles"), 2);
+        assert_eq!(reg.get("join.used_kernel"), 1);
     }
 
     #[test]

@@ -76,10 +76,12 @@ pub fn dist_join_partitioned(
     // lifecycle token (the shuffles above poll around their own
     // phases; elided shuffles skip those, so this is not redundant).
     ctx.checkpoint("join:local")?;
+    let mut span = crate::trace::span(crate::trace::SpanKind::Superstep, "join:local");
     let t0 = Instant::now();
     let out = join_par(&lshuf, &rshuf, cfg, ctx.parallelism())?;
     stats.local_secs = t0.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
+    span.add("rows_out", stats.rows_out as u64);
     Ok((out, stats))
 }
 
@@ -119,10 +121,14 @@ fn dist_setop(
     stats.absorb(&bstats);
     // Superstep boundary before the local phase (see dist_join).
     ctx.checkpoint(&format!("{what}:local"))?;
+    let mut span = crate::trace::span_with(crate::trace::SpanKind::Superstep, || {
+        format!("{what}:local")
+    });
     let t0 = Instant::now();
     let out = op(&ashuf, &bshuf, ctx.parallelism())?;
     stats.local_secs = t0.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
+    span.add("rows_out", stats.rows_out as u64);
     Ok((out, stats))
 }
 
@@ -222,9 +228,14 @@ pub fn dist_group_by_partitioned(
 ) -> Result<(Table, OpStats)> {
     let mut stats = OpStats { rows_in: t.num_rows(), ..OpStats::default() };
     ctx.checkpoint("group_by:partial")?;
+    let mut partial_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "group_by:partial");
     let t0 = Instant::now();
     let partial = group_by_partial_par(t, key_col, aggs, ctx.parallelism())?;
     let mut local_secs = t0.elapsed().as_secs_f64();
+    partial_span.add("rows_in", t.num_rows() as u64);
+    partial_span.add("partial_rows", partial.num_rows() as u64);
+    drop(partial_span);
     // The partial table's key is column 0 by construction.
     let (shuffled, sstats) = if input_partitioned {
         let rows = partial.num_rows();
@@ -234,12 +245,15 @@ pub fn dist_group_by_partitioned(
     };
     stats.absorb(&sstats);
     ctx.checkpoint("group_by:merge")?;
+    let mut merge_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "group_by:merge");
     let funcs: Vec<AggFn> = aggs.iter().map(|s| s.func).collect();
     let t1 = Instant::now();
     let out = merge_partials_par(&shuffled, &funcs, ctx.parallelism())?;
     local_secs += t1.elapsed().as_secs_f64();
     stats.local_secs = local_secs;
     stats.rows_out = out.num_rows();
+    merge_span.add("rows_out", stats.rows_out as u64);
     Ok((out, stats))
 }
 

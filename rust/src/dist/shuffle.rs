@@ -112,6 +112,8 @@ fn shuffle_with(
     // Partition phase: ids, then one take per column per part, both
     // morsel-parallel on the worker's thread budget (routing itself is
     // thread-count independent — see `crate::ops::parallel`).
+    let mut part_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "shuffle:partition");
     let t0 = Instant::now();
     let ids: Vec<u32> = match routing {
         Routing::Key(col) => {
@@ -136,6 +138,9 @@ fn shuffle_with(
     };
     let parts = partition_by_ids_par(t, &ids, world, threads)?;
     stats.partition_secs = t0.elapsed().as_secs_f64();
+    part_span.add("rows", stats.rows_in as u64);
+    part_span.add("used_kernel", stats.used_kernel as u64);
+    drop(part_span);
 
     // Boundary between the local superstep and the comm superstep.
     ctx.checkpoint("shuffle:alltoall")?;
@@ -144,6 +149,8 @@ fn shuffle_with(
     // incoming wire buffers decode straight into one pre-sized output
     // table, and the rank's own partition loops back unserialized
     // (see `crate::net::Communicator::shuffle_tables`).
+    let mut comm_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "shuffle:alltoall");
     let t1 = Instant::now();
     let comm = ctx.communicator();
     let bytes_before = comm.comm_bytes();
@@ -157,6 +164,9 @@ fn shuffle_with(
     stats.peer_failures = health.peer_failures;
     stats.comm_secs = t1.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
+    comm_span.add("bytes", stats.comm_bytes);
+    comm_span.add("rows_out", stats.rows_out as u64);
+    comm_span.add("retried", stats.frames_retried);
     Ok((out, stats))
 }
 

@@ -76,6 +76,8 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
 
     // 1. Local sample of the key column (as a single-column table so
     //    the wire format carries any key type).
+    let mut sample_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "sort:sample");
     let t0 = Instant::now();
     let key_only = project(t, &[col])?;
     let n = t.num_rows();
@@ -132,18 +134,28 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     };
     let parts = partition_by_ids_par(t, &ids, world, threads)?;
     partition_secs += t2.elapsed().as_secs_f64();
+    sample_span.add("rows", n as u64);
+    sample_span.add("splitters", nsplit as u64);
+    drop(sample_span);
 
     // Superstep boundary between range partitioning and the AllToAll.
     ctx.checkpoint("sort:alltoall")?;
 
     // 4. Shuffle ranges into place (concat-on-decode: incoming parts
     //    decode straight into one table) and sort locally.
+    let mut shuffle_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "sort:alltoall");
     let t3 = Instant::now();
     let comm = ctx.communicator();
     let merged = comm.shuffle_tables(parts)?;
     stats.comm_bytes = comm.comm_bytes() - bytes_before;
     comm_secs += t3.elapsed().as_secs_f64();
+    shuffle_span.add("bytes", stats.comm_bytes);
+    shuffle_span.add("rows_out", merged.num_rows() as u64);
+    drop(shuffle_span);
 
+    let mut local_span =
+        crate::trace::span(crate::trace::SpanKind::Superstep, "sort:local");
     let t4 = Instant::now();
     let out = sort_par(&merged, col, threads)?;
     stats.local_secs = t4.elapsed().as_secs_f64();
@@ -151,6 +163,7 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     stats.comm_secs = comm_secs;
     stats.rows_out = out.num_rows();
     stats.shuffles = 1; // the range AllToAll (the sample AllGather is not a shuffle)
+    local_span.add("rows_out", stats.rows_out as u64);
     Ok((out, stats))
 }
 

@@ -166,6 +166,8 @@ pub fn external_join_canonical(
         return Ok((join_par_pinned(left, right, cfg, threads, build_left, p.max(1))?, 0));
     }
     let batch_rows = batch_rows.max(1);
+    let mut span = crate::trace::span(crate::trace::SpanKind::Spill, "external:join");
+    span.add("partitions", p as u64);
     let (build_t, build_col, probe_t, probe_col) = if build_left {
         (left, cfg.left_col, right, cfg.right_col)
     } else {
@@ -184,6 +186,7 @@ pub fn external_join_canonical(
     let mut spilled = 0u64;
     let bpaths = spill_rows_in_order(&mut dir, build_t, &bparts, batch_rows, threads, &mut spilled)?;
     let ppaths = spill_rows_in_order(&mut dir, probe_t, &pparts, batch_rows, threads, &mut spilled)?;
+    span.add("spill_bytes", spilled);
 
     // One partition pair in memory at a time; matches partition-major.
     let mut outs: Vec<Table> = Vec::new();

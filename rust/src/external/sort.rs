@@ -116,6 +116,7 @@ fn external_sort_streaming_core(
     mut emit: impl FnMut(Table) -> Result<()>,
 ) -> Result<usize> {
     let batch_rows = batch_rows.max(1);
+    let mut span = crate::trace::span(crate::trace::SpanKind::Spill, "external:sort");
     let mut dir = SpillDir::new("xsort")?;
 
     // Phase 1: sorted runs.
@@ -137,6 +138,8 @@ fn external_sort_streaming_core(
         run_paths.push(w.finish()?);
         start = end;
     }
+    span.add("runs", run_paths.len() as u64);
+    span.add("spill_bytes", *spilled);
     if run_paths.is_empty() {
         return Ok(0);
     }

@@ -36,12 +36,15 @@ impl SpillWriter {
     /// the shuffle wire path does). Bytes on disk are identical at
     /// every `threads` value.
     pub fn write_par(&mut self, t: &Table, threads: usize) -> Result<()> {
+        let mut span = crate::trace::span(crate::trace::SpanKind::Spill, "spill:write");
         let bytes = serialize_table_par(t, threads);
         self.out.write_all(&(bytes.len() as u64).to_le_bytes())?;
         self.out.write_all(&bytes)?;
         self.batches += 1;
         self.rows += t.num_rows();
         self.bytes += 8 + bytes.len() as u64;
+        span.add("rows", t.num_rows() as u64);
+        span.add("bytes", 8 + bytes.len() as u64);
         Ok(())
     }
 
@@ -104,6 +107,7 @@ impl SpillReader {
 
     /// Next batch, or `None` at end of file.
     pub fn next_batch(&mut self) -> Result<Option<Table>> {
+        let mut span = crate::trace::span(crate::trace::SpanKind::Spill, "spill:read");
         let mut len_buf = [0u8; 8];
         match self.input.read_exact(&mut len_buf) {
             Ok(()) => {}
@@ -120,6 +124,7 @@ impl SpillReader {
             0 => parallelism(),
             n => n,
         };
+        span.add("bytes", 8 + len as u64);
         deserialize_table_par(&self.buf, threads).map(Some)
     }
 

@@ -52,6 +52,7 @@ pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod table;
+pub mod trace;
 
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
@@ -66,4 +67,5 @@ pub mod prelude {
     pub use crate::ops::join::{JoinAlgorithm, JoinConfig, JoinType};
     pub use crate::plan::{ExecStats, Partitioning};
     pub use crate::table::{Array, DataType, Field, Schema, Table};
+    pub use crate::trace::{SpanKind, TraceSink};
 }

@@ -108,11 +108,15 @@ fn load_runtime(enabled: bool) -> Option<Arc<KernelRuntime>> {
     }
     match KernelRuntime::load_default() {
         Ok(rt) => {
-            eprintln!("[rylon] AOT kernel runtime loaded (blocks: {:?})", rt.block_sizes());
+            rylon::trace::log!(
+                Info,
+                "[rylon] AOT kernel runtime loaded (blocks: {:?})",
+                rt.block_sizes()
+            );
             Some(Arc::new(rt))
         }
         Err(e) => {
-            eprintln!("[rylon] AOT runtime unavailable ({e}); using native hash path");
+            rylon::trace::log!(Warn, "[rylon] AOT runtime unavailable ({e}); using native hash path");
             None
         }
     }

@@ -1,6 +1,77 @@
-//! Metrics: timers and report emitters used by the bench harness.
+//! Metrics: timers, report emitters used by the bench harness, and
+//! the unified named-counter [`Registry`] that the hand-carried stats
+//! structs (`ExecStats` / `OpStats` / `ShuffleStats` / `LinkHealth` /
+//! lifecycle counters) snapshot into — one namespace instead of four
+//! parallel structs, and the footer of every EXPLAIN ANALYZE report.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// A flat, ordered set of named `u64` counters. Each stats struct in
+/// the crate exposes `register(&self, reg, prefix)` so that its fields
+/// become `prefix.field` entries here; durations register as integer
+/// nanoseconds (`*_ns`). Deterministic iteration (BTreeMap) keeps
+/// rendered output stable.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Accumulate `v` onto the named counter (creating it at 0).
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Overwrite the named counter.
+    pub fn set(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    /// Current value (0 when absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    /// Fold another registry in (counter-wise sum).
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Register seconds as integer nanoseconds under `name` (the
+    /// registry is integer-only so merges stay exact).
+    pub fn add_secs(&mut self, name: &str, secs: f64) {
+        self.add(name, (secs.max(0.0) * 1e9) as u64);
+    }
+
+    /// Aligned `name  value` rendering, one counter per line.
+    pub fn render(&self) -> String {
+        let width = self.counters.keys().map(|k| k.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<width$}  {v}\n"));
+        }
+        out
+    }
+}
 
 /// A simple wall-clock timer.
 pub struct Timer {
@@ -360,6 +431,34 @@ mod tests {
         assert!(append_bench_json(&path, &[rec("join")]).is_err());
         assert!(std::fs::read_to_string(&path).unwrap().contains("something"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn registry_accumulates_and_renders() {
+        let mut r = Registry::new();
+        r.add("exec.rows_out", 10);
+        r.add("exec.rows_out", 5);
+        r.set("exec.peak_rows", 7);
+        r.add_secs("shuffle.comm_ns", 0.5);
+        assert_eq!(r.get("exec.rows_out"), 15);
+        assert_eq!(r.get("exec.peak_rows"), 7);
+        assert_eq!(r.get("shuffle.comm_ns"), 500_000_000);
+        assert_eq!(r.get("missing"), 0);
+        let mut other = Registry::new();
+        other.add("exec.rows_out", 1);
+        other.add("link.frames_retried", 2);
+        r.merge(&other);
+        assert_eq!(r.get("exec.rows_out"), 16);
+        assert_eq!(r.get("link.frames_retried"), 2);
+        let text = r.render();
+        assert!(text.contains("exec.rows_out"));
+        // BTreeMap ⇒ deterministic order.
+        let keys: Vec<&str> = r.iter().map(|(k, _)| k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+        assert_eq!(r.len(), 4);
+        assert!(!r.is_empty());
     }
 
     #[test]

@@ -9,7 +9,7 @@ use super::model::NetworkModel;
 use super::serialize::{
     concat_decode_parts, deserialize_table_par, serialize_table_par, WirePart,
 };
-use super::{CommConfig, LinkHealth, Transport, CANCEL_TAG};
+use super::{CommConfig, LinkHealth, Transport, CANCEL_TAG, TRACE_TAG};
 use crate::error::{Error, Result};
 use crate::lifecycle::QueryControl;
 use crate::table::Table;
@@ -118,6 +118,40 @@ impl Communicator {
             if dst != rank {
                 let _ = self.transport.send(dst, CANCEL_TAG, Vec::new());
             }
+        }
+    }
+
+    /// Best-effort query-end trace gather on [`TRACE_TAG`]: every rank
+    /// sends its encoded spans to rank 0; rank 0 returns one slot per
+    /// rank (its own payload in slot 0). Unlike the collectives this
+    /// never fails — a rank whose payload can't be received yields
+    /// `None` and the query result is unaffected (tracing is
+    /// observation-only, so losing spans must never fail a query that
+    /// succeeded). Payload size is bounded by the sender
+    /// ([`crate::trace::TRACE_WIRE_LIMIT`]); non-root ranks get a vec
+    /// of empty slots back.
+    pub fn gather_trace_bytes(&mut self, payload: &[u8]) -> Vec<Option<Vec<u8>>> {
+        let (rank, world) = (self.rank(), self.world());
+        if world == 1 {
+            return vec![Some(payload.to_vec())];
+        }
+        if rank == 0 {
+            let mut out: Vec<Option<Vec<u8>>> = (0..world).map(|_| None).collect();
+            out[0] = Some(payload.to_vec());
+            for src in 1..world {
+                match self.transport.recv(src, TRACE_TAG) {
+                    Ok(b) => {
+                        self.model.charge(b.len());
+                        out[src] = Some(b);
+                    }
+                    Err(_) => {} // rank lost or cancelled: spans dropped
+                }
+            }
+            out
+        } else {
+            let _ = self.transport.send(0, TRACE_TAG, payload.to_vec());
+            let _ = self.transport.flush();
+            (0..world).map(|_| None).collect()
         }
     }
 
@@ -514,6 +548,23 @@ mod tests {
             true
         });
         assert!(out.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn trace_gather_collects_at_rank_zero() {
+        let out = run_world(3, |mut c| {
+            let payload = vec![c.rank() as u8; c.rank() + 1];
+            c.gather_trace_bytes(&payload)
+        });
+        assert_eq!(
+            out[0],
+            vec![Some(vec![0]), Some(vec![1, 1]), Some(vec![2, 2, 2])]
+        );
+        assert!(out[1].iter().all(|s| s.is_none()));
+        assert!(out[2].iter().all(|s| s.is_none()));
+        // World 1: own payload comes straight back.
+        let solo = run_world(1, |mut c| c.gather_trace_bytes(&[7, 7]));
+        assert_eq!(solo[0], vec![Some(vec![7, 7])]);
     }
 
     #[test]

@@ -191,6 +191,15 @@ use std::time::Duration;
 /// below it.
 pub const CANCEL_TAG: u64 = u64::MAX - 2;
 
+/// Reserved tag for the best-effort query-end trace gather
+/// ([`Communicator::gather_trace_bytes`]): non-zero ranks send their
+/// encoded spans to rank 0 on it. Like [`CANCEL_TAG`] it sits in the
+/// reserved band above all user tags, so trace payloads can never
+/// collide with operator collectives (whose generation-counted tags
+/// stay far below). User tags must stay below [`CANCEL_TAG`], which
+/// keeps them below this too.
+pub const TRACE_TAG: u64 = u64::MAX - 3;
+
 /// Per-communicator reliability counters, exposed through
 /// [`Transport::health`] and surfaced on shuffle/exec/bench stats.
 /// Transports without a reliability layer report zeros.
@@ -215,6 +224,14 @@ impl LinkHealth {
             acks_timed_out: self.acks_timed_out - earlier.acks_timed_out,
             peer_failures: self.peer_failures - earlier.peer_failures,
         }
+    }
+
+    /// Snapshot into the unified counter registry as `link.*` entries.
+    pub fn register(&self, reg: &mut crate::metrics::Registry, prefix: &str) {
+        reg.add(&format!("{prefix}link.frames_retried"), self.frames_retried);
+        reg.add(&format!("{prefix}link.frames_corrupt"), self.frames_corrupt);
+        reg.add(&format!("{prefix}link.acks_timed_out"), self.acks_timed_out);
+        reg.add(&format!("{prefix}link.peer_failures"), self.peer_failures);
     }
 }
 

@@ -459,6 +459,41 @@ impl ReliableTransport {
         }
     }
 
+    /// The blocking receive loop behind [`Transport::recv`], split out
+    /// so the trait method can bracket it with a Retry trace span.
+    fn recv_inner(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        let deadline = Instant::now() + self.recv_timeout;
+        loop {
+            // Ready data beats a dead peer: frames that arrived before
+            // the peer failed are still valid.
+            if let Some(q) = self.ready.get_mut(&(src, tag)) {
+                if let Some(p) = q.pop_front() {
+                    return Ok(p);
+                }
+            }
+            self.check_lifecycle()?;
+            if self.dead[src] {
+                return Err(self.dead_peer_error(src, Some(tag)));
+            }
+            let now = Instant::now();
+            let remaining = match deadline.checked_duration_since(now) {
+                Some(r) if !r.is_zero() => r,
+                _ => {
+                    return Err(Error::comm_failure(
+                        CommFailure::fatal(format!(
+                            "timeout after {:?} waiting for a frame",
+                            self.recv_timeout
+                        ))
+                        .at_rank(self.inner.rank())
+                        .with_peer(src)
+                        .with_tag(tag),
+                    ))
+                }
+            };
+            self.service(remaining.min(self.cfg.poll))?;
+        }
+    }
+
     fn pop_any_ready(&mut self) -> Option<(usize, u64, Vec<u8>)> {
         let key = self
             .ready
@@ -520,36 +555,18 @@ impl Transport for ReliableTransport {
     }
 
     fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
-        let deadline = Instant::now() + self.recv_timeout;
-        loop {
-            // Ready data beats a dead peer: frames that arrived before
-            // the peer failed are still valid.
-            if let Some(q) = self.ready.get_mut(&(src, tag)) {
-                if let Some(p) = q.pop_front() {
-                    return Ok(p);
-                }
-            }
-            self.check_lifecycle()?;
-            if self.dead[src] {
-                return Err(self.dead_peer_error(src, Some(tag)));
-            }
-            let now = Instant::now();
-            let remaining = match deadline.checked_duration_since(now) {
-                Some(r) if !r.is_zero() => r,
-                _ => {
-                    return Err(Error::comm_failure(
-                        CommFailure::fatal(format!(
-                            "timeout after {:?} waiting for a frame",
-                            self.recv_timeout
-                        ))
-                        .at_rank(self.inner.rank())
-                        .with_peer(src)
-                        .with_tag(tag),
-                    ))
-                }
-            };
-            self.service(remaining.min(self.cfg.poll))?;
+        // One Retry span per blocking receive; the health-counter delta
+        // attributes retransmits/timeouts to the wait that absorbed
+        // them. Snapshot only when a sink is installed.
+        let mut span = crate::trace::span(crate::trace::SpanKind::Retry, "ack:recv");
+        let before = span.active().then(|| self.health);
+        let out = self.recv_inner(src, tag);
+        if let Some(h0) = before {
+            let d = self.health.since(&h0);
+            span.add("frames_retried", d.frames_retried);
+            span.add("acks_timed_out", d.acks_timed_out);
         }
+        out
     }
 
     fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
@@ -576,15 +593,27 @@ impl Transport for ReliableTransport {
     /// this before returning so a rank never exits a superstep leaving
     /// undelivered frames behind.
     fn flush(&mut self) -> Result<()> {
-        loop {
+        let mut span = crate::trace::span(crate::trace::SpanKind::Retry, "ack:flush");
+        let before = span.active().then(|| self.health);
+        let out = loop {
             let dead = &self.dead;
             self.unacked.retain(|&(dst, _), win| !win.is_empty() && !dead[dst]);
             if self.unacked.is_empty() {
-                return Ok(());
+                break Ok(());
             }
-            self.check_lifecycle()?;
-            self.service(self.cfg.poll)?;
+            if let Err(e) = self.check_lifecycle() {
+                break Err(e);
+            }
+            if let Err(e) = self.service(self.cfg.poll) {
+                break Err(e);
+            }
+        };
+        if let Some(h0) = before {
+            let d = self.health.since(&h0);
+            span.add("frames_retried", d.frames_retried);
+            span.add("acks_timed_out", d.acks_timed_out);
         }
+        out
     }
 
     fn health(&self) -> LinkHealth {

@@ -321,6 +321,7 @@ pub fn serialize_table(t: &Table) -> Vec<u8> {
 /// small-input threshold, with no per-column scratch buffer. Output
 /// bytes are identical at every `threads` value.
 pub fn serialize_table_par(t: &Table, threads: usize) -> Vec<u8> {
+    let mut span = crate::trace::span(crate::trace::SpanKind::Wire, "wire:ser");
     let nrows = t.num_rows();
     let fields = t.schema().fields();
     let cols = t.columns();
@@ -351,6 +352,8 @@ pub fn serialize_table_par(t: &Table, threads: usize) -> Vec<u8> {
         write_column_into(&mut w, &fields[c], cols[c].as_ref(), nrows);
         debug_assert_eq!(w.pos, region.len(), "column_wire_size must be exact");
     });
+    span.add("rows", nrows as u64);
+    span.add("bytes", total as u64);
     buf
 }
 
@@ -527,7 +530,10 @@ pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
 /// is bit-identical at every `threads` value (each column is a pure
 /// function of its own block bytes).
 pub fn deserialize_table_par(buf: &[u8], threads: usize) -> Result<Table> {
+    let mut span = crate::trace::span(crate::trace::SpanKind::Wire, "wire:de");
+    span.add("bytes", buf.len() as u64);
     let h = parse_header(buf)?;
+    span.add("rows", h.nrows as u64);
     let ncols = h.blocks.len();
     let threads = if h.nrows < PAR_MIN_ROWS { 1 } else { threads };
     let decoded = map_tasks(ncols, threads, |c| {
@@ -761,6 +767,9 @@ fn assemble_column(metas: &[PartMeta<'_>], c: usize, total_rows: usize) -> Resul
 /// agree on column count and types (names may differ; the first part's
 /// names win), and zero parts is an error.
 pub fn concat_decode_parts(parts: &[WirePart<'_>], threads: usize) -> Result<Table> {
+    let mut span =
+        crate::trace::span(crate::trace::SpanKind::Wire, "wire:concat_de");
+    span.add("parts", parts.len() as u64);
     if parts.is_empty() {
         return Err(Error::invalid("concat of zero parts"));
     }
@@ -779,6 +788,17 @@ pub fn concat_decode_parts(parts: &[WirePart<'_>], threads: usize) -> Result<Tab
         return Err(Error::schema("concat of schema-incompatible tables"));
     }
     let total_rows: usize = metas.iter().map(|m| m.nrows()).sum();
+    span.add("rows", total_rows as u64);
+    span.add(
+        "bytes",
+        metas
+            .iter()
+            .map(|m| match m {
+                PartMeta::Table(_) => 0u64, // loopback part: never on the wire
+                PartMeta::Wire { buf, .. } => buf.len() as u64,
+            })
+            .sum(),
+    );
     let threads = if total_rows < PAR_MIN_ROWS { 1 } else { threads };
     let assembled = map_tasks(ncols, threads, |c| assemble_column(&metas, c, total_rows));
     let mut fields = Vec::with_capacity(ncols);

@@ -152,8 +152,20 @@ where
             return GridOutcome::Stopped(e);
         }
     }
+    // One span per grid — NOT per morsel (a grid can run thousands of
+    // tasks; per-task spans would blow the span cap and the timing
+    // overhead would no longer be "one branch per site"). Per-worker
+    // busy time rides along as `w<i>_busy_ns` counters, which the
+    // Chrome exporter expands into per-worker timeline lanes. All
+    // measurement is gated on `traced`, so a disabled sink costs the
+    // TLS check in `span()` and nothing per task.
+    let mut span = crate::trace::span(crate::trace::SpanKind::Grid, "grid");
+    let traced = span.active();
+    span.add("tasks", n as u64);
     let threads = threads.max(1).min(n);
+    span.add("threads", threads.max(1) as u64);
     if threads <= 1 {
+        let grid_t0 = std::time::Instant::now();
         let mut out = Vec::with_capacity(n);
         for i in 0..n {
             if let Some(c) = ctl {
@@ -174,6 +186,9 @@ where
                 }
             }
         }
+        if traced {
+            span.add("w0_busy_ns", grid_t0.elapsed().as_nanos() as u64);
+        }
         return GridOutcome::Done(out);
     }
     let next = AtomicUsize::new(0);
@@ -186,6 +201,7 @@ where
             handles.push(s.spawn(move || {
                 let mut local: Vec<(usize, std::result::Result<T, TaskFailure>)> =
                     Vec::new();
+                let mut busy_ns = 0u64;
                 loop {
                     if stop.load(Ordering::Relaxed)
                         || ctl.is_some_and(|c| c.stop_requested())
@@ -196,6 +212,7 @@ where
                     if i >= n {
                         break;
                     }
+                    let task_t0 = traced.then(std::time::Instant::now);
                     match catch_unwind(AssertUnwindSafe(|| f(i))) {
                         Ok(Ok(v)) => local.push((i, Ok(v))),
                         Ok(Err(e)) => {
@@ -210,14 +227,22 @@ where
                             local.push((i, Err(TaskFailure::Panicked(panic_msg(p)))));
                         }
                     }
+                    if let Some(t0) = task_t0 {
+                        busy_ns += t0.elapsed().as_nanos() as u64;
+                    }
                 }
-                local
+                (local, busy_ns)
             }));
         }
         let mut parts = Vec::with_capacity(threads);
-        for h in handles {
+        for (w, h) in handles.into_iter().enumerate() {
             match h.join() {
-                Ok(part) => parts.push(part),
+                Ok((part, busy_ns)) => {
+                    if traced {
+                        span.add(&format!("w{w}_busy_ns"), busy_ns);
+                    }
+                    parts.push(part);
+                }
                 // Worker bodies catch every unwind, so this arm is
                 // close to unreachable — but if a worker still died,
                 // record it instead of re-panicking (a panic here
@@ -729,6 +754,31 @@ mod tests {
         // Odd run count: the unpaired tail run survives the pass intact.
         let runs = vec![vec![1u8, 9], vec![2, 3], vec![0, 5]];
         assert_eq!(merge_runs(runs, 2, |a, b| a <= b), vec![0, 1, 2, 3, 5, 9]);
+    }
+
+    #[test]
+    fn traced_grid_emits_one_span_with_worker_busy_counters() {
+        use crate::trace::{with_sink, SpanKind, TraceSink};
+        let sink = TraceSink::new(1, 0);
+        let got = with_sink(&sink, || map_tasks(20, 3, |i| i * 2));
+        assert_eq!(got, map_tasks(20, 3, |i| i * 2), "tracing must not change results");
+        let spans = sink.spans();
+        let grids: Vec<_> =
+            spans.iter().filter(|s| s.kind == SpanKind::Grid).collect();
+        assert_eq!(grids.len(), 1, "one span per grid, not per task");
+        let g = grids[0];
+        assert_eq!(g.counter("tasks"), Some(20));
+        assert_eq!(g.counter("threads"), Some(3));
+        assert!(
+            (0..3).any(|w| g.counter(&format!("w{w}_busy_ns")).is_some()),
+            "at least one worker busy counter: {:?}",
+            g.counters
+        );
+        // Disabled sink: nothing recorded, same results.
+        let off = TraceSink::disabled();
+        let got_off = with_sink(&off, || map_tasks(20, 3, |i| i * 2));
+        assert_eq!(got_off, got);
+        assert_eq!(off.span_count(), 0);
     }
 
     #[test]

@@ -103,6 +103,36 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
+    /// Snapshot into the unified counter registry (see
+    /// [`crate::metrics::Registry`]): additive fields accumulate, the
+    /// peak high-water marks keep their max across executions.
+    pub fn register(&self, reg: &mut crate::metrics::Registry, prefix: &str) {
+        reg.add(&format!("{prefix}nodes_executed"), self.nodes_executed as u64);
+        reg.add(&format!("{prefix}nodes_streamed"), self.nodes_streamed as u64);
+        reg.add(&format!("{prefix}shuffles"), self.shuffles as u64);
+        reg.add(&format!("{prefix}shuffles_elided"), self.shuffles_elided as u64);
+        reg.add(&format!("{prefix}comm_bytes"), self.comm_bytes);
+        reg.add(
+            &format!("{prefix}intermediates_dropped"),
+            self.intermediates_dropped as u64,
+        );
+        for (key, v) in [
+            (format!("{prefix}peak_rows"), self.peak_rows as u64),
+            (format!("{prefix}peak_bytes"), self.peak_bytes),
+        ] {
+            reg.set(&key, reg.get(&key).max(v));
+        }
+        reg.add(&format!("{prefix}spills"), self.spills as u64);
+        reg.add(&format!("{prefix}spill_bytes"), self.spill_bytes);
+        reg.add(&format!("{prefix}frames_retried"), self.frames_retried);
+        reg.add(&format!("{prefix}frames_corrupt"), self.frames_corrupt);
+        reg.add(&format!("{prefix}acks_timed_out"), self.acks_timed_out);
+        reg.add(&format!("{prefix}peer_failures"), self.peer_failures);
+        reg.add(&format!("{prefix}cancels"), self.cancels);
+        reg.add(&format!("{prefix}deadline_exceeded"), self.deadline_exceeded);
+        reg.add(&format!("{prefix}worker_panics"), self.worker_panics);
+    }
+
     fn absorb(&mut self, s: &OpStats) {
         self.shuffles += s.shuffles;
         self.shuffles_elided += s.shuffles_elided;
@@ -203,11 +233,35 @@ pub fn execute_plan(
     // Install the context's token as the ambient control for the
     // duration of the plan, so the morsel fan-outs inside operators
     // poll it even when the caller is not a coordinator worker (which
-    // installs it around the whole job).
+    // installs it around the whole job). The trace sink installs the
+    // same way (both are cheap Arc clones; a disabled sink makes the
+    // install a no-op), bracketed by one Query root span every other
+    // span of this execution nests under.
     let ctl = ctx.control().clone();
+    let sink = ctx.trace().clone();
     let r = crate::lifecycle::with_control(&ctl, || {
-        execute_plan_inner(plan, ctx, sources, include_dead)
+        crate::trace::with_sink(&sink, || {
+            let mut qspan = crate::trace::span(crate::trace::SpanKind::Query, "query");
+            let r = execute_plan_inner(plan, ctx, sources, include_dead);
+            if let Ok((_, stats)) = &r {
+                qspan.add("nodes", stats.nodes_executed as u64);
+            }
+            r
+        })
     });
+    // Query end: fold this execution's stats (and the transport's
+    // cumulative link health) into the sink's unified counter registry,
+    // so ExecStats render as one named-counter snapshot next to every
+    // other layer's counters.
+    if sink.enabled() {
+        if let Ok((_, stats)) = &r {
+            let health = ctx.communicator().link_health();
+            sink.with_registry(|reg| {
+                stats.register(reg, "exec.");
+                health.register(reg, "");
+            });
+        }
+    }
     if r.is_err() {
         // Whatever killed the query (explicit cancel, deadline, a
         // contained worker panic that latched the token), tell the
@@ -293,6 +347,18 @@ fn execute_plan_inner(
         // (and, inside a node, within one morsel — the fan-outs poll
         // the ambient token too).
         ctx.checkpoint(op_name(&node.op))?;
+        // One Plan span per executed node, labeled `#<id> <op>` so the
+        // explain-analyze renderer can key spans back to plan nodes. A
+        // breaker's span covers its fused input chains too (they run
+        // inside its input materialization); counters are deltas of the
+        // running totals, attributing shuffle bytes / retries / spills
+        // to the node that caused them.
+        let mut nspan = crate::trace::span_with(crate::trace::SpanKind::Plan, || {
+            format!("#{i} {}", op_name(&node.op))
+        });
+        let span_base = nspan.active().then(|| {
+            (stats.comm_bytes, stats.frames_retried, stats.spills, stats.spill_bytes)
+        });
         // Materialize inputs, pulling any streamed chain hanging below.
         let mut inputs: Vec<Arc<Table>> = Vec::with_capacity(node.inputs.len());
         let mut transient_rows = 0usize;
@@ -316,7 +382,26 @@ fn execute_plan_inner(
             let base = results[cur]
                 .clone()
                 .ok_or_else(|| Error::internal("plan dependency not computed"))?;
+            // Streamed nodes still get exactly one Plan span each —
+            // nested guards covering the chain's execution window,
+            // marked `fused` (their tables never materialize, so the
+            // window is the whole fused pass, not a per-node slice).
+            let mut chain_spans: Vec<crate::trace::SpanGuard> = chain
+                .iter()
+                .map(|&id| {
+                    crate::trace::span_with(crate::trace::SpanKind::Plan, || {
+                        format!("#{id} {}", op_name(&plan.nodes[id].op))
+                    })
+                })
+                .collect();
             let (out, counts) = run_chain(plan, &chain, &base, threads)?;
+            for (g, &c) in chain_spans.iter_mut().zip(&counts) {
+                g.add("rows_out", c as u64);
+                g.add("fused", 1);
+            }
+            while let Some(g) = chain_spans.pop() {
+                drop(g); // LIFO: restore span parents innermost-first
+            }
             for (&id, &c) in chain.iter().zip(&counts) {
                 row_counts[id] = c;
             }
@@ -503,6 +588,14 @@ fn execute_plan_inner(
         live_bytes += node_bytes[i];
         results[i] = Some(Arc::new(value));
         stats.nodes_executed += 1;
+        if let Some((cb, fr, sp, sb)) = span_base {
+            nspan.add("rows_out", row_counts[i] as u64);
+            nspan.add("shuffle_bytes", stats.comm_bytes - cb);
+            nspan.add("retried", stats.frames_retried - fr);
+            nspan.add("spills", (stats.spills - sp) as u64);
+            nspan.add("spill_bytes", stats.spill_bytes - sb);
+        }
+        drop(nspan);
         stats.peak_rows = stats.peak_rows.max(live_rows);
         stats.peak_bytes = stats.peak_bytes.max(live_bytes);
         // Last-use drop: bases whose final consuming breaker just ran

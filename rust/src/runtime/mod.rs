@@ -287,7 +287,7 @@ mod tests {
     fn kernel_matches_native_hash() {
         let dir = KernelRuntime::artifacts_dir();
         if KernelRuntime::discover_artifacts(&dir).is_empty() {
-            eprintln!("skipping: no artifacts in {}", dir.display());
+            crate::trace::log!(Warn, "skipping: no artifacts in {}", dir.display());
             return;
         }
         let rt = KernelRuntime::load(&dir).unwrap();

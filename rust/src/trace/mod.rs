@@ -1,0 +1,1016 @@
+//! Query tracing: structured spans from every layer, distributed
+//! gather, EXPLAIN ANALYZE rendering, Chrome-trace export, and the
+//! leveled [`log!`] diagnostic macro.
+//!
+//! # Span taxonomy
+//!
+//! Every span is `{query_id, rank, span_id, parent_id, kind, label,
+//! t_start_ns, t_end_ns, counters}`. The kinds, and who emits them:
+//!
+//! | kind        | emitted by                            | labels                                   |
+//! |-------------|---------------------------------------|------------------------------------------|
+//! | `Query`     | `plan/exec.rs`, once per execution    | `query`                                  |
+//! | `Plan`      | `plan/exec.rs`, once per executed node| `#<id> <op>` (fused nodes: `fused=1`)    |
+//! | `Grid`      | `ops/parallel.rs`, once per morsel grid| `grid` (`tasks`, `w<i>_busy_ns` counters)|
+//! | `Superstep` | `dist/*`, once per BSP phase          | `shuffle:partition`, `shuffle:alltoall`, `join:local`, `group_by:partial`, … |
+//! | `Wire`      | `net/serialize.rs`                    | `wire:ser`, `wire:de`, `wire:concat_de`  |
+//! | `Retry`     | `net/reliable.rs`                     | `ack:flush`, `ack:recv`                  |
+//! | `Spill`     | `external/*`                          | `spill:write`, `spill:read`, `external:sort`, `external:join` |
+//!
+//! A grid emits **one span per grid** (morsel count and per-worker
+//! busy-ns ride as counters), never one span per morsel — tracing a
+//! 1M-row scan costs a handful of spans, not sixteen thousand.
+//!
+//! # The observation-only contract
+//!
+//! Tracing **never perturbs outputs**. Span emission sits outside the
+//! determinism contract — wall-clock timestamps are fine, span counts
+//! may differ run to run — but the bytes an operator produces are
+//! bit-identical with tracing on or off, at every thread count and
+//! world size (`tests/prop_trace.rs` pins parallelism 1/2/7 ×
+//! world 1/3). A disabled sink costs one ambient-slot check per span
+//! site and allocates nothing.
+//!
+//! The sink is installed ambiently, exactly like
+//! [`crate::lifecycle::with_control`]: [`with_sink`] sets a
+//! thread-local for the scope, span sites read it, and worker threads
+//! spawned by the morsel engine simply don't see it (the grid span is
+//! emitted by the thread that owns the grid).
+//!
+//! # EXPLAIN ANALYZE
+//!
+//! [`crate::dataflow::Graph::explain_analyze`] runs a traced
+//! execution, gathers every rank's spans to rank 0 (a best-effort
+//! [`crate::net::TRACE_TAG`] exchange alongside the query's normal
+//! traffic), and renders the optimized plan annotated per node with
+//! rows, wall time, per-rank skew, shuffle bytes, retries, and spills:
+//!
+//! ```
+//! use rylon::ctx::CylonContext;
+//! use rylon::dataflow::Graph;
+//! use rylon::io::generator::paper_table;
+//! use rylon::ops::join::JoinConfig;
+//!
+//! let mut g = Graph::new();
+//! let a = g.source("a");
+//! let b = g.source("b");
+//! let j = g.join(a, b, JoinConfig::inner(0, 0));
+//! g.sink(j);
+//! let sources = [("a", paper_table(200, 0.9, 1)), ("b", paper_table(200, 0.9, 2))];
+//!
+//! let mut ctx = CylonContext::init_local();
+//! let report = g.explain_analyze(&mut ctx, &sources).unwrap();
+//! assert!(report.contains("explain analyze"));
+//! assert!(report.contains("join"));
+//! assert!(report.contains("wall_ms"));
+//! // The same traced run exports a Chrome trace (chrome://tracing).
+//! let json = ctx.trace().to_chrome_trace();
+//! assert!(json.contains("\"ph\":\"X\""));
+//! ```
+
+use crate::metrics::Registry;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-rank span cap: a sink stops recording (and counts drops) past
+/// this, so a runaway query can't hold unbounded trace memory and the
+/// gathered payload stays bounded.
+pub const MAX_SPANS: usize = 1 << 16;
+
+/// Gathered-payload ceiling per rank (bytes); larger encodings are
+/// truncated to a whole-span prefix before the wire.
+pub const TRACE_WIRE_LIMIT: usize = 8 << 20;
+
+// ---------------------------------------------------------------------------
+// Span model
+// ---------------------------------------------------------------------------
+
+/// What layer a span came from (see the module-level taxonomy table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Query,
+    Plan,
+    Grid,
+    Superstep,
+    Wire,
+    Retry,
+    Spill,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Query => "query",
+            SpanKind::Plan => "plan",
+            SpanKind::Grid => "grid",
+            SpanKind::Superstep => "superstep",
+            SpanKind::Wire => "wire",
+            SpanKind::Retry => "retry",
+            SpanKind::Spill => "spill",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            SpanKind::Query => 0,
+            SpanKind::Plan => 1,
+            SpanKind::Grid => 2,
+            SpanKind::Superstep => 3,
+            SpanKind::Wire => 4,
+            SpanKind::Retry => 5,
+            SpanKind::Spill => 6,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => SpanKind::Query,
+            1 => SpanKind::Plan,
+            2 => SpanKind::Grid,
+            3 => SpanKind::Superstep,
+            4 => SpanKind::Wire,
+            5 => SpanKind::Retry,
+            6 => SpanKind::Spill,
+            _ => return None,
+        })
+    }
+}
+
+/// One closed span. Timestamps are monotonic nanoseconds relative to
+/// the owning sink's creation (per-rank clocks; cross-rank alignment
+/// is approximate, which is why the Chrome export gives each rank its
+/// own pid lane).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub query_id: u64,
+    pub rank: usize,
+    pub span_id: u64,
+    /// 0 = no parent (root span of its thread's scope).
+    pub parent_id: u64,
+    pub kind: SpanKind,
+    pub label: String,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub counters: Vec<(String, u64)>,
+}
+
+impl Span {
+    /// Value of a named counter, if present.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TraceSink
+// ---------------------------------------------------------------------------
+
+struct SinkInner {
+    query_id: u64,
+    rank: usize,
+    t0: Instant,
+    next_id: AtomicU64,
+    state: Mutex<SinkState>,
+}
+
+#[derive(Default)]
+struct SinkState {
+    spans: Vec<Span>,
+    dropped: u64,
+    registry: Registry,
+}
+
+impl SinkInner {
+    fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    fn push(&self, span: Span) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if st.spans.len() >= MAX_SPANS {
+            st.dropped += 1;
+        } else {
+            st.spans.push(span);
+        }
+    }
+}
+
+/// The per-query span collector. Cheap to clone (an `Arc`); a
+/// *disabled* sink (`TraceSink::disabled`) carries no storage and
+/// turns every span site into a no-op branch.
+#[derive(Clone)]
+pub struct TraceSink {
+    inner: Option<Arc<SinkInner>>,
+}
+
+impl TraceSink {
+    /// A recording sink for one query on one rank.
+    pub fn new(query_id: u64, rank: usize) -> Self {
+        TraceSink {
+            inner: Some(Arc::new(SinkInner {
+                query_id,
+                rank,
+                t0: Instant::now(),
+                next_id: AtomicU64::new(1),
+                state: Mutex::new(SinkState::default()),
+            })),
+        }
+    }
+
+    /// The no-op sink: records nothing, allocates nothing.
+    pub fn disabled() -> Self {
+        TraceSink { inner: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn query_id(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.query_id).unwrap_or(0)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.inner.as_ref().map(|i| i.rank).unwrap_or(0)
+    }
+
+    /// Snapshot of every recorded span (local + any gathered).
+    pub fn spans(&self) -> Vec<Span> {
+        match &self.inner {
+            Some(i) => i.state.lock().unwrap_or_else(|p| p.into_inner()).spans.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn span_count(&self) -> usize {
+        match &self.inner {
+            Some(i) => i.state.lock().unwrap_or_else(|p| p.into_inner()).spans.len(),
+            None => 0,
+        }
+    }
+
+    /// Spans dropped past [`MAX_SPANS`].
+    pub fn dropped(&self) -> u64 {
+        match &self.inner {
+            Some(i) => i.state.lock().unwrap_or_else(|p| p.into_inner()).dropped,
+            None => 0,
+        }
+    }
+
+    /// Fold remote spans in (rank 0, after a gather).
+    pub fn extend(&self, spans: Vec<Span>) {
+        if let Some(i) = &self.inner {
+            let mut st = i.state.lock().unwrap_or_else(|p| p.into_inner());
+            st.spans.extend(spans);
+        }
+    }
+
+    /// Mutate the sink's unified counter [`Registry`] (no-op when
+    /// disabled). The executor snapshots its `ExecStats` here on query
+    /// end, so every hand-carried stats struct is also visible as
+    /// named counters.
+    pub fn with_registry(&self, f: impl FnOnce(&mut Registry)) {
+        if let Some(i) = &self.inner {
+            let mut st = i.state.lock().unwrap_or_else(|p| p.into_inner());
+            f(&mut st.registry);
+        }
+    }
+
+    /// Snapshot of the unified counter registry.
+    pub fn registry(&self) -> Registry {
+        match &self.inner {
+            Some(i) => i.state.lock().unwrap_or_else(|p| p.into_inner()).registry.clone(),
+            None => Registry::default(),
+        }
+    }
+
+    /// Encode this rank's local spans for the trace gather, truncated
+    /// to [`TRACE_WIRE_LIMIT`].
+    pub fn encode_local(&self) -> Vec<u8> {
+        let spans = self.spans();
+        encode_spans(&spans, TRACE_WIRE_LIMIT)
+    }
+
+    /// Export everything the sink holds as Chrome `trace_event` JSON
+    /// (the `chrome://tracing` / Perfetto format): one complete-event
+    /// (`"ph":"X"`) per span with `ts`/`dur` in microseconds, one
+    /// **pid per rank**, tid 0 for a rank's main lane, and one **tid
+    /// per worker** synthesized from each grid span's per-worker
+    /// busy-ns counters.
+    pub fn to_chrome_trace(&self) -> String {
+        let spans = self.spans();
+        let mut out = String::with_capacity(256 + spans.len() * 160);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, ev: String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push_str(&ev);
+        };
+        // Process-name metadata: one pid per rank.
+        let mut ranks: Vec<usize> = spans.iter().map(|s| s.rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        for r in &ranks {
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{r},\"tid\":0,\
+                     \"args\":{{\"name\":\"rank {r}\"}}}}"
+                ),
+            );
+        }
+        for s in &spans {
+            let ts = s.t_start_ns / 1_000;
+            let dur = s.t_end_ns.saturating_sub(s.t_start_ns) / 1_000;
+            let mut args = String::new();
+            args.push_str(&format!("\"span_id\":{},\"parent_id\":{}", s.span_id, s.parent_id));
+            for (k, v) in &s.counters {
+                args.push_str(&format!(",\"{}\":{v}", json_escape(k)));
+            }
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\":\"X\",\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{ts},\"dur\":{dur},\
+                     \"pid\":{},\"tid\":0,\"args\":{{{args}}}}}",
+                    json_escape(&s.label),
+                    s.kind.as_str(),
+                    s.rank
+                ),
+            );
+            // One tid per worker: a grid span's per-worker busy time
+            // becomes a lane per worker under the same pid.
+            if s.kind == SpanKind::Grid {
+                for (k, v) in &s.counters {
+                    if let Some(w) = worker_counter_index(k) {
+                        push(
+                            &mut out,
+                            format!(
+                                "{{\"ph\":\"X\",\"name\":\"worker busy\",\"cat\":\"grid\",\
+                                 \"ts\":{ts},\"dur\":{},\"pid\":{},\"tid\":{}}}",
+                                v / 1_000,
+                                s.rank,
+                                w + 1
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Parse `w<i>_busy_ns` counter names into the worker index.
+fn worker_counter_index(name: &str) -> Option<u64> {
+    name.strip_prefix('w')?.strip_suffix("_busy_ns")?.parse().ok()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Ambient install (the `with_control` pattern)
+// ---------------------------------------------------------------------------
+
+struct Active {
+    sink: Arc<SinkInner>,
+    parent: u64,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Active>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `sink` installed as this thread's ambient trace sink
+/// (no-op install if the sink is disabled). Panic-safe: the previous
+/// sink is restored even on unwind.
+pub fn with_sink<T>(sink: &TraceSink, f: impl FnOnce() -> T) -> T {
+    let Some(inner) = &sink.inner else { return f() };
+    struct Restore(Option<Active>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            ACTIVE.with(|a| *a.borrow_mut() = prev);
+        }
+    }
+    let prev =
+        ACTIVE.with(|a| a.borrow_mut().replace(Active { sink: Arc::clone(inner), parent: 0 }));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Is a recording sink installed on this thread?
+pub fn active() -> bool {
+    ACTIVE.with(|a| a.borrow().is_some())
+}
+
+/// The ambient sink (disabled if none is installed).
+pub fn current() -> TraceSink {
+    ACTIVE.with(|a| match &*a.borrow() {
+        Some(act) => TraceSink { inner: Some(Arc::clone(&act.sink)) },
+        None => TraceSink::disabled(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Span guards
+// ---------------------------------------------------------------------------
+
+struct Rec {
+    sink: Arc<SinkInner>,
+    span_id: u64,
+    parent_id: u64,
+    kind: SpanKind,
+    label: String,
+    start_ns: u64,
+    counters: Vec<(String, u64)>,
+}
+
+/// RAII span: opened by [`span`], closed (recorded) on drop. All
+/// methods are no-ops when no sink is installed.
+pub struct SpanGuard {
+    rec: Option<Rec>,
+}
+
+impl SpanGuard {
+    /// A guard that records nothing.
+    pub fn noop() -> Self {
+        SpanGuard { rec: None }
+    }
+
+    pub fn active(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// Attach / accumulate a named counter.
+    pub fn add(&mut self, name: &str, v: u64) {
+        if let Some(rec) = &mut self.rec {
+            match rec.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, old)) => *old += v,
+                None => rec.counters.push((name.to_string(), v)),
+            }
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec.take() else { return };
+        let end_ns = rec.sink.now_ns();
+        ACTIVE.with(|a| {
+            if let Some(act) = a.borrow_mut().as_mut() {
+                if act.parent == rec.span_id {
+                    act.parent = rec.parent_id;
+                }
+            }
+        });
+        rec.sink.push(Span {
+            query_id: rec.sink.query_id,
+            rank: rec.sink.rank,
+            span_id: rec.span_id,
+            parent_id: rec.parent_id,
+            kind: rec.kind,
+            label: rec.label,
+            t_start_ns: rec.start_ns,
+            t_end_ns: end_ns,
+            counters: rec.counters,
+        });
+    }
+}
+
+/// Open a span on the ambient sink. When no sink is installed this is
+/// one thread-local check and returns a no-op guard — the whole cost
+/// of a disabled span site.
+pub fn span(kind: SpanKind, label: &str) -> SpanGuard {
+    span_with(kind, || label.to_string())
+}
+
+/// [`span`] with a lazily-built label (the closure only runs when a
+/// sink is installed, so formatted labels cost nothing when off).
+pub fn span_with(kind: SpanKind, label: impl FnOnce() -> String) -> SpanGuard {
+    ACTIVE.with(|a| {
+        let mut slot = a.borrow_mut();
+        let Some(act) = slot.as_mut() else { return SpanGuard::noop() };
+        let sink = Arc::clone(&act.sink);
+        let span_id = sink.next_id.fetch_add(1, Ordering::Relaxed);
+        let parent_id = act.parent;
+        act.parent = span_id;
+        let start_ns = sink.now_ns();
+        SpanGuard {
+            rec: Some(Rec {
+                sink,
+                span_id,
+                parent_id,
+                kind,
+                label: label(),
+                start_ns,
+                counters: Vec::new(),
+            }),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding for the distributed gather
+// ---------------------------------------------------------------------------
+
+const TRACE_MAGIC: u32 = 0x5259_5452; // "RYTR"
+const TRACE_VERSION: u32 = 1;
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let len = b.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&b[..len]);
+}
+
+fn encode_one(out: &mut Vec<u8>, s: &Span) {
+    out.extend_from_slice(&s.query_id.to_le_bytes());
+    out.extend_from_slice(&(s.rank as u64).to_le_bytes());
+    out.extend_from_slice(&s.span_id.to_le_bytes());
+    out.extend_from_slice(&s.parent_id.to_le_bytes());
+    out.push(s.kind.to_u8());
+    put_str(out, &s.label);
+    out.extend_from_slice(&s.t_start_ns.to_le_bytes());
+    out.extend_from_slice(&s.t_end_ns.to_le_bytes());
+    let nc = s.counters.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(nc as u16).to_le_bytes());
+    for (k, v) in s.counters.iter().take(nc) {
+        put_str(out, k);
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode spans to the compact gather format, truncating to a
+/// whole-span prefix that fits `limit` bytes.
+pub fn encode_spans(spans: &[Span], limit: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + spans.len() * 96);
+    out.extend_from_slice(&TRACE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
+    let count_at = out.len();
+    out.extend_from_slice(&0u64.to_le_bytes());
+    let mut count = 0u64;
+    for s in spans {
+        let mark = out.len();
+        encode_one(&mut out, s);
+        if out.len() > limit {
+            out.truncate(mark);
+            break;
+        }
+        count += 1;
+    }
+    out[count_at..count_at + 8].copy_from_slice(&count.to_le_bytes());
+    out
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.buf.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Option<String> {
+        let len = self.u16()? as usize;
+        let b = self.take(len)?;
+        Some(String::from_utf8_lossy(b).into_owned())
+    }
+}
+
+/// Decode a gather payload. Best-effort by design: a malformed buffer
+/// yields `None` (the gather drops it), never an error that could fail
+/// the query it describes.
+pub fn decode_spans(buf: &[u8]) -> Option<Vec<Span>> {
+    let mut c = Cursor { buf, pos: 0 };
+    if c.u32()? != TRACE_MAGIC || c.u32()? != TRACE_VERSION {
+        return None;
+    }
+    let count = c.u64()? as usize;
+    if count > MAX_SPANS {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        let query_id = c.u64()?;
+        let rank = c.u64()? as usize;
+        let span_id = c.u64()?;
+        let parent_id = c.u64()?;
+        let kind = SpanKind::from_u8(c.u8()?)?;
+        let label = c.str()?;
+        let t_start_ns = c.u64()?;
+        let t_end_ns = c.u64()?;
+        let nc = c.u16()? as usize;
+        let mut counters = Vec::with_capacity(nc.min(64));
+        for _ in 0..nc {
+            let k = c.str()?;
+            let v = c.u64()?;
+            counters.push((k, v));
+        }
+        out.push(Span {
+            query_id,
+            rank,
+            span_id,
+            parent_id,
+            kind,
+            label,
+            t_start_ns,
+            t_end_ns,
+            counters,
+        });
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// EXPLAIN ANALYZE rendering
+// ---------------------------------------------------------------------------
+
+/// Node id a plan span's label encodes (`#<id> <op>`).
+fn plan_span_node(label: &str) -> Option<usize> {
+    let rest = label.strip_prefix('#')?;
+    let end = rest.find(' ').unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Render the EXPLAIN ANALYZE report: the optimized plan in execution
+/// order, each node annotated from the (gathered) plan spans — total
+/// output rows, worst/best per-rank wall time and the skew between
+/// them, shuffled bytes, retransmits, and spill volume. Footer: the
+/// sink's unified counter registry, when populated.
+pub fn render_analysis(
+    plan: &crate::plan::LogicalPlan,
+    world: usize,
+    sink: &TraceSink,
+) -> String {
+    let spans = sink.spans();
+    let mut ranks: Vec<usize> = spans.iter().map(|s| s.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let header = vec![
+        "node".to_string(),
+        "op".to_string(),
+        "rows_out".to_string(),
+        "wall_ms".to_string(),
+        "min_ms".to_string(),
+        "skew_ms".to_string(),
+        "shuffle_mb".to_string(),
+        "retried".to_string(),
+        "spill_mb".to_string(),
+        "notes".to_string(),
+    ];
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &i in &plan.topo_order() {
+        let node = &plan.nodes[i];
+        // Per-rank wall time for this node (one plan span per rank).
+        let mut walls: Vec<u64> = Vec::new();
+        let mut rows_out = 0u64;
+        let mut shuffle_bytes = 0u64;
+        let mut retried = 0u64;
+        let mut spill_bytes = 0u64;
+        let mut fused = false;
+        let mut spilled = false;
+        for s in spans.iter().filter(|s| {
+            s.kind == SpanKind::Plan && plan_span_node(&s.label) == Some(i)
+        }) {
+            walls.push(s.t_end_ns.saturating_sub(s.t_start_ns));
+            rows_out += s.counter("rows_out").unwrap_or(0);
+            shuffle_bytes += s.counter("shuffle_bytes").unwrap_or(0);
+            retried += s.counter("retried").unwrap_or(0);
+            spill_bytes += s.counter("spill_bytes").unwrap_or(0);
+            fused |= s.counter("fused").unwrap_or(0) > 0;
+            spilled |= s.counter("spills").unwrap_or(0) > 0;
+        }
+        let (max_ms, min_ms, skew_ms) = if walls.is_empty() {
+            ("-".into(), "-".into(), "-".into())
+        } else {
+            let max = *walls.iter().max().unwrap();
+            let min = *walls.iter().min().unwrap();
+            (fmt_ms(max), fmt_ms(min), fmt_ms(max - min))
+        };
+        let mut notes = Vec::new();
+        if fused {
+            notes.push("fused");
+        }
+        if spilled {
+            notes.push("spilled");
+        }
+        rows.push(vec![
+            format!("#{i}"),
+            node.op.name().to_string(),
+            if walls.is_empty() { "-".into() } else { rows_out.to_string() },
+            max_ms,
+            min_ms,
+            skew_ms,
+            fmt_mb(shuffle_bytes),
+            retried.to_string(),
+            fmt_mb(spill_bytes),
+            notes.join(","),
+        ]);
+    }
+    let mut out = format!(
+        "== explain analyze (world {world}, ranks traced {}, spans {}) ==\n",
+        ranks.len(),
+        spans.len()
+    );
+    out.push_str(&render_table(&header, &rows));
+    let reg = sink.registry();
+    if !reg.is_empty() {
+        out.push_str("-- counters --\n");
+        out.push_str(&reg.render());
+    }
+    out
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e6)
+}
+
+fn fmt_mb(bytes: u64) -> String {
+    if bytes == 0 {
+        "0".into()
+    } else {
+        format!("{:.3}", bytes as f64 / 1e6)
+    }
+}
+
+/// Column-aligned ASCII rendering (the `table/pretty.rs` style).
+fn render_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        let mut s = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                s.push_str("  ");
+            }
+            s.push_str(&format!("{cell:<width$}", width = widths[i]));
+        }
+        s.trim_end().to_string() + "\n"
+    };
+    let mut out = line(header);
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Leveled logging (`RYLON_LOG`)
+// ---------------------------------------------------------------------------
+
+/// Severity for [`log!`]. Default threshold is `Info`; set `RYLON_LOG`
+/// to `off|error|warn|info|debug` to move it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl LogLevel {
+    pub fn tag(self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+}
+
+/// `RYLON_LOG` value → threshold (-1 = everything off). Exposed for
+/// tests; unknown values keep the `Info` default.
+pub fn parse_log_level(v: Option<&str>) -> i8 {
+    match v.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+        Some("off") | Some("none") | Some("silent") | Some("0") => -1,
+        Some("error") => 0,
+        Some("warn") | Some("warning") => 1,
+        Some("debug") => 3,
+        _ => 2,
+    }
+}
+
+static LOG_LEVEL: OnceLock<i8> = OnceLock::new();
+
+/// Is `level` enabled under the process's `RYLON_LOG` threshold
+/// (read once, on first use)?
+pub fn log_enabled(level: LogLevel) -> bool {
+    let threshold =
+        *LOG_LEVEL.get_or_init(|| parse_log_level(std::env::var("RYLON_LOG").ok().as_deref()));
+    (level as i8) <= threshold
+}
+
+/// Leveled stderr diagnostics, gated by `RYLON_LOG`
+/// (`off|error|warn|info|debug`, default `info`). Stdlib-only; the
+/// replacement for ad-hoc `eprintln!` so server-mode output is
+/// controllable:
+///
+/// ```
+/// rylon::trace::log!(Debug, "hidden by default: {}", 42);
+/// rylon::trace::log!(Warn, "shown by default");
+/// ```
+#[macro_export]
+macro_rules! rylon_log {
+    ($lvl:ident, $($arg:tt)*) => {{
+        let lvl = $crate::trace::LogLevel::$lvl;
+        if $crate::trace::log_enabled(lvl) {
+            eprintln!("[{}] {}", lvl.tag(), format_args!($($arg)*));
+        }
+    }};
+}
+pub use rylon_log as log;
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TraceSink::disabled();
+        with_sink(&sink, || {
+            assert!(!active());
+            let mut g = span(SpanKind::Plan, "#0 source");
+            assert!(!g.active());
+            g.add("rows_out", 5);
+        });
+        assert_eq!(sink.span_count(), 0);
+        assert!(sink.to_chrome_trace().contains("traceEvents"));
+    }
+
+    #[test]
+    fn spans_nest_and_restore_parents() {
+        let sink = TraceSink::new(7, 2);
+        with_sink(&sink, || {
+            assert!(active());
+            let _root = span(SpanKind::Query, "query");
+            {
+                let mut child = span(SpanKind::Plan, "#0 source");
+                child.add("rows_out", 10);
+                child.add("rows_out", 5);
+            }
+            let _sibling = span(SpanKind::Plan, "#1 filter");
+        });
+        assert!(!active());
+        let spans = sink.spans();
+        assert_eq!(spans.len(), 3);
+        // Drop order: child, sibling, root.
+        let child = &spans[0];
+        let sibling = &spans[1];
+        let root = &spans[2];
+        assert_eq!(root.parent_id, 0);
+        assert_eq!(child.parent_id, root.span_id);
+        assert_eq!(sibling.parent_id, root.span_id);
+        assert_eq!(child.counter("rows_out"), Some(15));
+        assert_eq!(child.query_id, 7);
+        assert_eq!(child.rank, 2);
+        assert!(child.t_end_ns >= child.t_start_ns);
+    }
+
+    #[test]
+    fn lazy_labels_do_not_run_when_off() {
+        let ran = std::cell::Cell::new(false);
+        let _g = span_with(SpanKind::Wire, || {
+            ran.set(true);
+            "wire:ser".into()
+        });
+        assert!(!ran.get());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let sink = TraceSink::new(3, 1);
+        with_sink(&sink, || {
+            let mut g = span(SpanKind::Superstep, "shuffle:alltoall");
+            g.add("bytes", 1234);
+            let _inner = span(SpanKind::Wire, "wire:ser");
+        });
+        let buf = sink.encode_local();
+        let back = decode_spans(&buf).expect("decodes");
+        let orig = sink.spans();
+        assert_eq!(back.len(), orig.len());
+        for (a, b) in back.iter().zip(&orig) {
+            assert_eq!(a.span_id, b.span_id);
+            assert_eq!(a.parent_id, b.parent_id);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.counters, b.counters);
+            assert_eq!((a.t_start_ns, a.t_end_ns), (b.t_start_ns, b.t_end_ns));
+        }
+        assert!(decode_spans(&buf[..buf.len() / 2]).is_none());
+        assert!(decode_spans(b"junk").is_none());
+    }
+
+    #[test]
+    fn encode_truncates_to_whole_spans() {
+        let spans: Vec<Span> = (0..100)
+            .map(|i| Span {
+                query_id: 1,
+                rank: 0,
+                span_id: i + 1,
+                parent_id: 0,
+                kind: SpanKind::Grid,
+                label: "grid".into(),
+                t_start_ns: 0,
+                t_end_ns: 1,
+                counters: vec![("tasks".into(), i)],
+            })
+            .collect();
+        let full = encode_spans(&spans, usize::MAX);
+        let cut = encode_spans(&spans, full.len() / 2);
+        let back = decode_spans(&cut).expect("truncated payload still decodes");
+        assert!(!back.is_empty() && back.len() < 100);
+    }
+
+    #[test]
+    fn chrome_trace_has_required_keys_and_worker_tids() {
+        let sink = TraceSink::new(1, 0);
+        with_sink(&sink, || {
+            let mut g = span(SpanKind::Grid, "grid");
+            g.add("tasks", 4);
+            g.add("w0_busy_ns", 5_000);
+            g.add("w1_busy_ns", 7_000);
+        });
+        let json = sink.to_chrome_trace();
+        for key in ["\"ph\":\"X\"", "\"ts\":", "\"dur\":", "\"pid\":0", "\"name\":"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // One tid per worker, synthesized from the busy counters.
+        assert!(json.contains("\"tid\":1"));
+        assert!(json.contains("\"tid\":2"));
+        assert!(json.contains("process_name"));
+    }
+
+    #[test]
+    fn log_level_parsing() {
+        assert_eq!(parse_log_level(None), 2);
+        assert_eq!(parse_log_level(Some("off")), -1);
+        assert_eq!(parse_log_level(Some("error")), 0);
+        assert_eq!(parse_log_level(Some("WARN")), 1);
+        assert_eq!(parse_log_level(Some("debug")), 3);
+        assert_eq!(parse_log_level(Some("garbage")), 2);
+    }
+
+    #[test]
+    fn max_spans_cap_counts_drops() {
+        let sink = TraceSink::new(1, 0);
+        if let Some(inner) = &sink.inner {
+            for i in 0..(MAX_SPANS + 10) {
+                inner.push(Span {
+                    query_id: 1,
+                    rank: 0,
+                    span_id: i as u64 + 1,
+                    parent_id: 0,
+                    kind: SpanKind::Wire,
+                    label: String::new(),
+                    t_start_ns: 0,
+                    t_end_ns: 0,
+                    counters: Vec::new(),
+                });
+            }
+        }
+        assert_eq!(sink.span_count(), MAX_SPANS);
+        assert_eq!(sink.dropped(), 10);
+    }
+}

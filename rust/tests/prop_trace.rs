@@ -1,0 +1,239 @@
+//! Property tests for the tracing subsystem's observation-only
+//! contract: with tracing on, every operator's output is
+//! **bit-identical** to the untraced run at parallelism 1/2/7 and
+//! world 1/3 — while the recorded span tree stays well-formed (every
+//! parent exists, no span ends before it starts, exactly one plan
+//! span per executed node per rank) and the Chrome-trace export
+//! round-trips the span count.
+
+use rylon::coordinator::run_workers;
+use rylon::ctx::CylonContext;
+use rylon::dataflow::Graph;
+use rylon::io::generator::paper_table;
+use rylon::net::CommConfig;
+use rylon::ops::aggregate::{AggFn, AggSpec};
+use rylon::ops::expr::Expr;
+use rylon::ops::join::JoinConfig;
+use rylon::table::Table;
+use rylon::trace::{Span, SpanKind, TraceSink};
+use std::collections::HashSet;
+
+/// join → filter → group-by and a sorted branch: one graph covering
+/// the shuffle, join, group-by and sort paths at once.
+fn pipeline() -> Graph {
+    let mut g = Graph::new();
+    let a = g.source("a");
+    let b = g.source("b");
+    let j = g.join(a, b, JoinConfig::inner(0, 0));
+    let f = g.filter(j, Expr::col(1).lt(Expr::lit_f64(0.6)));
+    let gb = g.group_by(f, 0, vec![AggSpec::new(AggFn::Sum, 1)]);
+    let s = g.sort(j, 1);
+    g.sink(gb);
+    g.sink(s);
+    g
+}
+
+fn sources(rows: usize, seed: u64) -> [(&'static str, Table); 2] {
+    [
+        ("a", paper_table(rows, 0.6, seed)),
+        ("b", paper_table(rows, 0.6, seed ^ 0xACE)),
+    ]
+}
+
+#[test]
+fn tracing_is_bit_identical_world1() {
+    let g = pipeline();
+    let srcs = sources(2_000, 0x7A1);
+    for threads in [1usize, 2, 7] {
+        let mut plain = CylonContext::init_local().with_parallelism(threads);
+        let want = g.execute_with(&mut plain, &srcs).unwrap();
+        let mut traced = CylonContext::init_local().with_parallelism(threads);
+        traced.set_tracing(true);
+        let got = g.execute_with(&mut traced, &srcs).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (k, (w, t)) in want.iter().zip(&got).enumerate() {
+            assert!(t.data_equals(w), "threads {threads} sink {k}");
+        }
+        assert!(traced.trace().span_count() > 0, "threads {threads}: spans recorded");
+        assert_eq!(plain.trace().span_count(), 0, "disabled sink records nothing");
+    }
+}
+
+#[test]
+fn tracing_is_bit_identical_world3() {
+    let world = 3;
+    let run = |tracing: bool| -> Vec<Vec<Table>> {
+        run_workers(world, &CommConfig::default(), move |ctx| {
+            ctx.set_tracing(tracing);
+            let srcs = sources(700, 0x7A3 + ctx.rank() as u64);
+            let g = pipeline();
+            for threads in [1usize, 2, 7] {
+                ctx.set_parallelism(threads);
+                let r = g.execute_with(ctx, &srcs).unwrap();
+                if threads == 7 {
+                    return r;
+                }
+                // intermediate thread counts must agree too
+                let again = g.execute_with(ctx, &srcs).unwrap();
+                for (x, y) in r.iter().zip(&again) {
+                    assert!(x.data_equals(y), "rerun variance at threads {threads}");
+                }
+            }
+            unreachable!()
+        })
+    };
+    let plain = run(false);
+    let traced = run(true);
+    for (rank, (w, t)) in plain.iter().zip(&traced).enumerate() {
+        assert_eq!(w.len(), t.len());
+        for (k, (wt, tt)) in w.iter().zip(t).enumerate() {
+            assert!(tt.data_equals(wt), "rank {rank} sink {k}");
+        }
+    }
+}
+
+#[test]
+fn traced_direct_shuffle_is_bit_identical() {
+    // Direct dist calls (no plan executor): install the sink by hand,
+    // as the coordinator does for contexts that start with tracing on.
+    let world = 3;
+    for threads in [1usize, 2, 7] {
+        let run = |tracing: bool| -> Vec<Table> {
+            run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                let t = paper_table(500, 0.7, 0x5F + ctx.rank() as u64);
+                if tracing {
+                    let sink = TraceSink::new(1, ctx.rank());
+                    let out = rylon::trace::with_sink(&sink, || {
+                        rylon::dist::shuffle(ctx, &t, 0).unwrap().0
+                    });
+                    assert!(sink.span_count() > 0, "shuffle emitted spans");
+                    out
+                } else {
+                    rylon::dist::shuffle(ctx, &t, 0).unwrap().0
+                }
+            })
+        };
+        let plain = run(false);
+        let traced = run(true);
+        for (rank, (w, t)) in plain.iter().zip(&traced).enumerate() {
+            assert!(t.data_equals(w), "rank {rank} threads {threads}");
+        }
+    }
+}
+
+/// Well-formedness of one rank's span set: ids unique, parents exist
+/// (or 0), time never runs backwards within a span.
+fn assert_rank_spans_well_formed(rank: usize, spans: &[&Span]) {
+    let ids: HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    assert_eq!(ids.len(), spans.len(), "rank {rank}: span ids unique");
+    for s in spans {
+        assert!(s.t_end_ns >= s.t_start_ns, "rank {rank}: span {} ends before start", s.label);
+        assert!(
+            s.parent_id == 0 || ids.contains(&s.parent_id),
+            "rank {rank}: span {} has unknown parent {}",
+            s.label,
+            s.parent_id
+        );
+    }
+}
+
+#[test]
+fn gathered_span_tree_is_well_formed() {
+    let world = 3;
+    let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+        let srcs = sources(600, 0x90 + ctx.rank() as u64);
+        let report = pipeline().explain_analyze(ctx, &srcs).unwrap();
+        (ctx.rank() == 0).then(|| (report, ctx.trace().spans()))
+    });
+    let (report, spans) = outs.into_iter().flatten().next().expect("rank 0 trace");
+    assert!(report.contains("== explain analyze"), "{report}");
+
+    let ranks: HashSet<usize> = spans.iter().map(|s| s.rank).collect();
+    assert_eq!(ranks.len(), world, "all ranks gathered: {ranks:?}");
+    let mut plan_count: Option<usize> = None;
+    for r in 0..world {
+        let rs: Vec<&Span> = spans.iter().filter(|s| s.rank == r).collect();
+        assert_rank_spans_well_formed(r, &rs);
+        // exactly one Query root per rank
+        assert_eq!(
+            rs.iter().filter(|s| s.kind == SpanKind::Query).count(),
+            1,
+            "rank {r}: one query root"
+        );
+        // exactly one Plan span per executed node per rank: labels
+        // `#<id> <op>` are unique within the rank, and every rank
+        // executed the same optimized plan.
+        let labels: Vec<&str> = rs
+            .iter()
+            .filter(|s| s.kind == SpanKind::Plan)
+            .map(|s| s.label.as_str())
+            .collect();
+        let distinct: HashSet<&&str> = labels.iter().collect();
+        assert_eq!(distinct.len(), labels.len(), "rank {r}: duplicate plan spans {labels:?}");
+        assert!(!labels.is_empty(), "rank {r}: plan spans recorded");
+        match plan_count {
+            None => plan_count = Some(labels.len()),
+            Some(n) => assert_eq!(n, labels.len(), "rank {r}: same executed node count"),
+        }
+        // every layer the pipeline exercises shows up
+        for kind in [SpanKind::Grid, SpanKind::Superstep, SpanKind::Wire] {
+            assert!(
+                rs.iter().any(|s| s.kind == kind),
+                "rank {r}: no {} span",
+                kind.as_str()
+            );
+        }
+    }
+}
+
+/// Minimal structural JSON scan: balanced braces/brackets outside
+/// string literals (the CI smoke does a full `json.loads`; this keeps
+/// the guarantee toolchain-independent).
+fn assert_balanced_json(s: &str) {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in s.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => {
+                depth -= 1;
+                assert!(depth >= 0, "unbalanced close");
+            }
+            _ => {}
+        }
+    }
+    assert!(!in_str, "unterminated string");
+    assert_eq!(depth, 0, "unbalanced braces");
+}
+
+#[test]
+fn chrome_trace_round_trips_span_count() {
+    let g = pipeline();
+    let srcs = sources(1_200, 0xC0);
+    let mut ctx = CylonContext::init_local().with_parallelism(2);
+    ctx.set_tracing(true);
+    let _ = g.execute_with(&mut ctx, &srcs).unwrap();
+    let sink = ctx.trace();
+    let n = sink.span_count();
+    assert!(n > 0);
+    let json = sink.to_chrome_trace();
+    assert_balanced_json(&json);
+    // one complete event per span, exactly — identified by its span_id
+    // arg (synthesized per-worker lanes carry no span_id)
+    assert_eq!(json.matches("\"span_id\":").count(), n, "span count round-trips");
+    assert!(json.matches("\"ph\":\"X\"").count() >= n);
+    for key in ["\"ts\":", "\"dur\":", "\"pid\":", "\"tid\":", "\"name\":"] {
+        assert!(json.contains(key), "missing {key}");
+    }
+}
