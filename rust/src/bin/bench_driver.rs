@@ -938,6 +938,81 @@ fn bench_wire(
         let (wall, part, comm) = samples[samples.len() / 2];
         emit("wire_shuffle", world, wall, part, comm);
     }
+
+    // ---- monolithic vs streamed AllToAll, world 1 and 3 -----------
+    // The same parts through both communicator paths, so the wall
+    // delta is exactly what chunked encode/wire overlap buys. The
+    // streamed record also carries the run's overlap_ns (ns encoding
+    // and transfer coexisted, summed across workers) and the peak
+    // send-queue depth.
+    for world in [1usize, 3] {
+        let mut samples: Vec<(f64, f64, u64, u64)> = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let outs = run_workers(world, &CommConfig::default(), move |ctx| {
+                ctx.set_parallelism(threads);
+                let t = worker_partition(n, world, ctx.rank(), 0.9, 0x77E2);
+                let w = ctx.world();
+                let parts: Vec<rylon::table::Table> = (0..w)
+                    .map(|d| {
+                        let rows: Vec<usize> =
+                            (0..t.num_rows()).filter(|r| r % w == d).collect();
+                        rylon::table::take::take_table(&t, &rows)
+                    })
+                    .collect();
+                let comm = ctx.communicator();
+                let t0 = Instant::now();
+                std::hint::black_box(
+                    comm.shuffle_tables(parts.clone()).expect("monolithic").num_rows(),
+                );
+                let mono = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                std::hint::black_box(
+                    comm.shuffle_tables_streamed(parts).expect("streamed").num_rows(),
+                );
+                let stream = t1.elapsed().as_secs_f64();
+                let st = comm.last_stream_stats();
+                (mono, stream, st.overlap_ns, st.chunks_in_flight)
+            });
+            samples.push((
+                outs.iter().map(|o| o.0).fold(0.0f64, f64::max),
+                outs.iter().map(|o| o.1).fold(0.0f64, f64::max),
+                outs.iter().map(|o| o.2).sum::<u64>(),
+                outs.iter().map(|o| o.3).max().unwrap_or(0),
+            ));
+        }
+        samples.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let (mono, stream, overlap_ns, chunks_in_flight) = samples[samples.len() / 2];
+        for (label, wall) in [("wire_shuffle_mono", mono), ("wire_shuffle_stream", stream)] {
+            report.add_row(vec![
+                format!("{label}_w{world}"),
+                threads.to_string(),
+                fmt_s(wall),
+                "-".into(),
+            ]);
+        }
+        records.push(BenchRecord {
+            target: "local".into(),
+            op: "wire_shuffle_mono".into(),
+            rows: n,
+            world,
+            threads,
+            wall_secs: mono,
+            comm_secs: mono,
+            ..BenchRecord::default()
+        });
+        records.push(BenchRecord {
+            target: "local".into(),
+            op: "wire_shuffle_stream".into(),
+            rows: n,
+            world,
+            threads,
+            wall_secs: stream,
+            comm_secs: stream,
+            overlap_ns,
+            chunks_in_flight,
+            ..BenchRecord::default()
+        });
+    }
     Ok(())
 }
 

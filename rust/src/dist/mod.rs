@@ -115,6 +115,12 @@ pub struct OpStats {
     pub acks_timed_out: u64,
     /// Peers declared dead during this operator.
     pub peer_failures: u64,
+    /// Nanoseconds the streamed shuffle overlapped chunk encoding with
+    /// wire transfer (per-worker observation, wall-clock-paced).
+    pub overlap_ns: u64,
+    /// Peak encoded-but-unsent chunk frames across this operator's
+    /// streamed shuffles (a high-water mark, so merges take the max).
+    pub chunks_in_flight: u64,
 }
 
 impl OpStats {
@@ -161,6 +167,11 @@ impl OpStats {
             agg.frames_corrupt += s.frames_corrupt;
             agg.acks_timed_out += s.acks_timed_out;
             agg.peer_failures += s.peer_failures;
+            // Overlap is a per-worker observation like the link-health
+            // counters (sum); the in-flight peak is a high-water mark
+            // (max — the deepest queue seen anywhere in the cluster).
+            agg.overlap_ns += s.overlap_ns;
+            agg.chunks_in_flight = agg.chunks_in_flight.max(s.chunks_in_flight);
         }
         agg
     }
@@ -188,6 +199,8 @@ impl OpStats {
             agg.frames_corrupt += s.frames_corrupt;
             agg.acks_timed_out += s.acks_timed_out;
             agg.peer_failures += s.peer_failures;
+            agg.overlap_ns += s.overlap_ns;
+            agg.chunks_in_flight += s.chunks_in_flight;
         }
         agg
     }
@@ -208,6 +221,8 @@ impl OpStats {
         reg.add(&format!("{prefix}frames_corrupt"), self.frames_corrupt);
         reg.add(&format!("{prefix}acks_timed_out"), self.acks_timed_out);
         reg.add(&format!("{prefix}peer_failures"), self.peer_failures);
+        reg.add(&format!("{prefix}overlap_ns"), self.overlap_ns);
+        reg.add(&format!("{prefix}chunks_in_flight"), self.chunks_in_flight);
     }
 
     /// Fold one shuffle's phases into this operator's totals
@@ -221,6 +236,8 @@ impl OpStats {
         self.frames_corrupt += s.frames_corrupt;
         self.acks_timed_out += s.acks_timed_out;
         self.peer_failures += s.peer_failures;
+        self.overlap_ns += s.overlap_ns;
+        self.chunks_in_flight = self.chunks_in_flight.max(s.chunks_in_flight);
         if s.elided {
             self.shuffles_elided += 1;
         } else {
@@ -280,6 +297,8 @@ mod tests {
             frames_corrupt: 1,
             acks_timed_out: 2,
             peer_failures: 0,
+            overlap_ns: 100,
+            chunks_in_flight: 4,
         };
         let b = OpStats {
             partition_secs: 0.25,
@@ -295,6 +314,8 @@ mod tests {
             frames_corrupt: 0,
             acks_timed_out: 1,
             peer_failures: 1,
+            overlap_ns: 250,
+            chunks_in_flight: 2,
         };
         let m = OpStats::bsp_max(&[a, b]);
         assert_eq!(m.partition_secs, 1.0);
@@ -312,6 +333,9 @@ mod tests {
         assert_eq!(m.frames_corrupt, 1);
         assert_eq!(m.acks_timed_out, 3);
         assert_eq!(m.peer_failures, 1);
+        // overlap sums like link health; the in-flight peak is a max
+        assert_eq!(m.overlap_ns, 350);
+        assert_eq!(m.chunks_in_flight, 4);
     }
 
     #[test]
@@ -338,6 +362,8 @@ mod tests {
             frames_corrupt: 1,
             acks_timed_out: 2,
             peer_failures: 0,
+            overlap_ns: 100,
+            chunks_in_flight: 4,
         };
         let b = OpStats { partition_secs: 0.25, comm_secs: 3.0, used_kernel: true, ..a };
         let mx = OpStats::bsp_max(&[a, b]);
@@ -349,6 +375,10 @@ mod tests {
         // SPMD-identical gauges: max picks one, sum counts rank×superstep
         assert_eq!((mx.shuffles, sm.shuffles), (2, 4));
         assert_eq!((mx.shuffles_elided, sm.shuffles_elided), (1, 2));
+        // the in-flight high-water mark: bsp_max keeps the peak, the
+        // plain total doubles it like every other numeric field
+        assert_eq!((mx.chunks_in_flight, sm.chunks_in_flight), (4, 8));
+        assert_eq!((mx.overlap_ns, sm.overlap_ns), (200, 200));
         // additive observations: summed by both merges
         for m in [&mx, &sm] {
             assert_eq!(m.comm_bytes, 20);
@@ -390,6 +420,8 @@ mod tests {
             rows_out: 12,
             frames_retried: 2,
             frames_corrupt: 1,
+            overlap_ns: 30,
+            chunks_in_flight: 5,
             ..ShuffleStats::default()
         };
         op.absorb(&s);
@@ -400,6 +432,8 @@ mod tests {
         assert!(op.used_kernel);
         assert_eq!(op.frames_retried, 4);
         assert_eq!(op.frames_corrupt, 2);
+        assert_eq!(op.overlap_ns, 60);
+        assert_eq!(op.chunks_in_flight, 5);
         assert_eq!(op.shuffles, 2);
         // rows are the operator's job, not absorb's
         assert_eq!(op.rows_in, 0);

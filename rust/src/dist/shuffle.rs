@@ -65,6 +65,14 @@ pub struct ShuffleStats {
     pub acks_timed_out: u64,
     /// Peers declared dead during this shuffle.
     pub peer_failures: u64,
+    /// Nanoseconds during which chunk encoding and wire transfer ran
+    /// concurrently on the streamed AllToAll (see
+    /// [`crate::net::StreamStats::overlap_ns`]). Timing-dependent
+    /// observability only — never part of the determinism contract.
+    pub overlap_ns: u64,
+    /// Peak encoded-but-unsent chunk frames during the streamed
+    /// AllToAll (send-queue high-water mark).
+    pub chunks_in_flight: u64,
 }
 
 impl ShuffleStats {
@@ -145,28 +153,35 @@ fn shuffle_with(
     // Boundary between the local superstep and the comm superstep.
     ctx.checkpoint("shuffle:alltoall")?;
 
-    // Comm superstep: AllToAll the parts on the concat-on-decode path —
-    // incoming wire buffers decode straight into one pre-sized output
-    // table, and the rank's own partition loops back unserialized
-    // (see `crate::net::Communicator::shuffle_tables`).
+    // Comm superstep: streamed AllToAll on the concat-on-decode path —
+    // chunk frames go to the wire while later chunks are still
+    // encoding, incoming frames land in pre-sized buffers that decode
+    // straight into one output table, and the rank's own partition
+    // loops back unserialized
+    // (see `crate::net::Communicator::shuffle_tables_streamed`).
     let mut comm_span =
         crate::trace::span(crate::trace::SpanKind::Superstep, "shuffle:alltoall");
     let t1 = Instant::now();
     let comm = ctx.communicator();
     let bytes_before = comm.comm_bytes();
     let health_before = comm.link_health();
-    let out = comm.shuffle_tables(parts)?;
+    let out = comm.shuffle_tables_streamed(parts)?;
     stats.comm_bytes = comm.comm_bytes() - bytes_before;
     let health = comm.link_health().since(&health_before);
     stats.frames_retried = health.frames_retried;
     stats.frames_corrupt = health.frames_corrupt;
     stats.acks_timed_out = health.acks_timed_out;
     stats.peer_failures = health.peer_failures;
+    let stream = comm.last_stream_stats();
+    stats.overlap_ns = stream.overlap_ns;
+    stats.chunks_in_flight = stream.chunks_in_flight;
     stats.comm_secs = t1.elapsed().as_secs_f64();
     stats.rows_out = out.num_rows();
     comm_span.add("bytes", stats.comm_bytes);
     comm_span.add("rows_out", stats.rows_out as u64);
     comm_span.add("retried", stats.frames_retried);
+    comm_span.add("overlap_ns", stats.overlap_ns);
+    comm_span.add("chunks_in_flight", stats.chunks_in_flight);
     Ok((out, stats))
 }
 

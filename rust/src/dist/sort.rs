@@ -141,13 +141,14 @@ pub fn dist_sort(ctx: &mut CylonContext, t: &Table, col: usize) -> Result<(Table
     // Superstep boundary between range partitioning and the AllToAll.
     ctx.checkpoint("sort:alltoall")?;
 
-    // 4. Shuffle ranges into place (concat-on-decode: incoming parts
-    //    decode straight into one table) and sort locally.
+    // 4. Shuffle ranges into place on the streamed chunked path
+    //    (chunks hit the wire while later chunks encode; incoming
+    //    parts decode straight into one table) and sort locally.
     let mut shuffle_span =
         crate::trace::span(crate::trace::SpanKind::Superstep, "sort:alltoall");
     let t3 = Instant::now();
     let comm = ctx.communicator();
-    let merged = comm.shuffle_tables(parts)?;
+    let merged = comm.shuffle_tables_streamed(parts)?;
     stats.comm_bytes = comm.comm_bytes() - bytes_before;
     comm_secs += t3.elapsed().as_secs_f64();
     shuffle_span.add("bytes", stats.comm_bytes);

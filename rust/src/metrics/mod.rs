@@ -237,6 +237,13 @@ pub struct BenchRecord {
     /// Morsel/slice worker panics contained by the panic-isolation
     /// boundary during the run.
     pub worker_panics: u64,
+    /// Nanoseconds chunk encoding and wire transfer overlapped during
+    /// streamed shuffles (0 for monolithic or local runs; see
+    /// [`crate::net::StreamStats`]).
+    pub overlap_ns: u64,
+    /// Peak streamed chunk frames queued for send at once (0 off the
+    /// streamed path).
+    pub chunks_in_flight: u64,
 }
 
 fn json_escape(s: &str) -> String {
@@ -250,7 +257,8 @@ impl BenchRecord {
              \"wall_secs\":{:.6},\"partition_secs\":{:.6},\"comm_secs\":{:.6},\
              \"peak_rows\":{},\"spill_bytes\":{},\"frames_retried\":{},\
              \"frames_corrupt\":{},\"acks_timed_out\":{},\"peer_failures\":{},\
-             \"cancels\":{},\"deadline_exceeded\":{},\"worker_panics\":{}}}",
+             \"cancels\":{},\"deadline_exceeded\":{},\"worker_panics\":{},\
+             \"overlap_ns\":{},\"chunks_in_flight\":{}}}",
             json_escape(&self.target),
             json_escape(&self.op),
             self.rows,
@@ -267,7 +275,9 @@ impl BenchRecord {
             self.peer_failures,
             self.cancels,
             self.deadline_exceeded,
-            self.worker_panics
+            self.worker_panics,
+            self.overlap_ns,
+            self.chunks_in_flight
         )
     }
 }
@@ -371,6 +381,8 @@ mod tests {
             cancels: 1,
             deadline_exceeded: 0,
             worker_panics: 3,
+            overlap_ns: 987,
+            chunks_in_flight: 6,
         };
         let doc = bench_records_to_json(&[rec]);
         assert!(doc.contains("\"schema_version\": 1"));
@@ -388,6 +400,8 @@ mod tests {
         assert!(doc.contains("\"cancels\":1"));
         assert!(doc.contains("\"deadline_exceeded\":0"));
         assert!(doc.contains("\"worker_panics\":3"));
+        assert!(doc.contains("\"overlap_ns\":987"));
+        assert!(doc.contains("\"chunks_in_flight\":6"));
         // Empty set still yields a valid document.
         assert!(bench_records_to_json(&[]).contains("\"results\": []"));
     }
@@ -412,6 +426,8 @@ mod tests {
             cancels: 0,
             deadline_exceeded: 0,
             worker_panics: 0,
+            overlap_ns: 0,
+            chunks_in_flight: 0,
         };
         let path = std::env::temp_dir().join(format!(
             "rylon_bench_append_{}_{:?}.json",

@@ -7,12 +7,17 @@
 
 use super::model::NetworkModel;
 use super::serialize::{
-    concat_decode_parts, deserialize_table_par, serialize_table_par, WirePart,
+    chunk_ranges, concat_decode_parts, deserialize_table_par, encode_table_chunk,
+    serialize_table_par, table_wire_size, ChunkHeader, WirePart, DEFAULT_CHUNK_BYTES,
 };
 use super::{CommConfig, LinkHealth, Transport, CANCEL_TAG, TRACE_TAG};
 use crate::error::{Error, Result};
 use crate::lifecycle::QueryControl;
 use crate::table::Table;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Collective op codes folded into tags (low byte).
 const OP_ALLTOALL: u64 = 1;
@@ -21,6 +26,27 @@ const OP_BCAST: u64 = 3;
 const OP_BARRIER: u64 = 4;
 const OP_ALLREDUCE: u64 = 5;
 const OP_ALLGATHER: u64 = 6;
+const OP_SHUFFLE_STREAM: u64 = 7;
+
+/// Observability counters from the most recent
+/// [`Communicator::shuffle_tables_streamed`] superstep on this rank.
+/// All zeros before the first streamed shuffle, at world 1 (no wire),
+/// and on the monolithic path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Nanoseconds during which chunk encoding and wire transfer were
+    /// simultaneously in progress — the time the streamed path hides
+    /// relative to serialize-then-send. Timing-dependent (never part of
+    /// any determinism contract); results are bit-identical regardless.
+    pub overlap_ns: u64,
+    /// Peak number of chunks encoded but not yet handed to the
+    /// transport (send-queue high-water mark).
+    pub chunks_in_flight: u64,
+    /// Chunk frames sent to remote peers.
+    pub chunks_sent: u64,
+    /// Chunk frames received from remote peers.
+    pub chunks_received: u64,
+}
 
 /// A communicator: one rank's handle to the collective layer
 /// (the `cylon::net::Communicator` analog).
@@ -34,6 +60,12 @@ pub struct Communicator {
     /// the process-wide knob at call time", so bare communicators track
     /// [`crate::ops::parallel::set_parallelism`] like every other path.
     parallelism: usize,
+    /// Stall deadline for the streamed-shuffle progress loop (from
+    /// [`CommConfig::recv_timeout`]): no send progress and no frame
+    /// arrival for this long surfaces a comm error, never a hang.
+    recv_timeout: Duration,
+    /// Counters from the most recent streamed shuffle on this rank.
+    stream: StreamStats,
 }
 
 impl Communicator {
@@ -45,13 +77,22 @@ impl Communicator {
             model: NetworkModel::new(config.profile, apply),
             generation: 0,
             parallelism: 0,
+            recv_timeout: config.recv_timeout,
+            stream: StreamStats::default(),
         }
     }
 
     /// Build a communicator with explicit model-application control
     /// (the BSP simulator accounts costs without waiting).
     pub fn with_model(transport: Box<dyn Transport>, model: NetworkModel) -> Self {
-        Communicator { transport, model, generation: 0, parallelism: 0 }
+        Communicator {
+            transport,
+            model,
+            generation: 0,
+            parallelism: 0,
+            recv_timeout: Duration::from_secs(30),
+            stream: StreamStats::default(),
+        }
     }
 
     /// Thread budget used to serialize outgoing partitions (speed only —
@@ -282,6 +323,268 @@ impl Communicator {
             })
             .collect();
         concat_decode_parts(&srcs, threads)
+    }
+
+    /// Streamed shuffle: the same result as
+    /// [`Communicator::shuffle_tables`] — **byte-identical** output on
+    /// every rank — but serialize and wire transfer overlap instead of
+    /// running as strict phases.
+    ///
+    /// Each remote partition is cut into fixed-size chunks by
+    /// [`chunk_ranges`] (pure arithmetic over the partition's wire
+    /// size, [`DEFAULT_CHUNK_BYTES`] granularity). Encoder workers on
+    /// the communicator's thread budget encode chunks independently
+    /// ([`encode_table_chunk`]) and hand them to per-destination send
+    /// queues; this rank's progress loop drains those queues to the
+    /// wire the moment frames exist, and between sends polls
+    /// [`Transport::recv_any_tagged`] so arriving chunks from *any*
+    /// peer are placed into their pre-sized receive buffer immediately
+    /// — wall clock approaches `max(serialize, wire)` rather than their
+    /// sum. Chunk placement is by byte range carried in each
+    /// [`ChunkHeader`], so arrival order (and therefore scheduling) is
+    /// free: the assembled buffer per source equals the monolithic wire
+    /// image exactly, and decode reuses the same concat-on-decode path.
+    ///
+    /// The own partition keeps its loopback fast path (never encoded,
+    /// never charged), and world 1 is the identity with all
+    /// [`StreamStats`] zero.
+    pub fn shuffle_tables_streamed(&mut self, parts: Vec<Table>) -> Result<Table> {
+        self.shuffle_tables_streamed_chunked(parts, DEFAULT_CHUNK_BYTES)
+    }
+
+    /// [`Communicator::shuffle_tables_streamed`] with an explicit chunk
+    /// granularity — a test/bench knob. Output is byte-identical at
+    /// *every* chunk size (including chunks larger than any part, which
+    /// degenerate to one frame per partition); only overlap and frame
+    /// counts change.
+    pub fn shuffle_tables_streamed_chunked(
+        &mut self,
+        parts: Vec<Table>,
+        chunk_bytes: usize,
+    ) -> Result<Table> {
+        let (rank, world) = (self.rank(), self.world());
+        if parts.len() != world {
+            return Err(Error::comm(format!(
+                "shuffle needs {world} parts, got {}",
+                parts.len()
+            )));
+        }
+        self.stream = StreamStats::default();
+        if world == 1 {
+            return Ok(parts.into_iter().next().expect("one part"));
+        }
+        let threads = self.wire_parallelism();
+        let tag = self.next_tag(OP_SHUFFLE_STREAM);
+        let mut span = crate::trace::span(crate::trace::SpanKind::Wire, "wire:stream");
+
+        // Chunk plan: pure extents arithmetic per destination —
+        // identical on every run regardless of thread count or
+        // scheduling. Every part (even an empty one) yields at least
+        // one chunk, so receivers learn each source's geometry from
+        // whichever of its frames lands first and need no announce.
+        struct Item {
+            dst: usize,
+            chunk_idx: u32,
+            n_chunks: u32,
+            start: usize,
+            len: usize,
+            total: usize,
+        }
+        let mut items: Vec<Item> = Vec::new();
+        for s in 1..world {
+            let dst = (rank + s) % world;
+            let total = table_wire_size(&parts[dst]);
+            let ranges = chunk_ranges(total, chunk_bytes);
+            let n_chunks = ranges.len() as u32;
+            for (i, (start, len)) in ranges.into_iter().enumerate() {
+                items.push(Item { dst, chunk_idx: i as u32, n_chunks, start, len, total });
+            }
+        }
+        // Interleave early chunks across destinations (ring fairness):
+        // no receiver waits behind another destination's whole table.
+        items.sort_by_key(|it| (it.chunk_idx, (it.dst + world - rank) % world));
+        let n_items = items.len();
+        let enc_threads = threads.min(n_items).max(1);
+
+        let t0 = Instant::now();
+        let cursor = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let queued = AtomicU64::new(0);
+        let peak_in_flight = AtomicU64::new(0);
+        let enc_last_ns = AtomicU64::new(0);
+        let queues: Vec<Mutex<VecDeque<Vec<u8>>>> =
+            (0..world).map(|_| Mutex::new(VecDeque::new())).collect();
+
+        /// Receive-side assembly for one source's wire image.
+        struct Incoming {
+            buf: Vec<u8>,
+            seen: Vec<bool>,
+            got: usize,
+        }
+        let mut incoming: Vec<Option<Incoming>> = (0..world).map(|_| None).collect();
+        let (mut sent, mut recvd, mut complete) = (0usize, 0u64, 0usize);
+        let mut w0_ns: Option<u64> = None;
+        let total_remote = world - 1;
+
+        let run: Result<()> = std::thread::scope(|s| {
+            let (items_r, parts_r, queues_r) = (&items, &parts, &queues);
+            let (cursor_r, abort_r) = (&cursor, &abort);
+            let (queued_r, peak_r, enc_r) = (&queued, &peak_in_flight, &enc_last_ns);
+            for _ in 0..enc_threads {
+                let sink = crate::trace::current();
+                s.spawn(move || {
+                    crate::trace::with_sink(&sink, || loop {
+                        if abort_r.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = cursor_r.fetch_add(1, Ordering::Relaxed);
+                        let Some(it) = items_r.get(i) else { break };
+                        let frame = encode_table_chunk(
+                            &parts_r[it.dst],
+                            rank as u32,
+                            it.chunk_idx,
+                            it.n_chunks,
+                            it.start,
+                            it.len,
+                            it.total,
+                        );
+                        let depth = queued_r.fetch_add(1, Ordering::Relaxed) + 1;
+                        peak_r.fetch_max(depth, Ordering::Relaxed);
+                        queues_r[it.dst].lock().unwrap().push_back(frame);
+                        enc_r.fetch_max(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    });
+                });
+            }
+            let poll = Duration::from_millis(1);
+            let mut last_progress = Instant::now();
+            let r: Result<()> = (|| {
+                while sent < n_items || complete < total_remote {
+                    // Drain encoded frames to the wire as soon as they
+                    // exist; `send` never blocks on the receiver.
+                    loop {
+                        let mut any = false;
+                        for d in 0..world {
+                            let frame = queues_r[d].lock().unwrap().pop_front();
+                            if let Some(frame) = frame {
+                                queued_r.fetch_sub(1, Ordering::Relaxed);
+                                w0_ns.get_or_insert_with(|| t0.elapsed().as_nanos() as u64);
+                                self.transport.send(d, tag, frame)?;
+                                sent += 1;
+                                any = true;
+                                last_progress = Instant::now();
+                            }
+                        }
+                        if !any {
+                            break;
+                        }
+                    }
+                    if sent == n_items && complete == total_remote {
+                        break;
+                    }
+                    // Readiness poll: place whichever peer's chunk
+                    // lands next — no per-source blocking order.
+                    match self.transport.recv_any_tagged(tag, poll)? {
+                        Some((src, frame)) => {
+                            let (h, payload) = ChunkHeader::decode(&frame)?;
+                            if h.part as usize != src {
+                                return Err(Error::comm(format!(
+                                    "chunk for part {} arrived from rank {src}",
+                                    h.part
+                                )));
+                            }
+                            let inc = incoming[src].get_or_insert_with(|| Incoming {
+                                buf: vec![0u8; h.total_bytes as usize],
+                                seen: vec![false; h.n_chunks as usize],
+                                got: 0,
+                            });
+                            if inc.buf.len() != h.total_bytes as usize
+                                || inc.seen.len() != h.n_chunks as usize
+                            {
+                                return Err(Error::comm(format!(
+                                    "inconsistent chunk geometry from rank {src}"
+                                )));
+                            }
+                            // Placement by byte range: out-of-order and
+                            // duplicate frames rewrite the same bytes.
+                            let (start, len) = (h.start as usize, h.len as usize);
+                            if payload.len() != len
+                                || len > inc.buf.len()
+                                || start > inc.buf.len() - len
+                                || h.chunk_idx >= h.n_chunks
+                            {
+                                return Err(Error::comm(format!(
+                                    "malformed chunk frame from rank {src}: \
+                                     range {start}+{len} of {} bytes",
+                                    inc.buf.len()
+                                )));
+                            }
+                            inc.buf[start..start + len].copy_from_slice(payload);
+                            if !inc.seen[h.chunk_idx as usize] {
+                                inc.seen[h.chunk_idx as usize] = true;
+                                inc.got += 1;
+                                if inc.got == inc.seen.len() {
+                                    complete += 1;
+                                }
+                            }
+                            self.model.charge(frame.len());
+                            recvd += 1;
+                            last_progress = Instant::now();
+                        }
+                        None => {
+                            if last_progress.elapsed() >= self.recv_timeout {
+                                return Err(Error::comm(format!(
+                                    "streamed shuffle stalled for {:?} \
+                                     ({sent}/{n_items} chunks sent, \
+                                     {complete}/{total_remote} peers complete)",
+                                    self.recv_timeout
+                                )));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })();
+            if r.is_err() {
+                // Encoders check this each iteration; remaining work is
+                // abandoned before the scope joins them.
+                abort.store(true, Ordering::Relaxed);
+            }
+            r
+        });
+        run?;
+        self.transport.flush()?;
+
+        let w1 = t0.elapsed().as_nanos() as u64;
+        let e1 = enc_last_ns.load(Ordering::Relaxed);
+        self.stream = StreamStats {
+            overlap_ns: w0_ns.map_or(0, |w0| e1.min(w1).saturating_sub(w0)),
+            chunks_in_flight: peak_in_flight.load(Ordering::Relaxed),
+            chunks_sent: sent as u64,
+            chunks_received: recvd,
+        };
+        span.add("chunks_sent", self.stream.chunks_sent);
+        span.add("chunks_recv", self.stream.chunks_received);
+        span.add("overlap_ns", self.stream.overlap_ns);
+        span.add("peak_in_flight", self.stream.chunks_in_flight);
+
+        let srcs: Vec<WirePart<'_>> = (0..world)
+            .map(|src| {
+                if src == rank {
+                    WirePart::Table(&parts[rank])
+                } else {
+                    let inc = incoming[src].as_ref().expect("remote part complete");
+                    WirePart::Bytes(inc.buf.as_slice())
+                }
+            })
+            .collect();
+        concat_decode_parts(&srcs, threads)
+    }
+
+    /// Counters from the most recent
+    /// [`Communicator::shuffle_tables_streamed`] on this rank (zeros
+    /// before the first streamed shuffle and at world 1).
+    pub fn last_stream_stats(&self) -> StreamStats {
+        self.stream
     }
 
     /// Gather byte blobs at `root` (None elsewhere).
@@ -565,6 +868,91 @@ mod tests {
         // World 1: own payload comes straight back.
         let solo = run_world(1, |mut c| c.gather_trace_bytes(&[7, 7]));
         assert_eq!(solo[0], vec![Some(vec![7, 7])]);
+    }
+
+    #[test]
+    fn streamed_shuffle_is_bit_identical_to_monolithic() {
+        use crate::net::serialize::serialize_table;
+        let world = 3;
+        // A small chunk size forces many frames per part (multi-chunk,
+        // interleaved, ragged tails); a huge one degenerates to a
+        // single frame per part. Both must reproduce the monolithic
+        // bytes exactly.
+        for chunk in [512usize, 1 << 30] {
+            let streamed = run_world(world, move |mut c| {
+                let t = paper_table(4000, 1.0, 17 + c.rank() as u64);
+                let parts = hash_partition(&t, 0, world).unwrap();
+                c.shuffle_tables_streamed_chunked(parts, chunk).unwrap()
+            });
+            let mono = run_world(world, move |mut c| {
+                let t = paper_table(4000, 1.0, 17 + c.rank() as u64);
+                let parts = hash_partition(&t, 0, world).unwrap();
+                c.shuffle_tables(parts).unwrap()
+            });
+            for (s, m) in streamed.iter().zip(&mono) {
+                assert_eq!(serialize_table(s), serialize_table(m), "chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_shuffle_world_one_is_identity_with_zero_stats() {
+        let out = run_world(1, |mut c| {
+            let t = paper_table(50, 1.0, 9);
+            let parts = hash_partition(&t, 0, 1).unwrap();
+            let got = c.shuffle_tables_streamed(parts).unwrap();
+            (t.data_equals(&got), c.comm_bytes(), c.last_stream_stats())
+        });
+        assert_eq!(out, vec![(true, 0, StreamStats::default())]);
+    }
+
+    #[test]
+    fn streamed_shuffle_handles_empty_remote_parts() {
+        // Rank 0 routes everything to itself: ranks 1 and 2 receive
+        // only empty remote parts (header-only single-chunk frames).
+        let world = 3;
+        let out = run_world(world, move |mut c| {
+            let rank = c.rank();
+            let parts: Vec<Table> = (0..world)
+                .map(|d| {
+                    let rows = if rank == 0 && d == 0 { 120 } else { 0 };
+                    paper_table(rows, 1.0, 3)
+                })
+                .collect();
+            let t = c.shuffle_tables_streamed_chunked(parts, 256).unwrap();
+            (t.num_rows(), t.num_columns())
+        });
+        assert_eq!(out[0].0, 120);
+        assert_eq!(out[1].0, 0);
+        assert_eq!(out[2].0, 0);
+        // Schema survives even when every received part was empty.
+        assert!(out.iter().all(|&(_, ncols)| ncols > 0));
+    }
+
+    #[test]
+    fn streamed_shuffle_counts_frames_per_chunk_plan() {
+        use crate::net::serialize::{chunk_ranges, table_wire_size};
+        let world = 2;
+        let chunk = 256usize;
+        let out = run_world(world, move |mut c| {
+            let t = paper_table(500, 1.0, 41 + c.rank() as u64);
+            let parts = hash_partition(&t, 0, world).unwrap();
+            let expect_sent: usize = parts
+                .iter()
+                .enumerate()
+                .filter(|&(d, _)| d != c.rank())
+                .map(|(_, p)| chunk_ranges(table_wire_size(p), chunk).len())
+                .sum();
+            let got = c.shuffle_tables_streamed_chunked(parts, chunk).unwrap();
+            (got.num_rows() > 0, expect_sent, c.last_stream_stats())
+        });
+        for (nonempty, expect_sent, stats) in out {
+            assert!(nonempty);
+            assert_eq!(stats.chunks_sent as usize, expect_sent);
+            // Received counts are the peer's plan; with a symmetric
+            // generator both sides send at least one frame.
+            assert!(stats.chunks_received >= 1);
+        }
     }
 
     #[test]

@@ -178,6 +178,51 @@ impl Transport for ChannelTransport {
         }
     }
 
+    fn recv_any_tagged(
+        &mut self,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Option<(usize, Vec<u8>)>> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(ctl) = &self.control {
+                ctl.check()?;
+            }
+            // Parked frames with this tag (left by tag-matched receives
+            // that skipped past them) are served first. Cancel notices
+            // are never parked, so they cannot hide behind this path.
+            let found = self
+                .parked
+                .iter()
+                .find(|(&(_, t), q)| t == tag && !q.is_empty())
+                .map(|(&(src, _), _)| src);
+            if let Some(src) = found {
+                let payload = self.parked.get_mut(&(src, tag)).unwrap().pop_front().unwrap();
+                return Ok(Some((src, payload)));
+            }
+            let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
+            else {
+                return Ok(None);
+            };
+            // Bounded wait so the control token is re-polled at
+            // LIFECYCLE_POLL even while no frame arrives.
+            match self.receiver.recv_timeout(remaining.min(LIFECYCLE_POLL)) {
+                Ok(m) if m.tag == CANCEL_TAG => return Err(self.cancelled_by_peer(m.src)),
+                Ok(m) if m.tag == tag => return Ok(Some((m.src, m.payload))),
+                Ok(m) => {
+                    self.parked.entry((m.src, m.tag)).or_default().push_back(m.payload)
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::comm_failure(
+                        CommFailure::fatal("all channel endpoints dropped")
+                            .at_rank(self.rank),
+                    ))
+                }
+            }
+        }
+    }
+
     fn set_control(&mut self, ctl: Option<QueryControl>) {
         self.control = ctl;
     }

@@ -290,6 +290,16 @@ impl Transport for FaultyTransport {
         self.inner.recv_any(timeout)
     }
 
+    fn recv_any_tagged(
+        &mut self,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Option<(usize, Vec<u8>)>> {
+        self.tick()?;
+        self.flush_held()?;
+        self.inner.recv_any_tagged(tag, timeout)
+    }
+
     fn set_control(&mut self, ctl: Option<crate::lifecycle::QueryControl>) {
         // Fault injection has no lifecycle semantics of its own: the
         // token always belongs to the layer that actually intercepts

@@ -66,6 +66,59 @@
 //! assert_eq!(back.schema(), t.schema());
 //! ```
 //!
+//! # Chunked streaming shuffle
+//!
+//! The monolithic shuffle ([`Communicator::shuffle_tables`]) runs
+//! partition → full serialize → AllToAll → decode as strict phases, so
+//! its wall clock is their *sum*. The streamed path
+//! ([`Communicator::shuffle_tables_streamed`]) cuts each remote part's
+//! wire image into ~1 MiB chunks ([`serialize::chunk_ranges`]) and
+//! pipelines the phases: encoder workers pull `(destination, chunk)`
+//! work items and fill per-destination send queues, while the transport
+//! loop drains the queues and interleaves sends with a multi-peer
+//! readiness receive ([`Transport::recv_any_tagged`]) — so a superstep's
+//! wall clock approaches max(serialize, wire) instead of their sum.
+//!
+//! Every chunk frame is a 36-byte [`serialize::ChunkHeader`] —
+//! `{part, chunk_idx, n_chunks, start, len, total_bytes}`, all LE —
+//! followed by the bytes `[start, start+len)` of the part's wire image,
+//! produced in place by [`serialize::encode_wire_range`] without ever
+//! materializing the whole image. Any first-arriving chunk lets the
+//! receiver pre-size the part buffer (`total_bytes`), and every chunk
+//! carries its own placement, so arrival order — and therefore overlap
+//! — is unconstrained.
+//!
+//! **Determinism argument.** Chunk boundaries derive only from
+//! [`serialize::table_wire_size`]'s extents arithmetic (never from
+//! thread count or scheduling); each chunk's bytes equal the
+//! corresponding slice of the monolithic image; and placement is by
+//! byte range, so the assembled buffer is byte-identical to the
+//! monolithic path no matter when chunks arrive. Under the reliability
+//! layer the frames are ordinary tagged payloads — retransmits and
+//! duplicates are masked below, and a duplicate that did surface would
+//! rewrite the same bytes. `tests/prop_stream_shuffle.rs` pins
+//! streamed ≡ monolithic at parallelism 1/2/7 × world 1/3, with and
+//! without fault schedules.
+//!
+//! ```
+//! use rylon::net::serialize::{
+//!     chunk_ranges, encode_table_chunk, serialize_table, table_wire_size, ChunkHeader,
+//! };
+//! use rylon::table::{Array, Table};
+//!
+//! let t = Table::from_arrays(vec![("k", Array::from_i64((0..500).collect()))]).unwrap();
+//! let total = table_wire_size(&t);
+//! let ranges = chunk_ranges(total, 1024); // pure function of the image size
+//! let mut image = vec![0u8; total];
+//! // Deliver in reverse order: placement is by byte range, not arrival.
+//! for (i, &(start, len)) in ranges.iter().enumerate().rev() {
+//!     let frame = encode_table_chunk(&t, 0, i as u32, ranges.len() as u32, start, len, total);
+//!     let (h, payload) = ChunkHeader::decode(&frame).unwrap();
+//!     image[h.start as usize..(h.start + h.len) as usize].copy_from_slice(payload);
+//! }
+//! assert_eq!(image, serialize_table(&t)); // byte-identical to the monolithic path
+//! ```
+//!
 //! # Failure semantics (reliability rev)
 //!
 //! Real networks drop, corrupt, delay, and sever. The layer's failure
@@ -173,7 +226,7 @@ pub mod reliable;
 pub mod serialize;
 pub mod tcp;
 
-pub use alltoall::Communicator;
+pub use alltoall::{Communicator, StreamStats};
 pub use channel::ChannelFabric;
 pub use fault::{Fault, FaultPlan, FaultyTransport};
 pub use model::{NetworkModel, NetworkProfile};
@@ -258,6 +311,22 @@ pub trait Transport: Send {
     fn recv_any(&mut self, timeout: Duration) -> Result<Option<(usize, u64, Vec<u8>)>> {
         let _ = timeout;
         Err(Error::internal("transport does not support recv_any"))
+    }
+
+    /// Receive the next frame bearing exactly `tag` from **any**
+    /// source, or `None` on timeout — the streamed shuffle's multi-peer
+    /// readiness primitive: one superstep's chunk frames drain in
+    /// arrival order across all peers instead of one blocking `recv`
+    /// per peer, while frames with other tags are parked untouched for
+    /// their own supersteps. Backends that cannot provide it cannot
+    /// carry [`Communicator::shuffle_tables_streamed`].
+    fn recv_any_tagged(
+        &mut self,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Option<(usize, Vec<u8>)>> {
+        let _ = (tag, timeout);
+        Err(Error::internal("transport does not support recv_any_tagged"))
     }
 
     /// Block until every sent frame is known delivered (or its peer is

@@ -586,6 +586,33 @@ impl Transport for ReliableTransport {
         }
     }
 
+    fn recv_any_tagged(&mut self, tag: u64, timeout: Duration) -> Result<Option<(usize, Vec<u8>)>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.service(Duration::ZERO)?;
+            // In-order delivery + dedup happened in dispatch; here we
+            // only pick the next ready frame carrying exactly `tag`,
+            // from whichever peer has one. Frames under other tags stay
+            // queued for their own receives.
+            let key = self
+                .ready
+                .iter()
+                .find(|(&(_, t), q)| t == tag && !q.is_empty())
+                .map(|(&k, _)| k);
+            if let Some(key) = key {
+                let payload = self.ready.get_mut(&key).unwrap().pop_front().unwrap();
+                return Ok(Some((key.0, payload)));
+            }
+            self.check_lifecycle()?;
+            let now = Instant::now();
+            let remaining = match deadline.checked_duration_since(now) {
+                Some(r) if !r.is_zero() => r,
+                _ => return Ok(None),
+            };
+            self.service(remaining.min(self.cfg.poll))?;
+        }
+    }
+
     /// Block until every sent frame is acked — or its peer is declared
     /// dead, in which case the window is abandoned (if the peer
     /// completed its job the data arrived; if it did not, *its* failure

@@ -357,6 +357,321 @@ pub fn serialize_table_par(t: &Table, threads: usize) -> Vec<u8> {
     buf
 }
 
+/// Default chunk size of the streamed shuffle: each remote part's wire
+/// image is cut into ~1 MiB frames so serialization, wire transfer, and
+/// receive-side assembly overlap instead of running as strict phases.
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
+
+/// Bytes of [`ChunkHeader`] preceding each chunk payload on the wire.
+pub const CHUNK_HEADER_BYTES: usize = 36;
+
+/// Per-chunk frame header of the streamed shuffle
+/// ([`crate::net::Communicator::shuffle_tables_streamed`]), all
+/// little-endian:
+///
+/// ```text
+/// part:u32  chunk_idx:u32  n_chunks:u32
+/// start:u64  len:u64  total_bytes:u64
+/// ```
+///
+/// `part` is the source rank, `[start, start+len)` the chunk's byte
+/// range within that part's wire image, and `total_bytes` the image's
+/// full size — so *any* first-arriving chunk lets the receiver pre-size
+/// the part buffer and place every chunk independently, in any order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkHeader {
+    /// Source rank this chunk's part belongs to.
+    pub part: u32,
+    /// Index of this chunk within the part, `< n_chunks`.
+    pub chunk_idx: u32,
+    /// Total chunks the part was split into (always ≥ 1: even an empty
+    /// table's wire image carries a header).
+    pub n_chunks: u32,
+    /// First byte of this chunk within the part's wire image.
+    pub start: u64,
+    /// Payload bytes carried by this chunk.
+    pub len: u64,
+    /// Full wire-image size of the part.
+    pub total_bytes: u64,
+}
+
+impl ChunkHeader {
+    /// Encode to the fixed wire layout above.
+    pub fn encode(&self) -> [u8; CHUNK_HEADER_BYTES] {
+        let mut b = [0u8; CHUNK_HEADER_BYTES];
+        b[0..4].copy_from_slice(&self.part.to_le_bytes());
+        b[4..8].copy_from_slice(&self.chunk_idx.to_le_bytes());
+        b[8..12].copy_from_slice(&self.n_chunks.to_le_bytes());
+        b[12..20].copy_from_slice(&self.start.to_le_bytes());
+        b[20..28].copy_from_slice(&self.len.to_le_bytes());
+        b[28..36].copy_from_slice(&self.total_bytes.to_le_bytes());
+        b
+    }
+
+    /// Split a chunk frame into its validated header and payload.
+    /// Internal consistency (`len` matches the payload, `chunk_idx <
+    /// n_chunks`, the byte range inside `total_bytes`) is checked here;
+    /// cross-frame consistency (same `total_bytes`/`n_chunks` on every
+    /// chunk of a part) is the receiver's job.
+    pub fn decode(frame: &[u8]) -> Result<(ChunkHeader, &[u8])> {
+        if frame.len() < CHUNK_HEADER_BYTES {
+            return Err(Error::comm(format!(
+                "chunk frame of {} bytes is shorter than its {CHUNK_HEADER_BYTES}-byte header",
+                frame.len()
+            )));
+        }
+        let mut r = Reader { buf: frame, pos: 0 };
+        let h = ChunkHeader {
+            part: r.u32()?,
+            chunk_idx: r.u32()?,
+            n_chunks: r.u32()?,
+            start: r.u64()?,
+            len: r.u64()?,
+            total_bytes: r.u64()?,
+        };
+        let payload = &frame[CHUNK_HEADER_BYTES..];
+        if h.len != payload.len() as u64 {
+            return Err(Error::comm(format!(
+                "chunk header claims {} payload bytes, frame carries {}",
+                h.len,
+                payload.len()
+            )));
+        }
+        if h.chunk_idx >= h.n_chunks {
+            return Err(Error::comm(format!(
+                "chunk index {} out of range for {} chunks",
+                h.chunk_idx, h.n_chunks
+            )));
+        }
+        if h.start.checked_add(h.len).is_none_or(|end| end > h.total_bytes) {
+            return Err(Error::comm(format!(
+                "chunk range [{}, +{}) beyond part of {} bytes",
+                h.start, h.len, h.total_bytes
+            )));
+        }
+        Ok((h, payload))
+    }
+}
+
+/// Deterministic chunk plan for a wire image of `total_bytes`:
+/// consecutive `chunk_bytes`-sized `(start, len)` ranges with a final
+/// ragged chunk, derived **only** from the byte count (which
+/// [`table_wire_size`] computes from the extents arithmetic) — never
+/// from thread count or send order, so the streamed shuffle's frame
+/// boundaries are a pure function of its input. Always at least one
+/// chunk, so even an empty part announces itself on the wire.
+pub fn chunk_ranges(total_bytes: usize, chunk_bytes: usize) -> Vec<(usize, usize)> {
+    let step = chunk_bytes.max(1);
+    if total_bytes == 0 {
+        return vec![(0, 0)];
+    }
+    let mut out = Vec::with_capacity(total_bytes.div_ceil(step));
+    let mut start = 0;
+    while start < total_bytes {
+        let len = step.min(total_bytes - start);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Cursor producing an arbitrary byte sub-range of a wire image without
+/// materializing the whole image: segments are declared in wire order,
+/// the cursor tracks the absolute position, and only the intersection
+/// of each segment with `[start, start + out.len())` is copied.
+struct RangeWriter<'a> {
+    /// First wire-image byte the output region covers.
+    start: usize,
+    out: &'a mut [u8],
+    /// Absolute cursor within the (virtual) full wire image.
+    pos: usize,
+}
+
+impl RangeWriter<'_> {
+    #[inline]
+    fn end(&self) -> usize {
+        self.start + self.out.len()
+    }
+
+    /// Would a segment of `n` bytes at the cursor intersect the range?
+    #[inline]
+    fn wants(&self, n: usize) -> bool {
+        self.pos < self.end() && self.pos + n > self.start
+    }
+
+    /// Advance past `n` bytes that lie entirely outside the range.
+    #[inline]
+    fn skip(&mut self, n: usize) {
+        self.pos += n;
+    }
+
+    #[inline]
+    fn seg_bytes(&mut self, seg: &[u8]) {
+        let (a, b) = (self.pos, self.pos + seg.len());
+        let lo = a.max(self.start);
+        let hi = b.min(self.end());
+        if lo < hi {
+            self.out[lo - self.start..hi - self.start].copy_from_slice(&seg[lo - a..hi - a]);
+        }
+        self.pos = b;
+    }
+
+    /// Little-endian segment of 8-byte scalars (validity words, i64/f64
+    /// values) — byte-granular: a chunk boundary may fall mid-word.
+    #[inline]
+    fn seg_words<T: Copy>(&mut self, vals: &[T]) {
+        debug_assert_eq!(std::mem::size_of::<T>(), 8);
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: T is a plain 8-byte scalar (i64/u64/f64-bits);
+            // viewing its storage as bytes is defined.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 8)
+            };
+            self.seg_bytes(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        for v in vals {
+            let raw: u64 = unsafe { std::mem::transmute_copy(v) };
+            self.seg_bytes(&raw.to_le_bytes());
+        }
+    }
+
+    /// Little-endian segment of u32s (Utf8 offsets).
+    #[inline]
+    fn seg_u32s(&mut self, vals: &[u32]) {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: u32 slice viewed as bytes, exact bounds.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4)
+            };
+            self.seg_bytes(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        for v in vals {
+            self.seg_bytes(&v.to_le_bytes());
+        }
+    }
+
+    /// Bool values as 0/1 bytes; only the intersection is materialized.
+    fn seg_bools(&mut self, vals: &[bool]) {
+        let (a, b) = (self.pos, self.pos + vals.len());
+        let lo = a.max(self.start);
+        let hi = b.min(self.end());
+        for i in lo..hi {
+            self.out[i - self.start] = vals[i - a] as u8;
+        }
+        self.pos = b;
+    }
+}
+
+/// Produce exactly `serialize_table(t)[start..start + out.len()]` into
+/// `out` **without materializing the full wire image** — the encoder
+/// half of the streamed shuffle. Column blocks wholly outside the range
+/// are skipped in O(1) via the same extents arithmetic the header
+/// index uses, so encoding a chunk costs O(chunk + touched-block
+/// prefix), not O(table). Byte-identity with the monolithic serializer
+/// is pinned by the chunk tests below and `tests/prop_stream_shuffle`.
+pub fn encode_wire_range(t: &Table, start: usize, out: &mut [u8]) {
+    let nrows = t.num_rows();
+    let fields = t.schema().fields();
+    let cols = t.columns();
+    let sizes: Vec<usize> = fields
+        .iter()
+        .zip(cols)
+        .map(|(f, c)| column_wire_size(&f.name, c, nrows))
+        .collect();
+    let header = header_size(cols.len());
+    let total = header + sizes.iter().sum::<usize>();
+    assert!(
+        start + out.len() <= total,
+        "encode_wire_range: [{start}, +{}) beyond the {total}-byte wire image",
+        out.len()
+    );
+    let mut w = RangeWriter { start, out, pos: 0 };
+    if w.wants(header) {
+        // The header is tiny (20 + 8·ncols bytes); materialize it once
+        // when the range touches it.
+        let mut tmp = vec![0u8; header];
+        let mut h = SliceWriter::new(&mut tmp);
+        h.put_u32(MAGIC);
+        h.put_u32(WIRE_VERSION);
+        h.put_u32(cols.len() as u32);
+        h.put_u64(nrows as u64);
+        for &s in &sizes {
+            h.put_u64(s as u64);
+        }
+        w.seg_bytes(&tmp);
+    } else {
+        w.skip(header);
+    }
+    for (c, &size) in sizes.iter().enumerate() {
+        if !w.wants(size) {
+            w.skip(size);
+            continue;
+        }
+        let block_end = w.pos + size;
+        let f = &fields[c];
+        let col = cols[c].as_ref();
+        let validity = col.validity();
+        let mut prefix = Vec::with_capacity(4 + f.name.len() + 2);
+        prefix.extend_from_slice(&(f.name.len() as u32).to_le_bytes());
+        prefix.extend_from_slice(f.name.as_bytes());
+        prefix.push(dtype_code(f.data_type));
+        prefix.push(validity.is_some() as u8);
+        w.seg_bytes(&prefix);
+        if let Some(b) = validity {
+            w.seg_words(b.words());
+        }
+        match col {
+            Array::Int64(a) => w.seg_words(a.values()),
+            Array::Float64(a) => w.seg_words(a.values()),
+            Array::Bool(a) => w.seg_bools(a.values()),
+            Array::Utf8(a) => {
+                w.seg_u32s(&a.offsets[..=nrows]);
+                let dlen = a.offsets[nrows] as usize;
+                w.seg_bytes(&(dlen as u64).to_le_bytes());
+                w.seg_bytes(&a.data[..dlen]);
+            }
+        }
+        debug_assert_eq!(w.pos, block_end, "column_wire_size must be exact");
+    }
+    debug_assert_eq!(w.pos, total);
+}
+
+/// Encode one streamed-shuffle frame: a [`ChunkHeader`] followed by the
+/// chunk's slice of `t`'s wire image, produced via [`encode_wire_range`]
+/// without materializing the image. `start`/`len` must come from
+/// [`chunk_ranges`] over [`table_wire_size`]`(t)` so boundaries stay a
+/// pure function of the input.
+pub fn encode_table_chunk(
+    t: &Table,
+    part: u32,
+    chunk_idx: u32,
+    n_chunks: u32,
+    start: usize,
+    len: usize,
+    total_bytes: usize,
+) -> Vec<u8> {
+    let mut span = crate::trace::span(crate::trace::SpanKind::Wire, "wire:chunk_enc");
+    span.add("part", part as u64);
+    span.add("chunk", chunk_idx as u64);
+    span.add("bytes", len as u64);
+    let hdr = ChunkHeader {
+        part,
+        chunk_idx,
+        n_chunks,
+        start: start as u64,
+        len: len as u64,
+        total_bytes: total_bytes as u64,
+    };
+    let mut frame = vec![0u8; CHUNK_HEADER_BYTES + len];
+    frame[..CHUNK_HEADER_BYTES].copy_from_slice(&hdr.encode());
+    encode_wire_range(t, start, &mut frame[CHUNK_HEADER_BYTES..]);
+    frame
+}
+
 /// Parsed wire header: row count plus each column block's byte range
 /// (from the extents index) — everything the parallel decoder needs to
 /// hand each column task its own sub-slice.
@@ -1016,6 +1331,125 @@ mod tests {
             1
         )
         .is_err());
+    }
+
+    #[test]
+    fn chunk_ranges_tile_exactly() {
+        // Ragged final chunk, exact multiple, chunk larger than the
+        // image, degenerate chunk size, and the zero-byte edge.
+        for (total, chunk) in [(100usize, 30usize), (90, 30), (10, 1000), (7, 1), (5, 0)] {
+            let ranges = chunk_ranges(total, chunk);
+            assert!(!ranges.is_empty(), "total={total} chunk={chunk}");
+            let mut at = 0;
+            for &(start, len) in &ranges {
+                assert_eq!(start, at, "total={total} chunk={chunk}");
+                at += len;
+            }
+            assert_eq!(at, total, "total={total} chunk={chunk}");
+            // every chunk but the last is full-size
+            for &(_, len) in &ranges[..ranges.len() - 1] {
+                assert_eq!(len, chunk.max(1), "total={total} chunk={chunk}");
+            }
+        }
+        // An empty image still announces itself with one empty chunk.
+        assert_eq!(chunk_ranges(0, 64), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn chunked_encode_is_byte_identical_to_monolithic() {
+        use crate::io::generator::random_table;
+        // Mixed shapes: empty table (header-only image), single row,
+        // nulls + NaN + utf8 via random_table, and a >PAR_MIN_ROWS one.
+        let tables = vec![
+            Table::from_arrays(vec![
+                ("i", Array::from_i64_opts(vec![])),
+                ("s", Array::from_strs::<&str>(&[])),
+            ])
+            .unwrap(),
+            paper_table(1, 1.0, 9),
+            random_table(513, 0xC4A2),
+            random_table(crate::ops::parallel::PAR_MIN_ROWS + 11, 0xF00D),
+        ];
+        for (ti, t) in tables.iter().enumerate() {
+            let want = serialize_table(t);
+            let total = table_wire_size(t);
+            assert_eq!(want.len(), total);
+            // Chunk sizes covering: single byte (boundaries fall inside
+            // every field), mid-size ragged, exact image size
+            // (single-chunk part), and far larger than the part.
+            for chunk in [1usize, 7, 1000, total.max(1), total + 999] {
+                let ranges = chunk_ranges(total, chunk);
+                let mut got = vec![0u8; total];
+                for &(start, len) in &ranges {
+                    encode_wire_range(t, start, &mut got[start..start + len]);
+                }
+                assert_eq!(got, want, "table={ti} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_frame_roundtrips_and_rejects_corruption() {
+        let t = paper_table(300, 1.0, 4);
+        let total = table_wire_size(&t);
+        let ranges = chunk_ranges(total, 512);
+        let n = ranges.len() as u32;
+        let mut image = vec![0u8; total];
+        for (i, &(start, len)) in ranges.iter().enumerate() {
+            let frame = encode_table_chunk(&t, 2, i as u32, n, start, len, total);
+            let (h, payload) = ChunkHeader::decode(&frame).unwrap();
+            assert_eq!(
+                h,
+                ChunkHeader {
+                    part: 2,
+                    chunk_idx: i as u32,
+                    n_chunks: n,
+                    start: start as u64,
+                    len: len as u64,
+                    total_bytes: total as u64,
+                }
+            );
+            image[start..start + len].copy_from_slice(payload);
+        }
+        assert_eq!(image, serialize_table(&t));
+        assert!(deserialize_table(&image).unwrap().data_equals(&t));
+
+        // Header shorter than the fixed layout.
+        assert!(ChunkHeader::decode(&[0u8; CHUNK_HEADER_BYTES - 1]).is_err());
+        // Payload length disagreeing with the header.
+        let mut frame = encode_table_chunk(&t, 0, 0, n, ranges[0].0, ranges[0].1, total);
+        frame.pop();
+        assert!(ChunkHeader::decode(&frame).is_err());
+        // Chunk index out of range.
+        let bad = ChunkHeader { part: 0, chunk_idx: 5, n_chunks: 5, start: 0, len: 0, total_bytes: 8 };
+        assert!(ChunkHeader::decode(&bad.encode()).is_err());
+        // Byte range beyond the declared image.
+        let bad = ChunkHeader { part: 0, chunk_idx: 0, n_chunks: 1, start: 4, len: 8, total_bytes: 8 };
+        let mut f = bad.encode().to_vec();
+        f.extend_from_slice(&[0u8; 8]);
+        assert!(ChunkHeader::decode(&f).is_err());
+    }
+
+    #[test]
+    fn empty_part_streams_as_one_header_chunk() {
+        // An empty remote partition still has a nonempty wire image (the
+        // v2 header + empty column blocks): exactly one chunk, and the
+        // reassembled image decodes to the empty table.
+        let t = Table::from_arrays(vec![
+            ("k", Array::from_i64(vec![])),
+            ("s", Array::from_strs::<&str>(&[])),
+        ])
+        .unwrap();
+        let total = table_wire_size(&t);
+        assert!(total > 0);
+        let ranges = chunk_ranges(total, DEFAULT_CHUNK_BYTES);
+        assert_eq!(ranges.len(), 1);
+        let frame = encode_table_chunk(&t, 1, 0, 1, 0, total, total);
+        let (h, payload) = ChunkHeader::decode(&frame).unwrap();
+        assert_eq!((h.n_chunks, h.total_bytes), (1, total as u64));
+        let back = deserialize_table(payload).unwrap();
+        assert_eq!(back.num_rows(), 0);
+        assert_eq!(back.schema(), t.schema());
     }
 
     #[test]

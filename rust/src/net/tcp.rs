@@ -405,6 +405,53 @@ impl Transport for TcpTransport {
         }
     }
 
+    fn recv_any_tagged(
+        &mut self,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Option<(usize, Vec<u8>)>> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(ctl) = &self.control {
+                ctl.check()?;
+            }
+            // Parked frames with this tag first (poisoned payloads
+            // surface to whichever receive matches them, same as recv).
+            let found = self
+                .parked
+                .iter_mut()
+                .filter(|(&(_, t), _)| t == tag)
+                .find_map(|(&(src, _), q)| q.pop_front().map(|p| (src, p)));
+            if let Some((src, p)) = found {
+                return p.map(|payload| Some((src, payload)));
+            }
+            let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
+            else {
+                return Ok(None);
+            };
+            let f = match self.inbox.recv_timeout(remaining.min(LIFECYCLE_POLL)) {
+                Ok(f) => f,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::comm_failure(
+                        CommFailure::fatal("tcp inbox closed").at_rank(self.rank),
+                    ))
+                }
+            };
+            if f.tag == CANCEL_TAG {
+                return Err(self.cancelled_by_peer(f.src));
+            }
+            if f.tag == DISCONNECT_TAG {
+                self.dead[f.src] = true;
+                return Err(disconnect_error(f.src));
+            }
+            if f.tag == tag {
+                return f.payload.map(|payload| Some((f.src, payload)));
+            }
+            self.parked.entry((f.src, f.tag)).or_default().push_back(f.payload);
+        }
+    }
+
     fn set_control(&mut self, ctl: Option<QueryControl>) {
         self.control = ctl;
     }

@@ -444,6 +444,14 @@ impl Expr {
                 _ => Err(Error::schema("NOT over non-bool operand")),
             },
             Expr::IsNull(a) => {
+                // Borrowed Utf8 fast path: the mask only needs the
+                // validity bitmap, so a Utf8 column never materializes
+                // its strings here (the generic path below would copy
+                // every row into an owned `String` just to drop it).
+                if let Some(op) = str_operand(a, t) {
+                    let mask: Vec<bool> = (0..n).map(|r| !op.is_valid(r)).collect();
+                    return Ok(Value::Bool(mask, vec![true; n]));
+                }
                 let inner = a.eval(t)?;
                 let mask: Vec<bool> = inner.validity().iter().map(|&ok| !ok).collect();
                 Ok(Value::Bool(mask, vec![true; n]))
@@ -638,9 +646,25 @@ pub fn filter(t: &Table, pred: &Expr) -> Result<Table> {
 }
 
 /// Append a computed column `name = expr` (Project-with-derivation).
+///
+/// Utf8 sources take a borrowed path: a string column or literal is
+/// pushed straight from its backing storage into the new column's
+/// builder, skipping the `Value::Str` detour (one owned `String` per
+/// row) that the generic eval path would take.
 pub fn with_column(t: &Table, name: &str, expr: &Expr) -> Result<Table> {
-    let value = expr.eval(t)?;
-    let array = value.into_array();
+    let array = if let Some(op) = str_operand(expr, t) {
+        let mut b = crate::table::builder::ArrayBuilder::new(DataType::Utf8);
+        for row in 0..t.num_rows() {
+            if op.is_valid(row) {
+                b.push_str(op.value(row))?;
+            } else {
+                b.push_null();
+            }
+        }
+        b.finish()
+    } else {
+        expr.eval(t)?.into_array()
+    };
     let mut fields = t.schema().fields().to_vec();
     fields.push(crate::table::Field::new(name, array.data_type()));
     let mut cols = t.columns().to_vec();
@@ -812,6 +836,55 @@ mod tests {
         assert_eq!(out.num_columns(), 3);
         assert_eq!(out.column(2).as_utf8().unwrap().value(1), "banana");
         assert!(!out.column(2).is_valid(2));
+    }
+
+    #[test]
+    fn utf8_null_heavy_borrowed_paths() {
+        // Mostly-null Utf8 column: is_null, with_column, and literal
+        // projection all ride the borrowed paths and must agree with
+        // the validity bitmap exactly.
+        let opts: Vec<Option<&str>> = (0..64)
+            .map(|i| if i % 8 == 3 { Some(if i % 16 == 3 { "hit" } else { "" }) } else { None })
+            .collect();
+        let t = Table::from_arrays(vec![
+            ("s", Array::Utf8(crate::table::column::Utf8Array::from_options(&opts))),
+            ("k", Array::from_i64((0..64).collect())),
+        ])
+        .unwrap();
+        let n_valid = opts.iter().filter(|o| o.is_some()).count();
+
+        // IsNull never materializes the strings; count matches.
+        let nulls = filter(&t, &Expr::col(0).is_null()).unwrap();
+        assert_eq!(nulls.num_rows(), 64 - n_valid);
+        let valid = filter(&t, &Expr::col(0).is_null().not()).unwrap();
+        assert_eq!(valid.num_rows(), n_valid);
+
+        // with_column copies the column through the borrowed builder:
+        // values, empties, and nulls all survive round-trip.
+        let out = with_column(&t, "copy", &Expr::col(0)).unwrap();
+        let copy = out.column(2).as_utf8().unwrap();
+        for (i, o) in opts.iter().enumerate() {
+            match o {
+                Some(s) => {
+                    assert!(out.column(2).is_valid(i), "row {i} valid");
+                    assert_eq!(copy.value(i), *s, "row {i} value");
+                }
+                None => assert!(!out.column(2).is_valid(i), "row {i} null"),
+            }
+        }
+
+        // Literal projection: every row valid, every row the literal.
+        let out = with_column(&t, "lit", &Expr::lit_str("z")).unwrap();
+        let lit = out.column(2).as_utf8().unwrap();
+        for i in 0..64 {
+            assert!(out.column(2).is_valid(i));
+            assert_eq!(lit.value(i), "z");
+        }
+
+        // Null-heavy comparison still masks to false on null rows.
+        let eq = filter(&t, &Expr::col(0).eq(Expr::lit_str(""))).unwrap();
+        let expect_empty = opts.iter().filter(|o| **o == Some("")).count();
+        assert_eq!(eq.num_rows(), expect_empty);
     }
 
     #[test]

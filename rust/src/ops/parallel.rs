@@ -451,13 +451,105 @@ pub fn concat_chunks<T: Copy>(chunks: Vec<Vec<T>>, len: usize) -> Vec<T> {
 }
 
 /// K-way merge of sorted runs into one sorted vector (the reassembly
-/// step of the morsel-parallel sort): runs are merged pairwise in run
-/// order over `log₂ k` passes, each pass fanning the pair merges out
-/// on [`map_tasks`]. `le(a, b)` must mean "`a` may precede `b`" —
-/// on ties the element from the earlier run wins, so with a total
-/// order (e.g. `(key, row)` pairs) the result is the unique globally
-/// sorted sequence regardless of `threads` or run boundaries.
-pub fn merge_runs<T, F>(mut runs: Vec<Vec<T>>, threads: usize, le: F) -> Vec<T>
+/// step of the morsel-parallel sort). `le(a, b)` must mean "`a` may
+/// precede `b`" and be a total preorder — on ties the element from the
+/// earlier run wins, so with a total order (e.g. `(key, row)` pairs)
+/// the result is the unique globally sorted sequence regardless of
+/// `threads` or run boundaries.
+///
+/// Large inputs take a **splitter-partitioned** path: `threads - 1`
+/// splitters sampled from the runs cut every run at its upper bound of
+/// each splitter, giving `threads` disjoint key ranges that merge
+/// concurrently on [`map_tasks`] and concatenate in range order. Every
+/// element equivalent to a splitter lands left of its cut in *every*
+/// run, so equal keys never straddle a range boundary and each range's
+/// merge sees the same runs in the same order — the concatenation is
+/// bit-identical to the serial pairwise merge, the oracle pinned in
+/// the tests below. Small inputs (or `threads <= 1`) keep the
+/// pairwise `log₂ k`-pass path with zero sampling overhead.
+pub fn merge_runs<T, F>(runs: Vec<Vec<T>>, threads: usize, le: F) -> Vec<T>
+where
+    T: Copy + Send + Sync,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let threads = threads.max(1);
+    if threads == 1 || runs.len() <= 1 || total < PAR_MIN_ROWS {
+        return merge_runs_pairwise(runs, threads, &le);
+    }
+    // Sample `threads - 1` candidates per run at evenly spaced
+    // positions, order them, and take evenly spaced splitters — the
+    // classic sample-sort bound: no range exceeds ~2·total/threads.
+    let mut candidates: Vec<T> = Vec::new();
+    for run in &runs {
+        if run.is_empty() {
+            continue;
+        }
+        for t in 1..threads {
+            candidates.push(run[t * run.len() / threads]);
+        }
+    }
+    candidates.sort_by(|a, b| {
+        if le(a, b) {
+            if le(b, a) {
+                std::cmp::Ordering::Equal
+            } else {
+                std::cmp::Ordering::Less
+            }
+        } else {
+            std::cmp::Ordering::Greater
+        }
+    });
+    let splitters: Vec<T> = (1..threads)
+        .filter_map(|i| candidates.get(i * candidates.len() / threads).copied())
+        .collect();
+    // Cut every run at the upper bound of each splitter (first element
+    // strictly greater). Cuts are monotone per run, so the ranges
+    // `[cuts[r], cuts[r+1])` tile each run exactly.
+    let cuts: Vec<Vec<usize>> = runs
+        .iter()
+        .map(|run| {
+            let mut c = Vec::with_capacity(splitters.len() + 2);
+            c.push(0);
+            let mut lo = 0usize;
+            for s in &splitters {
+                let mut hi = run.len();
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    if le(&run[mid], s) {
+                        lo = mid + 1;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                c.push(lo);
+            }
+            c.push(run.len());
+            c
+        })
+        .collect();
+    let nranges = splitters.len() + 1;
+    let (runs_r, cuts_r, le_r) = (&runs, &cuts, &le);
+    let pieces = map_tasks(nranges, threads, |r| {
+        let slices: Vec<Vec<T>> = runs_r
+            .iter()
+            .zip(cuts_r)
+            .map(|(run, c)| run[c[r]..c[r + 1]].to_vec())
+            .collect();
+        merge_runs_pairwise(slices, 1, le_r)
+    });
+    let mut out = Vec::with_capacity(total);
+    for p in pieces {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+/// The pairwise merge behind [`merge_runs`]: runs merge pairwise in
+/// run order over `log₂ k` passes, each pass fanning the pair merges
+/// out on [`map_tasks`]. Tie-breaking and pairing are pure functions
+/// of the run order, so the output never depends on `threads`.
+fn merge_runs_pairwise<T, F>(mut runs: Vec<Vec<T>>, threads: usize, le: &F) -> Vec<T>
 where
     T: Copy + Send + Sync,
     F: Fn(&T, &T) -> bool + Sync,
@@ -467,7 +559,6 @@ where
         // re-joins at the end, keeping the pairing in run order.
         let tail = if runs.len() % 2 == 1 { runs.pop() } else { None };
         let cur = &runs;
-        let le = &le;
         let mut next = map_tasks(cur.len() / 2, threads, |k| {
             let (a, b) = (&cur[2 * k], &cur[2 * k + 1]);
             let mut out = Vec::with_capacity(a.len() + b.len());
@@ -754,6 +845,60 @@ mod tests {
         // Odd run count: the unpaired tail run survives the pass intact.
         let runs = vec![vec![1u8, 9], vec![2, 3], vec![0, 5]];
         assert_eq!(merge_runs(runs, 2, |a, b| a <= b), vec![0, 1, 2, 3, 5, 9]);
+    }
+
+    /// Deterministic pseudo-random sorted runs over `key_space` keys.
+    fn sorted_runs(total: usize, run_len: usize, key_space: u64, seed: u64) -> Vec<Vec<u32>> {
+        let mut x = seed;
+        let mut next = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((x >> 33) as u64 % key_space) as u32
+        };
+        let all: Vec<u32> = (0..total).map(|_| next()).collect();
+        all.chunks(run_len.max(1))
+            .map(|c| {
+                let mut r = c.to_vec();
+                r.sort_unstable();
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn splitter_merge_equals_pairwise_oracle() {
+        // Above PAR_MIN_ROWS with threads > 1 the splitter path runs;
+        // the serial pairwise merge is the oracle. Duplicate-heavy
+        // keyspaces force equal keys to straddle candidate positions,
+        // and the empty run exercises degenerate cuts.
+        for (total, key_space) in [(PAR_MIN_ROWS * 2, 3u64), (10_000, 50), (10_000, 1)] {
+            let mut runs = sorted_runs(total, 700, key_space, 0xBEEF);
+            runs.insert(2, Vec::new());
+            let oracle = merge_runs_pairwise(runs.clone(), 1, &|a: &u32, b: &u32| a <= b);
+            for threads in [2usize, 3, 7, 16] {
+                assert_eq!(
+                    merge_runs(runs.clone(), threads, |a, b| a <= b),
+                    oracle,
+                    "total={total} key_space={key_space} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn splitter_merge_is_stable_across_runs() {
+        // (key, run) pairs with massive duplication: ties must resolve
+        // to the earlier run on the splitter path too, at every thread
+        // count — the full tie-break order is part of the contract.
+        let nruns = 9;
+        let per = (PAR_MIN_ROWS / 2).max(1000);
+        let runs: Vec<Vec<(u32, u32)>> = (0..nruns)
+            .map(|r| (0..per).map(|i| ((i / 100) as u32, r as u32)).collect())
+            .collect();
+        let le = |a: &(u32, u32), b: &(u32, u32)| a.0 < b.0 || (a.0 == b.0 && a.1 <= b.1);
+        let oracle = merge_runs_pairwise(runs.clone(), 1, &le);
+        for threads in [2usize, 7] {
+            assert_eq!(merge_runs(runs.clone(), threads, le), oracle, "threads={threads}");
+        }
     }
 
     #[test]

@@ -161,6 +161,33 @@ fn boundary_sizes_bit_identical_and_stable() {
 }
 
 #[test]
+fn splitter_merge_duplicate_heavy_bit_identical() {
+    // PR 10: `merge_runs` is now splitter-partitioned when threads > 1.
+    // Adversarial inputs for that path: multiple sorted runs (n >
+    // MORSEL_ROWS so the local sort produces >1 run) whose keys are so
+    // duplicate-heavy that every splitter lands inside a giant
+    // equivalence class — the upper-bound cut rule is what keeps ties
+    // from straddling a range boundary. 64Ki±1 pins the exact sizes
+    // where the run shapes change; keyspace 1 makes the whole column
+    // one tie class.
+    let sizes = [MORSEL_ROWS - 1, MORSEL_ROWS, MORSEL_ROWS + 1, 2 * MORSEL_ROWS + 1];
+    for (i, &n) in sizes.iter().enumerate() {
+        for key_space in [1u64, 2, 16] {
+            let t = paper_table_with_keyspace(n, key_space, 0xD0D0 + i as u64);
+            let want = sort_par(&t, 0, 1).unwrap();
+            assert!(is_sorted(&want, 0), "n={n} ks={key_space}");
+            for threads in THREADS {
+                let got = sort_par(&t, 0, threads).unwrap();
+                assert!(
+                    got.data_equals(&want),
+                    "n={n} ks={key_space} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn utf8_keys_across_morsel_boundary() {
     // String keys big enough to split into two morsel runs, with heavy
     // duplication so the run merge exercises stable ties.

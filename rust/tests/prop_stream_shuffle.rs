@@ -1,0 +1,202 @@
+//! Property tests for the chunked streaming shuffle (PR 10): the
+//! streamed path must be **bit-identical** to the monolithic
+//! `shuffle_tables` — same assembled bytes, same decoded table — at
+//! threads 1/2/7 and world 1/3, with chunk sizes small enough to force
+//! many frames per part, and under every retryable fault schedule
+//! (drops force retransmission, so duplicate frames cross the reliable
+//! layer's dedup and the receiver's idempotent byte-range placement).
+//!
+//! Chunk boundaries are a pure function of the wire image's extents
+//! index, so none of this may depend on thread count, arrival order,
+//! or fault timing.
+
+use rylon::coordinator::run_workers;
+use rylon::net::serialize::serialize_table_par;
+use rylon::net::{CommConfig, FaultPlan, RetryConfig};
+use rylon::table::take::take_table;
+use rylon::table::{Array, Table, Utf8Array};
+
+const THREADS: [usize; 3] = [1, 2, 7];
+
+/// Reliability stack over a seeded fault plan, retrying aggressively —
+/// the same configuration the fault-matrix suite pins.
+fn reliable(plan: FaultPlan) -> CommConfig {
+    CommConfig::default()
+        .with_faults(plan)
+        .with_reliability(true)
+        .with_retry(RetryConfig::aggressive())
+}
+
+/// The retryable schedules of the fault matrix, under the streamed
+/// path this time. Chunked frames mean each schedule now hits many
+/// more wire messages per superstep than the monolithic path did.
+fn retryable_schedules() -> Vec<(&'static str, FaultPlan)> {
+    vec![
+        ("drops", FaultPlan::new(0x57A1).with_drops(700)),
+        ("corruption", FaultPlan::new(0x57A2).with_corruption(500)),
+        ("delays", FaultPlan::new(0x57A3).with_delays(600)),
+        (
+            "mixed",
+            FaultPlan::new(0x57A4).with_drops(300).with_corruption(200).with_delays(200),
+        ),
+    ]
+}
+
+/// Deterministic destination split: row `r` goes to part `r % world`.
+/// Input-derived, so every rank's parts are a pure function of its
+/// table, whatever the thread budget.
+fn split_by_row_mod(t: &Table, world: usize) -> Vec<Table> {
+    (0..world)
+        .map(|d| {
+            let rows: Vec<usize> = (0..t.num_rows()).filter(|r| r % world == d).collect();
+            take_table(t, &rows)
+        })
+        .collect()
+}
+
+/// A null-and-utf8-heavy per-rank table: empty strings, multibyte,
+/// long values, ~40% nulls — the shapes whose wire blocks have ragged,
+/// unaligned extents.
+fn adversarial_table(rows: usize, seed: u64) -> Table {
+    let strings: Vec<Option<String>> = (0..rows)
+        .map(|r| match (r as u64 + seed) % 5 {
+            0 | 1 => None,
+            2 => Some(String::new()),
+            3 => Some("wörld-ü-∞".to_string()),
+            _ => Some(format!("s{seed}-{r}")),
+        })
+        .collect();
+    Table::from_arrays(vec![
+        (
+            "i",
+            Array::from_i64_opts(
+                (0..rows).map(|r| (r % 3 != 0).then_some(r as i64 - 7)).collect(),
+            ),
+        ),
+        ("s", Array::Utf8(Utf8Array::from_options(&strings))),
+        ("f", Array::from_f64((0..rows).map(|r| r as f64 * 0.5).collect())),
+    ])
+    .unwrap()
+}
+
+/// Streamed output per rank for a (world, threads, chunk, config) cell,
+/// asserting in-worker that it is byte-identical to the monolithic
+/// shuffle of the same parts.
+fn run_cell(
+    world: usize,
+    threads: usize,
+    chunk: usize,
+    config: &CommConfig,
+    check_against_monolithic: bool,
+) -> Vec<Table> {
+    run_workers(world, config, move |ctx| {
+        ctx.set_parallelism(threads);
+        let t = adversarial_table(160 + 40 * ctx.rank(), 0x5EED + ctx.rank() as u64);
+        let parts = split_by_row_mod(&t, ctx.world());
+        let comm = ctx.communicator();
+        let mono = if check_against_monolithic {
+            Some(comm.shuffle_tables(parts.clone()).unwrap())
+        } else {
+            None
+        };
+        let streamed = comm.shuffle_tables_streamed_chunked(parts, chunk).unwrap();
+        if let Some(mono) = mono {
+            // Byte identity, not just value equality: the assembled
+            // receive buffers must reproduce the monolithic wire image.
+            assert_eq!(
+                serialize_table_par(&streamed, 1),
+                serialize_table_par(&mono, 1),
+                "rank {}: streamed wire image diverged",
+                ctx.rank()
+            );
+        }
+        streamed
+    })
+}
+
+#[test]
+fn streamed_equals_monolithic_at_every_thread_count_and_world() {
+    // 96-byte chunks force dozens of frames per part; usize::MAX forces
+    // exactly one frame per part (the degenerate chunk-larger-than-part
+    // shape). Both must reproduce the monolithic bytes.
+    for world in [1usize, 3] {
+        for chunk in [96usize, 1 << 30] {
+            let base = run_cell(world, 1, chunk, &CommConfig::default(), true);
+            for threads in [2usize, 7] {
+                let got = run_cell(world, threads, chunk, &CommConfig::default(), true);
+                for (rank, (g, b)) in got.iter().zip(&base).enumerate() {
+                    assert!(
+                        g.data_equals(b),
+                        "world={world} chunk={chunk} threads={threads} rank={rank}"
+                    );
+                    assert_eq!(g.schema(), b.schema(), "world={world} rank={rank}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_bit_identical_under_retryable_fault_schedules() {
+    // Fault-free monolithic output is the oracle; the streamed path
+    // under drops/corruption/delays must match it bit-for-bit. Drops
+    // and delays make the reliable layer retransmit chunk frames, so
+    // duplicates reach dedup and (where dedup re-acks) the receiver's
+    // idempotent placement — none of it may show in the output.
+    for world in [1usize, 3] {
+        let oracle = run_cell(world, 1, 128, &CommConfig::default(), true);
+        for (label, plan) in retryable_schedules() {
+            for threads in THREADS {
+                let got = run_cell(world, threads, 128, &reliable(plan.clone()), false);
+                for (rank, (g, w)) in got.iter().zip(&oracle).enumerate() {
+                    assert!(
+                        g.data_equals(w),
+                        "{label}: world={world} threads={threads} rank={rank} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_skewed_routing_with_empty_parts() {
+    // Rank r routes every row to rank (r + 1) % world: each rank
+    // receives exactly one non-empty remote part and world-2 empty
+    // ones (header-only single-chunk frames), and its own loopback
+    // part is empty too. Streamed must equal monolithic through the
+    // ragged final chunks and the empties alike.
+    let world = 3;
+    let run = |threads: usize| -> Vec<Table> {
+        run_workers(world, &CommConfig::default(), move |ctx| {
+            ctx.set_parallelism(threads);
+            let t = adversarial_table(90, 0xCAFE + ctx.rank() as u64);
+            let dst = (ctx.rank() + 1) % ctx.world();
+            let parts: Vec<Table> = (0..ctx.world())
+                .map(|d| {
+                    let rows: Vec<usize> =
+                        if d == dst { (0..t.num_rows()).collect() } else { Vec::new() };
+                    take_table(&t, &rows)
+                })
+                .collect();
+            let comm = ctx.communicator();
+            let mono = comm.shuffle_tables(parts.clone()).unwrap();
+            let streamed = comm.shuffle_tables_streamed_chunked(parts, 64).unwrap();
+            assert_eq!(
+                serialize_table_par(&streamed, 1),
+                serialize_table_par(&mono, 1),
+                "rank {}",
+                ctx.rank()
+            );
+            assert_eq!(streamed.num_rows(), 90, "rank {} receives one part", ctx.rank());
+            streamed
+        })
+    };
+    let base = run(1);
+    for threads in [2usize, 7] {
+        let got = run(threads);
+        for (rank, (g, b)) in got.iter().zip(&base).enumerate() {
+            assert!(g.data_equals(b), "threads={threads} rank={rank}");
+        }
+    }
+}
